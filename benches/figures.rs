@@ -1,0 +1,41 @@
+//! End-to-end benches: one timed run per paper table/figure family at
+//! reduced sweep scale, exercising the full experiment pipeline
+//! (registry + dataset + PJRT output caches + sim). Requires
+//! `make artifacts`; skips gracefully when artifacts are absent.
+//!
+//! Run with `cargo bench --bench figures`.
+
+use std::time::Instant;
+
+use multitascpp::config::SystemConfig;
+use multitascpp::experiments::{registry, Ctx};
+
+fn main() {
+    multitascpp::util::logging::init();
+    let artifacts = SystemConfig::locate_artifacts();
+    if !artifacts.join("meta.json").exists() {
+        println!("figures bench: artifacts not found (run `make artifacts`) — skipping");
+        return;
+    }
+    let results = std::path::Path::new("results/bench");
+    let mut ctx = match Ctx::load(&artifacts, results, /*quick=*/ true) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("figures bench: context load failed ({e:#}) — skipping");
+            return;
+        }
+    };
+    println!("== end-to-end figure benches (quick sweeps) ==");
+    let mut total = 0.0;
+    for (id, desc, driver) in registry() {
+        let t0 = Instant::now();
+        if let Err(e) = driver(&mut ctx) {
+            println!("{id:<10} FAILED: {e:#}");
+            continue;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!(">> {id:<10} {dt:>8.2} s   ({desc})");
+    }
+    println!("total: {total:.1} s");
+}

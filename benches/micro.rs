@@ -1,0 +1,115 @@
+//! Microbenchmarks of the L3 hot paths (custom harness; criterion is
+//! unavailable offline). Run with `cargo bench --bench micro`.
+
+use multitascpp::bench::{bench, black_box, BenchConfig};
+use multitascpp::config::scenario::{Scenario, SchedulerKind};
+use multitascpp::config::SystemConfig;
+use multitascpp::data::dataset::Dataset;
+use multitascpp::models::outputs::SyntheticOutputs;
+use multitascpp::models::registry::test_meta_json;
+use multitascpp::models::{Registry, Tier};
+use multitascpp::scheduler::{MultiTascPP, Scheduler};
+use multitascpp::sim::{run_scenario, Overrides};
+use multitascpp::util::json::Json;
+use multitascpp::util::prng::Rng;
+
+fn main() {
+    println!("== micro benches ==");
+    let fast = BenchConfig {
+        warmup: 3,
+        samples: 20,
+        iters_per_sample: 1000,
+    };
+
+    // Scheduler update rule (Eq. 4 + Alg. 1): the per-window cost that
+    // must stay negligible next to inference.
+    {
+        let mut s = MultiTascPP::new(0.005);
+        for d in 0..100 {
+            s.register_device(d, Tier::Low, 0.5, 95.0);
+        }
+        let mut i = 0usize;
+        let r = bench("scheduler: on_sr_update (100 devices)", &fast, |_| {
+            let sr = if i % 3 == 0 { 90.0 } else { 97.0 };
+            black_box(s.on_sr_update(i % 100, sr));
+            i += 1;
+        });
+        println!("  -> {:.0} updates/s\n", r.throughput(1.0));
+    }
+
+    // Event queue push/pop.
+    {
+        use multitascpp::sim::event::{Event, EventQueue};
+        let r = bench("event queue: push+pop pair", &fast, |i| {
+            let mut q = EventQueue::new();
+            for j in 0..64 {
+                q.push((i * 64 + j) as f64, Event::ServerBatchDone);
+            }
+            while let Some(e) = q.pop() {
+                black_box(e);
+            }
+        });
+        println!("  -> {:.0} events/s\n", r.throughput(128.0));
+    }
+
+    // PRNG.
+    {
+        let mut rng = Rng::new(7);
+        let r = bench("prng: next_f64", &fast, |_| {
+            black_box(rng.next_f64());
+        });
+        println!("  -> {:.0} draws/s\n", r.throughput(1.0));
+    }
+
+    // JSON parse of a meta.json-sized document.
+    {
+        let text = test_meta_json().to_string();
+        let cfg = BenchConfig {
+            warmup: 3,
+            samples: 20,
+            iters_per_sample: 100,
+        };
+        let r = bench(
+            &format!("json: parse meta ({} bytes)", text.len()),
+            &cfg,
+            |_| {
+                black_box(Json::parse(&text).unwrap());
+            },
+        );
+        println!("  -> {:.1} MB/s\n", text.len() as f64 * r.throughput(1.0) / 1e6);
+    }
+
+    // End-to-end simulation throughput (cached provider): the number
+    // that bounds every figure sweep.
+    {
+        let reg =
+            Registry::from_meta(std::path::Path::new("/tmp/x"), &test_meta_json()).unwrap();
+        let ds = Dataset::synthetic_for_tests(5000, 4, 10);
+        let cfg = SystemConfig::default();
+        let samples_per_run = 40 * 1000;
+        let bench_cfg = BenchConfig {
+            warmup: 1,
+            samples: 8,
+            iters_per_sample: 1,
+        };
+        let mut seed = 0u64;
+        let r = bench("sim e2e: 40 devices x 1000 samples", &bench_cfg, |_| {
+            let mut prov = SyntheticOutputs::new(
+                ds.n,
+                &[("dev_low", 0.72), ("srv_inception", 0.785)],
+                seed,
+            )
+            .into_cached();
+            seed += 1;
+            let scn = Scenario::homogeneous(Tier::Low, 40, "srv_inception")
+                .with_scheduler(SchedulerKind::MultiTascPP)
+                .with_samples(1000)
+                .with_seed(seed);
+            black_box(run_scenario(&scn, &cfg, &reg, &ds, &mut prov).unwrap());
+        });
+        println!(
+            "  -> {:.0} simulated samples/s\n",
+            r.throughput(samples_per_run as f64)
+        );
+    }
+}

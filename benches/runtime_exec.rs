@@ -1,0 +1,59 @@
+//! PJRT runtime benches: real execute latency per (model, batch) next
+//! to the calibrated T4 latency table — the L1/L2 perf evidence (the
+//! CPU numbers are not expected to match a T4; the table gives the
+//! translation). Requires `make artifacts`.
+//!
+//! Run with `cargo bench --bench runtime_exec`.
+
+use multitascpp::bench::{bench, black_box, BenchConfig};
+use multitascpp::config::latency::server_latency_model;
+use multitascpp::config::SystemConfig;
+use multitascpp::data::Dataset;
+use multitascpp::models::Registry;
+use multitascpp::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    multitascpp::util::logging::init();
+    let artifacts = SystemConfig::locate_artifacts();
+    if !artifacts.join("meta.json").exists() {
+        println!("runtime bench: artifacts not found (run `make artifacts`) — skipping");
+        return Ok(());
+    }
+    let registry = Registry::load(&artifacts)?;
+    let ds = Dataset::load(&artifacts.join("dataset.bin"))?;
+    let engine = Engine::new(registry)?;
+
+    println!("== PJRT execute latency per (model, batch) ==");
+    println!("(CPU PJRT here; 'T4 table' column is the calibrated virtual latency)\n");
+    let cfg = BenchConfig {
+        warmup: 3,
+        samples: 15,
+        iters_per_sample: 1,
+    };
+    for model in [
+        "dev_low",
+        "dev_mid",
+        "dev_high",
+        "dev_vit",
+        "srv_inception",
+        "srv_effnetb3",
+        "srv_deit",
+    ] {
+        for batch in engine.registry().batches(model)? {
+            let x = ds.gather(&(0..batch).collect::<Vec<_>>());
+            let r = bench(&format!("{model} b={batch}"), &cfg, |_| {
+                black_box(engine.infer(model, &x, batch).unwrap());
+            });
+            let table = if model.starts_with("srv_") {
+                format!("{:>8.1} ms", server_latency_model(model).batch_ms(batch))
+            } else {
+                "      n/a".to_string()
+            };
+            println!(
+                "    -> {:>9.0} samples/s real   T4 table {table}\n",
+                r.throughput(batch as f64)
+            );
+        }
+    }
+    Ok(())
+}

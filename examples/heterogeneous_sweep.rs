@@ -1,0 +1,41 @@
+//! Heterogeneous sweep (Figs 11-14 shape): equal thirds of low / mid /
+//! high devices sharing one server, per-tier metrics.
+//!
+//! ```sh
+//! cargo run --release --example heterogeneous_sweep
+//! ```
+
+use multitascpp::config::scenario::{Scenario, SchedulerKind};
+use multitascpp::experiments::Ctx;
+use multitascpp::models::Tier;
+use multitascpp::sim::Overrides;
+
+fn main() -> anyhow::Result<()> {
+    multitascpp::util::logging::init();
+    let artifacts = multitascpp::config::SystemConfig::locate_artifacts();
+    let mut ctx = Ctx::load(&artifacts, std::path::Path::new("results"), true)?;
+
+    println!("heterogeneous sweep: 1/3 low, 1/3 mid, 1/3 high -> srv_effnetb3, 150 ms SLO\n");
+    for &n in &[6usize, 18, 36, 60] {
+        for kind in [SchedulerKind::MultiTascPP, SchedulerKind::Static] {
+            let scn = Scenario::heterogeneous(n, "srv_effnetb3")
+                .with_scheduler(kind)
+                .with_slo(150.0)
+                .with_samples(2000);
+            let m = ctx.run(&scn, &Overrides::default())?;
+            println!("{n} devices, {}:", kind.name());
+            for tier in [Tier::Low, Tier::Mid, Tier::High] {
+                if let Some(agg) = m.tier(tier) {
+                    println!(
+                        "  {:<5} SR {:>6.2}%  acc {:>6.2}%  fwd {:>5.1}%",
+                        tier.name(),
+                        agg.satisfaction_rate(),
+                        agg.accuracy() * 100.0,
+                        agg.forward_rate() * 100.0
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}

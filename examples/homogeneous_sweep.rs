@@ -1,0 +1,45 @@
+//! Homogeneous scalability sweep (the paper's Figs 4-6 shape at demo
+//! scale): all three schedulers, rising device counts, one SLO.
+//!
+//! ```sh
+//! cargo run --release --example homogeneous_sweep
+//! ```
+
+use multitascpp::config::scenario::{Scenario, SchedulerKind};
+use multitascpp::experiments::Ctx;
+use multitascpp::models::Tier;
+use multitascpp::sim::Overrides;
+
+fn main() -> anyhow::Result<()> {
+    multitascpp::util::logging::init();
+    let artifacts = multitascpp::config::SystemConfig::locate_artifacts();
+    let mut ctx = Ctx::load(&artifacts, std::path::Path::new("results"), true)?;
+
+    println!("homogeneous sweep: low-tier devices -> srv_inception, 150 ms SLO\n");
+    println!(
+        "{:>8} {:>14} {:>8} {:>8} {:>10}",
+        "devices", "scheduler", "SR %", "acc %", "goodput/s"
+    );
+    for &n in &[2usize, 10, 25, 50, 80] {
+        for kind in [
+            SchedulerKind::MultiTascPP,
+            SchedulerKind::MultiTasc,
+            SchedulerKind::Static,
+        ] {
+            let scn = Scenario::homogeneous(Tier::Low, n, "srv_inception")
+                .with_scheduler(kind)
+                .with_slo(150.0)
+                .with_samples(2000);
+            let m = ctx.run(&scn, &Overrides::default())?;
+            println!(
+                "{:>8} {:>14} {:>8.2} {:>8.2} {:>10.1}",
+                n,
+                kind.name(),
+                m.overall.satisfaction_rate(),
+                m.overall.accuracy() * 100.0,
+                m.throughput_satisfied()
+            );
+        }
+    }
+    Ok(())
+}

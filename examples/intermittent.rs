@@ -1,0 +1,64 @@
+//! Intermittent device participation (Figs 19/20 shape): 20 devices,
+//! 50% offline probability, dynamic vs static thresholds; prints the
+//! time-series trace.
+//!
+//! ```sh
+//! cargo run --release --example intermittent
+//! ```
+
+use multitascpp::config::scenario::{Intermittent, Scenario, SchedulerKind};
+use multitascpp::experiments::Ctx;
+use multitascpp::models::Tier;
+use multitascpp::sim::Overrides;
+
+fn main() -> anyhow::Result<()> {
+    multitascpp::util::logging::init();
+    let artifacts = multitascpp::config::SystemConfig::locate_artifacts();
+    let mut ctx = Ctx::load(&artifacts, std::path::Path::new("results"), true)?;
+
+    for (label, sched, ovr) in [
+        (
+            "dynamic threshold (MultiTASC++)",
+            SchedulerKind::MultiTascPP,
+            Overrides::default(),
+        ),
+        (
+            "static threshold 0.35",
+            SchedulerKind::Static,
+            Overrides {
+                initial_threshold: Some(0.35),
+            },
+        ),
+    ] {
+        let scn = Scenario::homogeneous(Tier::Low, 20, "srv_effnetb3")
+            .with_scheduler(sched)
+            .with_slo(150.0)
+            .with_seed(1)
+            .with_samples(2500)
+            .with_intermittent(Intermittent::default());
+        let m = ctx.run(&scn, &ovr)?;
+        println!("\n== {label} ==");
+        println!(
+            "overall SR {:.2}%  accuracy {:.2}%  makespan {:.1}s",
+            m.overall.satisfaction_rate(),
+            m.overall.accuracy() * 100.0,
+            m.makespan_s
+        );
+        println!(
+            "{:>7} {:>7} {:>10} {:>8} {:>8} {:>7}",
+            "t (s)", "active", "threshold", "SR %", "acc %", "queue"
+        );
+        for p in m.trace.iter().step_by(8) {
+            println!(
+                "{:>7.1} {:>7} {:>10.3} {:>8.1} {:>8.2} {:>7}",
+                p.t_s,
+                p.active_devices,
+                p.mean_threshold,
+                p.running_sr,
+                p.running_acc * 100.0,
+                p.queue_len
+            );
+        }
+    }
+    Ok(())
+}

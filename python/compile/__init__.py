@@ -1,0 +1,3 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels + AOT
+lowering to HLO text. Runs once via `make artifacts`; never imported on
+the serving request path (that is all rust + PJRT)."""

@@ -1,0 +1,156 @@
+"""AOT build driver: train -> calibrate -> lower -> emit artifacts.
+
+Run once via `make artifacts` (no-op if artifacts are current):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs (the full contract with the rust side):
+
+    artifacts/
+      dataset.bin                  50k eval set (data.py binary format)
+      meta.json                    accuracies, static thresholds,
+                                   switching limits (calibrate.py)
+      params/<model>.npz           trained parameters (build cache)
+      <model>_b<batch>.hlo.txt     one HLO-text module per (model, batch)
+      expected/<model>.json        first-100-sample oracle outputs for
+                                   rust integration tests
+
+HLO **text** is the interchange format — NOT `.serialize()`: the `xla`
+crate's xla_extension 0.5.1 rejects jax>=0.5 protos whose instruction
+ids exceed INT_MAX; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import calibrate as C
+from . import data as D
+from . import models as M
+from . import train as T
+
+# Batch-size grid B = {1, 2, 4, 8, 16, 32, 64} (paper §V-A). Device
+# models additionally get a large precompute batch used by the rust
+# output-cache builder.
+SERVER_BATCHES = (1, 2, 4, 8, 16, 32, 64)
+DEVICE_BATCHES = (1, 64)
+PRECOMPUTE_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, params: dict, batch: int) -> str:
+    """Lower forward(name, params, x[batch]) to HLO text.
+
+    The module takes TWO runtime inputs: (x, flat_params). Weights
+    cannot ride inside the module because HLO *text* (the only
+    interchange format xla_extension 0.5.1 accepts) elides large
+    constants; the rust runtime feeds the flat vector exported to
+    artifacts/<model>.params.bin (see models.param_layout for the
+    deterministic layout).
+    """
+    layout = M.param_layout(params)
+    statics = M.static_part(params)
+    n_flat = sum(size for _, _, _, size in layout)
+    x_spec = jax.ShapeDtypeStruct((batch, D.INPUT_DIM), jax.numpy.float32)
+    p_spec = jax.ShapeDtypeStruct((n_flat,), jax.numpy.float32)
+
+    def fn(x, flat):
+        rebuilt = M.unflatten_params(flat, layout, statics)
+        probs, bvsb = M.forward(name, rebuilt, x, impl=M.KernelImpl)
+        return probs, bvsb
+
+    lowered = jax.jit(fn).lower(x_spec, p_spec)
+    return to_hlo_text(lowered)
+
+
+def batches_for(name: str) -> tuple[int, ...]:
+    return SERVER_BATCHES if name in M.SERVER_MODELS else DEVICE_BATCHES
+
+
+def emit_expected(name: str, params: dict, ev: D.Dataset, out_path: str) -> None:
+    """Oracle outputs on the first 100 eval samples (rust integration
+    tests compare PJRT-executed artifacts against these)."""
+    x = ev.x[:100]
+    probs, bvsb = M.forward(name, params, x, impl=M.KernelImpl)
+    probs = np.asarray(probs)
+    record = {
+        "top1": np.argmax(probs, axis=1).tolist(),
+        "bvsb": np.round(np.asarray(bvsb), 6).tolist(),
+        "p_top1": np.round(probs.max(axis=1), 6).tolist(),
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f)
+
+
+def build(out_dir: str, log=print) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "expected"), exist_ok=True)
+
+    log("[aot] dataset")
+    ev = D.make_eval_set()
+    ds_path = os.path.join(out_dir, "dataset.bin")
+    if not os.path.exists(ds_path):
+        D.write_dataset(ds_path, ev)
+
+    log("[aot] train (cached under params/)")
+    zoo = T.train_all(os.path.join(out_dir, "params"), log=log)
+
+    log("[aot] calibrate")
+    meta = C.calibrate(zoo, log=log)
+
+    log("[aot] lower models to HLO text")
+    artifact_index = {}
+    param_files = {}
+    for name, params in zoo.items():
+        # Export the flat parameter vector the artifacts consume.
+        flat = M.flatten_params(params)
+        pfile = f"{name}.params.bin"
+        flat.astype("<f4").tofile(os.path.join(out_dir, pfile))
+        param_files[name] = {"file": pfile, "len": int(flat.size)}
+        entries = []
+        for batch in batches_for(name):
+            fname = f"{name}_b{batch}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            if not os.path.exists(path):
+                text = lower_model(name, params, batch)
+                with open(path, "w") as f:
+                    f.write(text)
+                log(f"  [{name}] b={batch}: {len(text)} chars")
+            entries.append({"batch": batch, "file": fname})
+        artifact_index[name] = entries
+        emit_expected(name, params, ev, os.path.join(out_dir, "expected", f"{name}.json"))
+    meta["artifacts"] = artifact_index
+    meta["param_files"] = param_files
+    meta["batches"] = {
+        "server": list(SERVER_BATCHES),
+        "device": list(DEVICE_BATCHES),
+        "precompute": PRECOMPUTE_BATCH,
+    }
+
+    C.write_meta(os.path.join(out_dir, "meta.json"), meta)
+    log(f"[aot] wrote {os.path.join(out_dir, 'meta.json')}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Offline calibration (paper §V-A "Baselines" + §IV-E).
+
+Runs on the FIRST 10 000 samples of the eval set (the paper's
+calibration split of ImageNet-val) and produces, for every
+(device-model, server-model) cascade pair:
+
+* the **Static baseline threshold**: tuned so ~30 % of samples are
+  forwarded, unless that costs > 1 pp of cascade accuracy vs. the best
+  achievable, in which case the lowest threshold within 1 pp is used —
+  verbatim the paper's tuning rule;
+* the **model-switching limits** `c_lower` / `c_upper^k` (§IV-E): set
+  from the calibration sweep as the thresholds at which the lighter
+  server model's cascade stops/starts being within a small accuracy gap
+  of the heavier one's;
+* measured model accuracies for Table I.
+
+Everything is written to artifacts/meta.json, the contract with
+rust/src/models/registry.rs.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import models as M
+
+# Candidate thresholds swept during calibration (BvSB is in [0, 1]).
+THRESH_GRID = np.round(np.arange(0.02, 1.0, 0.02), 4).tolist()
+TARGET_FWD = 0.30  # paper: ~30% forwarded
+MAX_ACC_LOSS_PP = 1.0  # paper: within 1pp of best cascade accuracy
+
+
+def model_outputs(name: str, params: dict, ds: D.Dataset, batch: int = 2048):
+    """(top1, bvsb, correct) over a dataset via the ref impl (fast path;
+    numerics match the kernels to ~1e-6 — asserted in tests)."""
+    fwd = jax.jit(
+        lambda x: M.forward(name, params, x, impl=M.RefImpl), backend="cpu"
+    )
+    top1 = np.zeros(ds.n, dtype=np.int32)
+    bvsb = np.zeros(ds.n, dtype=np.float32)
+    for i in range(0, ds.n, batch):
+        probs, margin = fwd(ds.x[i : i + batch])
+        top1[i : i + probs.shape[0]] = np.argmax(np.asarray(probs), axis=1)
+        bvsb[i : i + probs.shape[0]] = np.asarray(margin)
+    correct = (top1 == ds.y).astype(np.uint8)
+    return top1, bvsb, correct
+
+
+def cascade_curve(dev_bvsb, dev_correct, srv_correct):
+    """For every candidate threshold: (forward fraction, cascade acc)."""
+    rows = []
+    for c in THRESH_GRID:
+        fwd_mask = dev_bvsb < c
+        acc = np.where(fwd_mask, srv_correct, dev_correct).mean()
+        rows.append({"thresh": c, "fwd_frac": float(fwd_mask.mean()), "acc": float(acc)})
+    return rows
+
+
+def static_threshold(curve) -> float:
+    """The paper's Static tuning rule."""
+    best_acc = max(r["acc"] for r in curve)
+    # threshold closest to 30% forwarding
+    by_fwd = min(curve, key=lambda r: abs(r["fwd_frac"] - TARGET_FWD))
+    if (best_acc - by_fwd["acc"]) * 100.0 <= MAX_ACC_LOSS_PP:
+        return by_fwd["thresh"]
+    # lowest threshold within 1pp of the best cascade accuracy
+    for r in curve:  # ascending thresholds
+        if (best_acc - r["acc"]) * 100.0 <= MAX_ACC_LOSS_PP:
+            return r["thresh"]
+    return curve[-1]["thresh"]
+
+
+def switching_limits(curves_by_server: dict[str, list], tier: str) -> dict:
+    """c_lower / c_upper^k for §IV-E ("set after a thorough examination
+    of cascade results on a training set").
+
+    * `c_upper`: the threshold at which the *faster* model's cascade is
+      already within 0.3 pp of its best achievable accuracy — beyond it
+      the fast model has nothing left to give, so if every device sits
+      above `c_upper` the system has slack and only a heavier model can
+      add accuracy (switch up).
+    * `c_lower`: the threshold below which the fast and heavy cascades
+      are indistinguishable (<0.15 pp) — if a whole tier has been pushed
+      under it the heavy model is pure latency cost (switch down).
+
+    Conservative by construction: `c_upper` sits high on the curve, so
+    the controller only switches up when thresholds are pinned near the
+    top (ample SLO headroom) and flapping is avoided.
+    """
+    fast = curves_by_server["srv_inception"]
+    heavy = curves_by_server["srv_effnetb3"]
+    # c_lower: largest threshold where heavy's edge is still <0.4 pp.
+    c_lower = 0.1
+    for rf, rh in zip(fast, heavy):
+        if (rh["acc"] - rf["acc"]) * 100.0 < 0.4:
+            c_lower = rf["thresh"]
+        else:
+            break
+    # c_upper: fast model within 0.05 pp of its own best — only a
+    # heavier model can add accuracy beyond this point.
+    best_fast = max(r["acc"] for r in fast)
+    c_upper = 0.95
+    for rf in fast:
+        if (best_fast - rf["acc"]) * 100.0 <= 0.05:
+            c_upper = rf["thresh"]
+            break
+    c_upper = max(c_upper, c_lower + 0.05)
+    return {"c_lower": c_lower, "c_upper": c_upper}
+
+
+def calibrate(zoo: dict[str, dict], log=print) -> dict:
+    ev = D.make_eval_set()
+    cal = D.calibration_slice(ev)
+    full_eval = D.eval_pool_slice(ev)
+
+    outputs_cal = {}
+    accuracies = {}
+    for name, params in zoo.items():
+        top1, bvsb, correct = model_outputs(name, params, cal)
+        outputs_cal[name] = (top1, bvsb, correct)
+        acc_pool = model_outputs(name, params, full_eval)[2].mean()
+        accuracies[name] = {
+            "calibration": float(correct.mean()),
+            "eval_pool": float(acc_pool),
+        }
+        log(
+            f"  [{name}] acc cal={correct.mean() * 100:.2f}% "
+            f"pool={acc_pool * 100:.2f}%"
+        )
+
+    pairs = {}
+    curves_by_dev: dict[str, dict[str, list]] = {}
+    for dev in M.DEVICE_MODELS:
+        _, dev_bvsb, dev_correct = outputs_cal[dev]
+        curves_by_dev[dev] = {}
+        for srv in M.SERVER_MODELS:
+            srv_correct = outputs_cal[srv][2]
+            curve = cascade_curve(dev_bvsb, dev_correct, srv_correct)
+            curves_by_dev[dev][srv] = curve
+            thresh = static_threshold(curve)
+            at = min(curve, key=lambda r: abs(r["thresh"] - thresh))
+            pairs[f"{dev}:{srv}"] = {
+                "static_threshold": thresh,
+                "fwd_frac_at_static": at["fwd_frac"],
+                "cascade_acc_at_static": at["acc"],
+                "best_cascade_acc": max(r["acc"] for r in curve),
+                "curve": curve,
+            }
+            log(
+                f"  [{dev} -> {srv}] static c={thresh:.2f} "
+                f"fwd={at['fwd_frac'] * 100:.1f}% acc={at['acc'] * 100:.2f}%"
+            )
+
+    switching = {
+        tier: switching_limits(curves_by_dev[dev], tier)
+        for tier, dev in (("low", "dev_low"), ("mid", "dev_mid"), ("high", "dev_high"))
+    }
+
+    return {
+        "dataset": {
+            "n_eval": D.N_EVAL,
+            "n_calibration": D.N_CALIBRATION,
+            "input_dim": D.INPUT_DIM,
+            "num_classes": D.NUM_CLASSES,
+            "noise_log_mean": D.NOISE_LOG_MEAN,
+            "noise_log_std": D.NOISE_LOG_STD,
+        },
+        "models": accuracies,
+        "pairs": pairs,
+        "switching": switching,
+    }
+
+
+def write_meta(path: str, meta: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(meta, f, indent=1)

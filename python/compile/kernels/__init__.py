@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from .attention import attention
+from .fused_linear import fused_linear
+from .softmax_bvsb import softmax_bvsb
+
+__all__ = ["attention", "fused_linear", "softmax_bvsb"]

@@ -1,0 +1,45 @@
+"""Pallas fused scaled-dot-product attention kernel.
+
+Used by the ViT-style models (the paper's MobileViT / DeiT substitutes).
+The GPU-era formulation (one threadblock per (batch, head), shared-memory
+tiles of Q/K/V) is re-thought for the TPU model per DESIGN.md §7: the
+grid is (B, H) and each program holds its full (S, Dh) Q/K/V slices in
+VMEM — sequence lengths here are tiny (S = 8 tokens), so the whole
+attention computation for one head is a single VMEM-resident fusion:
+QK^T on the MXU, stable softmax on the VPU, and the weighted sum of V on
+the MXU again, with no intermediate HBM traffic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[0, 0]  # (S, Dh)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    row_max = jnp.max(scores, axis=-1, keepdims=True)
+    weights = jnp.exp(scores - row_max)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(weights, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Fused SDPA. q,k,v: (B, H, S, Dh) -> (B, H, S, Dh)."""
+    b, h, s, dh = q.shape
+    assert k.shape == (b, h, s, dh) and v.shape == (b, h, s, dh)
+    scale = 1.0 / float(dh) ** 0.5
+    spec = pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale),
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)

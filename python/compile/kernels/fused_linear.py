@@ -1,0 +1,65 @@
+"""Pallas fused linear kernel: y = relu(x @ w + b).
+
+TPU-shaped design (see DESIGN.md §7): the grid tiles the output (M, N)
+into VMEM-resident blocks; the full K (contraction) dimension of each
+operand block is kept in VMEM — model widths here are <= 512 floats so a
+(bm, K) x (K, bn) pair fits comfortably in the ~16 MB VMEM budget. The
+matmul inside a block targets the MXU (f32 accumulate); bias-add and ReLU
+are fused into the same VMEM pass, so the activations make exactly one
+HBM round trip.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that the rust
+runtime can run (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: multiples of the TPU (8, 128) f32 tile. For the small
+# serving models these often exceed (M, N) and clamp to a single block.
+DEFAULT_BM = 64
+DEFAULT_BN = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One (bm, bn) output block: MXU matmul + fused bias/ReLU epilogue."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn"))
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    relu: bool = True,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """y = x @ w + b (+ReLU). x: (M, K), w: (K, N), b: (N,) -> (M, N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # x row-panel
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # w col-panel
+            pl.BlockSpec((bn,), lambda i, j: (j,)),  # bias slice
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,37 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(and hypothesis sweeps) assert allclose between the two. These refs are
+also what the kernels lower to semantically — keep them dependency-free
+and obviously correct.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool) -> jax.Array:
+    """y = x @ w + b, optionally ReLU'd. x: (M, K), w: (K, N), b: (N,)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def softmax_bvsb_ref(logits: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused softmax + Best-versus-Second-Best margin (paper Eq. 2).
+
+    logits: (M, K). Returns (probs (M, K), bvsb (M,)) where
+    bvsb = P1 - P2, the gap between the two largest softmax entries.
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    top2 = jax.lax.top_k(probs, 2)[0]
+    return probs, top2[:, 0] - top2[:, 1]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled dot-product attention. q,k,v: (B, H, S, Dh)."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    weights = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", weights, v)

@@ -1,0 +1,63 @@
+"""Pallas fused softmax + Best-versus-Second-Best (BvSB) kernel.
+
+The forwarding decision function of the paper (Eq. 2/3) needs, per
+sample, the softmax probabilities *and* the margin P1 - P2 between the
+two most probable classes. Computed naively that is three passes over the
+logits (max for stability, exp-sum, top-2 over probs). This kernel fuses
+all of it into one VMEM-resident pass per row-block: a single HBM read of
+the logits produces both outputs, which is exactly the kind of
+reduction-epilogue fusion the TPU VPU is good at.
+
+Grid: 1-D over row blocks; the full class dimension (K <= a few thousand
+f32) lives in VMEM. Top-2 is computed without sorting: max, then max of
+the row with the argmax lane masked out.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 64
+
+
+def _softmax_bvsb_kernel(logits_ref, probs_ref, bvsb_ref):
+    logits = logits_ref[...]  # (bm, K) in VMEM
+    # Numerically-stable softmax.
+    row_max = jnp.max(logits, axis=-1, keepdims=True)
+    unnorm = jnp.exp(logits - row_max)
+    denom = jnp.sum(unnorm, axis=-1, keepdims=True)
+    probs = unnorm / denom
+    probs_ref[...] = probs
+    # Top-2 margin without a sort: P1 = max, P2 = max with P1's lane
+    # knocked out (mask by equality against the row max of the probs).
+    p1 = jnp.max(probs, axis=-1)
+    k = probs.shape[-1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+    arg1 = jnp.argmax(probs, axis=-1)
+    masked = jnp.where(cols == arg1[:, None], -jnp.inf, probs)
+    p2 = jnp.max(masked, axis=-1)
+    bvsb_ref[...] = p1 - p2
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def softmax_bvsb(logits: jax.Array, bm: int = DEFAULT_BM):
+    """logits: (M, K) -> (probs (M, K), bvsb (M,))."""
+    m, k = logits.shape
+    bm = min(bm, m)
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        _softmax_bvsb_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=True,
+    )(logits)

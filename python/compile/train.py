@@ -1,0 +1,145 @@
+"""Build-time training of the model zoo (hand-rolled Adam; optax is not
+available in this environment).
+
+Training happens ONCE per build (`make artifacts`), on the synthetic
+20k train split, and the resulting parameters are cached under
+artifacts/params/. The paper's models are "pretrained on ImageNet's
+training set"; this is the equivalent step for our substitutes.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import models as M
+
+# Per-model epoch budget: part of the accuracy-ladder calibration.
+# Weaker "architectures" also train shorter, like their real
+# counterparts trade accuracy for efficiency.
+TRAIN_EPOCHS = {
+    "dev_low": 10,
+    "dev_mid": 12,
+    "dev_high": 16,
+    "dev_vit": 24,
+    "srv_inception": 5,
+    "srv_effnetb3": 30,
+    "srv_deit": 40,
+}
+TRAIN_LR = {
+    "dev_low": 3e-3,
+    "dev_mid": 3e-3,
+    "dev_high": 3e-3,
+    "dev_vit": 1.5e-3,
+    "srv_inception": 3e-3,
+    "srv_effnetb3": 2e-3,
+    "srv_deit": 1.5e-3,
+}
+BATCH = 256
+LR = 3e-3
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def adam_init(params: dict) -> dict:
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(params, grads, state, lr=LR, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    scale = lr * jnp.sqrt(1 - b2**tf) / (1 - b1**tf)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - scale * m_ / (jnp.sqrt(v_) + eps), params, m, v
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_model(name: str, train: D.Dataset, seed: int = 0, log=print) -> dict:
+    """Train one model; returns the full params dict (incl. statics)."""
+    params_full = M.init_params(name, seed)
+    statics = M.static_part(params_full)
+    params = M.strip_static(params_full)
+    frozen = {}
+    # Lossy projections are frozen: remove from the trainable set.
+    for key in ("proj", "tok_proj"):
+        if key in params:
+            frozen[key] = params.pop(key)
+    logits_fn = M.logits_fn(name, impl=M.RefImpl)
+
+    def loss_fn(p, x, y):
+        logits = logits_fn({**p, **frozen, **statics}, x)
+        return cross_entropy(logits, y)
+
+    @jax.jit
+    def step(p, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, opt = adam_update(p, grads, opt, lr=lr)
+        return p, opt, loss
+
+    opt = adam_init(params)
+    n = train.n
+    rng = np.random.default_rng(seed + 100)
+    epochs = TRAIN_EPOCHS[name]
+    base_lr = TRAIN_LR[name]
+    steps_per_epoch = (n - BATCH + 1 + BATCH - 1) // BATCH
+    total_steps = max(1, epochs * steps_per_epoch)
+    t0 = time.time()
+    global_step = 0
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        for i in range(0, n - BATCH + 1, BATCH):
+            idx = order[i : i + BATCH]
+            # Cosine learning-rate decay over the whole schedule.
+            lr = base_lr * 0.5 * (1.0 + np.cos(np.pi * global_step / total_steps))
+            params, opt, loss = step(params, opt, train.x[idx], train.y[idx], lr)
+            losses.append(float(loss))
+            global_step += 1
+        log(
+            f"  [{name}] epoch {epoch + 1}/{epochs} "
+            f"loss={np.mean(losses):.4f} ({time.time() - t0:.1f}s)"
+        )
+    return {**params, **frozen, **statics}
+
+
+def accuracy(name: str, params: dict, ds: D.Dataset, batch: int = 2048) -> float:
+    logits_fn = M.logits_fn(name, impl=M.RefImpl)
+    fwd = jax.jit(lambda x: jnp.argmax(logits_fn(params, x), axis=-1))
+    correct = 0
+    for i in range(0, ds.n, batch):
+        pred = fwd(ds.x[i : i + batch])
+        correct += int(jnp.sum(pred == ds.y[i : i + batch]))
+    return correct / ds.n
+
+
+def train_all(out_dir: str, log=print) -> dict[str, dict]:
+    """Train (or load cached) params for every model in the zoo."""
+    os.makedirs(out_dir, exist_ok=True)
+    train = D.make_train_set()
+    zoo = {}
+    for name in M.MODEL_SPECS:
+        path = os.path.join(out_dir, f"{name}.npz")
+        if os.path.exists(path):
+            log(f"  [{name}] cached params: {path}")
+            zoo[name] = M.load_params(path)
+            continue
+        log(f"  [{name}] training...")
+        params = train_model(name, train)
+        M.save_params(path, params)
+        zoo[name] = params
+    return zoo

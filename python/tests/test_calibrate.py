@@ -1,0 +1,59 @@
+"""Calibration logic tests (static-threshold rule, switching limits)."""
+
+import numpy as np
+
+from compile import calibrate as C
+
+
+def synth_curve(fwd_at, acc_gain):
+    """Monotone cascade curve: fwd_frac and acc rise with threshold."""
+    rows = []
+    for c in C.THRESH_GRID:
+        fwd = min(1.0, c * fwd_at)
+        rows.append({"thresh": c, "fwd_frac": fwd, "acc": 0.7 + acc_gain * fwd})
+    return rows
+
+
+def test_static_threshold_prefers_30pct_when_cheap():
+    # Accuracy saturates fast: the 30%-forwarding threshold costs <1pp.
+    rows = []
+    for c in C.THRESH_GRID:
+        fwd = min(1.0, c)
+        acc = 0.70 + 0.08 * min(fwd, 0.25) / 0.25  # flat after 25% fwd
+        rows.append({"thresh": c, "fwd_frac": fwd, "acc": acc})
+    t = C.static_threshold(rows)
+    assert abs(t - 0.30) < 0.05
+
+
+def test_static_threshold_respects_1pp_rule():
+    # Accuracy keeps climbing: 30% fwd loses >1pp, so the rule picks the
+    # lowest threshold within 1pp of best.
+    rows = synth_curve(fwd_at=1.0, acc_gain=0.10)
+    t = C.static_threshold(rows)
+    best = max(r["acc"] for r in rows)
+    at = min(rows, key=lambda r: abs(r["thresh"] - t))
+    assert (best - at["acc"]) * 100.0 <= 1.0 + 1e-9
+    # and it is the *lowest* such threshold
+    for r in rows:
+        if r["thresh"] < t:
+            assert (best - r["acc"]) * 100.0 > 1.0
+
+
+def test_cascade_curve_monotone_forwarding():
+    rng = np.random.default_rng(0)
+    bvsb = rng.uniform(0, 1, 2000).astype(np.float32)
+    dev_c = rng.integers(0, 2, 2000).astype(np.uint8)
+    srv_c = np.ones(2000, dtype=np.uint8)
+    curve = C.cascade_curve(bvsb, dev_c, srv_c)
+    fwd = [r["fwd_frac"] for r in curve]
+    assert all(a <= b + 1e-9 for a, b in zip(fwd, fwd[1:]))
+    # perfect server => accuracy also monotone in threshold
+    acc = [r["acc"] for r in curve]
+    assert all(a <= b + 1e-9 for a, b in zip(acc, acc[1:]))
+
+
+def test_switching_limits_ordered():
+    fast = synth_curve(fwd_at=1.0, acc_gain=0.06)
+    heavy = synth_curve(fwd_at=1.0, acc_gain=0.09)
+    lims = C.switching_limits({"srv_inception": fast, "srv_effnetb3": heavy}, "low")
+    assert 0.0 < lims["c_lower"] <= lims["c_upper"] <= 1.0

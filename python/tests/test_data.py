@@ -1,0 +1,63 @@
+"""Dataset generator tests: determinism, splits, binary roundtrip."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import data as D
+
+
+def test_prototypes_unit_norm():
+    protos = D.make_prototypes()
+    assert protos.shape == (D.NUM_CLASSES, D.INPUT_DIM)
+    np.testing.assert_allclose(
+        np.linalg.norm(protos, axis=1), np.ones(D.NUM_CLASSES), rtol=1e-5
+    )
+
+
+def test_dataset_deterministic():
+    a = D.sample_dataset(D.make_prototypes(), 500, seed=3)
+    b = D.sample_dataset(D.make_prototypes(), 500, seed=3)
+    np.testing.assert_array_equal(a.x, b.x)
+    np.testing.assert_array_equal(a.y, b.y)
+
+
+def test_different_seeds_differ():
+    a = D.sample_dataset(D.make_prototypes(), 500, seed=3)
+    b = D.sample_dataset(D.make_prototypes(), 500, seed=4)
+    assert not np.array_equal(a.x, b.x)
+
+
+def test_splits_are_paper_shaped():
+    ds = D.sample_dataset(D.make_prototypes(), D.N_EVAL, seed=13)
+    cal = D.calibration_slice(ds)
+    pool = D.eval_pool_slice(ds)
+    assert cal.n == 10_000 and pool.n == 40_000
+    np.testing.assert_array_equal(cal.x, ds.x[:10_000])
+    np.testing.assert_array_equal(pool.y, ds.y[10_000:])
+
+
+def test_binary_roundtrip():
+    ds = D.sample_dataset(D.make_prototypes(), 300, seed=5)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ds.bin")
+        D.write_dataset(path, ds)
+        # header 20B + x + y + sigma
+        expected = 20 + 4 * 300 * D.INPUT_DIM + 4 * 300 + 4 * 300
+        assert os.path.getsize(path) == expected
+        back = D.read_dataset(path)
+    np.testing.assert_array_equal(ds.x.astype("<f4"), back.x)
+    np.testing.assert_array_equal(ds.y, back.y)
+    np.testing.assert_array_equal(ds.sigma.astype("<f4"), back.sigma)
+
+
+def test_difficulty_correlates_with_error():
+    """Harder (larger sigma) samples must be harder for the Bayes-ish
+    nearest-prototype rule — the property the cascade architecture
+    relies on."""
+    protos = D.make_prototypes()
+    ds = D.sample_dataset(protos, 4000, seed=9)
+    pred = (ds.x @ protos.T).argmax(axis=1)
+    correct = pred == ds.y
+    assert ds.sigma[~correct].mean() > ds.sigma[correct].mean() * 1.2

@@ -1,0 +1,153 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer: every kernel
+must match ref.py to float32 tolerance on representative and adversarial
+shapes, plus hypothesis-driven random sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, fused_linear, softmax_bvsb
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------- linear
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 128, 100), (7, 64, 13), (64, 128, 100),
+                                   (65, 32, 129), (128, 448, 448), (3, 1, 1)])
+@pytest.mark.parametrize("relu", [True, False])
+def test_fused_linear_matches_ref(m, k, n, relu):
+    x, w, b = rand(0, m, k), rand(1, k, n), rand(2, n)
+    got = fused_linear(x, w, b, relu=relu)
+    want = ref.linear_ref(x, w, b, relu)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_fused_linear_block_sizes_equivalent():
+    """Tiling must not change the numerics."""
+    x, w, b = rand(3, 50, 96, scale=2.0), rand(4, 96, 70), rand(5, 70)
+    base = fused_linear(x, w, b, bm=64, bn=128)
+    for bm, bn in [(8, 16), (16, 128), (50, 70), (64, 64)]:
+        np.testing.assert_allclose(fused_linear(x, w, b, bm=bm, bn=bn), base, **TOL)
+
+
+def test_fused_linear_relu_clamps_negative():
+    x = jnp.array([[1.0, -1.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    out = fused_linear(x, w, b, relu=True)
+    assert float(out[0, 1]) == 0.0 and float(out[0, 0]) == 1.0
+
+
+def test_fused_linear_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        fused_linear(rand(0, 4, 8), rand(1, 9, 3), rand(2, 3))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    relu=st.booleans(),
+    scale=st.floats(0.01, 8.0),
+)
+def test_fused_linear_hypothesis(m, k, n, relu, scale):
+    x, w, b = rand(10, m, k, scale=scale), rand(11, k, n), rand(12, n)
+    # Looser than TOL: with large input scales the tiled kernel's f32
+    # accumulation order legitimately differs from jnp.dot by ~1e-4 rel.
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, relu=relu),
+        ref.linear_ref(x, w, b, relu),
+        rtol=1e-3,
+        atol=1e-4 * max(1.0, scale),
+    )
+
+
+# ---------------------------------------------------------- softmax+bvsb
+
+
+@pytest.mark.parametrize("m,k", [(1, 100), (64, 100), (65, 100), (7, 2), (128, 1000)])
+def test_softmax_bvsb_matches_ref(m, k):
+    logits = rand(20, m, k, scale=3.0)
+    p, b = softmax_bvsb(logits)
+    pr, br = ref.softmax_bvsb_ref(logits)
+    np.testing.assert_allclose(p, pr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b, br, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_bvsb_probabilities_sum_to_one():
+    p, _ = softmax_bvsb(rand(21, 33, 100, scale=5.0))
+    np.testing.assert_allclose(jnp.sum(p, axis=-1), np.ones(33), rtol=1e-5)
+
+
+def test_softmax_bvsb_margin_in_unit_interval():
+    _, b = softmax_bvsb(rand(22, 50, 100, scale=4.0))
+    assert float(jnp.min(b)) >= 0.0 and float(jnp.max(b)) <= 1.0
+
+
+def test_softmax_bvsb_numerical_stability_large_logits():
+    logits = rand(23, 8, 100) * 1e4
+    p, b = softmax_bvsb(logits)
+    assert bool(jnp.all(jnp.isfinite(p))) and bool(jnp.all(jnp.isfinite(b)))
+
+
+def test_softmax_bvsb_exact_tie_gives_zero_margin():
+    logits = jnp.zeros((4, 10), jnp.float32)
+    _, b = softmax_bvsb(logits)
+    np.testing.assert_allclose(b, np.zeros(4), atol=1e-7)
+
+
+def test_softmax_bvsb_confident_sample_has_large_margin():
+    logits = jnp.zeros((1, 10), jnp.float32).at[0, 3].set(20.0)
+    _, b = softmax_bvsb(logits)
+    assert float(b[0]) > 0.99
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 80), k=st.integers(2, 300), scale=st.floats(0.1, 30.0))
+def test_softmax_bvsb_hypothesis(m, k, scale):
+    logits = rand(24, m, k, scale=scale)
+    p, b = softmax_bvsb(logits)
+    pr, br = ref.softmax_bvsb_ref(logits)
+    np.testing.assert_allclose(p, pr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b, br, rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------------------- attention
+
+
+@pytest.mark.parametrize("b,h,s,dh", [(1, 1, 8, 16), (2, 4, 8, 24), (64, 4, 8, 24),
+                                      (3, 2, 5, 7)])
+def test_attention_matches_ref(b, h, s, dh):
+    q, k, v = rand(30, b, h, s, dh), rand(31, b, h, s, dh), rand(32, b, h, s, dh)
+    np.testing.assert_allclose(attention(q, k, v), ref.attention_ref(q, k, v), **TOL)
+
+
+def test_attention_uniform_when_keys_identical():
+    """If all keys are equal, attention output = mean of values."""
+    q = rand(33, 1, 1, 4, 8)
+    k = jnp.broadcast_to(rand(34, 1, 1, 1, 8), (1, 1, 4, 8))
+    v = rand(35, 1, 1, 4, 8)
+    out = attention(q, k, v)
+    np.testing.assert_allclose(
+        out, jnp.broadcast_to(jnp.mean(v, axis=2, keepdims=True), v.shape), **TOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 8), h=st.integers(1, 4), s=st.integers(1, 16), dh=st.integers(1, 32))
+def test_attention_hypothesis(b, h, s, dh):
+    q, k, v = rand(36, b, h, s, dh), rand(37, b, h, s, dh), rand(38, b, h, s, dh)
+    np.testing.assert_allclose(attention(q, k, v), ref.attention_ref(q, k, v), **TOL)

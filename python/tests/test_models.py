@@ -1,0 +1,75 @@
+"""L2 model-zoo tests: kernel/ref forward equivalence, shapes, io."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import models as M
+
+TOL = dict(rtol=5e-5, atol=5e-5)
+
+
+@pytest.fixture(scope="module")
+def batch_x():
+    return jax.random.normal(jax.random.PRNGKey(0), (6, D.INPUT_DIM), jnp.float32)
+
+
+@pytest.mark.parametrize("name", list(M.MODEL_SPECS))
+def test_forward_shapes(name, batch_x):
+    params = M.init_params(name)
+    probs, bvsb = M.forward(name, params, batch_x, impl=M.RefImpl)
+    assert probs.shape == (6, D.NUM_CLASSES)
+    assert bvsb.shape == (6,)
+    np.testing.assert_allclose(jnp.sum(probs, axis=-1), np.ones(6), rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", list(M.MODEL_SPECS))
+def test_kernel_impl_matches_ref_impl(name, batch_x):
+    """The AOT-lowered graph (Pallas kernels) must agree with the
+    training-path graph (pure jnp) — this is what makes calibration on
+    the ref path valid for artifacts built on the kernel path."""
+    params = M.init_params(name)
+    pk, bk = M.forward(name, params, batch_x, impl=M.KernelImpl)
+    pr, br = M.forward(name, params, batch_x, impl=M.RefImpl)
+    np.testing.assert_allclose(pk, pr, **TOL)
+    np.testing.assert_allclose(bk, br, **TOL)
+
+
+@pytest.mark.parametrize("name", ["dev_low", "srv_deit"])
+def test_params_save_load_roundtrip(name):
+    params = M.init_params(name)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, f"{name}.npz")
+        M.save_params(path, params)
+        loaded = M.load_params(path)
+    assert set(loaded) == set(params)
+    for k, v in params.items():
+        if k.startswith("_"):
+            assert loaded[k] == v
+        else:
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(loaded[k]))
+
+
+def test_device_models_have_lossy_projection():
+    for name in M.DEVICE_MODELS:
+        spec = M.MODEL_SPECS[name]
+        assert spec.proj_dim is not None and spec.proj_dim < D.INPUT_DIM
+
+
+def test_batch_size_one_works():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, D.INPUT_DIM), jnp.float32)
+    for name in ("dev_low", "srv_deit"):
+        probs, bvsb = M.forward(name, M.init_params(name), x, impl=M.RefImpl)
+        assert probs.shape == (1, D.NUM_CLASSES) and bvsb.shape == (1,)
+
+
+def test_forward_deterministic(batch_x):
+    params = M.init_params("dev_mid")
+    a = M.forward("dev_mid", params, batch_x, impl=M.RefImpl)
+    b = M.forward("dev_mid", params, batch_x, impl=M.RefImpl)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))

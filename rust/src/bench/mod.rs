@@ -1,0 +1,118 @@
+//! Hand-rolled micro/e2e benchmark harness (no `criterion` in this
+//! offline environment). Used by `benches/*.rs` with `harness = false`.
+//!
+//! Protocol per benchmark: warm up for `warmup` iterations, then time
+//! `samples` batches of `iters_per_sample` iterations and report mean /
+//! p50 / p95 per-iteration time plus derived throughput.
+
+use std::time::Instant;
+
+use crate::util::stats::Samples;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            samples: 20,
+            iters_per_sample: 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+    pub iterations: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} mean {:>9.3} ms   p50 {:>9.3} ms   p95 {:>9.3} ms   min {:>9.3} ms",
+            self.name, self.mean_ms, self.p50_ms, self.p95_ms, self.min_ms
+        );
+    }
+
+    /// items/s given how many logical items one iteration processes.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ms / 1000.0)
+    }
+}
+
+/// Time `f` under the config; `f` receives the iteration index.
+pub fn bench<F: FnMut(usize)>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for i in 0..cfg.warmup {
+        f(i);
+    }
+    let mut per_iter = Samples::new();
+    for s in 0..cfg.samples {
+        let t0 = Instant::now();
+        for i in 0..cfg.iters_per_sample {
+            f(s * cfg.iters_per_sample + i);
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1000.0 / cfg.iters_per_sample as f64;
+        per_iter.push(ms);
+    }
+    let mut p = per_iter.clone();
+    let result = BenchResult {
+        name: name.to_string(),
+        mean_ms: per_iter.mean(),
+        p50_ms: p.percentile(0.5),
+        p95_ms: p.percentile(0.95),
+        min_ms: p.min(),
+        iterations: cfg.samples * cfg.iters_per_sample,
+    };
+    result.print();
+    result
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let cfg = BenchConfig {
+            warmup: 1,
+            samples: 5,
+            iters_per_sample: 10,
+        };
+        let mut acc = 0u64;
+        let r = bench("noop-ish", &cfg, |i| {
+            acc = acc.wrapping_add(black_box(i as u64));
+        });
+        assert_eq!(r.iterations, 50);
+        assert!(r.mean_ms >= 0.0 && r.mean_ms < 100.0);
+        assert!(r.p95_ms >= r.p50_ms * 0.5);
+        assert!(r.min_ms <= r.mean_ms + 1e-9);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let r = BenchResult {
+            name: "t".into(),
+            mean_ms: 10.0,
+            p50_ms: 10.0,
+            p95_ms: 10.0,
+            min_ms: 10.0,
+            iterations: 1,
+        };
+        assert!((r.throughput(100.0) - 10_000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,147 @@
+//! The forwarding decision function `d_i` (paper Eq. 2/3).
+//!
+//! The primary metric is Best-versus-Second-Best (BvSB): the gap
+//! between the two largest softmax probabilities. The AOT artifacts
+//! compute BvSB inside the fused Pallas kernel, so on the request path
+//! the decision is a single comparison; the alternative metrics
+//! (top-1 probability, normalized entropy — paper §IV-A mentions both)
+//! are computed from the probability vector when selected.
+
+/// Which confidence statistic drives the forwarding decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConfidenceMetric {
+    /// P1 - P2 (paper Eq. 2; the default).
+    BvSB,
+    /// P1 alone.
+    Top1,
+    /// 1 - H(p)/log(K): rescaled so "higher = more confident",
+    /// comparable to a [0,1] threshold like the other metrics.
+    NegEntropy,
+}
+
+impl ConfidenceMetric {
+    /// Confidence in [0, 1] from a softmax row (and its precomputed
+    /// BvSB margin, which the artifact provides for free).
+    pub fn confidence(&self, probs: &[f32], bvsb: f32) -> f64 {
+        match self {
+            ConfidenceMetric::BvSB => bvsb as f64,
+            ConfidenceMetric::Top1 => {
+                probs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64
+            }
+            ConfidenceMetric::NegEntropy => {
+                let k = probs.len() as f64;
+                let mut h = 0.0f64;
+                for &p in probs {
+                    if p > 0.0 {
+                        h -= (p as f64) * (p as f64).ln();
+                    }
+                }
+                1.0 - h / k.ln()
+            }
+        }
+    }
+}
+
+/// The per-device reconfigurable decision function with threshold
+/// `c_{i,t}` (Eq. 3): returns `true` when the sample must be forwarded
+/// (confidence below threshold).
+#[derive(Clone, Debug)]
+pub struct DecisionFn {
+    pub metric: ConfidenceMetric,
+    threshold: f64,
+}
+
+impl DecisionFn {
+    pub fn new(threshold: f64) -> Self {
+        Self {
+            metric: ConfidenceMetric::BvSB,
+            threshold: threshold.clamp(0.0, 1.0),
+        }
+    }
+
+    pub fn with_metric(mut self, metric: ConfidenceMetric) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Runtime reconfiguration by the scheduler (thresholds are
+    /// continuous in [0,1] — §IV-C).
+    pub fn set_threshold(&mut self, c: f64) {
+        self.threshold = c.clamp(0.0, 1.0);
+    }
+
+    /// d_i(f_l(x)) — Eq. 3. `true` = forward to the server.
+    pub fn forwards(&self, confidence: f64) -> bool {
+        confidence < self.threshold
+    }
+
+    pub fn decide(&self, probs: &[f32], bvsb: f32) -> bool {
+        self.forwards(self.metric.confidence(probs, bvsb))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bvsb_uses_precomputed_margin() {
+        let m = ConfidenceMetric::BvSB;
+        assert_eq!(m.confidence(&[0.1, 0.9], 0.8), 0.8f32 as f64);
+    }
+
+    #[test]
+    fn top1_takes_max_prob() {
+        let m = ConfidenceMetric::Top1;
+        let c = m.confidence(&[0.2, 0.5, 0.3], 0.2);
+        assert!((c - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn neg_entropy_bounds() {
+        let m = ConfidenceMetric::NegEntropy;
+        // uniform => minimal confidence 0
+        let k = 10;
+        let uni = vec![1.0f32 / k as f32; k];
+        assert!(m.confidence(&uni, 0.0).abs() < 1e-6);
+        // one-hot => maximal confidence 1
+        let mut hot = vec![0.0f32; k];
+        hot[3] = 1.0;
+        assert!((m.confidence(&hot, 1.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decision_thresholding() {
+        let mut d = DecisionFn::new(0.5);
+        assert!(d.forwards(0.49));
+        assert!(!d.forwards(0.5)); // >= threshold stays local (Eq. 3)
+        d.set_threshold(0.9);
+        assert!(d.forwards(0.5));
+    }
+
+    #[test]
+    fn threshold_clamped_to_unit_interval() {
+        let mut d = DecisionFn::new(2.0);
+        assert_eq!(d.threshold(), 1.0);
+        d.set_threshold(-0.3);
+        assert_eq!(d.threshold(), 0.0);
+    }
+
+    #[test]
+    fn zero_threshold_never_forwards() {
+        let d = DecisionFn::new(0.0);
+        assert!(!d.forwards(0.0));
+        assert!(!d.forwards(1.0));
+    }
+
+    #[test]
+    fn decide_via_metric() {
+        let d = DecisionFn::new(0.6).with_metric(ConfidenceMetric::Top1);
+        assert!(d.decide(&[0.55, 0.45], 0.1)); // top1=0.55 < 0.6
+        assert!(!d.decide(&[0.7, 0.3], 0.4));
+    }
+}

@@ -1,0 +1,6 @@
+//! Cascade decision layer: confidence metrics and the reconfigurable
+//! forwarding decision function (paper §IV-A).
+
+pub mod decision;
+
+pub use decision::{ConfidenceMetric, DecisionFn};

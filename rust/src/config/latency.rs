@@ -1,0 +1,149 @@
+//! Calibrated latency tables (DESIGN.md §6).
+//!
+//! The paper measured per-device and per-batch-size server latencies on
+//! its physical testbed (Table I) and drove its evaluation from those
+//! tables ("used this data to conduct simulation-based experiments",
+//! §V-A). We do the same: the discrete-event engine takes timing from
+//! these calibrated curves while the *outputs* (softmax, BvSB,
+//! correctness) come from real PJRT execution of the AOT artifacts.
+
+use crate::models::Tier;
+
+/// Device-side single-sample inference latency in ms (paper Table I).
+pub fn device_latency_ms(tier: Tier) -> f64 {
+    match tier {
+        Tier::Low => 31.0,  // MobileNetV2 on Sony Xperia C5
+        Tier::Mid => 43.0,  // EfficientNetLite0 on Samsung A71
+        Tier::High => 33.0, // EfficientNetB0 on Samsung S20 FE
+        Tier::Vit => 57.0,  // MobileViT-x-small on Google Pixel 7
+    }
+}
+
+/// Server batch-latency model `t(b) = t0 + k*b + q*b^2` (ms), fitted to
+/// the paper's batch-1 latencies (Table I) and the Fig. 6/9 throughput
+/// plateaus of the Static baseline (~1000 and ~300 total samples/s at
+/// collapse onset => SLO-feasible forwarded capacity ~310/s for the
+/// InceptionV3 server and ~85/s for EfficientNetB3 under the paper's
+/// serving stack). The quadratic term captures EffB3's measured
+/// non-monotonicity ("batch size of 16 provides a higher throughput and
+/// lower latency than a batch size of 32", §V-A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServerLatencyModel {
+    /// Fixed per-batch overhead (kernel launch, PCIe hop) in ms.
+    pub t0_ms: f64,
+    /// Marginal per-sample cost in ms.
+    pub k_ms: f64,
+    /// Superlinear congestion term (memory pressure at large batches).
+    pub q_ms: f64,
+    /// Largest batch worth forming (diminishing returns beyond this —
+    /// the paper caps EfficientNetB3 at 16).
+    pub max_batch: usize,
+}
+
+impl ServerLatencyModel {
+    pub fn batch_ms(&self, batch: usize) -> f64 {
+        assert!(batch >= 1, "batch_ms(0)");
+        let b = batch as f64;
+        self.t0_ms + self.k_ms * b + self.q_ms * b * b
+    }
+
+    /// Steady-state throughput (samples/s) when running back-to-back
+    /// batches of size `b`.
+    pub fn throughput_at(&self, batch: usize) -> f64 {
+        batch as f64 / (self.batch_ms(batch) / 1000.0)
+    }
+
+    /// Peak attainable throughput across the batch grid.
+    pub fn peak_throughput(&self, grid: &[usize]) -> f64 {
+        grid.iter()
+            .filter(|&&b| b <= self.max_batch)
+            .map(|&b| self.throughput_at(b))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Latency model per server model name (the meta.json / artifact names).
+pub fn server_latency_model(model: &str) -> ServerLatencyModel {
+    match model {
+        // InceptionV3: 15 ms @ b=1; ~310/s peak @ b=64 (Fig 6 plateau).
+        "srv_inception" => ServerLatencyModel {
+            t0_ms: 12.0,
+            k_ms: 3.03,
+            q_ms: 0.0,
+            max_batch: 64,
+        },
+        // EfficientNetB3: 25 ms @ b=1; peak ~82/s at the b=16 cap, and
+        // throughput DROPS past 16 (Fig 9 plateau + §V-A cap).
+        "srv_effnetb3" => ServerLatencyModel {
+            t0_ms: 14.6,
+            k_ms: 10.4,
+            q_ms: 0.057,
+            max_batch: 16,
+        },
+        // DeiT-Base-Distilled: 14 ms @ b=1; ~350/s peak @ b=64.
+        "srv_deit" => ServerLatencyModel {
+            t0_ms: 11.3,
+            k_ms: 2.70,
+            q_ms: 0.0,
+            max_batch: 64,
+        },
+        other => panic!("no latency model for server model '{other}'"),
+    }
+}
+
+/// One-way device<->server communication latency (LAN AMQP hop).
+pub const COMM_LATENCY_MS: f64 = 2.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_batch1_latencies() {
+        assert!((server_latency_model("srv_inception").batch_ms(1) - 15.0).abs() < 0.1);
+        assert!((server_latency_model("srv_effnetb3").batch_ms(1) - 25.06).abs() < 0.1);
+        assert!((server_latency_model("srv_deit").batch_ms(1) - 14.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn fig6_fig9_forwarded_capacity_fit() {
+        // Fig 6/9: Static's total-throughput plateaus (~1000 and ~300
+        // samples/s) at ~30%-forwarding mean SLO-feasible forwarded
+        // capacities of ~310/s (IncV3) and ~85/s (EffB3).
+        let grid = [1, 2, 4, 8, 16, 32, 64];
+        let inc = server_latency_model("srv_inception").peak_throughput(&grid);
+        let eff = server_latency_model("srv_effnetb3").peak_throughput(&grid);
+        assert!((290.0..330.0).contains(&inc), "inception peak {inc}");
+        assert!((70.0..95.0).contains(&eff), "effnetb3 peak {eff}");
+    }
+
+    #[test]
+    fn effnetb3_nonmonotone_beyond_cap() {
+        let m = server_latency_model("srv_effnetb3");
+        assert_eq!(m.max_batch, 16);
+        // throughput rises to the cap...
+        assert!(m.throughput_at(16) > m.throughput_at(8));
+        // ...and FALLS past it (the §V-A justification for the cap).
+        assert!(m.throughput_at(32) < m.throughput_at(16));
+    }
+
+    #[test]
+    fn device_latencies_match_table1() {
+        assert_eq!(device_latency_ms(Tier::Low), 31.0);
+        assert_eq!(device_latency_ms(Tier::Mid), 43.0);
+        assert_eq!(device_latency_ms(Tier::High), 33.0);
+        assert_eq!(device_latency_ms(Tier::Vit), 57.0);
+    }
+
+    #[test]
+    fn throughput_monotone_in_batch_for_linear_model() {
+        let m = server_latency_model("srv_inception");
+        assert_eq!(m.q_ms, 0.0);
+        let mut prev = 0.0;
+        for b in [1, 2, 4, 8, 16, 32, 64] {
+            let t = m.throughput_at(b);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+}

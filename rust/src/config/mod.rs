@@ -1,0 +1,80 @@
+//! Configuration system: scheduler constants, scenario descriptions,
+//! calibrated latency tables.
+
+pub mod latency;
+pub mod scenario;
+
+use std::path::PathBuf;
+
+/// Scheduler / system constants (paper §V-B defaults).
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Target SLO satisfaction rate, in percent (paper: 95).
+    pub sr_target: f64,
+    /// SR-update window T, seconds (paper: 1.5 s).
+    pub window_s: f64,
+    /// Continuous-threshold scaling factor `a` (paper: 0.005).
+    pub update_gain: f64,
+    /// Dynamic-batching grid B (paper §V-A).
+    pub batch_grid: Vec<usize>,
+    /// Bounded in-flight forwards per device (AMQP-prefetch-like;
+    /// DESIGN.md §6 pipeline semantics).
+    pub max_outstanding: usize,
+    /// One-way comm latency in ms.
+    pub comm_ms: f64,
+    /// Where the AOT artifacts live.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            sr_target: 95.0,
+            window_s: 1.5,
+            update_gain: 0.005,
+            batch_grid: vec![1, 2, 4, 8, 16, 32, 64],
+            max_outstanding: 32,
+            comm_ms: latency::COMM_LATENCY_MS,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Resolve the artifacts dir: explicit env override, else walk up
+    /// from cwd looking for a directory containing meta.json.
+    pub fn locate_artifacts() -> PathBuf {
+        if let Ok(dir) = std::env::var("MTPP_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let candidate = cur.join("artifacts");
+            if candidate.join("meta.json").exists() {
+                return candidate;
+            }
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    pub fn with_artifacts(mut self, dir: PathBuf) -> Self {
+        self.artifacts_dir = dir;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = SystemConfig::default();
+        assert_eq!(c.sr_target, 95.0);
+        assert_eq!(c.window_s, 1.5);
+        assert_eq!(c.update_gain, 0.005);
+        assert_eq!(c.batch_grid, vec![1, 2, 4, 8, 16, 32, 64]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Scenario descriptors: everything that varies between the paper's
+//! experiments (device mix, server model, scheduler, SLO, stream
+//! length, intermittency) in one declarative struct.
+
+use crate::models::Tier;
+
+/// Which scheduling policy drives the forwarding thresholds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// MultiTASC++ (this paper).
+    MultiTascPP,
+    /// MultiTASC [ISCC'23] — batch-size signal, discrete steps.
+    MultiTasc,
+    /// Fixed calibrated threshold (the Static baseline).
+    Static,
+    /// Ablation: MultiTASC++ without §IV-D threshold scaling.
+    AblationNoScaling,
+    /// Ablation: MultiTASC++ with thresholds quantized to 0.05 steps
+    /// (reverting §IV-C continuous reconfiguration).
+    AblationQuantized,
+}
+
+impl SchedulerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::MultiTascPP => "multitasc++",
+            SchedulerKind::MultiTasc => "multitasc",
+            SchedulerKind::Static => "static",
+            SchedulerKind::AblationNoScaling => "mtpp-noscale",
+            SchedulerKind::AblationQuantized => "mtpp-quant",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "multitasc++" | "mtpp" => Ok(SchedulerKind::MultiTascPP),
+            "multitasc" | "mt" => Ok(SchedulerKind::MultiTasc),
+            "static" => Ok(SchedulerKind::Static),
+            "mtpp-noscale" => Ok(SchedulerKind::AblationNoScaling),
+            "mtpp-quant" => Ok(SchedulerKind::AblationQuantized),
+            other => anyhow::bail!("unknown scheduler '{other}'"),
+        }
+    }
+}
+
+/// How the server produces model outputs during simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Real PJRT execution of the AOT artifacts on the request path.
+    Real,
+    /// Precomputed output cache (itself built through PJRT by
+    /// `mtpp precompute`): used for large sweeps, validated against
+    /// Real on small configs (tests + EXPERIMENTS.md).
+    Cached,
+}
+
+/// Intermittent-participation parameters (paper §V-B-E, Fig 19/20).
+#[derive(Clone, Copy, Debug)]
+pub struct Intermittent {
+    /// Probability a device goes offline at all (paper: 0.5).
+    pub offline_prob: f64,
+    /// Offline onset ~ N(mu = frac * N, sd = frac_sd * N) in samples.
+    pub onset_mean_frac: f64,
+    pub onset_sd_frac: f64,
+    /// Offline duration ~ alpha distribution, shape parameter.
+    pub duration_alpha: f64,
+    /// Duration scale in seconds.
+    pub duration_scale_s: f64,
+}
+
+impl Default for Intermittent {
+    fn default() -> Self {
+        Self {
+            offline_prob: 0.5,
+            onset_mean_frac: 0.5, // mu = N/2
+            onset_sd_frac: 0.2,   // sigma = N/5
+            duration_alpha: 60.0,
+            duration_scale_s: 1.0,
+        }
+    }
+}
+
+/// A full experiment scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Device population: (tier, count) pairs.
+    pub devices: Vec<(Tier, usize)>,
+    /// Initial server model name (may change if switching is enabled).
+    pub server_model: String,
+    pub scheduler: SchedulerKind,
+    /// Latency SLO in ms.
+    pub slo_ms: f64,
+    /// Samples per device stream (paper: 5000; Fig 10: 1000).
+    pub samples_per_device: usize,
+    /// Dataset sampling seed (paper uses three seeds).
+    pub seed: u64,
+    /// Enable §IV-E server model switching.
+    pub model_switching: bool,
+    /// Intermittent device participation (Fig 19/20), if any.
+    pub intermittent: Option<Intermittent>,
+    pub exec: ExecMode,
+}
+
+impl Scenario {
+    /// Homogeneous population of `n` devices of one tier.
+    pub fn homogeneous(tier: Tier, n: usize, server_model: &str) -> Self {
+        Self {
+            devices: vec![(tier, n)],
+            server_model: server_model.to_string(),
+            scheduler: SchedulerKind::MultiTascPP,
+            slo_ms: 150.0,
+            samples_per_device: 5000,
+            seed: 0,
+            model_switching: false,
+            intermittent: None,
+            exec: ExecMode::Cached,
+        }
+    }
+
+    /// Heterogeneous population: equal thirds low/mid/high (§V-A).
+    /// `n` is the total device count; remainders go to the lower tiers
+    /// first so the total is exact.
+    pub fn heterogeneous(n: usize, server_model: &str) -> Self {
+        let base = n / 3;
+        let rem = n % 3;
+        let low = base + usize::from(rem >= 1);
+        let mid = base + usize::from(rem >= 2);
+        let high = base;
+        Self {
+            devices: vec![(Tier::Low, low), (Tier::Mid, mid), (Tier::High, high)],
+            ..Self::homogeneous(Tier::Low, 0, server_model)
+        }
+    }
+
+    pub fn total_devices(&self) -> usize {
+        self.devices.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn with_scheduler(mut self, s: SchedulerKind) -> Self {
+        self.scheduler = s;
+        self
+    }
+
+    pub fn with_slo(mut self, slo_ms: f64) -> Self {
+        self.slo_ms = slo_ms;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_samples(mut self, n: usize) -> Self {
+        self.samples_per_device = n;
+        self
+    }
+
+    pub fn with_switching(mut self, on: bool) -> Self {
+        self.model_switching = on;
+        self
+    }
+
+    pub fn with_intermittent(mut self, i: Intermittent) -> Self {
+        self.intermittent = Some(i);
+        self
+    }
+
+    pub fn with_exec(mut self, e: ExecMode) -> Self {
+        self.exec = e;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heterogeneous_splits_exactly() {
+        for n in [3, 4, 5, 30, 100] {
+            let s = Scenario::heterogeneous(n, "srv_inception");
+            assert_eq!(s.total_devices(), n, "n={n}");
+        }
+        let s = Scenario::heterogeneous(31, "srv_inception");
+        assert_eq!(s.devices[0], (Tier::Low, 11));
+        assert_eq!(s.devices[1], (Tier::Mid, 10));
+        assert_eq!(s.devices[2], (Tier::High, 10));
+    }
+
+    #[test]
+    fn scheduler_kind_parse() {
+        assert_eq!(
+            SchedulerKind::parse("multitasc++").unwrap(),
+            SchedulerKind::MultiTascPP
+        );
+        assert_eq!(
+            SchedulerKind::parse("multitasc").unwrap(),
+            SchedulerKind::MultiTasc
+        );
+        assert_eq!(SchedulerKind::parse("static").unwrap(), SchedulerKind::Static);
+        assert!(SchedulerKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn builder_chain() {
+        let s = Scenario::homogeneous(Tier::Low, 10, "srv_inception")
+            .with_scheduler(SchedulerKind::Static)
+            .with_slo(100.0)
+            .with_seed(2)
+            .with_samples(1000)
+            .with_switching(true);
+        assert_eq!(s.scheduler, SchedulerKind::Static);
+        assert_eq!(s.slo_ms, 100.0);
+        assert_eq!(s.seed, 2);
+        assert_eq!(s.samples_per_device, 1000);
+        assert!(s.model_switching);
+    }
+}

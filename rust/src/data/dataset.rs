@@ -1,0 +1,144 @@
+//! Loader for `artifacts/dataset.bin` (python/compile/data.py format).
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::util::binio::BinReader;
+
+pub const DATASET_MAGIC: &[u8; 8] = b"MTPPDS01";
+
+/// The 50k-sample eval set: features, labels, difficulty scales.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub dim: usize,
+    pub num_classes: usize,
+    /// Row-major (n, dim) features.
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub sigma: Vec<f32>,
+    /// First `n_calibration` samples are the offline calibration split.
+    pub n_calibration: usize,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BinReader::open(path)?;
+        r.expect_magic(DATASET_MAGIC)?;
+        let n = r.read_u32()? as usize;
+        let dim = r.read_u32()? as usize;
+        let num_classes = r.read_u32()? as usize;
+        ensure!(n > 0 && dim > 0 && num_classes > 1, "degenerate dataset header");
+        let x = r.read_f32_vec(n * dim)?;
+        let y = r.read_i32_vec(n)?;
+        let sigma = r.read_f32_vec(n)?;
+        for &label in &y {
+            ensure!(
+                (0..num_classes as i32).contains(&label),
+                "label {label} out of range"
+            );
+        }
+        Ok(Self {
+            n,
+            dim,
+            num_classes,
+            x,
+            y,
+            sigma,
+            n_calibration: 10_000.min(n / 5),
+        })
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Indices of the eval pool (everything after the calibration
+    /// split) — the paper samples device streams from the LAST 40k.
+    pub fn eval_pool(&self) -> std::ops::Range<usize> {
+        self.n_calibration..self.n
+    }
+
+    /// Gather rows into a dense row-major buffer (server batch input).
+    pub fn gather(&self, indices: &[usize]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(indices.len() * self.dim);
+        for &i in indices {
+            out.extend_from_slice(self.row(i));
+        }
+        out
+    }
+
+    pub fn synthetic_for_tests(n: usize, dim: usize, num_classes: usize) -> Self {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(1234);
+        let x = (0..n * dim).map(|_| rng.next_f64() as f32).collect();
+        let y = (0..n)
+            .map(|_| rng.next_below(num_classes as u64) as i32)
+            .collect();
+        let sigma = (0..n).map(|_| rng.next_f64() as f32 + 0.5).collect();
+        Self {
+            n,
+            dim,
+            num_classes,
+            x,
+            y,
+            sigma,
+            n_calibration: n / 5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::binio::BinWriter;
+
+    fn write_tiny(path: &Path) {
+        let mut w = BinWriter::create(path).unwrap();
+        w.write_magic(DATASET_MAGIC).unwrap();
+        w.write_u32(3).unwrap(); // n
+        w.write_u32(2).unwrap(); // dim
+        w.write_u32(4).unwrap(); // classes
+        w.write_f32_slice(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        w.write_i32_slice(&[0, 3, 1]).unwrap();
+        w.write_f32_slice(&[0.5, 1.5, 2.5]).unwrap();
+        w.flush().unwrap();
+    }
+
+    #[test]
+    fn loads_tiny_dataset() {
+        let dir = std::env::temp_dir().join("mtpp_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.bin");
+        write_tiny(&path);
+        let ds = Dataset::load(&path).unwrap();
+        assert_eq!((ds.n, ds.dim, ds.num_classes), (3, 2, 4));
+        assert_eq!(ds.row(1), &[2.0, 3.0]);
+        assert_eq!(ds.y, vec![0, 3, 1]);
+        assert_eq!(ds.gather(&[2, 0]), vec![4.0, 5.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_label() {
+        let dir = std::env::temp_dir().join("mtpp_ds_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.bin");
+        let mut w = BinWriter::create(&path).unwrap();
+        w.write_magic(DATASET_MAGIC).unwrap();
+        w.write_u32(1).unwrap();
+        w.write_u32(1).unwrap();
+        w.write_u32(2).unwrap();
+        w.write_f32_slice(&[0.0]).unwrap();
+        w.write_i32_slice(&[9]).unwrap(); // out of range
+        w.write_f32_slice(&[1.0]).unwrap();
+        w.flush().unwrap();
+        assert!(Dataset::load(&path).is_err());
+    }
+
+    #[test]
+    fn eval_pool_excludes_calibration() {
+        let ds = Dataset::synthetic_for_tests(100, 4, 5);
+        assert_eq!(ds.eval_pool(), 20..100);
+    }
+}

@@ -1,0 +1,7 @@
+//! Dataset loading and per-device stream sampling.
+
+pub mod dataset;
+pub mod sampler;
+
+pub use dataset::Dataset;
+pub use sampler::device_stream;

@@ -1,0 +1,71 @@
+//! Per-device stream sampling (paper §V-A): each device's dataset is
+//! `samples_per_device` samples drawn *without replacement* from the
+//! eval pool (the last 40k of the validation set), independently per
+//! device and per experiment seed.
+
+use crate::data::dataset::Dataset;
+use crate::util::prng::Rng;
+
+/// Sample the stream of dataset indices for `device_id` under `seed`.
+pub fn device_stream(
+    ds: &Dataset,
+    seed: u64,
+    device_id: usize,
+    samples_per_device: usize,
+) -> Vec<usize> {
+    let pool = ds.eval_pool();
+    let pool_len = pool.len();
+    let n = samples_per_device.min(pool_len);
+    let mut rng = Rng::stream(seed.wrapping_mul(0x9E37_79B9), device_id as u64);
+    rng.sample_indices(pool_len, n)
+        .into_iter()
+        .map(|i| i + pool.start)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> Dataset {
+        Dataset::synthetic_for_tests(1000, 4, 10)
+    }
+
+    #[test]
+    fn stream_is_deterministic() {
+        let d = ds();
+        assert_eq!(device_stream(&d, 7, 3, 50), device_stream(&d, 7, 3, 50));
+    }
+
+    #[test]
+    fn streams_differ_by_device_and_seed() {
+        let d = ds();
+        assert_ne!(device_stream(&d, 7, 0, 50), device_stream(&d, 7, 1, 50));
+        assert_ne!(device_stream(&d, 7, 0, 50), device_stream(&d, 8, 0, 50));
+    }
+
+    #[test]
+    fn indices_come_from_eval_pool_only() {
+        let d = ds();
+        for &i in &device_stream(&d, 1, 0, 200) {
+            assert!(i >= d.n_calibration && i < d.n);
+        }
+    }
+
+    #[test]
+    fn no_duplicates_within_stream() {
+        let d = ds();
+        let s = device_stream(&d, 2, 5, 400);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), s.len());
+    }
+
+    #[test]
+    fn oversized_request_clamps_to_pool() {
+        let d = ds();
+        let s = device_stream(&d, 3, 0, 10_000);
+        assert_eq!(s.len(), d.eval_pool().len());
+    }
+}

@@ -1,0 +1,264 @@
+//! Shared experiment infrastructure: the evaluation context (registry +
+//! dataset + output caches), sweep execution, seed aggregation, CSV
+//! emission.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context as _, Result};
+
+use crate::config::scenario::{Scenario, SchedulerKind};
+use crate::config::SystemConfig;
+use crate::data::Dataset;
+use crate::metrics::RunMetrics;
+use crate::models::outputs::{CachedOutputs, RealExecProvider};
+use crate::models::Registry;
+use crate::runtime::Engine;
+use crate::sim::{run_scenario_with, Overrides};
+use crate::util::stats::seed_summary;
+
+/// Everything an experiment driver needs.
+pub struct Ctx {
+    pub cfg: SystemConfig,
+    pub registry: Registry,
+    pub dataset: Dataset,
+    pub outputs: CachedOutputs,
+    pub results_dir: PathBuf,
+    /// Reduced sweep for quick runs (`--quick`).
+    pub quick: bool,
+}
+
+/// All models any experiment touches.
+pub const ALL_MODELS: [&str; 7] = [
+    "dev_low",
+    "dev_mid",
+    "dev_high",
+    "dev_vit",
+    "srv_inception",
+    "srv_effnetb3",
+    "srv_deit",
+];
+
+impl Ctx {
+    /// Standard context: artifacts + dataset + PJRT-built output caches.
+    pub fn load(artifacts_dir: &Path, results_dir: &Path, quick: bool) -> Result<Self> {
+        let registry = Registry::load(artifacts_dir)?;
+        let dataset = Dataset::load(&artifacts_dir.join("dataset.bin"))
+            .context("load dataset.bin (run `make artifacts`)")?;
+        // Build (or reuse) the output caches through the PJRT engine.
+        let engine = Engine::new(registry.clone())?;
+        let outputs = CachedOutputs::build(&engine, &dataset, &ALL_MODELS)?;
+        std::fs::create_dir_all(results_dir)?;
+        Ok(Self {
+            cfg: SystemConfig::default(),
+            registry,
+            dataset,
+            outputs,
+            results_dir: results_dir.to_path_buf(),
+            quick,
+        })
+    }
+
+    /// Device-count grid for scalability sweeps (paper: up to 100).
+    pub fn device_grid(&self) -> Vec<usize> {
+        if self.quick {
+            vec![2, 10, 25, 50, 80]
+        } else {
+            vec![2, 5, 10, 15, 20, 25, 30, 40, 50, 60, 80, 100]
+        }
+    }
+
+    pub fn seeds(&self) -> Vec<u64> {
+        if self.quick {
+            vec![0]
+        } else {
+            vec![0, 1, 2] // the paper's three seeds
+        }
+    }
+
+    pub fn samples_per_device(&self) -> usize {
+        if self.quick {
+            1500
+        } else {
+            5000
+        }
+    }
+
+    /// Execute one scenario against the cached output provider.
+    pub fn run(&mut self, scn: &Scenario, ovr: &Overrides) -> Result<RunMetrics> {
+        run_scenario_with(
+            scn,
+            &self.cfg,
+            &self.registry,
+            &self.dataset,
+            &mut self.outputs,
+            ovr,
+        )
+    }
+
+    /// Execute one scenario with REAL PJRT execution on the request
+    /// path (validation / quickstart scale).
+    pub fn run_real(&self, scn: &Scenario) -> Result<RunMetrics> {
+        let engine = Engine::new(self.registry.clone())?;
+        let mut provider = RealExecProvider::new(&engine, &self.dataset);
+        run_scenario_with(
+            scn,
+            &self.cfg,
+            &self.registry,
+            &self.dataset,
+            &mut provider,
+            &Overrides::default(),
+        )
+    }
+}
+
+/// One aggregated sweep cell (mean/min/max over seeds).
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub scheduler: &'static str,
+    pub slo_ms: f64,
+    pub devices: usize,
+    pub tier: Option<&'static str>,
+    pub sr_mean: f64,
+    pub sr_min: f64,
+    pub sr_max: f64,
+    pub acc_mean: f64,
+    pub acc_min: f64,
+    pub acc_max: f64,
+    pub goodput_mean: f64,
+    pub throughput_mean: f64,
+    pub fwd_mean: f64,
+}
+
+pub fn aggregate_rows(
+    scheduler: SchedulerKind,
+    slo_ms: f64,
+    devices: usize,
+    tier: Option<(&'static str, crate::models::Tier)>,
+    runs: &[RunMetrics],
+) -> SweepRow {
+    let pick = |m: &RunMetrics| -> (f64, f64, f64, f64, f64) {
+        match tier {
+            Some((_, t)) => {
+                let agg = m.tier(t).expect("tier aggregate missing");
+                (
+                    agg.satisfaction_rate(),
+                    agg.accuracy(),
+                    m.throughput_satisfied(),
+                    m.throughput(),
+                    agg.forward_rate(),
+                )
+            }
+            None => (
+                m.overall.satisfaction_rate(),
+                m.overall.accuracy(),
+                m.throughput_satisfied(),
+                m.throughput(),
+                m.overall.forward_rate(),
+            ),
+        }
+    };
+    let srs: Vec<f64> = runs.iter().map(|m| pick(m).0).collect();
+    let accs: Vec<f64> = runs.iter().map(|m| pick(m).1).collect();
+    let goodputs: Vec<f64> = runs.iter().map(|m| pick(m).2).collect();
+    let tputs: Vec<f64> = runs.iter().map(|m| pick(m).3).collect();
+    let fwds: Vec<f64> = runs.iter().map(|m| pick(m).4).collect();
+    let sr = seed_summary(&srs);
+    let acc = seed_summary(&accs);
+    SweepRow {
+        scheduler: scheduler_name(scheduler),
+        slo_ms,
+        devices,
+        tier: tier.map(|(n, _)| n),
+        sr_mean: sr.mean,
+        sr_min: sr.min,
+        sr_max: sr.max,
+        acc_mean: acc.mean,
+        acc_min: acc.min,
+        acc_max: acc.max,
+        goodput_mean: seed_summary(&goodputs).mean,
+        throughput_mean: seed_summary(&tputs).mean,
+        fwd_mean: seed_summary(&fwds).mean,
+    }
+}
+
+fn scheduler_name(k: SchedulerKind) -> &'static str {
+    match k {
+        SchedulerKind::MultiTascPP => "multitasc++",
+        SchedulerKind::MultiTasc => "multitasc",
+        SchedulerKind::Static => "static",
+        SchedulerKind::AblationNoScaling => "mtpp-noscale",
+        SchedulerKind::AblationQuantized => "mtpp-quant",
+    }
+}
+
+/// Write sweep rows as CSV and echo a readable table.
+pub fn emit_rows(path: &Path, rows: &[SweepRow]) -> Result<()> {
+    let mut csv = String::from(
+        "scheduler,slo_ms,devices,tier,sr_mean,sr_min,sr_max,\
+         acc_mean,acc_min,acc_max,goodput,throughput,fwd_frac\n",
+    );
+    for r in rows {
+        csv.push_str(&format!(
+            "{},{},{},{},{:.3},{:.3},{:.3},{:.4},{:.4},{:.4},{:.1},{:.1},{:.4}\n",
+            r.scheduler,
+            r.slo_ms,
+            r.devices,
+            r.tier.unwrap_or("all"),
+            r.sr_mean,
+            r.sr_min,
+            r.sr_max,
+            r.acc_mean,
+            r.acc_min,
+            r.acc_max,
+            r.goodput_mean,
+            r.throughput_mean,
+            r.fwd_mean,
+        ));
+    }
+    std::fs::write(path, &csv)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+pub fn print_rows(title: &str, rows: &[SweepRow]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<12} {:>6} {:>7} {:>5} | {:>7} {:>7} | {:>8} {:>9}",
+        "scheduler", "slo", "devices", "tier", "SR%", "acc%", "goodput", "fwd%"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:>6} {:>7} {:>5} | {:>7.2} {:>7.2} | {:>8.1} {:>9.2}",
+            r.scheduler,
+            r.slo_ms,
+            r.devices,
+            r.tier.unwrap_or("all"),
+            r.sr_mean,
+            r.acc_mean * 100.0,
+            r.goodput_mean,
+            r.fwd_mean * 100.0,
+        );
+    }
+}
+
+/// Time-series CSV for the trace experiments (Figs 17-20).
+pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
+    let mut csv = String::from(
+        "t_s,active_devices,mean_threshold,running_sr,running_acc,queue_len,server_model_idx\n",
+    );
+    for p in &metrics.trace {
+        csv.push_str(&format!(
+            "{:.2},{},{:.4},{:.2},{:.4},{},{}\n",
+            p.t_s,
+            p.active_devices,
+            p.mean_threshold,
+            p.running_sr,
+            p.running_acc,
+            p.queue_len,
+            p.server_model_idx
+        ));
+    }
+    std::fs::write(path, &csv)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

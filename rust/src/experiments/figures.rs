@@ -1,0 +1,406 @@
+//! One driver per paper figure/table (DESIGN.md §5 index).
+//!
+//! Every driver regenerates the corresponding figure's series as CSV
+//! under `results/` and prints the summary rows. Figures that share a
+//! sweep (e.g. 4/5/6 are SR / accuracy / throughput views of the same
+//! homogeneous InceptionV3 sweep) are produced by one driver.
+
+use anyhow::Result;
+
+use crate::config::scenario::{Intermittent, Scenario, SchedulerKind};
+use crate::experiments::common::{
+    aggregate_rows, emit_rows, emit_trace, print_rows, Ctx, SweepRow,
+};
+use crate::models::Tier;
+use crate::sim::Overrides;
+
+const SLOS: [f64; 3] = [100.0, 150.0, 200.0];
+const SCHEDULERS: [SchedulerKind; 3] = [
+    SchedulerKind::MultiTascPP,
+    SchedulerKind::MultiTasc,
+    SchedulerKind::Static,
+];
+
+/// Shared sweep engine for the homogeneous / heterogeneous /
+/// transformer scalability figures.
+#[allow(clippy::too_many_arguments)]
+fn sweep(
+    ctx: &mut Ctx,
+    title: &str,
+    csv: &str,
+    base: &dyn Fn(usize) -> Scenario,
+    slos: &[f64],
+    schedulers: &[SchedulerKind],
+    per_tier: &[(&'static str, Tier)],
+    samples_override: Option<usize>,
+) -> Result<Vec<SweepRow>> {
+    let mut rows = Vec::new();
+    let samples = samples_override.unwrap_or_else(|| ctx.samples_per_device());
+    for &sched in schedulers {
+        for &slo in slos {
+            for &n in &ctx.device_grid() {
+                let mut runs = Vec::new();
+                for &seed in &ctx.seeds() {
+                    let scn = base(n)
+                        .with_scheduler(sched)
+                        .with_slo(slo)
+                        .with_seed(seed)
+                        .with_samples(samples);
+                    runs.push(ctx.run(&scn, &Overrides::default())?);
+                }
+                if per_tier.is_empty() {
+                    rows.push(aggregate_rows(sched, slo, n, None, &runs));
+                } else {
+                    for &(name, tier) in per_tier {
+                        // Small heterogeneous populations may not
+                        // instantiate every tier (e.g. n=2 has no
+                        // high-tier device).
+                        if runs[0].tier(tier).is_none() {
+                            continue;
+                        }
+                        rows.push(aggregate_rows(sched, slo, n, Some((name, tier)), &runs));
+                    }
+                }
+            }
+        }
+    }
+    print_rows(title, &rows);
+    emit_rows(&ctx.results_dir.join(csv), &rows)?;
+    Ok(rows)
+}
+
+/// Figs 4, 5, 6: homogeneous low-tier devices, InceptionV3-like server.
+pub fn fig4_6(ctx: &mut Ctx) -> Result<()> {
+    sweep(
+        ctx,
+        "Figs 4-6: SLO / accuracy / throughput — InceptionV3 x MobileNetV2",
+        "fig4_6_homogeneous_inception.csv",
+        &|n| Scenario::homogeneous(Tier::Low, n, "srv_inception"),
+        &SLOS,
+        &SCHEDULERS,
+        &[],
+        None,
+    )?;
+    Ok(())
+}
+
+/// Figs 7, 8, 9: homogeneous low-tier devices, EfficientNetB3-like
+/// server (lower attainable throughput).
+pub fn fig7_9(ctx: &mut Ctx) -> Result<()> {
+    sweep(
+        ctx,
+        "Figs 7-9: SLO / accuracy / throughput — EfficientNetB3 x MobileNetV2",
+        "fig7_9_homogeneous_effnetb3.csv",
+        &|n| Scenario::homogeneous(Tier::Low, n, "srv_effnetb3"),
+        &SLOS,
+        &SCHEDULERS,
+        &[],
+        None,
+    )?;
+    Ok(())
+}
+
+/// Fig 10: the 1000-sample convergence stress (150 ms SLO) — exposes
+/// MultiTASC's slow threshold convergence.
+pub fn fig10(ctx: &mut Ctx) -> Result<()> {
+    sweep(
+        ctx,
+        "Fig 10: 1000-sample streams, 150 ms SLO — EfficientNetB3",
+        "fig10_short_streams.csv",
+        &|n| Scenario::homogeneous(Tier::Low, n, "srv_effnetb3"),
+        &[150.0],
+        &SCHEDULERS,
+        &[],
+        Some(1000),
+    )?;
+    Ok(())
+}
+
+const HETERO_TIERS: [(&str, Tier); 3] = [
+    ("low", Tier::Low),
+    ("mid", Tier::Mid),
+    ("high", Tier::High),
+];
+
+/// Figs 11, 12: heterogeneous population (equal thirds), InceptionV3.
+pub fn fig11_12(ctx: &mut Ctx) -> Result<()> {
+    sweep(
+        ctx,
+        "Figs 11-12: per-tier SR / accuracy — InceptionV3, heterogeneous",
+        "fig11_12_heterogeneous_inception.csv",
+        &|n| Scenario::heterogeneous(n, "srv_inception"),
+        &SLOS,
+        &SCHEDULERS,
+        &HETERO_TIERS,
+        None,
+    )?;
+    Ok(())
+}
+
+/// Figs 13, 14: heterogeneous population, EfficientNetB3.
+pub fn fig13_14(ctx: &mut Ctx) -> Result<()> {
+    sweep(
+        ctx,
+        "Figs 13-14: per-tier SR / accuracy — EfficientNetB3, heterogeneous",
+        "fig13_14_heterogeneous_effnetb3.csv",
+        &|n| Scenario::heterogeneous(n, "srv_effnetb3"),
+        &SLOS,
+        &SCHEDULERS,
+        &HETERO_TIERS,
+        None,
+    )?;
+    Ok(())
+}
+
+/// Figs 15, 16: transformer pair — MobileViT-like device, DeiT-like
+/// server. The paper compares MultiTASC++ and Static only.
+pub fn fig15_16(ctx: &mut Ctx) -> Result<()> {
+    sweep(
+        ctx,
+        "Figs 15-16: SR / accuracy — DeiT x MobileViT (transformers)",
+        "fig15_16_transformers.csv",
+        &|n| Scenario::homogeneous(Tier::Vit, n, "srv_deit"),
+        &SLOS,
+        &[SchedulerKind::MultiTascPP, SchedulerKind::Static],
+        &[],
+        None,
+    )?;
+    Ok(())
+}
+
+/// Figs 17 / 18: §IV-E server model switching, 150 ms SLO, low-tier
+/// devices, switching enabled vs disabled, init on either end of the
+/// ladder.
+fn fig_switch(ctx: &mut Ctx, init_model: &str, csv: &str, title: &str) -> Result<()> {
+    let grid: Vec<usize> = if ctx.quick {
+        vec![2, 6, 10, 14, 18]
+    } else {
+        vec![2, 4, 6, 8, 10, 12, 14, 16, 18, 20]
+    };
+    let mut rows = Vec::new();
+    for switching in [true, false] {
+        for &n in &grid {
+            let mut runs = Vec::new();
+            for &seed in &ctx.seeds() {
+                let scn = Scenario::homogeneous(Tier::Low, n, init_model)
+                    .with_scheduler(SchedulerKind::MultiTascPP)
+                    .with_slo(150.0)
+                    .with_seed(seed)
+                    .with_samples(ctx.samples_per_device())
+                    .with_switching(switching);
+                runs.push(ctx.run(&scn, &Overrides::default())?);
+            }
+            let mut row = aggregate_rows(SchedulerKind::MultiTascPP, 150.0, n, None, &runs);
+            // Reuse the scheduler column to tag the series.
+            row.scheduler = if switching { "mtpp+switch" } else { "mtpp" };
+            rows.push(row);
+        }
+    }
+    print_rows(title, &rows);
+    emit_rows(&ctx.results_dir.join(csv), &rows)?;
+    Ok(())
+}
+
+pub fn fig17(ctx: &mut Ctx) -> Result<()> {
+    fig_switch(
+        ctx,
+        "srv_inception",
+        "fig17_switching_from_inception.csv",
+        "Fig 17: model switching, InceptionV3 init",
+    )
+}
+
+pub fn fig18(ctx: &mut Ctx) -> Result<()> {
+    fig_switch(
+        ctx,
+        "srv_effnetb3",
+        "fig18_switching_from_effnetb3.csv",
+        "Fig 18: model switching, EfficientNetB3 init",
+    )
+}
+
+/// Figs 19 / 20: intermittent device participation time-series (20
+/// low-tier devices, 50% offline probability, EfficientNetB3 server).
+fn fig_intermittent(ctx: &mut Ctx, ovr: Overrides, csv: &str, title: &str) -> Result<()> {
+    let scn = Scenario::homogeneous(Tier::Low, 20, "srv_effnetb3")
+        .with_scheduler(if ovr.initial_threshold.is_some() {
+            SchedulerKind::Static
+        } else {
+            SchedulerKind::MultiTascPP
+        })
+        .with_slo(150.0)
+        .with_seed(1)
+        .with_samples(ctx.samples_per_device())
+        .with_intermittent(Intermittent::default());
+    let metrics = ctx.run(&scn, &ovr)?;
+    println!(
+        "\n== {title} ==\nSR {:.2}%  acc {:.2}%  makespan {:.1}s  trace points {}",
+        metrics.overall.satisfaction_rate(),
+        metrics.overall.accuracy() * 100.0,
+        metrics.makespan_s,
+        metrics.trace.len()
+    );
+    emit_trace(&ctx.results_dir.join(csv), &metrics)?;
+    Ok(())
+}
+
+pub fn fig19(ctx: &mut Ctx) -> Result<()> {
+    fig_intermittent(
+        ctx,
+        Overrides::default(),
+        "fig19_intermittent_dynamic.csv",
+        "Fig 19: intermittent participation, dynamic threshold",
+    )
+}
+
+pub fn fig20(ctx: &mut Ctx) -> Result<()> {
+    fig_intermittent(
+        ctx,
+        Overrides {
+            initial_threshold: Some(0.35),
+        },
+        "fig20_intermittent_static.csv",
+        "Fig 20: intermittent participation, static threshold 0.35",
+    )
+}
+
+/// Table I: the evaluated model zoo — measured accuracies of the
+/// substitutes next to the paper's originals, plus the calibrated
+/// latency parameters.
+pub fn table1(ctx: &mut Ctx) -> Result<()> {
+    use crate::config::latency::{device_latency_ms, server_latency_model};
+    println!("\n== Table I: evaluated models (substitutes vs paper) ==");
+    println!(
+        "{:<16} {:>9} {:>9} {:>11} {:>10}",
+        "model", "acc(cal)", "acc(pool)", "paper acc", "latency"
+    );
+    let paper = [
+        ("dev_low", 71.85, "MobileNetV2"),
+        ("dev_mid", 75.02, "EffNetLite0"),
+        ("dev_high", 77.04, "EffNetB0"),
+        ("dev_vit", 74.64, "MobileViT-xs"),
+        ("srv_inception", 78.29, "InceptionV3"),
+        ("srv_effnetb3", 81.49, "EffNetB3"),
+        ("srv_deit", 83.41, "DeiT-Base"),
+    ];
+    let mut csv = String::from("model,paper_name,acc_cal,acc_pool,paper_acc,lat_ms\n");
+    for (name, paper_acc, paper_name) in paper {
+        let info = ctx.registry.model(name)?;
+        let lat = match name {
+            "dev_low" => device_latency_ms(Tier::Low),
+            "dev_mid" => device_latency_ms(Tier::Mid),
+            "dev_high" => device_latency_ms(Tier::High),
+            "dev_vit" => device_latency_ms(Tier::Vit),
+            srv => server_latency_model(srv).batch_ms(1),
+        };
+        println!(
+            "{:<16} {:>8.2}% {:>8.2}% {:>10.2}% {:>8.1}ms",
+            name,
+            info.acc_calibration * 100.0,
+            info.acc_eval_pool * 100.0,
+            paper_acc,
+            lat
+        );
+        csv.push_str(&format!(
+            "{},{},{:.4},{:.4},{},{:.1}\n",
+            name, paper_name, info.acc_calibration, info.acc_eval_pool, paper_acc, lat
+        ));
+    }
+    std::fs::write(ctx.results_dir.join("table1_models.csv"), csv)?;
+    Ok(())
+}
+
+/// Ablation (beyond the paper's figures, motivated by its §VI
+/// conclusions): MultiTASC++ with the §IV-D multiplier disabled and
+/// with §IV-C continuity quantized away, against the full scheduler.
+pub fn ablation(ctx: &mut Ctx) -> Result<()> {
+    sweep(
+        ctx,
+        "Ablation: full MT++ vs no-scaling vs quantized thresholds",
+        "ablation_components.csv",
+        &|n| Scenario::homogeneous(Tier::Low, n, "srv_inception"),
+        &[150.0],
+        &[
+            SchedulerKind::MultiTascPP,
+            SchedulerKind::AblationNoScaling,
+            SchedulerKind::AblationQuantized,
+        ],
+        &[],
+        None,
+    )?;
+    Ok(())
+}
+
+/// The experiment registry: id -> driver.
+pub type Driver = fn(&mut Ctx) -> Result<()>;
+
+pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
+    vec![
+        ("table1", "Table I model zoo", table1 as Driver),
+        ("fig4_6", "homogeneous InceptionV3 sweep (Figs 4,5,6)", fig4_6),
+        ("fig7_9", "homogeneous EfficientNetB3 sweep (Figs 7,8,9)", fig7_9),
+        ("fig10", "1000-sample convergence stress", fig10),
+        ("fig11_12", "heterogeneous InceptionV3 (Figs 11,12)", fig11_12),
+        ("fig13_14", "heterogeneous EfficientNetB3 (Figs 13,14)", fig13_14),
+        ("fig15_16", "transformer pair (Figs 15,16)", fig15_16),
+        ("fig17", "model switching from InceptionV3", fig17),
+        ("fig18", "model switching from EfficientNetB3", fig18),
+        ("fig19", "intermittent participation, dynamic", fig19),
+        ("fig20", "intermittent participation, static threshold", fig20),
+        ("ablation", "MT++ component ablation (extension)", ablation),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique() {
+        let reg = registry();
+        let mut ids: Vec<&str> = reg.iter().map(|(id, _, _)| *id).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+        assert!(n >= 12, "every paper figure family + table1 + ablation");
+    }
+
+    #[test]
+    fn aliases_resolve_to_shared_drivers() {
+        for (alias, target) in [
+            ("fig4", "fig4_6"),
+            ("fig5", "fig4_6"),
+            ("fig6", "fig4_6"),
+            ("fig8", "fig7_9"),
+            ("fig12", "fig11_12"),
+            ("fig14", "fig13_14"),
+            ("fig16", "fig15_16"),
+        ] {
+            let (name, _) = resolve(alias).expect(alias);
+            assert_eq!(name, target);
+        }
+        assert!(resolve("fig99").is_none());
+        assert!(resolve("table1").is_some());
+    }
+}
+
+/// Resolve aliases like `fig5` -> the `fig4_6` driver.
+pub fn resolve(id: &str) -> Option<(&'static str, Driver)> {
+    let reg = registry();
+    if let Some((name, _, d)) = reg.iter().find(|(n, _, _)| *n == id) {
+        return Some((name, *d));
+    }
+    let alias = match id {
+        "fig4" | "fig5" | "fig6" => "fig4_6",
+        "fig7" | "fig8" | "fig9" => "fig7_9",
+        "fig11" | "fig12" => "fig11_12",
+        "fig13" | "fig14" => "fig13_14",
+        "fig15" | "fig16" => "fig15_16",
+        _ => return None,
+    };
+    registry()
+        .into_iter()
+        .find(|(n, _, _)| *n == alias)
+        .map(|(n, _, d)| (n, d))
+}

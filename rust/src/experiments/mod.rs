@@ -1,0 +1,8 @@
+//! Experiment drivers regenerating every table and figure of the
+//! paper's evaluation (§V). See DESIGN.md §5 for the index.
+
+pub mod common;
+pub mod figures;
+
+pub use common::Ctx;
+pub use figures::{registry, resolve};

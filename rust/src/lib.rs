@@ -1,0 +1,35 @@
+//! # MultiTASC++ — multi-device cascade inference at the consumer edge
+//!
+//! Reproduction of *MultiTASC++: A Continuously Adaptive Scheduler for
+//! Edge-Based Multi-Device Cascade Inference* (Nikolaidis, Venieris,
+//! Venieris — ITU J-FET 2024) as a three-layer rust + JAX + Pallas
+//! system: rust owns the entire request path (this crate); JAX/Pallas
+//! author the models at build time and AOT-lower them to HLO text that
+//! the [`runtime`] module executes through PJRT.
+//!
+//! Layer map:
+//! * [`scheduler`] — the paper's contribution: MultiTASC++ (SLO
+//!   satisfaction-rate updates, continuous threshold reconfiguration,
+//!   threshold scaling, server model switching) plus the MultiTASC and
+//!   Static baselines.
+//! * [`server`] — request queue, dynamic batcher, execution engine,
+//!   result distribution.
+//! * [`device`] — device-side state machine: local inference, the
+//!   forwarding decision function, SLO window accounting.
+//! * [`sim`] — discrete-event engine that reproduces the paper's
+//!   simulation-based evaluation with calibrated latency tables.
+//! * [`net`] — live wall-clock serving mode over TCP.
+//! * [`experiments`] — one driver per paper figure/table.
+
+pub mod bench;
+pub mod cascade;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod experiments;
+pub mod models;
+pub mod net;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;

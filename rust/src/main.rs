@@ -1,0 +1,185 @@
+//! `mtpp` — the MultiTASC++ leader binary.
+//!
+//! Subcommands:
+//!   precompute              build PJRT output caches for all models
+//!   experiment <id>         regenerate a paper figure/table (see list)
+//!   experiment all          regenerate everything
+//!   sim                     run a single custom scenario
+//!   serve                   live TCP serving mode (leader)
+//!   device                  live TCP device client
+//!   list                    list available experiments
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use multitascpp::config::scenario::{Scenario, SchedulerKind};
+use multitascpp::config::SystemConfig;
+use multitascpp::experiments::{self, Ctx};
+use multitascpp::models::Tier;
+use multitascpp::util::cli::Args;
+
+fn main() -> Result<()> {
+    multitascpp::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "precompute" => cmd_precompute(rest),
+        "experiment" => cmd_experiment(rest),
+        "sim" => cmd_sim(rest),
+        "serve" => multitascpp::net::cmd_serve(rest),
+        "device" => multitascpp::net::cmd_device(rest),
+        "list" => {
+            for (id, desc, _) in experiments::registry() {
+                println!("{id:<10} {desc}");
+            }
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `mtpp help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "mtpp — MultiTASC++ multi-device cascade scheduler\n\n\
+         usage: mtpp <precompute|experiment|sim|serve|device|list> [flags]\n\
+         run `mtpp <cmd> --help` for per-command flags"
+    );
+}
+
+fn artifacts_flag(args: &mut Args) {
+    args.flag(
+        "artifacts",
+        "artifacts directory (default: auto-discover)",
+        None,
+    );
+}
+
+fn resolve_artifacts(m: &multitascpp::util::cli::Matches) -> PathBuf {
+    m.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(SystemConfig::locate_artifacts)
+}
+
+fn cmd_precompute(argv: &[String]) -> Result<()> {
+    let mut args = Args::new("mtpp precompute", "build PJRT output caches");
+    artifacts_flag(&mut args);
+    let m = args.parse(argv)?;
+    let dir = resolve_artifacts(&m);
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::load(&dir, &dir.join("../results"), true)?;
+    for model in multitascpp::experiments::common::ALL_MODELS {
+        let acc = ctx
+            .outputs
+            .table(model)
+            .map(|t| t.accuracy())
+            .unwrap_or(f64::NAN);
+        println!("{model:<16} accuracy {:.2}% (PJRT, full 50k)", acc * 100.0);
+    }
+    println!("precompute done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let mut args = Args::new("mtpp experiment", "regenerate paper figures/tables");
+    artifacts_flag(&mut args);
+    args.flag("results", "results output dir", Some("results"))
+        .switch("quick", "reduced sweep (1 seed, coarse device grid)")
+        .allow_positional();
+    let m = args.parse(argv)?;
+    let ids = if m.positional.is_empty() {
+        bail!("usage: mtpp experiment <id>|all  (see `mtpp list`)");
+    } else {
+        m.positional.clone()
+    };
+    let dir = resolve_artifacts(&m);
+    let mut ctx = Ctx::load(&dir, &PathBuf::from(m.get_str("results")?), m.get_bool("quick"))?;
+    let t0 = std::time::Instant::now();
+    if ids.len() == 1 && ids[0] == "all" {
+        for (id, _, driver) in experiments::registry() {
+            let t = std::time::Instant::now();
+            driver(&mut ctx)?;
+            println!("[{id}] done in {:.1}s", t.elapsed().as_secs_f64());
+        }
+    } else {
+        for id in &ids {
+            let Some((name, driver)) = experiments::resolve(id) else {
+                bail!("unknown experiment '{id}' (see `mtpp list`)");
+            };
+            let t = std::time::Instant::now();
+            driver(&mut ctx)?;
+            println!("[{name}] done in {:.1}s", t.elapsed().as_secs_f64());
+        }
+    }
+    println!("total {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_sim(argv: &[String]) -> Result<()> {
+    let mut args = Args::new("mtpp sim", "run one custom scenario");
+    artifacts_flag(&mut args);
+    args.flag("devices", "number of devices", Some("10"))
+        .flag("tier", "device tier: low|mid|high|vit|hetero", Some("low"))
+        .flag("server", "server model", Some("srv_inception"))
+        .flag("scheduler", "multitasc++|multitasc|static", Some("multitasc++"))
+        .flag("slo", "latency SLO in ms", Some("150"))
+        .flag("samples", "samples per device", Some("5000"))
+        .flag("seed", "experiment seed", Some("0"))
+        .switch("switching", "enable §IV-E server model switching")
+        .switch("real", "execute artifacts on the request path (slow)");
+    let m = args.parse(argv)?;
+    let dir = resolve_artifacts(&m);
+    let mut ctx = Ctx::load(&dir, &PathBuf::from("results"), false)?;
+    let n = m.get_usize("devices")?;
+    let scn = match m.get_str("tier")? {
+        "hetero" => Scenario::heterogeneous(n, m.get_str("server")?),
+        t => Scenario::homogeneous(Tier::parse(t)?, n, m.get_str("server")?),
+    }
+    .with_scheduler(SchedulerKind::parse(m.get_str("scheduler")?)?)
+    .with_slo(m.get_f64("slo")?)
+    .with_samples(m.get_usize("samples")?)
+    .with_seed(m.get_u64("seed")?)
+    .with_switching(m.get_bool("switching"));
+    let t0 = std::time::Instant::now();
+    let metrics = if m.get_bool("real") {
+        ctx.run_real(&scn)?
+    } else {
+        ctx.run(&scn, &Default::default())?
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\nscenario: {} devices ({}), server {}, {} scheduler, SLO {} ms",
+        n,
+        m.get_str("tier")?,
+        m.get_str("server")?,
+        m.get_str("scheduler")?,
+        m.get_f64("slo")?
+    );
+    println!(
+        "samples {}   SR {:.2}%   accuracy {:.2}%   fwd {:.1}%",
+        metrics.overall.samples,
+        metrics.overall.satisfaction_rate(),
+        metrics.overall.accuracy() * 100.0,
+        metrics.overall.forward_rate() * 100.0
+    );
+    println!(
+        "goodput {:.1}/s   throughput {:.1}/s   makespan {:.1}s (virtual)",
+        metrics.throughput_satisfied(),
+        metrics.throughput(),
+        metrics.makespan_s
+    );
+    println!(
+        "mean batch {:.1}   wall {:.2}s   real compute {:.0}ms",
+        metrics.batch_sizes.mean(),
+        wall,
+        metrics.real_compute_ms
+    );
+    Ok(())
+}

@@ -1,0 +1,243 @@
+//! Run metrics: SLO satisfaction rate, cascade accuracy, system
+//! throughput, latency distribution, per-tier breakdowns, plus the
+//! time-series traces behind Figs 17-20.
+//!
+//! Hot-path note: `RunMetrics::record` runs once per simulated sample
+//! (hundreds of millions per sweep), so the per-device and per-tier
+//! aggregates are flat arrays indexed by id — no map lookups — and the
+//! full latency reservoir is kept only at the `overall` level (the
+//! figures consume per-tier SR/accuracy, not per-tier percentiles).
+
+use crate::models::Tier;
+use crate::util::stats::Samples;
+
+fn tier_index(t: Tier) -> usize {
+    match t {
+        Tier::Low => 0,
+        Tier::Mid => 1,
+        Tier::High => 2,
+        Tier::Vit => 3,
+    }
+}
+
+const TIERS: [Tier; 4] = [Tier::Low, Tier::Mid, Tier::High, Tier::Vit];
+
+/// Outcome of one sample's journey through the cascade.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleRecord {
+    pub device: usize,
+    pub tier: Tier,
+    /// Virtual time the device began local inference (s).
+    pub start_s: f64,
+    /// Virtual time the final result was available (s).
+    pub done_s: f64,
+    pub forwarded: bool,
+    pub correct: bool,
+    pub slo_ms: f64,
+}
+
+impl SampleRecord {
+    pub fn latency_ms(&self) -> f64 {
+        (self.done_s - self.start_s) * 1000.0
+    }
+
+    pub fn slo_satisfied(&self) -> bool {
+        self.latency_ms() <= self.slo_ms + 1e-9
+    }
+}
+
+/// Aggregated counters for one (sub)population.
+#[derive(Clone, Debug, Default)]
+pub struct Aggregate {
+    pub samples: usize,
+    pub satisfied: usize,
+    pub correct: usize,
+    pub forwarded: usize,
+}
+
+impl Aggregate {
+    #[inline]
+    pub fn push(&mut self, satisfied: bool, correct: bool, forwarded: bool) {
+        self.samples += 1;
+        self.satisfied += usize::from(satisfied);
+        self.correct += usize::from(correct);
+        self.forwarded += usize::from(forwarded);
+    }
+
+    /// SLO satisfaction rate in percent (the paper's headline metric).
+    pub fn satisfaction_rate(&self) -> f64 {
+        if self.samples == 0 {
+            return f64::NAN;
+        }
+        100.0 * self.satisfied as f64 / self.samples as f64
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.samples == 0 {
+            return f64::NAN;
+        }
+        self.correct as f64 / self.samples as f64
+    }
+
+    pub fn forward_rate(&self) -> f64 {
+        if self.samples == 0 {
+            return f64::NAN;
+        }
+        self.forwarded as f64 / self.samples as f64
+    }
+}
+
+/// A point on the Fig 19/20-style time series.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub t_s: f64,
+    pub active_devices: usize,
+    pub mean_threshold: f64,
+    pub running_sr: f64,
+    pub running_acc: f64,
+    pub queue_len: usize,
+    pub server_model_idx: usize,
+}
+
+/// Full result of one experiment run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub overall: Aggregate,
+    per_tier: [Option<Aggregate>; 4],
+    per_device: Vec<Aggregate>,
+    /// End-to-end latency reservoir (overall population).
+    pub latencies: Samples,
+    /// Wall of the virtual clock when the last result landed.
+    pub makespan_s: f64,
+    /// Dynamic batch sizes the server actually formed.
+    pub batch_sizes: Samples,
+    pub trace: Vec<TracePoint>,
+    /// Real PJRT compute spent (RealExec mode only), ms.
+    pub real_compute_ms: f64,
+    /// Which server models served batches: name -> batches run.
+    pub server_model_batches: std::collections::BTreeMap<String, usize>,
+}
+
+impl RunMetrics {
+    #[inline]
+    pub fn record(&mut self, r: SampleRecord) {
+        let satisfied = r.slo_satisfied();
+        self.overall.push(satisfied, r.correct, r.forwarded);
+        self.latencies.push(r.latency_ms());
+        self.per_tier[tier_index(r.tier)]
+            .get_or_insert_with(Aggregate::default)
+            .push(satisfied, r.correct, r.forwarded);
+        if r.device >= self.per_device.len() {
+            self.per_device.resize(r.device + 1, Aggregate::default());
+        }
+        self.per_device[r.device].push(satisfied, r.correct, r.forwarded);
+        if r.done_s > self.makespan_s {
+            self.makespan_s = r.done_s;
+        }
+    }
+
+    /// Raw processing rate in samples/s.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return f64::NAN;
+        }
+        self.overall.samples as f64 / self.makespan_s
+    }
+
+    /// *Goodput*: SLO-satisfied samples/s — the paper's Figs 6/9 series
+    /// (Static "stagnates at 1000 samples/s" exactly where its SLO
+    /// satisfaction collapses).
+    pub fn throughput_satisfied(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return f64::NAN;
+        }
+        self.overall.satisfied as f64 / self.makespan_s
+    }
+
+    pub fn tier(&self, t: Tier) -> Option<&Aggregate> {
+        self.per_tier[tier_index(t)].as_ref()
+    }
+
+    pub fn tiers(&self) -> impl Iterator<Item = (Tier, &Aggregate)> {
+        TIERS
+            .iter()
+            .filter_map(move |&t| self.per_tier[tier_index(t)].as_ref().map(|a| (t, a)))
+    }
+
+    pub fn device(&self, id: usize) -> Option<&Aggregate> {
+        self.per_device.get(id)
+    }
+
+    pub fn devices(&self) -> &[Aggregate] {
+        &self.per_device
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(start: f64, done: f64, correct: bool, fwd: bool) -> SampleRecord {
+        SampleRecord {
+            device: 0,
+            tier: Tier::Low,
+            start_s: start,
+            done_s: done,
+            forwarded: fwd,
+            correct,
+            slo_ms: 150.0,
+        }
+    }
+
+    #[test]
+    fn latency_and_slo() {
+        let r = rec(1.0, 1.1, true, true);
+        assert!((r.latency_ms() - 100.0).abs() < 1e-9);
+        assert!(r.slo_satisfied());
+        assert!(!rec(0.0, 0.2, true, true).slo_satisfied());
+    }
+
+    #[test]
+    fn aggregate_rates() {
+        let mut m = RunMetrics::default();
+        m.record(rec(0.0, 0.05, true, false)); // fast, correct
+        m.record(rec(0.0, 0.3, false, true)); // slow, wrong, forwarded
+        let a = &m.overall;
+        assert!((a.satisfaction_rate() - 50.0).abs() < 1e-9);
+        assert!((a.accuracy() - 0.5).abs() < 1e-9);
+        assert!((a.forward_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(m.latencies.len(), 2);
+    }
+
+    #[test]
+    fn run_metrics_throughput_and_tiers() {
+        let mut m = RunMetrics::default();
+        for i in 0..10 {
+            m.record(SampleRecord {
+                device: i % 2,
+                tier: if i % 2 == 0 { Tier::Low } else { Tier::Mid },
+                start_s: i as f64 * 0.1,
+                done_s: i as f64 * 0.1 + 0.05,
+                forwarded: false,
+                correct: true,
+                slo_ms: 150.0,
+            });
+        }
+        assert_eq!(m.overall.samples, 10);
+        assert_eq!(m.tier(Tier::Low).unwrap().samples, 5);
+        assert!(m.tier(Tier::Vit).is_none());
+        assert_eq!(m.tiers().count(), 2);
+        assert_eq!(m.device(1).unwrap().samples, 5);
+        assert!((m.makespan_s - 0.95).abs() < 1e-9);
+        assert!((m.throughput() - 10.0 / 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_aggregate_is_nan() {
+        let a = Aggregate::default();
+        assert!(a.satisfaction_rate().is_nan());
+        assert!(a.accuracy().is_nan());
+        let m = RunMetrics::default();
+        assert!(m.throughput().is_nan());
+    }
+}

@@ -1,0 +1,6 @@
+//! Model registry and precomputed-output caches.
+
+pub mod outputs;
+pub mod registry;
+
+pub use registry::{ModelInfo, Registry, Tier};

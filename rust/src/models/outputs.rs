@@ -1,0 +1,354 @@
+//! Model-output providers for the simulation and serving layers.
+//!
+//! The discrete-event engine needs, per (model, dataset sample):
+//! BvSB margin, top-1 class, and correctness. Two providers:
+//!
+//! * [`RealExecProvider`] — executes the AOT artifacts through PJRT on
+//!   the request path (the fully-real mode).
+//! * [`CachedOutputs`] — a precomputed table, itself built through PJRT
+//!   by [`CachedOutputs::build`] (`mtpp precompute`): the paper's own
+//!   methodology ("measured ... and used this data to conduct
+//!   simulation-based experiments", §V-A) applied to outputs. Large
+//!   sweeps (100 devices × 3 seeds × 3 SLOs × 3 schedulers) reuse it;
+//!   equivalence with RealExec is asserted in integration tests.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::Dataset;
+use crate::runtime::Engine;
+use crate::util::binio::{BinReader, BinWriter};
+
+pub const CACHE_MAGIC: &[u8; 8] = b"MTPPOC01";
+
+/// Per-sample outputs of one model over the whole dataset.
+#[derive(Clone, Debug)]
+pub struct ModelOutputs {
+    pub model: String,
+    pub top1: Vec<i32>,
+    pub bvsb: Vec<f32>,
+    pub correct: Vec<u8>,
+}
+
+impl ModelOutputs {
+    pub fn n(&self) -> usize {
+        self.top1.len()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.correct.is_empty() {
+            return f64::NAN;
+        }
+        self.correct.iter().map(|&c| c as usize).sum::<usize>() as f64
+            / self.correct.len() as f64
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BinWriter::create(path)?;
+        w.write_magic(CACHE_MAGIC)?;
+        w.write_u32(self.n() as u32)?;
+        w.write_i32_slice(&self.top1)?;
+        w.write_f32_slice(&self.bvsb)?;
+        w.write_u8_slice(&self.correct)?;
+        w.flush()
+    }
+
+    pub fn load(path: &Path, model: &str) -> Result<Self> {
+        let mut r = BinReader::open(path)?;
+        r.expect_magic(CACHE_MAGIC)?;
+        let n = r.read_u32()? as usize;
+        Ok(Self {
+            model: model.to_string(),
+            top1: r.read_i32_vec(n)?,
+            bvsb: r.read_f32_vec(n)?,
+            correct: r.read_u8_vec(n)?,
+        })
+    }
+
+    /// Run `model` over the entire dataset through PJRT (chunked at the
+    /// largest compiled batch) and tabulate outputs.
+    pub fn compute(engine: &Engine, ds: &Dataset, model: &str) -> Result<Self> {
+        let n = ds.n;
+        let mut top1 = Vec::with_capacity(n);
+        let mut bvsb = Vec::with_capacity(n);
+        let mut correct = Vec::with_capacity(n);
+        let chunk = *engine
+            .registry()
+            .batches(model)?
+            .last()
+            .context("model has no artifacts")?;
+        let mut off = 0;
+        while off < n {
+            let take = chunk.min(n - off);
+            let x = &ds.x[off * ds.dim..(off + take) * ds.dim];
+            let out = engine.infer(model, x, take)?;
+            for i in 0..take {
+                let t1 = out.top1(i) as i32;
+                top1.push(t1);
+                bvsb.push(out.bvsb[i]);
+                correct.push(u8::from(t1 == ds.y[off + i]));
+            }
+            off += take;
+        }
+        Ok(Self {
+            model: model.to_string(),
+            top1,
+            bvsb,
+            correct,
+        })
+    }
+}
+
+/// Something that can answer output queries during a run.
+pub trait OutputProvider {
+    /// (bvsb, correct) of a *device* model on one sample.
+    fn device_output(&mut self, model: &str, sample: usize) -> (f32, bool);
+    /// correctness of a *server* model over a batch of samples.
+    fn server_outputs(&mut self, model: &str, samples: &[usize]) -> Vec<bool>;
+    /// Measured wall-clock compute ms spent in real execution (0 for
+    /// the cached provider) — reported alongside virtual time.
+    fn real_compute_ms(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Precomputed tables for every model in play.
+///
+/// Hot path: `device_output` runs once per simulated sample, so tables
+/// live in a small Vec scanned linearly (<= 7 models; first-character
+/// discrimination makes this cheaper than a map walk) instead of a
+/// string-keyed BTreeMap.
+pub struct CachedOutputs {
+    tables: Vec<(String, ModelOutputs)>,
+}
+
+impl CachedOutputs {
+    pub fn cache_path(artifacts_dir: &Path, model: &str) -> PathBuf {
+        artifacts_dir.join("cache").join(format!("{model}.outputs.bin"))
+    }
+
+    /// Load caches for `models`, building any that are missing through
+    /// the engine (and persisting them for the next run).
+    pub fn build(
+        engine: &Engine,
+        ds: &Dataset,
+        models: &[&str],
+    ) -> Result<Self> {
+        let dir = engine.registry().artifacts_dir.clone();
+        let mut tables = BTreeMap::new();
+        for &model in models {
+            let path = Self::cache_path(&dir, model);
+            let outputs = if path.exists() {
+                let o = ModelOutputs::load(&path, model)?;
+                ensure!(
+                    o.n() == ds.n,
+                    "output cache {} is for a different dataset (n={} vs {})",
+                    path.display(),
+                    o.n(),
+                    ds.n
+                );
+                o
+            } else {
+                log::info!("precomputing outputs for {model} over {} samples", ds.n);
+                let o = ModelOutputs::compute(engine, ds, model)?;
+                o.save(&path)?;
+                o
+            };
+            tables.insert(model.to_string(), outputs);
+        }
+        Ok(Self {
+            tables: tables.into_iter().collect(),
+        })
+    }
+
+    /// Assemble from already-loaded tables (tests, offline tools).
+    pub fn from_tables(tables: BTreeMap<String, ModelOutputs>) -> Self {
+        Self {
+            tables: tables.into_iter().collect(),
+        }
+    }
+
+    pub fn table(&self, model: &str) -> Option<&ModelOutputs> {
+        self.tables
+            .iter()
+            .find(|(name, _)| name == model)
+            .map(|(_, t)| t)
+    }
+
+    #[inline]
+    fn must(&self, model: &str) -> &ModelOutputs {
+        self.table(model)
+            .unwrap_or_else(|| panic!("no output cache for model '{model}'"))
+    }
+}
+
+impl OutputProvider for CachedOutputs {
+    fn device_output(&mut self, model: &str, sample: usize) -> (f32, bool) {
+        let t = self.must(model);
+        (t.bvsb[sample], t.correct[sample] != 0)
+    }
+
+    fn server_outputs(&mut self, model: &str, samples: &[usize]) -> Vec<bool> {
+        let t = self.must(model);
+        samples.iter().map(|&s| t.correct[s] != 0).collect()
+    }
+}
+
+/// Fully-real provider: every query executes artifacts through PJRT.
+pub struct RealExecProvider<'a> {
+    engine: &'a Engine,
+    ds: &'a Dataset,
+    compute_ms: f64,
+}
+
+impl<'a> RealExecProvider<'a> {
+    pub fn new(engine: &'a Engine, ds: &'a Dataset) -> Self {
+        Self {
+            engine,
+            ds,
+            compute_ms: 0.0,
+        }
+    }
+}
+
+impl OutputProvider for RealExecProvider<'_> {
+    fn device_output(&mut self, model: &str, sample: usize) -> (f32, bool) {
+        let x = self.ds.row(sample);
+        let (out, ms) = self
+            .engine
+            .timed_infer(model, x, 1)
+            .expect("device inference failed");
+        self.compute_ms += ms;
+        (out.bvsb[0], out.top1(0) as i32 == self.ds.y[sample])
+    }
+
+    fn server_outputs(&mut self, model: &str, samples: &[usize]) -> Vec<bool> {
+        let x = self.ds.gather(samples);
+        let (out, ms) = self
+            .engine
+            .timed_infer(model, &x, samples.len())
+            .expect("server inference failed");
+        self.compute_ms += ms;
+        samples
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| out.top1(i) as i32 == self.ds.y[s])
+            .collect()
+    }
+
+    fn real_compute_ms(&self) -> f64 {
+        self.compute_ms
+    }
+}
+
+/// Synthetic provider for unit tests: correctness drawn per-sample from
+/// tier-dependent Bernoulli draws, BvSB from a mixture that correlates
+/// margin with device correctness (the structure the cascade relies
+/// on).
+pub struct SyntheticOutputs {
+    pub tables: BTreeMap<String, ModelOutputs>,
+}
+
+impl SyntheticOutputs {
+    pub fn new(n: usize, models: &[(&str, f64)], seed: u64) -> Self {
+        use crate::util::prng::Rng;
+        let mut tables = BTreeMap::new();
+        // Shared per-sample difficulty: makes the heavy model's errors
+        // correlate with the light model's (subset property).
+        let mut drng = Rng::new(seed);
+        let difficulty: Vec<f64> = (0..n).map(|_| drng.next_f64()).collect();
+        for &(model, acc) in models {
+            let mut rng = Rng::stream(seed, model.len() as u64 * 131);
+            let mut top1 = Vec::with_capacity(n);
+            let mut bvsb = Vec::with_capacity(n);
+            let mut correct = Vec::with_capacity(n);
+            for &d in difficulty.iter() {
+                // correct iff difficulty below the model's skill,
+                // with some noise
+                let skill = acc + 0.15 * (rng.next_f64() - 0.5);
+                let ok = d < skill;
+                // margin high for easy samples, low near the boundary
+                let margin = ((skill - d).abs() * 2.0 + 0.05 * rng.next_f64()).min(1.0);
+                top1.push(if ok { 1 } else { 0 });
+                bvsb.push(margin as f32);
+                correct.push(u8::from(ok));
+            }
+            tables.insert(
+                model.to_string(),
+                ModelOutputs {
+                    model: model.to_string(),
+                    top1,
+                    bvsb,
+                    correct,
+                },
+            );
+        }
+        Self { tables }
+    }
+
+    pub fn into_cached(self) -> CachedOutputs {
+        CachedOutputs::from_tables(self.tables)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let o = ModelOutputs {
+            model: "m".into(),
+            top1: vec![1, 2, 3],
+            bvsb: vec![0.5, 0.25, 0.75],
+            correct: vec![1, 0, 1],
+        };
+        let dir = std::env::temp_dir().join("mtpp_oc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.outputs.bin");
+        o.save(&path).unwrap();
+        let back = ModelOutputs::load(&path, "m").unwrap();
+        assert_eq!(back.top1, o.top1);
+        assert_eq!(back.bvsb, o.bvsb);
+        assert_eq!(back.correct, o.correct);
+        assert!((back.accuracy() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_provider_answers_queries() {
+        let synth = SyntheticOutputs::new(100, &[("dev_low", 0.72), ("srv_x", 0.81)], 7);
+        let mut c = synth.into_cached();
+        let (b, _ok) = c.device_output("dev_low", 3);
+        assert!((0.0..=1.0).contains(&(b as f64)));
+        let outs = c.server_outputs("srv_x", &[0, 5, 9]);
+        assert_eq!(outs.len(), 3);
+        assert_eq!(c.real_compute_ms(), 0.0);
+    }
+
+    #[test]
+    fn synthetic_heavy_beats_light() {
+        let synth = SyntheticOutputs::new(5000, &[("light", 0.72), ("heavy", 0.84)], 3);
+        let acc_l = synth.tables["light"].accuracy();
+        let acc_h = synth.tables["heavy"].accuracy();
+        assert!(acc_h > acc_l + 0.05, "light {acc_l} heavy {acc_h}");
+    }
+
+    #[test]
+    fn synthetic_margin_correlates_with_correctness() {
+        let synth = SyntheticOutputs::new(5000, &[("light", 0.72)], 9);
+        let t = &synth.tables["light"];
+        let (mut m_ok, mut n_ok, mut m_bad, mut n_bad) = (0.0, 0, 0.0, 0);
+        for i in 0..t.n() {
+            if t.correct[i] != 0 {
+                m_ok += t.bvsb[i] as f64;
+                n_ok += 1;
+            } else {
+                m_bad += t.bvsb[i] as f64;
+                n_bad += 1;
+            }
+        }
+        assert!(m_ok / n_ok as f64 > m_bad / n_bad as f64);
+    }
+}

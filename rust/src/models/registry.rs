@@ -1,0 +1,348 @@
+//! Model registry: the rust-side view of `artifacts/meta.json`.
+//!
+//! meta.json is the contract with the python build path: measured model
+//! accuracies (Table I substitutes), the Static baseline thresholds per
+//! cascade pair, the §IV-E switching limits, and the artifact file
+//! index per (model, batch).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Device tier (paper Table I rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    Low,
+    Mid,
+    High,
+    /// The transformer tier (Pixel 7 + MobileViT).
+    Vit,
+}
+
+impl Tier {
+    pub fn device_model(&self) -> &'static str {
+        match self {
+            Tier::Low => "dev_low",
+            Tier::Mid => "dev_mid",
+            Tier::High => "dev_high",
+            Tier::Vit => "dev_vit",
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Low => "low",
+            Tier::Mid => "mid",
+            Tier::High => "high",
+            Tier::Vit => "vit",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Tier> {
+        match s {
+            "low" => Ok(Tier::Low),
+            "mid" => Ok(Tier::Mid),
+            "high" => Ok(Tier::High),
+            "vit" => Ok(Tier::Vit),
+            other => bail!("unknown tier '{other}'"),
+        }
+    }
+
+    pub const ALL: [Tier; 4] = [Tier::Low, Tier::Mid, Tier::High, Tier::Vit];
+}
+
+/// Static metadata for one model.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Measured top-1 accuracy on the calibration split.
+    pub acc_calibration: f64,
+    /// Measured top-1 accuracy on the 40k eval pool.
+    pub acc_eval_pool: f64,
+    /// Available AOT batch sizes -> artifact file name.
+    pub artifacts: BTreeMap<usize, String>,
+    /// Flat parameter vector file (see python/compile/aot.py ABI).
+    pub params_file: Option<String>,
+    pub params_len: usize,
+}
+
+/// Calibration data for one (device model, server model) cascade pair.
+#[derive(Clone, Debug)]
+pub struct PairInfo {
+    pub static_threshold: f64,
+    pub fwd_frac_at_static: f64,
+    pub cascade_acc_at_static: f64,
+    pub best_cascade_acc: f64,
+}
+
+/// §IV-E switching limits for one tier.
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchLimits {
+    pub c_lower: f64,
+    pub c_upper: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pub artifacts_dir: PathBuf,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub pairs: BTreeMap<(String, String), PairInfo>,
+    pub switching: BTreeMap<String, SwitchLimits>,
+}
+
+pub const SERVER_MODELS: [&str; 3] = ["srv_inception", "srv_effnetb3", "srv_deit"];
+
+impl Registry {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let meta_path = artifacts_dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", meta_path.display()))?;
+        let meta = Json::parse(&text).context("parse meta.json")?;
+        Self::from_meta(artifacts_dir, &meta)
+    }
+
+    pub fn from_meta(artifacts_dir: &Path, meta: &Json) -> Result<Self> {
+        let dataset = meta.req("dataset")?;
+        let input_dim = dataset.f64_at("input_dim")? as usize;
+        let num_classes = dataset.f64_at("num_classes")? as usize;
+
+        let mut models = BTreeMap::new();
+        let model_accs = meta
+            .req("models")?
+            .as_obj()
+            .context("meta.models not an object")?;
+        let artifact_index = meta
+            .req("artifacts")?
+            .as_obj()
+            .context("meta.artifacts not an object")?;
+        let param_files = meta.get("param_files").and_then(|v| v.as_obj());
+        for (name, acc) in model_accs {
+            let mut artifacts = BTreeMap::new();
+            if let Some(entries) = artifact_index.get(name).and_then(|v| v.as_arr()) {
+                for e in entries {
+                    artifacts.insert(
+                        e.f64_at("batch")? as usize,
+                        e.str_at("file")?.to_string(),
+                    );
+                }
+            }
+            let (params_file, params_len) = match param_files.and_then(|pf| pf.get(name)) {
+                Some(pf) => (
+                    Some(pf.str_at("file")?.to_string()),
+                    pf.f64_at("len")? as usize,
+                ),
+                None => (None, 0),
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    acc_calibration: acc.f64_at("calibration")?,
+                    acc_eval_pool: acc.f64_at("eval_pool")?,
+                    artifacts,
+                    params_file,
+                    params_len,
+                },
+            );
+        }
+
+        let mut pairs = BTreeMap::new();
+        for (key, p) in meta.req("pairs")?.as_obj().context("meta.pairs")? {
+            let (dev, srv) = key
+                .split_once(':')
+                .with_context(|| format!("bad pair key '{key}'"))?;
+            pairs.insert(
+                (dev.to_string(), srv.to_string()),
+                PairInfo {
+                    static_threshold: p.f64_at("static_threshold")?,
+                    fwd_frac_at_static: p.f64_at("fwd_frac_at_static")?,
+                    cascade_acc_at_static: p.f64_at("cascade_acc_at_static")?,
+                    best_cascade_acc: p.f64_at("best_cascade_acc")?,
+                },
+            );
+        }
+
+        let mut switching = BTreeMap::new();
+        for (tier, lims) in meta.req("switching")?.as_obj().context("meta.switching")? {
+            switching.insert(
+                tier.clone(),
+                SwitchLimits {
+                    c_lower: lims.f64_at("c_lower")?,
+                    c_upper: lims.f64_at("c_upper")?,
+                },
+            );
+        }
+
+        Ok(Self {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            input_dim,
+            num_classes,
+            models,
+            pairs,
+            switching,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .with_context(|| format!("unknown model '{name}'"))
+    }
+
+    pub fn pair(&self, dev: &str, srv: &str) -> Result<&PairInfo> {
+        self.pairs
+            .get(&(dev.to_string(), srv.to_string()))
+            .with_context(|| format!("no calibration for pair {dev}:{srv}"))
+    }
+
+    /// Absolute path of the artifact for (model, batch).
+    pub fn artifact_path(&self, model: &str, batch: usize) -> Result<PathBuf> {
+        let info = self.model(model)?;
+        let file = info
+            .artifacts
+            .get(&batch)
+            .with_context(|| format!("model '{model}' has no batch-{batch} artifact"))?;
+        Ok(self.artifacts_dir.join(file))
+    }
+
+    /// Batch sizes available for a model, ascending.
+    pub fn batches(&self, model: &str) -> Result<Vec<usize>> {
+        Ok(self.model(model)?.artifacts.keys().copied().collect())
+    }
+
+    /// Load the model's flat parameter vector (AOT runtime ABI).
+    pub fn load_params(&self, model: &str) -> Result<Vec<f32>> {
+        let info = self.model(model)?;
+        let file = info
+            .params_file
+            .as_ref()
+            .with_context(|| format!("model '{model}' has no params file"))?;
+        let path = self.artifacts_dir.join(file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == info.params_len * 4,
+            "params file {} has {} bytes, expected {}",
+            path.display(),
+            bytes.len(),
+            info.params_len * 4
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+pub fn test_meta_json() -> Json {
+    // A miniature meta.json used by unit tests across the crate.
+    Json::parse(
+        r#"{
+        "dataset": {"input_dim": 128, "num_classes": 100,
+                    "n_eval": 50000, "n_calibration": 10000},
+        "models": {
+            "dev_low": {"calibration": 0.7323, "eval_pool": 0.7301},
+            "dev_mid": {"calibration": 0.7526, "eval_pool": 0.7512},
+            "dev_high": {"calibration": 0.7724, "eval_pool": 0.7703},
+            "srv_inception": {"calibration": 0.7852, "eval_pool": 0.7833},
+            "srv_effnetb3": {"calibration": 0.8098, "eval_pool": 0.8075}
+        },
+        "artifacts": {
+            "dev_low": [{"batch": 1, "file": "dev_low_b1.hlo.txt"},
+                         {"batch": 64, "file": "dev_low_b64.hlo.txt"}],
+            "srv_inception": [{"batch": 1, "file": "srv_inception_b1.hlo.txt"},
+                               {"batch": 64, "file": "srv_inception_b64.hlo.txt"}],
+            "srv_effnetb3": [{"batch": 16, "file": "srv_effnetb3_b16.hlo.txt"}]
+        },
+        "pairs": {
+            "dev_low:srv_inception": {"static_threshold": 0.5,
+                "fwd_frac_at_static": 0.3, "cascade_acc_at_static": 0.786,
+                "best_cascade_acc": 0.792},
+            "dev_low:srv_effnetb3": {"static_threshold": 0.55,
+                "fwd_frac_at_static": 0.31, "cascade_acc_at_static": 0.80,
+                "best_cascade_acc": 0.81},
+            "dev_mid:srv_inception": {"static_threshold": 0.46,
+                "fwd_frac_at_static": 0.29, "cascade_acc_at_static": 0.788,
+                "best_cascade_acc": 0.794},
+            "dev_mid:srv_effnetb3": {"static_threshold": 0.5,
+                "fwd_frac_at_static": 0.30, "cascade_acc_at_static": 0.802,
+                "best_cascade_acc": 0.812},
+            "dev_high:srv_inception": {"static_threshold": 0.42,
+                "fwd_frac_at_static": 0.28, "cascade_acc_at_static": 0.79,
+                "best_cascade_acc": 0.795},
+            "dev_high:srv_effnetb3": {"static_threshold": 0.47,
+                "fwd_frac_at_static": 0.29, "cascade_acc_at_static": 0.805,
+                "best_cascade_acc": 0.814}
+        },
+        "param_files": {
+            "dev_low": {"file": "dev_low.params.bin", "len": 100},
+            "srv_inception": {"file": "srv_inception.params.bin", "len": 200},
+            "srv_effnetb3": {"file": "srv_effnetb3.params.bin", "len": 300}
+        },
+        "switching": {
+            "low": {"c_lower": 0.2, "c_upper": 0.62},
+            "mid": {"c_lower": 0.2, "c_upper": 0.6},
+            "high": {"c_lower": 0.2, "c_upper": 0.58}
+        }
+    }"#,
+    )
+    .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Registry {
+        Registry::from_meta(Path::new("/tmp/artifacts"), &test_meta_json()).unwrap()
+    }
+
+    #[test]
+    fn loads_models_and_accuracies() {
+        let r = registry();
+        assert_eq!(r.input_dim, 128);
+        assert_eq!(r.num_classes, 100);
+        let m = r.model("dev_low").unwrap();
+        assert!((m.acc_calibration - 0.7323).abs() < 1e-9);
+        assert!(r.model("nope").is_err());
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let r = registry();
+        let p = r.artifact_path("dev_low", 64).unwrap();
+        assert!(p.ends_with("dev_low_b64.hlo.txt"));
+        assert!(r.artifact_path("dev_low", 32).is_err());
+        assert_eq!(r.batches("srv_inception").unwrap(), vec![1, 64]);
+    }
+
+    #[test]
+    fn pair_calibration() {
+        let r = registry();
+        let p = r.pair("dev_low", "srv_inception").unwrap();
+        assert!((p.static_threshold - 0.5).abs() < 1e-9);
+        assert!(r.pair("dev_low", "srv_deit").is_err());
+    }
+
+    #[test]
+    fn switching_limits_present_per_tier() {
+        let r = registry();
+        for tier in ["low", "mid", "high"] {
+            let l = r.switching.get(tier).unwrap();
+            assert!(l.c_lower < l.c_upper);
+        }
+    }
+
+    #[test]
+    fn tier_mapping() {
+        assert_eq!(Tier::Low.device_model(), "dev_low");
+        assert_eq!(Tier::Vit.device_model(), "dev_vit");
+        assert_eq!(Tier::parse("mid").unwrap(), Tier::Mid);
+        assert!(Tier::parse("ultra").is_err());
+    }
+}

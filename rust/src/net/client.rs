@@ -1,0 +1,197 @@
+//! Live-mode device client: runs its tier's light model through PJRT,
+//! applies the (remotely reconfigurable) forwarding decision function,
+//! streams low-confidence samples to the leader, and reports SR
+//! telemetry every window (§IV-B) — a real device-side agent.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cascade::DecisionFn;
+use crate::config::latency::device_latency_ms;
+use crate::config::SystemConfig;
+use crate::data::{device_stream, Dataset};
+use crate::models::{Registry, Tier};
+use crate::net::proto::{read_frame, write_frame, ToDevice, ToServer};
+use crate::runtime::Engine;
+
+pub struct DeviceOptions {
+    pub addr: String,
+    pub tier: Tier,
+    pub samples: usize,
+    pub seed: u64,
+    pub slo_ms: f64,
+    /// Pace the stream at the tier's Table-I latency (true) or run
+    /// flat-out (false).
+    pub paced: bool,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DeviceReport {
+    pub samples: usize,
+    pub forwarded: usize,
+    pub correct: usize,
+    pub slo_satisfied: usize,
+    pub final_threshold: f64,
+}
+
+pub fn run_device(
+    registry: Registry,
+    ds: &Dataset,
+    cfg: &SystemConfig,
+    opts: &DeviceOptions,
+) -> Result<DeviceReport> {
+    let engine = Engine::new(registry)?;
+    let model = opts.tier.device_model();
+    let stream_ids = device_stream(ds, opts.seed, opts.seed as usize, opts.samples);
+
+    let sock = TcpStream::connect(&opts.addr).with_context(|| format!("connect {}", opts.addr))?;
+    sock.set_nodelay(true).ok();
+    let mut writer = sock.try_clone()?;
+    let mut reader = BufReader::new(sock);
+
+    write_frame(
+        &mut writer,
+        &ToServer::Hello {
+            tier: opts.tier.name().to_string(),
+            sr_target: cfg.sr_target,
+            slo_ms: opts.slo_ms,
+        }
+        .to_json(),
+    )?;
+    let Some(frame) = read_frame(&mut reader)? else {
+        anyhow::bail!("server closed during handshake");
+    };
+    let ToDevice::Welcome {
+        device_id,
+        threshold,
+    } = ToDevice::from_json(&frame)?
+    else {
+        anyhow::bail!("expected Welcome");
+    };
+    log::info!("device {device_id}: welcome, threshold {threshold}");
+    let mut decision = DecisionFn::new(threshold);
+
+    // Reader thread: answers + threshold pushes.
+    let (tx, rx) = mpsc::channel::<ToDevice>();
+    let reader_handle = std::thread::spawn(move || -> Result<()> {
+        while let Some(frame) = read_frame(&mut reader)? {
+            if tx.send(ToDevice::from_json(&frame)?).is_err() {
+                break;
+            }
+        }
+        Ok(())
+    });
+
+    let pace = Duration::from_secs_f64(device_latency_ms(opts.tier) / 1000.0);
+    let window = Duration::from_secs_f64(cfg.window_s);
+    let mut report = DeviceReport::default();
+    let mut in_flight: HashMap<u64, Instant> = HashMap::new();
+    let mut window_start = Instant::now();
+    let mut window_done = 0usize;
+    let mut window_ok = 0usize;
+
+    let drain = |rx: &mpsc::Receiver<ToDevice>,
+                     decision: &mut DecisionFn,
+                     in_flight: &mut HashMap<u64, Instant>,
+                     report: &mut DeviceReport,
+                     window_done: &mut usize,
+                     window_ok: &mut usize| {
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                ToDevice::SetThreshold { threshold } => decision.set_threshold(threshold),
+                ToDevice::Answer { request_id, .. } => {
+                    if let Some(t0) = in_flight.remove(&request_id) {
+                        let ms = t0.elapsed().as_secs_f64() * 1000.0;
+                        *window_done += 1;
+                        if ms <= opts.slo_ms {
+                            *window_ok += 1;
+                            report.slo_satisfied += 1;
+                        }
+                    }
+                }
+                ToDevice::Welcome { .. } => {}
+            }
+        }
+    };
+
+    for (i, &sample) in stream_ids.iter().enumerate() {
+        let t0 = Instant::now();
+        let out = engine.infer(model, ds.row(sample), 1)?;
+        let local_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        report.samples += 1;
+        let forwards = decision.decide(out.probs_row(0), out.bvsb[0]);
+        if forwards {
+            report.forwarded += 1;
+            in_flight.insert(i as u64, t0);
+            write_frame(
+                &mut writer,
+                &ToServer::Forward {
+                    request_id: i as u64,
+                    features: ds.row(sample).to_vec(),
+                }
+                .to_json(),
+            )?;
+            // Correctness bookkeeping is local in live mode: count the
+            // heavy model as authoritative when it answers (tallied on
+            // answer receipt for SLO; accuracy uses local top1 as the
+            // fallback until then).
+        } else {
+            window_done += 1;
+            report.correct += usize::from(out.top1(0) as i32 == ds.y[sample]);
+            if local_ms <= opts.slo_ms {
+                window_ok += 1;
+                report.slo_satisfied += 1;
+            }
+        }
+
+        drain(
+            &rx,
+            &mut decision,
+            &mut in_flight,
+            &mut report,
+            &mut window_done,
+            &mut window_ok,
+        );
+
+        if window_start.elapsed() >= window {
+            if window_done > 0 {
+                let sr = 100.0 * window_ok as f64 / window_done as f64;
+                write_frame(&mut writer, &ToServer::SrUpdate { sr_percent: sr }.to_json())?;
+            }
+            window_start = Instant::now();
+            window_done = 0;
+            window_ok = 0;
+        }
+
+        if opts.paced {
+            let spent = t0.elapsed();
+            if spent < pace {
+                std::thread::sleep(pace - spent);
+            }
+        }
+    }
+
+    // Wait briefly for stragglers, then sign off.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !in_flight.is_empty() && Instant::now() < deadline {
+        drain(
+            &rx,
+            &mut decision,
+            &mut in_flight,
+            &mut report,
+            &mut window_done,
+            &mut window_ok,
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    write_frame(&mut writer, &ToServer::Bye.to_json())?;
+    drop(writer);
+    report.final_threshold = decision.threshold();
+    let _ = reader_handle.join();
+    Ok(report)
+}

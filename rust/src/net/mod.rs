@@ -1,0 +1,81 @@
+//! Live wall-clock serving mode over TCP (DESIGN.md §3 AMQP
+//! substitute): `mtpp serve` runs the leader (queue + batcher + PJRT +
+//! MultiTASC++), `mtpp device` runs a device-side agent.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::data::Dataset;
+use crate::models::{Registry, Tier};
+use crate::util::cli::Args;
+
+pub use client::{run_device, DeviceOptions, DeviceReport};
+pub use server::{serve, ServeOptions};
+
+pub fn cmd_serve(argv: &[String]) -> Result<()> {
+    let mut args = Args::new("mtpp serve", "live leader: queue + batcher + PJRT");
+    args.flag("addr", "listen address", Some("127.0.0.1:7607"))
+        .flag("server", "server model", Some("srv_inception"))
+        .flag("answers", "exit after N answers (0 = forever)", Some("0"))
+        .flag("idle-timeout", "exit after idle seconds", Some("30"))
+        .flag("artifacts", "artifacts directory", None);
+    let m = args.parse(argv)?;
+    let dir = m
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(SystemConfig::locate_artifacts);
+    let registry = Registry::load(&dir)?;
+    let cfg = SystemConfig::default();
+    let opts = ServeOptions {
+        addr: m.get_str("addr")?.to_string(),
+        server_model: m.get_str("server")?.to_string(),
+        answer_limit: m.get_usize("answers")?,
+        idle_timeout: std::time::Duration::from_secs_f64(m.get_f64("idle-timeout")?),
+    };
+    let answered = serve(registry, &cfg, &opts)?;
+    println!("served {answered} heavy-model answers");
+    Ok(())
+}
+
+pub fn cmd_device(argv: &[String]) -> Result<()> {
+    let mut args = Args::new("mtpp device", "live device agent");
+    args.flag("addr", "leader address", Some("127.0.0.1:7607"))
+        .flag("tier", "low|mid|high|vit", Some("low"))
+        .flag("samples", "stream length", Some("200"))
+        .flag("seed", "stream seed / device index", Some("0"))
+        .flag("slo", "latency SLO ms", Some("150"))
+        .switch("flat-out", "do not pace at the tier latency")
+        .flag("artifacts", "artifacts directory", None);
+    let m = args.parse(argv)?;
+    let dir = m
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(SystemConfig::locate_artifacts);
+    let registry = Registry::load(&dir)?;
+    let ds = Dataset::load(&dir.join("dataset.bin"))?;
+    let cfg = SystemConfig::default();
+    let opts = DeviceOptions {
+        addr: m.get_str("addr")?.to_string(),
+        tier: Tier::parse(m.get_str("tier")?)?,
+        samples: m.get_usize("samples")?,
+        seed: m.get_u64("seed")?,
+        slo_ms: m.get_f64("slo")?,
+        paced: !m.get_bool("flat-out"),
+    };
+    let report = run_device(registry, &ds, &cfg, &opts)?;
+    println!(
+        "device done: {} samples, {} forwarded ({:.1}%), SLO {:.1}%, final threshold {:.3}",
+        report.samples,
+        report.forwarded,
+        100.0 * report.forwarded as f64 / report.samples.max(1) as f64,
+        100.0 * report.slo_satisfied as f64 / report.samples.max(1) as f64,
+        report.final_threshold
+    );
+    Ok(())
+}

@@ -1,0 +1,258 @@
+//! Wire protocol for live mode: length-prefixed JSON frames over TCP.
+//!
+//! AMQP (the paper's transport) is, for our purposes, a reliable
+//! ordered message channel on a LAN; a framed TCP stream provides the
+//! same semantics (DESIGN.md §3). JSON keeps the protocol inspectable;
+//! features ride as arrays (demo scale — the sim path never touches
+//! this).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Maximum accepted frame (sanity bound).
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// Messages device -> server.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToServer {
+    /// Register: tier name + SR target + SLO.
+    Hello {
+        tier: String,
+        sr_target: f64,
+        slo_ms: f64,
+    },
+    /// Forward a low-confidence sample for heavy inference.
+    Forward {
+        request_id: u64,
+        features: Vec<f32>,
+    },
+    /// Per-window SLO satisfaction-rate telemetry (§IV-B).
+    SrUpdate { sr_percent: f64 },
+    /// Clean shutdown.
+    Bye,
+}
+
+/// Messages server -> device.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToDevice {
+    /// Registration ack: assigned id + initial threshold.
+    Welcome { device_id: u64, threshold: f64 },
+    /// Heavy-model result for a forwarded sample.
+    Answer {
+        request_id: u64,
+        top1: u32,
+        p_top1: f32,
+    },
+    /// Runtime threshold reconfiguration (Eq. 3 parameters).
+    SetThreshold { threshold: f64 },
+}
+
+impl ToServer {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ToServer::Hello {
+                tier,
+                sr_target,
+                slo_ms,
+            } => Json::obj(vec![
+                ("type", Json::str("hello")),
+                ("tier", Json::str(tier.clone())),
+                ("sr_target", Json::num(*sr_target)),
+                ("slo_ms", Json::num(*slo_ms)),
+            ]),
+            ToServer::Forward {
+                request_id,
+                features,
+            } => Json::obj(vec![
+                ("type", Json::str("forward")),
+                ("request_id", Json::num(*request_id as f64)),
+                (
+                    "features",
+                    Json::Arr(features.iter().map(|&f| Json::num(f as f64)).collect()),
+                ),
+            ]),
+            ToServer::SrUpdate { sr_percent } => Json::obj(vec![
+                ("type", Json::str("sr_update")),
+                ("sr_percent", Json::num(*sr_percent)),
+            ]),
+            ToServer::Bye => Json::obj(vec![("type", Json::str("bye"))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v.str_at("type")? {
+            "hello" => Ok(ToServer::Hello {
+                tier: v.str_at("tier")?.to_string(),
+                sr_target: v.f64_at("sr_target")?,
+                slo_ms: v.f64_at("slo_ms")?,
+            }),
+            "forward" => {
+                let feats = v
+                    .req("features")?
+                    .as_arr()
+                    .context("features not an array")?
+                    .iter()
+                    .map(|x| x.as_f64().map(|f| f as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .context("non-numeric feature")?;
+                Ok(ToServer::Forward {
+                    request_id: v.f64_at("request_id")? as u64,
+                    features: feats,
+                })
+            }
+            "sr_update" => Ok(ToServer::SrUpdate {
+                sr_percent: v.f64_at("sr_percent")?,
+            }),
+            "bye" => Ok(ToServer::Bye),
+            other => bail!("unknown ToServer type '{other}'"),
+        }
+    }
+}
+
+impl ToDevice {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ToDevice::Welcome {
+                device_id,
+                threshold,
+            } => Json::obj(vec![
+                ("type", Json::str("welcome")),
+                ("device_id", Json::num(*device_id as f64)),
+                ("threshold", Json::num(*threshold)),
+            ]),
+            ToDevice::Answer {
+                request_id,
+                top1,
+                p_top1,
+            } => Json::obj(vec![
+                ("type", Json::str("answer")),
+                ("request_id", Json::num(*request_id as f64)),
+                ("top1", Json::num(*top1 as f64)),
+                ("p_top1", Json::num(*p_top1 as f64)),
+            ]),
+            ToDevice::SetThreshold { threshold } => Json::obj(vec![
+                ("type", Json::str("set_threshold")),
+                ("threshold", Json::num(*threshold)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v.str_at("type")? {
+            "welcome" => Ok(ToDevice::Welcome {
+                device_id: v.f64_at("device_id")? as u64,
+                threshold: v.f64_at("threshold")?,
+            }),
+            "answer" => Ok(ToDevice::Answer {
+                request_id: v.f64_at("request_id")? as u64,
+                top1: v.f64_at("top1")? as u32,
+                p_top1: v.f64_at("p_top1")? as f32,
+            }),
+            "set_threshold" => Ok(ToDevice::SetThreshold {
+                threshold: v.f64_at("threshold")?,
+            }),
+            other => bail!("unknown ToDevice type '{other}'"),
+        }
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, v: &Json) -> Result<()> {
+    let body = v.to_string().into_bytes();
+    anyhow::ensure!(body.len() as u32 <= MAX_FRAME, "frame too large");
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame; None on clean EOF.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    anyhow::ensure!(len <= MAX_FRAME, "oversized frame: {len}");
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    let text = String::from_utf8(body).context("frame not utf-8")?;
+    Ok(Some(Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_server_roundtrip() {
+        let msgs = [
+            ToServer::Hello {
+                tier: "low".into(),
+                sr_target: 95.0,
+                slo_ms: 150.0,
+            },
+            ToServer::Forward {
+                request_id: 7,
+                features: vec![0.5, -1.25, 3.0],
+            },
+            ToServer::SrUpdate { sr_percent: 92.5 },
+            ToServer::Bye,
+        ];
+        for m in msgs {
+            let back = ToServer::from_json(&m.to_json()).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn to_device_roundtrip() {
+        let msgs = [
+            ToDevice::Welcome {
+                device_id: 3,
+                threshold: 0.5,
+            },
+            ToDevice::Answer {
+                request_id: 9,
+                top1: 42,
+                p_top1: 0.875,
+            },
+            ToDevice::SetThreshold { threshold: 0.31 },
+        ];
+        for m in msgs {
+            let back = ToDevice::from_json(&m.to_json()).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        let v = ToServer::SrUpdate { sr_percent: 88.0 }.to_json();
+        write_frame(&mut buf, &v).unwrap();
+        let mut cursor = buf.as_slice();
+        let back = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(back, v);
+        // EOF after the single frame
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_oversized_frame_header() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_type() {
+        let v = Json::parse(r#"{"type": "bogus"}"#).unwrap();
+        assert!(ToServer::from_json(&v).is_err());
+        assert!(ToDevice::from_json(&v).is_err());
+    }
+}

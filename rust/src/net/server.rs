@@ -1,0 +1,291 @@
+//! Live-mode leader: a threaded TCP server that owns the PJRT engine,
+//! the request queue, the dynamic batcher and the MultiTASC++
+//! scheduler — the paper's architecture (Fig 2) in wall-clock time.
+//!
+//! Thread layout (the PJRT client is not Send, so inference stays on
+//! one thread):
+//! * acceptor: takes connections, spawns one reader per device;
+//! * readers: decode frames, push Forward requests into the shared
+//!   queue, relay SR updates to the scheduler mailbox;
+//! * executor (main thread): drains the queue with dynamic batching,
+//!   runs the server model through PJRT, writes answers back, applies
+//!   scheduler updates.
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::SystemConfig;
+use crate::models::{Registry, Tier};
+use crate::net::proto::{read_frame, write_frame, ToDevice, ToServer};
+use crate::runtime::Engine;
+use crate::scheduler::{MultiTascPP, Scheduler};
+
+struct PendingRequest {
+    device_id: u64,
+    request_id: u64,
+    features: Vec<f32>,
+}
+
+enum Telemetry {
+    Sr { device_id: u64, sr_percent: f64 },
+    Gone { device_id: u64 },
+}
+
+#[derive(Default)]
+struct Shared {
+    queue: Mutex<VecDeque<PendingRequest>>,
+    telemetry: Mutex<Vec<Telemetry>>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+/// Per-device writer handles (answers + threshold pushes).
+type Writers = Arc<Mutex<std::collections::BTreeMap<u64, TcpStream>>>;
+
+pub struct ServeOptions {
+    pub addr: String,
+    pub server_model: String,
+    /// Exit after this many answered requests (0 = run forever). Lets
+    /// the live example terminate deterministically.
+    pub answer_limit: usize,
+    /// Exit if idle (no connected devices) for this long once at least
+    /// one device has connected.
+    pub idle_timeout: Duration,
+}
+
+pub fn serve(registry: Registry, cfg: &SystemConfig, opts: &ServeOptions) -> Result<u64> {
+    // Bind before the (slow) artifact warm-up so clients can connect
+    // immediately; their first requests just queue.
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("bind {}", opts.addr))?;
+    listener.set_nonblocking(true)?;
+    log::info!("mtpp serve: listening on {}", opts.addr);
+    let engine = Engine::new(registry)?;
+    engine.warm(&opts.server_model)?;
+
+    let shared = Arc::new(Shared::default());
+    let writers: Writers = Arc::new(Mutex::new(Default::default()));
+    let next_device = Arc::new(AtomicU64::new(0));
+    let connected = Arc::new(AtomicU64::new(0));
+    let mut scheduler = MultiTascPP::new(cfg.update_gain);
+
+    // Acceptor thread.
+    let acceptor = {
+        let shared = shared.clone();
+        let writers = writers.clone();
+        let next_device = next_device.clone();
+        let connected = connected.clone();
+        std::thread::spawn(move || loop {
+            if shared.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    let id = next_device.fetch_add(1, Ordering::Relaxed);
+                    log::info!("device {id} connected from {peer}");
+                    connected.fetch_add(1, Ordering::Relaxed);
+                    let shared = shared.clone();
+                    let writers = writers.clone();
+                    let connected = connected.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = reader_loop(id, stream, &shared, &writers) {
+                            log::warn!("device {id} reader: {e:#}");
+                        }
+                        writers.lock().unwrap().remove(&id);
+                        shared
+                            .telemetry
+                            .lock()
+                            .unwrap()
+                            .push(Telemetry::Gone { device_id: id });
+                        connected.fetch_sub(1, Ordering::Relaxed);
+                        shared.cv.notify_all();
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => {
+                    log::warn!("accept: {e}");
+                    break;
+                }
+            }
+        })
+    };
+
+    // Executor loop (this thread owns PJRT).
+    let input_dim = engine.registry().input_dim;
+    let max_batch = crate::config::latency::server_latency_model(&opts.server_model).max_batch;
+    let mut answered: u64 = 0;
+    let mut seen_any = false;
+    let mut idle_since = Instant::now();
+    loop {
+        // Telemetry first: registrations arrive via writer map, SR via
+        // the mailbox.
+        for t in shared.telemetry.lock().unwrap().drain(..) {
+            match t {
+                Telemetry::Sr {
+                    device_id,
+                    sr_percent,
+                } => {
+                    if let Some(upd) = scheduler.on_sr_update(device_id as usize, sr_percent) {
+                        let writers = writers.lock().unwrap();
+                        if let Some(stream) = writers.get(&device_id) {
+                            let mut s = stream.try_clone()?;
+                            let _ = write_frame(
+                                &mut s,
+                                &ToDevice::SetThreshold {
+                                    threshold: upd.threshold,
+                                }
+                                .to_json(),
+                            );
+                        }
+                    }
+                }
+                Telemetry::Gone { device_id } => {
+                    scheduler.device_offline(device_id as usize);
+                }
+            }
+        }
+
+        // Dynamic batch: largest grid batch <= queue length.
+        let batch: Vec<PendingRequest> = {
+            let mut q = shared.queue.lock().unwrap();
+            if q.is_empty() {
+                // Wait briefly for work.
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(10))
+                    .unwrap();
+                q = guard;
+            }
+            let feasible = cfg
+                .batch_grid
+                .iter()
+                .filter(|&&b| b <= q.len() && b <= max_batch)
+                .copied()
+                .max()
+                .unwrap_or(0);
+            (0..feasible).filter_map(|_| q.pop_front()).collect()
+        };
+
+        if !batch.is_empty() {
+            seen_any = true;
+            idle_since = Instant::now();
+            let mut x = Vec::with_capacity(batch.len() * input_dim);
+            for r in &batch {
+                anyhow::ensure!(
+                    r.features.len() == input_dim,
+                    "device {} sent {} features, expected {input_dim}",
+                    r.device_id,
+                    r.features.len()
+                );
+                x.extend_from_slice(&r.features);
+            }
+            let out = engine.infer(&opts.server_model, &x, batch.len())?;
+            scheduler.on_batch_observed(batch.len());
+            let writers = writers.lock().unwrap();
+            for (i, r) in batch.iter().enumerate() {
+                if let Some(stream) = writers.get(&r.device_id) {
+                    let mut s = stream.try_clone()?;
+                    let _ = write_frame(
+                        &mut s,
+                        &ToDevice::Answer {
+                            request_id: r.request_id,
+                            top1: out.top1(i) as u32,
+                            p_top1: out.p_top1(i),
+                        }
+                        .to_json(),
+                    );
+                    answered += 1;
+                }
+            }
+        }
+
+        // Handle Hello handshakes queued by readers (device registration
+        // with the scheduler happens here so thresholds come from one
+        // place).
+        register_new_devices(&writers, &mut scheduler, cfg);
+
+        if opts.answer_limit > 0 && answered as usize >= opts.answer_limit {
+            break;
+        }
+        if seen_any
+            && connected.load(Ordering::Relaxed) == 0
+            && idle_since.elapsed() > opts.idle_timeout
+        {
+            break;
+        }
+    }
+    shared.stop.store(true, Ordering::Relaxed);
+    shared.cv.notify_all();
+    let _ = acceptor.join();
+    log::info!("mtpp serve: answered {answered} requests, shutting down");
+    Ok(answered)
+}
+
+/// Registration mailbox: (device_id, tier, sr_target) pending Welcome.
+static PENDING_HELLO: Mutex<Vec<(u64, Tier, f64)>> = Mutex::new(Vec::new());
+
+fn register_new_devices(writers: &Writers, scheduler: &mut MultiTascPP, _cfg: &SystemConfig) {
+    let pending: Vec<(u64, Tier, f64)> = PENDING_HELLO.lock().unwrap().drain(..).collect();
+    for (id, tier, sr_target) in pending {
+        // Live mode starts from a neutral mid threshold; the continuous
+        // update rule converges from there (§IV-C).
+        let threshold = scheduler.register_device(id as usize, tier, 0.5, sr_target);
+        let writers = writers.lock().unwrap();
+        if let Some(stream) = writers.get(&id) {
+            if let Ok(mut s) = stream.try_clone() {
+                let _ = write_frame(
+                    &mut s,
+                    &ToDevice::Welcome {
+                        device_id: id,
+                        threshold,
+                    }
+                    .to_json(),
+                );
+            }
+        }
+    }
+}
+
+fn reader_loop(id: u64, stream: TcpStream, shared: &Shared, writers: &Writers) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    writers.lock().unwrap().insert(id, stream);
+    while let Some(frame) = read_frame(&mut reader)? {
+        match ToServer::from_json(&frame)? {
+            ToServer::Hello {
+                tier, sr_target, ..
+            } => {
+                let tier = Tier::parse(&tier)?;
+                PENDING_HELLO.lock().unwrap().push((id, tier, sr_target));
+                shared.cv.notify_all();
+            }
+            ToServer::Forward {
+                request_id,
+                features,
+            } => {
+                shared.queue.lock().unwrap().push_back(PendingRequest {
+                    device_id: id,
+                    request_id,
+                    features,
+                });
+                shared.cv.notify_all();
+            }
+            ToServer::SrUpdate { sr_percent } => {
+                shared.telemetry.lock().unwrap().push(Telemetry::Sr {
+                    device_id: id,
+                    sr_percent,
+                });
+            }
+            ToServer::Bye => break,
+        }
+    }
+    Ok(())
+}

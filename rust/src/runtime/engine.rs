@@ -1,0 +1,153 @@
+//! The inference engine: a PJRT client plus a lazily-populated cache of
+//! compiled executables keyed by (model, batch).
+//!
+//! Dynamic batching (server §V-A) asks for varying logical batch sizes;
+//! the engine rounds each request up to the smallest compiled batch
+//! that fits, pads the input with zero rows, and truncates the outputs
+//! back to the logical size.
+
+use std::collections::BTreeMap;
+use std::cell::RefCell;
+
+use anyhow::{Context, Result};
+
+use crate::models::Registry;
+use crate::runtime::executor::{Executor, ModelOutput};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    /// (model, compiled batch) -> executor. The PJRT client is Rc-based
+    /// (not Send), so the engine lives on one thread; RefCell suffices.
+    cache: RefCell<BTreeMap<(String, usize), std::rc::Rc<Executor>>>,
+}
+
+impl Engine {
+    pub fn new(registry: Registry) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self {
+            client,
+            registry,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Smallest compiled batch >= logical `n` (or the largest compiled
+    /// batch if `n` exceeds them all — caller then splits).
+    pub fn pick_batch(&self, model: &str, n: usize) -> Result<usize> {
+        let batches = self.registry.batches(model)?;
+        anyhow::ensure!(!batches.is_empty(), "model '{model}' has no artifacts");
+        Ok(*batches
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or(batches.last().unwrap()))
+    }
+
+    fn executor(&self, model: &str, batch: usize) -> Result<std::rc::Rc<Executor>> {
+        let key = (model.to_string(), batch);
+        // Fast path under the lock; compile outside would race the
+        // cache anyway and compiles are one-time, so keep it simple.
+        let mut cache = self.cache.borrow_mut();
+        if let Some(exe) = cache.get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.registry.artifact_path(model, batch)?;
+        let params = self.registry.load_params(model)?;
+        log::info!("compiling artifact {} (batch {batch})", path.display());
+        let exe = std::rc::Rc::new(Executor::load(
+            &self.client,
+            &path,
+            model,
+            batch,
+            self.registry.input_dim,
+            self.registry.num_classes,
+            &params,
+        )?);
+        cache.insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact of a model (server warm-up).
+    pub fn warm(&self, model: &str) -> Result<()> {
+        for b in self.registry.batches(model)? {
+            self.executor(model, b)?;
+        }
+        Ok(())
+    }
+
+    /// Run `model` over `n` samples (row-major `n * input_dim` floats),
+    /// padding to the nearest compiled batch and splitting if `n`
+    /// exceeds the largest one. Returns exactly `n` outputs.
+    pub fn infer(&self, model: &str, x: &[f32], n: usize) -> Result<ModelOutput> {
+        let d = self.registry.input_dim;
+        anyhow::ensure!(x.len() == n * d, "input length mismatch");
+        let k = self.registry.num_classes;
+        let mut probs = Vec::with_capacity(n * k);
+        let mut bvsb = Vec::with_capacity(n);
+        let mut off = 0;
+        while off < n {
+            let remaining = n - off;
+            let batch = self.pick_batch(model, remaining)?;
+            let take = remaining.min(batch);
+            let exe = self.executor(model, batch)?;
+            let out = if take == batch {
+                exe.execute(&x[off * d..(off + take) * d])?
+            } else {
+                // Pad the tail chunk with zero rows.
+                let mut padded = vec![0.0f32; batch * d];
+                padded[..take * d].copy_from_slice(&x[off * d..(off + take) * d]);
+                exe.execute(&padded)?
+            };
+            probs.extend_from_slice(&out.probs[..take * k]);
+            bvsb.extend_from_slice(&out.bvsb[..take]);
+            off += take;
+        }
+        Ok(ModelOutput {
+            batch: n,
+            num_classes: k,
+            probs,
+            bvsb,
+        })
+    }
+
+    /// The real wall-clock cost of one batched execute, measured — used
+    /// by the perf harness to compare against the calibrated virtual
+    /// latency tables.
+    pub fn timed_infer(&self, model: &str, x: &[f32], n: usize) -> Result<(ModelOutput, f64)> {
+        let t0 = std::time::Instant::now();
+        let out = self.infer(model, x, n)?;
+        Ok((out, t0.elapsed().as_secs_f64() * 1000.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/
+    // (integration), since they depend on `make artifacts` outputs.
+    use super::*;
+    use crate::models::registry::test_meta_json;
+    use std::path::Path;
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        let reg =
+            Registry::from_meta(Path::new("/tmp/nonexistent"), &test_meta_json()).unwrap();
+        let engine = Engine::new(reg).unwrap();
+        assert_eq!(engine.pick_batch("dev_low", 1).unwrap(), 1);
+        assert_eq!(engine.pick_batch("dev_low", 2).unwrap(), 64);
+        assert_eq!(engine.pick_batch("dev_low", 64).unwrap(), 64);
+        // larger than any compiled batch -> largest (caller splits)
+        assert_eq!(engine.pick_batch("dev_low", 1000).unwrap(), 64);
+        // srv_effnetb3 only has b=16 in the test meta
+        assert_eq!(engine.pick_batch("srv_effnetb3", 3).unwrap(), 16);
+    }
+}

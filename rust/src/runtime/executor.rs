@@ -1,0 +1,144 @@
+//! One compiled PJRT executable for one (model, batch-size) artifact.
+//!
+//! Wraps the `xla` crate path proven by /opt/xla-example/load_hlo:
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` -> `execute`. HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax>=0.5 64-bit-id protos).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+/// Output of one batched inference: per-sample softmax probs + BvSB.
+#[derive(Clone, Debug)]
+pub struct ModelOutput {
+    pub batch: usize,
+    pub num_classes: usize,
+    /// Row-major (batch, num_classes) probabilities.
+    pub probs: Vec<f32>,
+    /// Best-vs-second-best margin per sample.
+    pub bvsb: Vec<f32>,
+}
+
+impl ModelOutput {
+    pub fn probs_row(&self, i: usize) -> &[f32] {
+        &self.probs[i * self.num_classes..(i + 1) * self.num_classes]
+    }
+
+    /// argmax over a sample's probabilities.
+    pub fn top1(&self, i: usize) -> usize {
+        let row = self.probs_row(i);
+        let mut best = 0;
+        let mut best_v = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = j;
+            }
+        }
+        best
+    }
+
+    pub fn p_top1(&self, i: usize) -> f32 {
+        let row = self.probs_row(i);
+        row.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+    }
+}
+
+/// A compiled (model, batch) executable bound to a PJRT client.
+///
+/// Weights travel as a second runtime input (HLO text elides large
+/// constants, so they cannot be baked in — see python/compile/aot.py):
+/// the flat parameter literal is bound at load time and passed on every
+/// execute.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    params: xla::Literal,
+    pub model: String,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+}
+
+impl Executor {
+    /// Load + compile an HLO-text artifact and bind its flat parameter
+    /// vector.
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        model: &str,
+        batch: usize,
+        input_dim: usize,
+        num_classes: usize,
+        params: &[f32],
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        let params = xla::Literal::vec1(params);
+        Ok(Self {
+            exe,
+            params,
+            model: model.to_string(),
+            batch,
+            input_dim,
+            num_classes,
+        })
+    }
+
+    /// Run one batch. `x` must be exactly (batch * input_dim) floats,
+    /// row-major. Shorter logical batches must be padded by the caller
+    /// (see [`Engine::infer`]) — the artifact's shape is static.
+    pub fn execute(&self, x: &[f32]) -> Result<ModelOutput> {
+        ensure!(
+            x.len() == self.batch * self.input_dim,
+            "input length {} != batch {} * input_dim {}",
+            x.len(),
+            self.batch,
+            self.input_dim
+        );
+        let lit = xla::Literal::vec1(x).reshape(&[self.batch as i64, self.input_dim as i64])?;
+        let result = self.exe.execute(&[&lit, &self.params])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (probs, bvsb).
+        let elems = result.to_tuple()?;
+        ensure!(elems.len() == 2, "expected (probs, bvsb), got {} elements", elems.len());
+        let probs = elems[0].to_vec::<f32>()?;
+        let bvsb = elems[1].to_vec::<f32>()?;
+        ensure!(
+            probs.len() == self.batch * self.num_classes && bvsb.len() == self.batch,
+            "output shape mismatch: probs {} bvsb {}",
+            probs.len(),
+            bvsb.len()
+        );
+        Ok(ModelOutput {
+            batch: self.batch,
+            num_classes: self.num_classes,
+            probs,
+            bvsb,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_output_top1_and_row() {
+        let out = ModelOutput {
+            batch: 2,
+            num_classes: 3,
+            probs: vec![0.1, 0.7, 0.2, 0.5, 0.2, 0.3],
+            bvsb: vec![0.5, 0.2],
+        };
+        assert_eq!(out.top1(0), 1);
+        assert_eq!(out.top1(1), 0);
+        assert_eq!(out.probs_row(1), &[0.5, 0.2, 0.3]);
+        assert!((out.p_top1(0) - 0.7).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the
+//! request path. Python is never involved here — the artifacts are
+//! self-contained (parameters baked in as constants), so one compiled
+//! executable per (model, batch) pair is all the server needs.
+
+pub mod engine;
+pub mod executor;
+
+pub use engine::Engine;
+pub use executor::{Executor, ModelOutput};

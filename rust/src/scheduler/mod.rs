@@ -1,0 +1,81 @@
+//! Scheduling layer — the paper's contribution lives here.
+//!
+//! A [`Scheduler`] owns every device's forwarding threshold and reacts
+//! to runtime telemetry: per-device SLO satisfaction-rate updates
+//! (MultiTASC++), server batch-size observations (MultiTASC), or
+//! nothing at all (Static). The model-switching controller (§IV-E) sits
+//! alongside and can swap the server model based on the current
+//! threshold population.
+
+pub mod multitasc;
+pub mod multitascpp;
+pub mod static_sched;
+pub mod switching;
+
+use crate::models::Tier;
+
+pub use multitasc::MultiTasc;
+pub use multitascpp::MultiTascPP;
+pub use static_sched::StaticSched;
+pub use switching::SwitchController;
+
+pub type DeviceId = usize;
+
+/// A threshold reconfiguration pushed to one device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThresholdUpdate {
+    pub device: DeviceId,
+    pub threshold: f64,
+}
+
+/// The scheduler interface shared by MultiTASC++, MultiTASC and Static.
+pub trait Scheduler {
+    /// Register a device; returns its initial threshold.
+    fn register_device(
+        &mut self,
+        device: DeviceId,
+        tier: Tier,
+        initial_threshold: f64,
+        sr_target: f64,
+    ) -> f64;
+
+    /// Per-device SLO satisfaction-rate window update (§IV-B). Returns
+    /// a reconfiguration for this device if the policy reacts to SR.
+    fn on_sr_update(&mut self, device: DeviceId, sr_percent: f64) -> Option<ThresholdUpdate>;
+
+    /// Server-side dynamic-batch observation (MultiTASC's signal).
+    /// Returns reconfigurations for any devices the policy adjusts.
+    fn on_batch_observed(&mut self, batch_size: usize) -> Vec<ThresholdUpdate>;
+
+    /// Device lifecycle (intermittent participation, Fig 19/20).
+    fn device_offline(&mut self, device: DeviceId);
+    fn device_online(&mut self, device: DeviceId);
+
+    /// Current threshold of a device (for switching + metrics).
+    fn threshold(&self, device: DeviceId) -> f64;
+
+    /// All (device, tier, threshold) triples (switch controller input).
+    fn thresholds(&self) -> Vec<(DeviceId, Tier, f64)>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Construct a scheduler from a scenario kind.
+pub fn build(
+    kind: crate::config::scenario::SchedulerKind,
+    cfg: &crate::config::SystemConfig,
+    server_latency: crate::config::latency::ServerLatencyModel,
+    slo_ms: f64,
+    batch_grid: &[usize],
+) -> Box<dyn Scheduler> {
+    use crate::config::scenario::SchedulerKind as K;
+    match kind {
+        K::MultiTascPP => Box::new(MultiTascPP::new(cfg.update_gain)),
+        K::MultiTasc => Box::new(MultiTasc::new(server_latency, slo_ms, batch_grid)),
+        K::Static => Box::new(StaticSched::new()),
+        K::AblationNoScaling => Box::new(MultiTascPP::new(cfg.update_gain).without_multiplier()),
+        K::AblationQuantized => {
+            Box::new(MultiTascPP::new(cfg.update_gain).with_quantization(0.05))
+        }
+    }
+}

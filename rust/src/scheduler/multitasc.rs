@@ -1,0 +1,227 @@
+//! MultiTASC baseline [ISCC'23] — the predecessor this paper improves
+//! on. Reimplemented from its description in §I/§V-B of MultiTASC++:
+//!
+//! * the congestion signal is the server's *running batch size*,
+//!   compared against an optimal batch `B_opt` computed at
+//!   initialization (not per-device SLO telemetry);
+//! * threshold updates move in fixed discrete steps (slow, imprecise
+//!   convergence — the paper's Fig 4/7 dip);
+//! * a single shared latency target across all devices.
+//!
+//! `B_opt` at init: the largest grid batch whose service latency fits
+//! within half the shared SLO slack — the "guess of the optimal influx"
+//! the paper criticizes.
+
+use std::collections::BTreeMap;
+
+use crate::config::latency::ServerLatencyModel;
+use crate::models::Tier;
+use crate::scheduler::{DeviceId, Scheduler, ThresholdUpdate};
+
+/// Discrete threshold step (MultiTASC's coarse knob).
+const STEP: f64 = 0.02;
+/// Hysteresis band around B_opt before reacting.
+const TOL: f64 = 0.25;
+/// Batch observations are smoothed with an EMA.
+const EMA_ALPHA: f64 = 0.3;
+/// React at most once per this many observations (the slow cadence
+/// the paper criticizes — roughly one step per couple of seconds).
+const REACT_EVERY: usize = 12;
+
+pub struct MultiTasc {
+    b_opt: f64,
+    ema_batch: f64,
+    observations: usize,
+    devices: BTreeMap<DeviceId, (Tier, f64, bool)>,
+}
+
+impl MultiTasc {
+    pub fn new(server: ServerLatencyModel, slo_ms: f64, batch_grid: &[usize]) -> Self {
+        Self {
+            b_opt: Self::optimal_batch(server, slo_ms, batch_grid) as f64,
+            ema_batch: 0.0,
+            observations: 0,
+            devices: BTreeMap::new(),
+        }
+    }
+
+    /// The init-time "optimal" batch: largest grid batch whose service
+    /// time fits in roughly half the SLO slack after device inference
+    /// and comm (leaving the rest for queueing) — the "guess" computed
+    /// once at initialization.
+    pub fn optimal_batch(server: ServerLatencyModel, slo_ms: f64, grid: &[usize]) -> usize {
+        // ~35 ms device inference + two comm hops, then half for queue.
+        let budget = ((slo_ms - 39.0).max(slo_ms * 0.3)) * 0.5;
+        grid.iter()
+            .filter(|&&b| b <= server.max_batch && server.batch_ms(b) <= budget)
+            .copied()
+            .max()
+            .unwrap_or(1)
+    }
+
+    pub fn b_opt(&self) -> f64 {
+        self.b_opt
+    }
+}
+
+impl Scheduler for MultiTasc {
+    fn register_device(
+        &mut self,
+        device: DeviceId,
+        tier: Tier,
+        initial_threshold: f64,
+        _sr_target: f64,
+    ) -> f64 {
+        let c = initial_threshold.clamp(0.0, 1.0);
+        self.devices.insert(device, (tier, c, true));
+        c
+    }
+
+    fn on_sr_update(&mut self, _device: DeviceId, _sr: f64) -> Option<ThresholdUpdate> {
+        None // MultiTASC has no per-device SR telemetry.
+    }
+
+    fn on_batch_observed(&mut self, batch_size: usize) -> Vec<ThresholdUpdate> {
+        self.ema_batch = if self.observations == 0 {
+            batch_size as f64
+        } else {
+            EMA_ALPHA * batch_size as f64 + (1.0 - EMA_ALPHA) * self.ema_batch
+        };
+        self.observations += 1;
+        if self.observations % REACT_EVERY != 0 {
+            return Vec::new();
+        }
+        let step = if self.ema_batch > self.b_opt * (1.0 + TOL) {
+            -STEP // congested: forward less
+        } else if self.ema_batch < self.b_opt * (1.0 - TOL) {
+            STEP // under-utilized: forward more
+        } else {
+            return Vec::new();
+        };
+        // Global, uniform, discrete adjustment — the paper's critique.
+        let mut updates = Vec::new();
+        for (&id, dev) in self.devices.iter_mut() {
+            if !dev.2 {
+                continue;
+            }
+            dev.1 = (dev.1 + step).clamp(0.0, 1.0);
+            updates.push(ThresholdUpdate {
+                device: id,
+                threshold: dev.1,
+            });
+        }
+        updates
+    }
+
+    fn device_offline(&mut self, device: DeviceId) {
+        if let Some(d) = self.devices.get_mut(&device) {
+            d.2 = false;
+        }
+    }
+
+    fn device_online(&mut self, device: DeviceId) {
+        if let Some(d) = self.devices.get_mut(&device) {
+            d.2 = true;
+        }
+    }
+
+    fn threshold(&self, device: DeviceId) -> f64 {
+        self.devices.get(&device).map_or(0.0, |d| d.1)
+    }
+
+    fn thresholds(&self) -> Vec<(DeviceId, Tier, f64)> {
+        self.devices
+            .iter()
+            .filter(|(_, d)| d.2)
+            .map(|(&id, d)| (id, d.0, d.1))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "multitasc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::latency::server_latency_model;
+
+    const GRID: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+    fn sched(slo: f64) -> MultiTasc {
+        let mut s = MultiTasc::new(server_latency_model("srv_inception"), slo, &GRID);
+        s.register_device(0, Tier::Low, 0.5, 95.0);
+        s.register_device(1, Tier::Low, 0.5, 95.0);
+        s
+    }
+
+    #[test]
+    fn optimal_batch_scales_with_slo() {
+        let inc = server_latency_model("srv_inception");
+        let b100 = MultiTasc::optimal_batch(inc, 100.0, &GRID);
+        let b200 = MultiTasc::optimal_batch(inc, 200.0, &GRID);
+        assert!(b100 < b200, "b100={b100} b200={b200}");
+        // 100ms SLO: budget (100-39)/2 = 30.5ms -> t(4)=24.1 fits,
+        // t(8)=36.2 doesn't.
+        assert_eq!(b100, 4);
+    }
+
+    #[test]
+    fn optimal_batch_respects_model_cap() {
+        let eff = server_latency_model("srv_effnetb3");
+        let b = MultiTasc::optimal_batch(eff, 200.0, &GRID);
+        assert!(b <= eff.max_batch);
+    }
+
+    #[test]
+    fn congestion_lowers_all_thresholds_in_steps() {
+        let mut s = sched(100.0); // b_opt = 4
+        let mut updates = Vec::new();
+        for _ in 0..REACT_EVERY {
+            updates = s.on_batch_observed(64);
+        }
+        assert_eq!(updates.len(), 2);
+        for u in &updates {
+            assert!((u.threshold - 0.48).abs() < 1e-9); // one -STEP
+        }
+    }
+
+    #[test]
+    fn underutilization_raises_thresholds() {
+        let mut s = sched(100.0);
+        for _ in 0..REACT_EVERY {
+            s.on_batch_observed(1);
+        }
+        assert!((s.threshold(0) - 0.52).abs() < 1e-9);
+    }
+
+    #[test]
+    fn within_band_no_reaction() {
+        let mut s = sched(100.0); // b_opt = 4, band [3, 5]
+        for _ in 0..REACT_EVERY {
+            s.on_batch_observed(4);
+        }
+        assert_eq!(s.threshold(0), 0.5);
+    }
+
+    #[test]
+    fn reacts_only_every_k_observations() {
+        let mut s = sched(100.0);
+        for _ in 0..REACT_EVERY - 1 {
+            assert!(s.on_batch_observed(64).is_empty());
+        }
+        assert!(!s.on_batch_observed(64).is_empty());
+    }
+
+    #[test]
+    fn offline_devices_skip_updates() {
+        let mut s = sched(100.0);
+        s.device_offline(1);
+        for _ in 0..REACT_EVERY {
+            s.on_batch_observed(64);
+        }
+        assert_eq!(s.threshold(1), 0.5); // untouched while offline
+        assert!((s.threshold(0) - 0.48).abs() < 1e-9);
+    }
+}

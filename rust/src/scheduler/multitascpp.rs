@@ -1,0 +1,313 @@
+//! MultiTASC++ (paper §IV): SLO satisfaction-rate driven, continuous
+//! threshold reconfiguration with multiplicative scaling.
+//!
+//! Per device i, on every SR window update (Eq. 4):
+//!
+//! ```text
+//! Δthresh = -a · (SR_target_i - SR_update_i)          // continuous
+//! thresh_updated = c_i + Δthresh
+//! if SR_target_i < SR_update_i:                        // Alg. 1
+//!     thresh_final = m_i · thresh_updated              //   scale up
+//!     m_i ← m_i · (1 + 0.1 / n)                        //   grow m
+//! else:
+//!     thresh_final = thresh_updated
+//!     m_i ← 1                                          //   reset
+//! c_i ← clamp(thresh_final, 0, 1)
+//! ```
+//!
+//! `n` is the number of *active* devices (the Alg. 1 penalty term), so
+//! the multiplier is gentle in crowded systems. SR targets are
+//! per-device (§V-B: "SLO targets chosen independently for each
+//! device"), unlike MultiTASC's single shared target.
+
+use std::collections::BTreeMap;
+
+use crate::models::Tier;
+use crate::scheduler::{DeviceId, Scheduler, ThresholdUpdate};
+
+#[derive(Clone, Debug)]
+struct DeviceState {
+    tier: Tier,
+    threshold: f64,
+    multiplier: f64,
+    sr_target: f64,
+    online: bool,
+}
+
+pub struct MultiTascPP {
+    /// The continuous-update gain `a` (paper: 0.005).
+    gain: f64,
+    /// Ablation: disable the Alg. 1 multiplier (threshold scaling).
+    use_multiplier: bool,
+    /// Ablation: quantize updates to discrete steps of this size
+    /// (0 = continuous, the paper's contribution).
+    quantize_step: f64,
+    devices: BTreeMap<DeviceId, DeviceState>,
+}
+
+impl MultiTascPP {
+    pub fn new(gain: f64) -> Self {
+        assert!(gain > 0.0, "update gain must be positive");
+        Self {
+            gain,
+            use_multiplier: true,
+            quantize_step: 0.0,
+            devices: BTreeMap::new(),
+        }
+    }
+
+    /// Ablation knob: turn off §IV-D threshold scaling.
+    pub fn without_multiplier(mut self) -> Self {
+        self.use_multiplier = false;
+        self
+    }
+
+    /// Ablation knob: snap thresholds to a discrete grid (reverting
+    /// §IV-C's continuous reconfiguration).
+    pub fn with_quantization(mut self, step: f64) -> Self {
+        self.quantize_step = step;
+        self
+    }
+
+    fn active_count(&self) -> usize {
+        self.devices.values().filter(|d| d.online).count()
+    }
+
+    /// The Eq. 4 + Alg. 1 update, exposed for property tests.
+    pub fn update_rule(
+        gain: f64,
+        threshold: f64,
+        multiplier: f64,
+        sr_target: f64,
+        sr_update: f64,
+        active_devices: usize,
+    ) -> (f64, f64) {
+        let delta = -gain * (sr_target - sr_update);
+        let thresh_updated = threshold + delta;
+        if sr_target < sr_update {
+            let thresh_final = multiplier * thresh_updated;
+            let n = active_devices.max(1) as f64;
+            let m_next = multiplier * (1.0 + 0.1 / n);
+            (thresh_final.clamp(0.0, 1.0), m_next)
+        } else {
+            (thresh_updated.clamp(0.0, 1.0), 1.0)
+        }
+    }
+}
+
+impl Scheduler for MultiTascPP {
+    fn register_device(
+        &mut self,
+        device: DeviceId,
+        tier: Tier,
+        initial_threshold: f64,
+        sr_target: f64,
+    ) -> f64 {
+        let c = initial_threshold.clamp(0.0, 1.0);
+        self.devices.insert(
+            device,
+            DeviceState {
+                tier,
+                threshold: c,
+                multiplier: 1.0,
+                sr_target,
+                online: true,
+            },
+        );
+        c
+    }
+
+    fn on_sr_update(&mut self, device: DeviceId, sr_percent: f64) -> Option<ThresholdUpdate> {
+        let n = self.active_count();
+        let gain = self.gain;
+        let st = self.devices.get_mut(&device)?;
+        if !st.online {
+            return None;
+        }
+        let (mut c, m) = Self::update_rule(
+            gain,
+            st.threshold,
+            if self.use_multiplier { st.multiplier } else { 1.0 },
+            st.sr_target,
+            sr_percent,
+            n,
+        );
+        if self.quantize_step > 0.0 {
+            c = (c / self.quantize_step).round() * self.quantize_step;
+            c = c.clamp(0.0, 1.0);
+        }
+        st.threshold = c;
+        st.multiplier = if self.use_multiplier { m } else { 1.0 };
+        Some(ThresholdUpdate {
+            device,
+            threshold: c,
+        })
+    }
+
+    fn on_batch_observed(&mut self, _batch_size: usize) -> Vec<ThresholdUpdate> {
+        Vec::new() // MultiTASC++ ignores the batch-size signal (§V-B)
+    }
+
+    fn device_offline(&mut self, device: DeviceId) {
+        if let Some(st) = self.devices.get_mut(&device) {
+            st.online = false;
+        }
+    }
+
+    fn device_online(&mut self, device: DeviceId) {
+        if let Some(st) = self.devices.get_mut(&device) {
+            st.online = true;
+            st.multiplier = 1.0; // fresh start after an outage
+        }
+    }
+
+    fn threshold(&self, device: DeviceId) -> f64 {
+        self.devices.get(&device).map_or(0.0, |d| d.threshold)
+    }
+
+    fn thresholds(&self) -> Vec<(DeviceId, Tier, f64)> {
+        self.devices
+            .iter()
+            .filter(|(_, d)| d.online)
+            .map(|(&id, d)| (id, d.tier, d.threshold))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "multitasc++"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> MultiTascPP {
+        let mut s = MultiTascPP::new(0.005);
+        s.register_device(0, Tier::Low, 0.5, 95.0);
+        s
+    }
+
+    #[test]
+    fn sr_below_target_lowers_threshold() {
+        let mut s = sched();
+        let upd = s.on_sr_update(0, 80.0).unwrap();
+        // Δ = -0.005 * (95 - 80) = -0.075
+        assert!((upd.threshold - 0.425).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sr_above_target_raises_threshold_with_multiplier() {
+        let mut s = sched();
+        // Δ = -0.005 * (95 - 100) = +0.025; m = 1 on the first update.
+        let upd = s.on_sr_update(0, 100.0).unwrap();
+        assert!((upd.threshold - 0.525).abs() < 1e-9);
+        // Second consecutive over-target update: m has grown to 1.1
+        // (n = 1 active device), so the raise accelerates.
+        let upd2 = s.on_sr_update(0, 100.0).unwrap();
+        let expect = (0.525 + 0.025) * 1.1;
+        assert!((upd2.threshold - expect).abs() < 1e-9, "{}", upd2.threshold);
+    }
+
+    #[test]
+    fn multiplier_resets_on_under_target() {
+        let mut s = sched();
+        s.on_sr_update(0, 100.0);
+        s.on_sr_update(0, 100.0); // m now 1.21
+        let before = s.threshold(0);
+        let upd = s.on_sr_update(0, 90.0).unwrap(); // under target: no scaling
+        assert!((upd.threshold - (before - 0.025)).abs() < 1e-9);
+        // next over-target update uses m = 1 again
+        let upd2 = s.on_sr_update(0, 100.0).unwrap();
+        assert!((upd2.threshold - (upd.threshold + 0.025)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multiplier_penalized_by_device_count() {
+        // n devices shrink the multiplier growth to 1 + 0.1/n (Alg. 1).
+        let (_, m1) = MultiTascPP::update_rule(0.005, 0.5, 1.0, 95.0, 100.0, 1);
+        let (_, m10) = MultiTascPP::update_rule(0.005, 0.5, 1.0, 95.0, 100.0, 10);
+        assert!((m1 - 1.1).abs() < 1e-12);
+        assert!((m10 - 1.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_stays_in_unit_interval() {
+        let mut s = sched();
+        for _ in 0..300 {
+            s.on_sr_update(0, 100.0);
+        }
+        assert!(s.threshold(0) <= 1.0);
+        for _ in 0..300 {
+            s.on_sr_update(0, 0.0);
+        }
+        assert!(s.threshold(0) >= 0.0);
+    }
+
+    #[test]
+    fn at_target_is_a_fixed_point() {
+        let mut s = sched();
+        let upd = s.on_sr_update(0, 95.0).unwrap();
+        assert!((upd.threshold - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_device_targets() {
+        let mut s = MultiTascPP::new(0.005);
+        s.register_device(0, Tier::Low, 0.5, 95.0);
+        s.register_device(1, Tier::High, 0.5, 90.0);
+        // SR = 92: below device-0's target (lowers), above device-1's
+        // (raises).
+        assert!(s.on_sr_update(0, 92.0).unwrap().threshold < 0.5);
+        assert!(s.on_sr_update(1, 92.0).unwrap().threshold > 0.5);
+    }
+
+    #[test]
+    fn offline_devices_ignore_updates_and_reset_on_return() {
+        let mut s = sched();
+        s.device_offline(0);
+        assert!(s.on_sr_update(0, 100.0).is_none());
+        assert!(s.thresholds().is_empty());
+        s.device_online(0);
+        assert_eq!(s.thresholds().len(), 1);
+    }
+
+    #[test]
+    fn ignores_batch_signal() {
+        let mut s = sched();
+        assert!(s.on_batch_observed(64).is_empty());
+    }
+
+    #[test]
+    fn ablation_no_multiplier_is_pure_eq4() {
+        let mut s = MultiTascPP::new(0.005).without_multiplier();
+        s.register_device(0, Tier::Low, 0.5, 95.0);
+        s.on_sr_update(0, 100.0); // 0.525
+        let upd = s.on_sr_update(0, 100.0).unwrap();
+        // without Alg. 1 the second raise is NOT scaled by m = 1.1
+        assert!((upd.threshold - 0.55).abs() < 1e-9, "{}", upd.threshold);
+    }
+
+    #[test]
+    fn ablation_quantized_snaps_to_grid() {
+        let mut s = MultiTascPP::new(0.005).with_quantization(0.05);
+        s.register_device(0, Tier::Low, 0.5, 95.0);
+        let upd = s.on_sr_update(0, 100.0).unwrap(); // raw 0.525 -> 0.55? round(10.5)=10 or 11
+        let snapped = (upd.threshold / 0.05).round() * 0.05;
+        assert!((upd.threshold - snapped).abs() < 1e-9);
+        // small SR deviations vanish below the quantum
+        let upd2 = s.on_sr_update(0, 95.4).unwrap();
+        assert!((upd2.threshold / 0.05).fract().abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_update_monotone_in_sr() {
+        // Higher observed SR must never yield a lower next threshold.
+        let mut prev = f64::NEG_INFINITY;
+        for sr in [0.0, 50.0, 90.0, 94.0, 95.0, 96.0, 99.0, 100.0] {
+            let (c, _) = MultiTascPP::update_rule(0.005, 0.4, 1.05, 95.0, sr, 5);
+            assert!(c >= prev - 1e-12, "sr={sr} c={c} prev={prev}");
+            prev = c;
+        }
+    }
+}

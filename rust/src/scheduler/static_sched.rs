@@ -1,0 +1,95 @@
+//! The Static baseline (§V-A): thresholds tuned offline on the
+//! calibration split (~30% forwarding / ≤1pp accuracy loss rule) and
+//! never changed at runtime.
+
+use std::collections::BTreeMap;
+
+use crate::models::Tier;
+use crate::scheduler::{DeviceId, Scheduler, ThresholdUpdate};
+
+#[derive(Default)]
+pub struct StaticSched {
+    devices: BTreeMap<DeviceId, (Tier, f64, bool)>,
+}
+
+impl StaticSched {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for StaticSched {
+    fn register_device(
+        &mut self,
+        device: DeviceId,
+        tier: Tier,
+        initial_threshold: f64,
+        _sr_target: f64,
+    ) -> f64 {
+        let c = initial_threshold.clamp(0.0, 1.0);
+        self.devices.insert(device, (tier, c, true));
+        c
+    }
+
+    fn on_sr_update(&mut self, _device: DeviceId, _sr: f64) -> Option<ThresholdUpdate> {
+        None
+    }
+
+    fn on_batch_observed(&mut self, _batch_size: usize) -> Vec<ThresholdUpdate> {
+        Vec::new()
+    }
+
+    fn device_offline(&mut self, device: DeviceId) {
+        if let Some(d) = self.devices.get_mut(&device) {
+            d.2 = false;
+        }
+    }
+
+    fn device_online(&mut self, device: DeviceId) {
+        if let Some(d) = self.devices.get_mut(&device) {
+            d.2 = true;
+        }
+    }
+
+    fn threshold(&self, device: DeviceId) -> f64 {
+        self.devices.get(&device).map_or(0.0, |d| d.1)
+    }
+
+    fn thresholds(&self) -> Vec<(DeviceId, Tier, f64)> {
+        self.devices
+            .iter()
+            .filter(|(_, d)| d.2)
+            .map(|(&id, d)| (id, d.0, d.1))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_reconfigures() {
+        let mut s = StaticSched::new();
+        s.register_device(0, Tier::Low, 0.42, 95.0);
+        assert!(s.on_sr_update(0, 10.0).is_none());
+        assert!(s.on_sr_update(0, 100.0).is_none());
+        assert!(s.on_batch_observed(64).is_empty());
+        assert_eq!(s.threshold(0), 0.42);
+    }
+
+    #[test]
+    fn tracks_online_state() {
+        let mut s = StaticSched::new();
+        s.register_device(0, Tier::Mid, 0.3, 95.0);
+        s.register_device(1, Tier::Mid, 0.3, 95.0);
+        s.device_offline(1);
+        assert_eq!(s.thresholds().len(), 1);
+        s.device_online(1);
+        assert_eq!(s.thresholds().len(), 2);
+    }
+}

@@ -1,0 +1,223 @@
+//! Server model switching (paper §IV-E).
+//!
+//! The controller inspects the current threshold population C:
+//!
+//! ```text
+//! S(C) = -1  if ∃ tier k: c_i^k < c_lower        ∀ i in tier k
+//!        +1  if c_i^k > c_upper^k  ∀ k, ∀ i
+//!         0  otherwise
+//! ```
+//!
+//! S = -1 switches to the next *faster* model, S = +1 to the next
+//! *heavier* one, along a latency/accuracy-ordered ladder (InceptionV3
+//! ⇄ EfficientNetB3 in the paper's Figs 17/18). Limits come from the
+//! calibration sweep (meta.json `switching`).
+
+use std::collections::BTreeMap;
+
+use crate::models::registry::SwitchLimits;
+use crate::models::Tier;
+use crate::scheduler::DeviceId;
+
+/// Switch decision (the S(C) value).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchDecision {
+    Faster,
+    Heavier,
+    Stay,
+}
+
+pub struct SwitchController {
+    /// Models ordered fast -> heavy (index = position on the ladder).
+    ladder: Vec<String>,
+    current: usize,
+    limits: BTreeMap<Tier, SwitchLimits>,
+    /// Hysteresis: don't re-evaluate more often than this many seconds.
+    min_dwell_s: f64,
+    last_switch_s: f64,
+    /// Debounce: a non-Stay decision must repeat on consecutive
+    /// evaluations before it takes effect (filters multiplier spikes).
+    pending: Option<SwitchDecision>,
+}
+
+impl SwitchController {
+    pub fn new(
+        ladder: Vec<String>,
+        initial_model: &str,
+        limits: BTreeMap<Tier, SwitchLimits>,
+    ) -> anyhow::Result<Self> {
+        let current = ladder
+            .iter()
+            .position(|m| m == initial_model)
+            .ok_or_else(|| anyhow::anyhow!("initial model '{initial_model}' not on ladder"))?;
+        Ok(Self {
+            ladder,
+            current,
+            limits,
+            min_dwell_s: 15.0,
+            last_switch_s: f64::NEG_INFINITY,
+            pending: None,
+        })
+    }
+
+    pub fn current_model(&self) -> &str {
+        &self.ladder[self.current]
+    }
+
+    /// Pure S(C) evaluation (paper §IV-E).
+    pub fn decide(&self, thresholds: &[(DeviceId, Tier, f64)]) -> SwitchDecision {
+        if thresholds.is_empty() {
+            return SwitchDecision::Stay;
+        }
+        // Group thresholds per tier.
+        let mut by_tier: BTreeMap<Tier, Vec<f64>> = BTreeMap::new();
+        for &(_, tier, c) in thresholds {
+            by_tier.entry(tier).or_default().push(c);
+        }
+        // S = -1: some tier has ALL thresholds below its c_lower.
+        for (tier, cs) in &by_tier {
+            if let Some(lim) = self.limits.get(tier) {
+                if cs.iter().all(|&c| c < lim.c_lower) {
+                    return SwitchDecision::Faster;
+                }
+            }
+        }
+        // S = +1: EVERY device in EVERY tier is above its c_upper^k.
+        let all_above = by_tier.iter().all(|(tier, cs)| {
+            self.limits
+                .get(tier)
+                .is_some_and(|lim| cs.iter().all(|&c| c > lim.c_upper))
+        });
+        if all_above {
+            return SwitchDecision::Heavier;
+        }
+        SwitchDecision::Stay
+    }
+
+    /// Evaluate and, if warranted (and the dwell time has elapsed),
+    /// move along the ladder. Returns the new model name on a switch.
+    pub fn maybe_switch(
+        &mut self,
+        thresholds: &[(DeviceId, Tier, f64)],
+        now_s: f64,
+    ) -> Option<String> {
+        if now_s - self.last_switch_s < self.min_dwell_s {
+            return None;
+        }
+        let decision = self.decide(thresholds);
+        // Debounce: require the same verdict twice in a row.
+        if decision == SwitchDecision::Stay || self.pending != Some(decision) {
+            self.pending = (decision != SwitchDecision::Stay).then_some(decision);
+            return None;
+        }
+        self.pending = None;
+        let next = match decision {
+            SwitchDecision::Faster if self.current > 0 => self.current - 1,
+            SwitchDecision::Heavier if self.current + 1 < self.ladder.len() => self.current + 1,
+            _ => return None,
+        };
+        self.current = next;
+        self.last_switch_s = now_s;
+        Some(self.ladder[next].clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> BTreeMap<Tier, SwitchLimits> {
+        let mut m = BTreeMap::new();
+        for tier in [Tier::Low, Tier::Mid, Tier::High] {
+            m.insert(
+                tier,
+                SwitchLimits {
+                    c_lower: 0.2,
+                    c_upper: 0.6,
+                },
+            );
+        }
+        m
+    }
+
+    fn ctl(initial: &str) -> SwitchController {
+        SwitchController::new(
+            vec!["srv_inception".into(), "srv_effnetb3".into()],
+            initial,
+            limits(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn all_high_thresholds_switch_heavier() {
+        let mut c = ctl("srv_inception");
+        let ths = vec![(0, Tier::Low, 0.8), (1, Tier::Mid, 0.7)];
+        assert_eq!(c.decide(&ths), SwitchDecision::Heavier);
+        // debounce: first evaluation arms, second fires
+        assert!(c.maybe_switch(&ths, 99.0).is_none());
+        assert_eq!(c.maybe_switch(&ths, 100.0).as_deref(), Some("srv_effnetb3"));
+        assert_eq!(c.current_model(), "srv_effnetb3");
+    }
+
+    #[test]
+    fn one_starved_tier_switches_faster() {
+        let mut c = ctl("srv_effnetb3");
+        // Mid tier entirely below c_lower; others healthy.
+        let ths = vec![
+            (0, Tier::Low, 0.5),
+            (1, Tier::Mid, 0.1),
+            (2, Tier::Mid, 0.15),
+        ];
+        assert_eq!(c.decide(&ths), SwitchDecision::Faster);
+        assert!(c.maybe_switch(&ths, 49.0).is_none()); // debounce arm
+        assert_eq!(c.maybe_switch(&ths, 50.0).as_deref(), Some("srv_inception"));
+    }
+
+    #[test]
+    fn mixed_thresholds_stay() {
+        let c = ctl("srv_inception");
+        let ths = vec![(0, Tier::Low, 0.5), (1, Tier::Mid, 0.7)];
+        assert_eq!(c.decide(&ths), SwitchDecision::Stay);
+    }
+
+    #[test]
+    fn partial_tier_below_lower_is_not_enough() {
+        let c = ctl("srv_effnetb3");
+        // Only one of the two mid devices is starved -> stay.
+        let ths = vec![(1, Tier::Mid, 0.1), (2, Tier::Mid, 0.5)];
+        assert_eq!(c.decide(&ths), SwitchDecision::Stay);
+    }
+
+    #[test]
+    fn ladder_ends_do_not_wrap() {
+        let mut c = ctl("srv_inception");
+        let starved = vec![(0, Tier::Low, 0.05)];
+        assert_eq!(c.decide(&starved), SwitchDecision::Faster);
+        c.maybe_switch(&starved, 9.0);
+        assert!(c.maybe_switch(&starved, 10.0).is_none()); // already fastest
+        let mut c = ctl("srv_effnetb3");
+        let rich = vec![(0, Tier::Low, 0.9)];
+        c.maybe_switch(&rich, 9.0);
+        assert!(c.maybe_switch(&rich, 10.0).is_none()); // already heaviest
+    }
+
+    #[test]
+    fn dwell_time_hysteresis() {
+        let mut c = ctl("srv_inception");
+        let rich = vec![(0, Tier::Low, 0.9)];
+        c.maybe_switch(&rich, -1.0); // arm
+        assert!(c.maybe_switch(&rich, 0.0).is_some());
+        // starving immediately after: ignored until dwell elapses
+        let starved = vec![(0, Tier::Low, 0.05)];
+        assert!(c.maybe_switch(&starved, 2.0).is_none());
+        assert!(c.maybe_switch(&starved, 16.0).is_none()); // re-arm
+        assert!(c.maybe_switch(&starved, 17.0).is_some());
+    }
+
+    #[test]
+    fn empty_population_stays() {
+        let c = ctl("srv_inception");
+        assert_eq!(c.decide(&[]), SwitchDecision::Stay);
+    }
+}

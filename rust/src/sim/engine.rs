@@ -1,0 +1,483 @@
+//! The discrete-event simulation engine.
+//!
+//! Reproduces the paper's evaluation methodology (§V-A: latencies
+//! measured once, experiments driven from those tables) with model
+//! *outputs* supplied by an [`OutputProvider`] — either real PJRT
+//! execution of the AOT artifacts or the PJRT-built output cache.
+//!
+//! Timing semantics (DESIGN.md §6):
+//! * devices process their sample streams continuously; local inference
+//!   takes `t_inf` (Table I) with small seeded jitter;
+//! * the forwarding decision (Eq. 3) is instant — BvSB comes out of the
+//!   fused kernel with the softmax;
+//! * forwarded samples pay a comm hop, wait in the server queue, get
+//!   dynamically batched (largest grid batch <= queue length, capped
+//!   per model), pay the batch latency, and a return hop;
+//! * each device throttles at `max_outstanding` in-flight forwards
+//!   (AMQP prefetch): past that the stream stalls — this is what makes
+//!   congestion hurt throughput, not just latency (Fig 6/9);
+//! * every `window_s` a device reports its SR over the window (§IV-B);
+//!   the scheduler reacts per its policy; the switch controller (§IV-E)
+//!   is consulted after each SR update.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::config::latency::{device_latency_ms, ServerLatencyModel};
+use crate::config::SystemConfig;
+use crate::metrics::{RunMetrics, SampleRecord, TracePoint};
+use crate::models::outputs::OutputProvider;
+use crate::models::Tier;
+use crate::scheduler::{Scheduler, SwitchController, ThresholdUpdate};
+use crate::sim::event::{Event, EventQueue};
+use crate::util::prng::Rng;
+
+/// Per-device configuration handed to the engine.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub tier: Tier,
+    /// Dataset indices this device will stream through.
+    pub stream: Vec<usize>,
+    pub initial_threshold: f64,
+    pub sr_target: f64,
+    pub slo_ms: f64,
+    /// Sample position at which the device drops offline, if any.
+    pub offline_at: Option<usize>,
+    /// How long it stays offline (seconds).
+    pub offline_duration_s: f64,
+}
+
+struct DeviceState {
+    spec: DeviceSpec,
+    model: &'static str,
+    t_inf_s: f64,
+    threshold: f64,
+    pos: usize,
+    outstanding: usize,
+    stalled: bool,
+    online: bool,
+    // SR window accounting (§IV-B)
+    window_completed: usize,
+    window_satisfied: usize,
+    // trace-interval accounting
+    trace_completed: usize,
+    trace_satisfied: usize,
+    trace_correct: usize,
+    jitter: Rng,
+}
+
+impl DeviceState {
+    fn done(&self) -> bool {
+        self.pos >= self.spec.stream.len()
+    }
+
+    fn fully_drained(&self) -> bool {
+        self.done() && self.outstanding == 0
+    }
+
+    fn next_inference_s(&mut self) -> f64 {
+        // ±3% gaussian jitter breaks lockstep artifacts while keeping
+        // the Table I mean.
+        let j = 1.0 + 0.03 * self.jitter.next_gaussian().clamp(-3.0, 3.0);
+        self.t_inf_s * j.max(0.5)
+    }
+}
+
+struct Request {
+    device: usize,
+    sample: usize,
+    start_s: f64,
+    correct: Option<bool>,
+}
+
+/// Latency model resolver so the engine can follow model switches.
+pub type LatencyFn<'a> = &'a dyn Fn(&str) -> ServerLatencyModel;
+
+pub struct SimEngine<'a> {
+    cfg: &'a SystemConfig,
+    scheduler: &'a mut dyn Scheduler,
+    switcher: Option<&'a mut SwitchController>,
+    provider: &'a mut dyn OutputProvider,
+    latency_of: LatencyFn<'a>,
+
+    devices: Vec<DeviceState>,
+    requests: Vec<Request>,
+    queue: VecDeque<usize>,
+    server_busy: bool,
+    server_model: String,
+    in_flight_batch: Vec<usize>,
+
+    events: EventQueue,
+    metrics: RunMetrics,
+    next_trace_s: f64,
+    trace_interval_s: f64,
+}
+
+impl<'a> SimEngine<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cfg: &'a SystemConfig,
+        scheduler: &'a mut dyn Scheduler,
+        switcher: Option<&'a mut SwitchController>,
+        provider: &'a mut dyn OutputProvider,
+        latency_of: LatencyFn<'a>,
+        server_model: &str,
+        specs: Vec<DeviceSpec>,
+        seed: u64,
+    ) -> Self {
+        let mut devices = Vec::with_capacity(specs.len());
+        for (id, spec) in specs.into_iter().enumerate() {
+            let tier = spec.tier;
+            let threshold =
+                scheduler.register_device(id, tier, spec.initial_threshold, spec.sr_target);
+            devices.push(DeviceState {
+                model: tier.device_model(),
+                t_inf_s: device_latency_ms(tier) / 1000.0,
+                threshold,
+                pos: 0,
+                outstanding: 0,
+                stalled: false,
+                online: true,
+                window_completed: 0,
+                window_satisfied: 0,
+                trace_completed: 0,
+                trace_satisfied: 0,
+                trace_correct: 0,
+                jitter: Rng::stream(seed ^ 0x5151_5151, id as u64),
+                spec,
+            });
+        }
+        Self {
+            cfg,
+            scheduler,
+            switcher,
+            provider,
+            latency_of,
+            devices,
+            requests: Vec::new(),
+            queue: VecDeque::new(),
+            server_busy: false,
+            server_model: server_model.to_string(),
+            in_flight_batch: Vec::new(),
+            events: EventQueue::new(),
+            metrics: RunMetrics::default(),
+            next_trace_s: 0.0,
+            trace_interval_s: 1.0,
+        }
+    }
+
+    fn comm_s(&self) -> f64 {
+        self.cfg.comm_ms / 1000.0
+    }
+
+    /// Run to completion; returns the collected metrics.
+    pub fn run(mut self) -> Result<RunMetrics> {
+        // Stagger device starts uniformly over one inference period.
+        for id in 0..self.devices.len() {
+            let d = &mut self.devices[id];
+            if d.spec.stream.is_empty() {
+                continue;
+            }
+            let jitter = d.jitter.next_f64();
+            let first = jitter * d.t_inf_s + d.next_inference_s();
+            self.events.push(first, Event::DeviceInferDone { device: id });
+            self.events
+                .push(self.cfg.window_s * (1.0 + jitter), Event::SrWindow { device: id });
+        }
+        while let Some((t, ev)) = self.events.pop() {
+            if t >= self.next_trace_s {
+                self.record_trace(t);
+                self.next_trace_s = t + self.trace_interval_s;
+            }
+            match ev {
+                Event::DeviceInferDone { device } => self.on_infer_done(t, device),
+                Event::ServerArrival { request } => self.on_server_arrival(t, request),
+                Event::ServerBatchDone => self.on_batch_done(t),
+                Event::ResultArrival { device, request } => self.on_result(t, device, request),
+                Event::SrWindow { device } => self.on_sr_window(t, device),
+                Event::DeviceResume { device } => self.on_resume(t, device),
+            }
+        }
+        self.metrics.real_compute_ms = self.provider.real_compute_ms();
+        Ok(self.metrics)
+    }
+
+    fn complete_sample(
+        &mut self,
+        t: f64,
+        device: usize,
+        start_s: f64,
+        forwarded: bool,
+        correct: bool,
+    ) {
+        let d = &mut self.devices[device];
+        let rec = SampleRecord {
+            device,
+            tier: d.spec.tier,
+            start_s,
+            done_s: t,
+            forwarded,
+            correct,
+            slo_ms: d.spec.slo_ms,
+        };
+        d.window_completed += 1;
+        d.trace_completed += 1;
+        if rec.slo_satisfied() {
+            d.window_satisfied += 1;
+            d.trace_satisfied += 1;
+        }
+        if correct {
+            d.trace_correct += 1;
+        }
+        self.metrics.record(rec);
+    }
+
+    fn on_infer_done(&mut self, t: f64, device: usize) {
+        let d = &mut self.devices[device];
+        if !d.online || d.done() {
+            return;
+        }
+        let sample = d.spec.stream[d.pos];
+        d.pos += 1;
+        let start_s = t - d.t_inf_s; // approximate: jitter folded in
+        let model = d.model;
+        let threshold = d.threshold;
+        let (bvsb, correct) = self.provider.device_output(model, sample);
+        if (bvsb as f64) >= threshold {
+            // Confident: the local prediction stands (Eq. 3, d = 0).
+            self.complete_sample(t, device, start_s, false, correct);
+        } else {
+            // Forward to the server (d = 1).
+            let req = Request {
+                device,
+                sample,
+                start_s,
+                correct: None,
+            };
+            let rid = self.requests.len();
+            self.requests.push(req);
+            self.devices[device].outstanding += 1;
+            self.events
+                .push(t + self.comm_s(), Event::ServerArrival { request: rid });
+        }
+        self.after_sample(t, device);
+    }
+
+    /// Post-sample bookkeeping: offline transitions, next inference.
+    fn after_sample(&mut self, t: f64, device: usize) {
+        let d = &mut self.devices[device];
+        if let Some(off_at) = d.spec.offline_at {
+            if d.pos == off_at && !d.done() {
+                d.online = false;
+                d.stalled = false;
+                let dur = d.spec.offline_duration_s;
+                self.scheduler.device_offline(device);
+                self.events.push(t + dur, Event::DeviceResume { device });
+                return;
+            }
+        }
+        if d.done() {
+            return;
+        }
+        if d.outstanding < self.cfg.max_outstanding {
+            let dt = d.next_inference_s();
+            self.events.push(t + dt, Event::DeviceInferDone { device });
+        } else {
+            d.stalled = true; // resume on next result arrival
+        }
+    }
+
+    fn on_server_arrival(&mut self, t: f64, request: usize) {
+        self.queue.push_back(request);
+        if !self.server_busy {
+            self.start_batch(t);
+        }
+    }
+
+    /// Dynamic batching (§V-A): largest grid batch that the current
+    /// queue can fill, capped by the model's max useful batch.
+    fn pick_batch_size(&self) -> usize {
+        let model = (self.latency_of)(&self.server_model);
+        let qlen = self.queue.len();
+        self.cfg
+            .batch_grid
+            .iter()
+            .filter(|&&b| b <= qlen && b <= model.max_batch)
+            .copied()
+            .max()
+            .unwrap_or(1)
+            .min(qlen.max(1))
+    }
+
+    fn start_batch(&mut self, t: f64) {
+        if self.queue.is_empty() {
+            return;
+        }
+        // The load signal MultiTASC monitors: the batch it WOULD form if
+        // the grid were unbounded (i.e. the backlog), so congestion is
+        // visible even once the formed batch saturates at the grid cap.
+        let load_signal = self.queue.len();
+        let b = self.pick_batch_size();
+        self.in_flight_batch.clear();
+        for _ in 0..b {
+            if let Some(r) = self.queue.pop_front() {
+                self.in_flight_batch.push(r);
+            }
+        }
+        self.server_busy = true;
+        self.metrics.batch_sizes.push(self.in_flight_batch.len() as f64);
+        *self
+            .metrics
+            .server_model_batches
+            .entry(self.server_model.clone())
+            .or_insert(0) += 1;
+        // MultiTASC's congestion signal (batch-size proxy, §I).
+        let updates = self
+            .scheduler
+            .on_batch_observed(load_signal.max(self.in_flight_batch.len()));
+        self.apply_updates(&updates);
+        let lat = (self.latency_of)(&self.server_model);
+        let dur_s = lat.batch_ms(self.in_flight_batch.len()) / 1000.0;
+        self.events.push(t + dur_s, Event::ServerBatchDone);
+    }
+
+    fn on_batch_done(&mut self, t: f64) {
+        let batch = std::mem::take(&mut self.in_flight_batch);
+        let samples: Vec<usize> = batch.iter().map(|&r| self.requests[r].sample).collect();
+        let correct = self.provider.server_outputs(&self.server_model, &samples);
+        let comm = self.comm_s();
+        for (&rid, ok) in batch.iter().zip(correct) {
+            self.requests[rid].correct = Some(ok);
+            let device = self.requests[rid].device;
+            self.events
+                .push(t + comm, Event::ResultArrival { device, request: rid });
+        }
+        self.server_busy = false;
+        if !self.queue.is_empty() {
+            self.start_batch(t);
+        }
+    }
+
+    fn on_result(&mut self, t: f64, device: usize, request: usize) {
+        let (start_s, correct) = {
+            let r = &self.requests[request];
+            (r.start_s, r.correct.expect("result without correctness"))
+        };
+        self.complete_sample(t, device, start_s, true, correct);
+        let d = &mut self.devices[device];
+        d.outstanding = d.outstanding.saturating_sub(1);
+        if d.stalled && d.online && !d.done() && d.outstanding < self.cfg.max_outstanding {
+            d.stalled = false;
+            let dt = d.next_inference_s();
+            self.events.push(t + dt, Event::DeviceInferDone { device });
+        }
+    }
+
+    fn on_sr_window(&mut self, t: f64, device: usize) {
+        let (sr, should_update) = {
+            let d = &mut self.devices[device];
+            if !d.online {
+                (0.0, false)
+            } else if d.window_completed > 0 {
+                let sr = 100.0 * d.window_satisfied as f64 / d.window_completed as f64;
+                d.window_completed = 0;
+                d.window_satisfied = 0;
+                (sr, true)
+            } else if d.outstanding > 0 {
+                // Nothing completed but work is stuck at the server:
+                // report full SLO violation.
+                (0.0, true)
+            } else {
+                (0.0, false)
+            }
+        };
+        if should_update {
+            if let Some(upd) = self.scheduler.on_sr_update(device, sr) {
+                self.apply_updates(&[upd]);
+            }
+            // §IV-E: consult the switch controller on fresh telemetry.
+            if let Some(ctl) = self.switcher.as_deref_mut() {
+                let ths = self.scheduler.thresholds();
+                if let Some(new_model) = ctl.maybe_switch(&ths, t) {
+                    log::debug!("t={t:.1}s: server model switch -> {new_model}");
+                    self.server_model = new_model;
+                }
+            }
+        }
+        // Keep the window ticking while the device still has work.
+        let d = &self.devices[device];
+        if !d.fully_drained() {
+            self.events
+                .push(t + self.cfg.window_s, Event::SrWindow { device });
+        }
+    }
+
+    fn on_resume(&mut self, t: f64, device: usize) {
+        let d = &mut self.devices[device];
+        d.online = true;
+        self.scheduler.device_online(device);
+        if !d.done() {
+            let dt = d.next_inference_s();
+            if d.outstanding < self.cfg.max_outstanding {
+                self.events.push(t + dt, Event::DeviceInferDone { device });
+            } else {
+                d.stalled = true;
+            }
+        }
+    }
+
+    fn apply_updates(&mut self, updates: &[ThresholdUpdate]) {
+        for u in updates {
+            if let Some(d) = self.devices.get_mut(u.device) {
+                d.threshold = u.threshold;
+            }
+        }
+    }
+
+    fn record_trace(&mut self, t: f64) {
+        let mut active = 0;
+        let mut thresh_sum = 0.0;
+        let (mut comp, mut sat, mut corr) = (0usize, 0usize, 0usize);
+        for d in self.devices.iter_mut() {
+            if d.online && !d.done() {
+                active += 1;
+                thresh_sum += d.threshold;
+            }
+            comp += d.trace_completed;
+            sat += d.trace_satisfied;
+            corr += d.trace_correct;
+            d.trace_completed = 0;
+            d.trace_satisfied = 0;
+            d.trace_correct = 0;
+        }
+        let (running_sr, running_acc) = if comp > 0 {
+            (
+                100.0 * sat as f64 / comp as f64,
+                corr as f64 / comp as f64,
+            )
+        } else {
+            // carry previous values forward if idle
+            self.metrics
+                .trace
+                .last()
+                .map(|p| (p.running_sr, p.running_acc))
+                .unwrap_or((100.0, 0.0))
+        };
+        let model_idx = usize::from(self.server_model == "srv_effnetb3")
+            + 2 * usize::from(self.server_model == "srv_deit");
+        self.metrics.trace.push(TracePoint {
+            t_s: t,
+            active_devices: active,
+            mean_threshold: if active > 0 {
+                thresh_sum / active as f64
+            } else {
+                0.0
+            },
+            running_sr,
+            running_acc,
+            queue_len: self.queue.len(),
+            server_model_idx: model_idx,
+        });
+    }
+}

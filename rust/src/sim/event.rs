@@ -1,0 +1,131 @@
+//! Event queue for the discrete-event engine: a binary heap over
+//! (virtual time, sequence number) so simultaneous events pop in
+//! deterministic FIFO order.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulation events.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Device finished local inference of its stream position.
+    DeviceInferDone { device: usize },
+    /// A forwarded request reached the server queue.
+    ServerArrival { request: usize },
+    /// The server finished the batch started earlier.
+    ServerBatchDone,
+    /// A server result reached its device.
+    ResultArrival { device: usize, request: usize },
+    /// A device's SR window closed (§IV-B telemetry tick).
+    SrWindow { device: usize },
+    /// Intermittent participation: device returns online.
+    DeviceResume { device: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Scheduled {
+    t: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap behavior; tie-break on seq for FIFO.
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-heap event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: f64, event: Event) {
+        debug_assert!(t.is_finite(), "non-finite event time");
+        self.heap.push(Scheduled {
+            t,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|s| (s.t, s.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::ServerBatchDone);
+        q.push(1.0, Event::DeviceInferDone { device: 0 });
+        q.push(2.0, Event::SrWindow { device: 1 });
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.pop().unwrap().0, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::DeviceInferDone { device: 10 });
+        q.push(1.0, Event::DeviceInferDone { device: 20 });
+        q.push(1.0, Event::DeviceInferDone { device: 30 });
+        let order: Vec<usize> = (0..3)
+            .map(|_| match q.pop().unwrap().1 {
+                Event::DeviceInferDone { device } => device,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(0.5, Event::ServerBatchDone);
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,144 @@
+//! Scenario runner: expands a [`Scenario`] into device specs, wires the
+//! scheduler / switch controller / output provider, runs the engine.
+
+use anyhow::{Context, Result};
+
+use crate::config::latency::server_latency_model;
+use crate::config::scenario::Scenario;
+use crate::config::SystemConfig;
+use crate::data::{device_stream, Dataset};
+use crate::metrics::RunMetrics;
+use crate::models::outputs::OutputProvider;
+use crate::models::{Registry, Tier};
+use crate::scheduler::{self, SwitchController};
+use crate::sim::engine::{DeviceSpec, SimEngine};
+use crate::util::prng::Rng;
+
+/// The §IV-E switching ladder (fast -> heavy), as in Figs 17/18.
+pub const SWITCH_LADDER: [&str; 2] = ["srv_inception", "srv_effnetb3"];
+
+/// Optional per-run overrides that don't belong in the Scenario.
+#[derive(Clone, Debug, Default)]
+pub struct Overrides {
+    /// Force every device's initial threshold (Fig 20 uses 0.35).
+    pub initial_threshold: Option<f64>,
+}
+
+pub fn run_scenario(
+    scn: &Scenario,
+    cfg: &SystemConfig,
+    registry: &Registry,
+    ds: &Dataset,
+    provider: &mut dyn OutputProvider,
+) -> Result<RunMetrics> {
+    run_scenario_with(scn, cfg, registry, ds, provider, &Overrides::default())
+}
+
+pub fn run_scenario_with(
+    scn: &Scenario,
+    cfg: &SystemConfig,
+    registry: &Registry,
+    ds: &Dataset,
+    provider: &mut dyn OutputProvider,
+    ovr: &Overrides,
+) -> Result<RunMetrics> {
+    // --- device population -------------------------------------------------
+    let mut tiers: Vec<Tier> = Vec::new();
+    for &(tier, count) in &scn.devices {
+        tiers.extend(std::iter::repeat(tier).take(count));
+    }
+    let mut rng = Rng::new(scn.seed.wrapping_mul(0xC0FF_EE11) ^ 0xD15E_A5E);
+    let mut specs = Vec::with_capacity(tiers.len());
+    for (id, &tier) in tiers.iter().enumerate() {
+        let stream = device_stream(ds, scn.seed, id, scn.samples_per_device);
+        let initial = match ovr.initial_threshold {
+            Some(c) => c,
+            None => {
+                registry
+                    .pair(tier.device_model(), &scn.server_model)
+                    .with_context(|| {
+                        format!(
+                            "no calibration for {}:{}",
+                            tier.device_model(),
+                            scn.server_model
+                        )
+                    })?
+                    .static_threshold
+            }
+        };
+        // Intermittent participation (Fig 19/20): each device drops
+        // with probability p at a normally-distributed stream position
+        // for an alpha-distributed duration.
+        let (offline_at, offline_duration_s) = match &scn.intermittent {
+            Some(im) if rng.next_bool(im.offline_prob) => {
+                let n = stream.len() as f64;
+                let onset = rng
+                    .next_normal(im.onset_mean_frac * n, im.onset_sd_frac * n)
+                    .clamp(1.0, (n - 1.0).max(1.0)) as usize;
+                let dur = rng.next_alpha(im.duration_alpha, im.duration_scale_s);
+                (Some(onset.max(1)), dur)
+            }
+            _ => (None, 0.0),
+        };
+        specs.push(DeviceSpec {
+            tier,
+            stream,
+            initial_threshold: initial,
+            sr_target: cfg.sr_target,
+            slo_ms: scn.slo_ms,
+            offline_at,
+            offline_duration_s,
+        });
+    }
+
+    // --- scheduler + switching --------------------------------------------
+    let server_lat = server_latency_model(&scn.server_model);
+    let mut sched = scheduler::build(
+        scn.scheduler,
+        cfg,
+        server_lat,
+        scn.slo_ms,
+        &cfg.batch_grid,
+    );
+    let mut switcher: Option<SwitchController> = if scn.model_switching {
+        let mut limits = std::collections::BTreeMap::new();
+        for (tier_name, lims) in &registry.switching {
+            limits.insert(Tier::parse(tier_name)?, *lims);
+        }
+        Some(SwitchController::new(
+            SWITCH_LADDER.iter().map(|s| s.to_string()).collect(),
+            &scn.server_model,
+            limits,
+        )?)
+    } else {
+        None
+    };
+
+    // --- run ----------------------------------------------------------------
+    let latency_of = |model: &str| server_latency_model(model);
+    let engine = SimEngine::new(
+        cfg,
+        sched.as_mut(),
+        switcher.as_mut(),
+        provider,
+        &latency_of,
+        &scn.server_model,
+        specs,
+        scn.seed,
+    );
+    let metrics = engine.run()?;
+
+    // Every sample must have been accounted for exactly once.
+    let expected: usize = scn
+        .devices
+        .iter()
+        .map(|&(_, n)| n * scn.samples_per_device.min(ds.eval_pool().len()))
+        .sum();
+    anyhow::ensure!(
+        metrics.overall.samples == expected,
+        "sample conservation violated: {} != {}",
+        metrics.overall.samples,
+        expected
+    );
+    Ok(metrics)
+}

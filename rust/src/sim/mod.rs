@@ -1,0 +1,9 @@
+//! Discrete-event simulation of the multi-device cascade (paper §V
+//! methodology: calibrated latency tables + real model outputs).
+
+pub mod engine;
+pub mod event;
+pub mod experiment;
+
+pub use engine::{DeviceSpec, SimEngine};
+pub use experiment::{run_scenario, run_scenario_with, Overrides};

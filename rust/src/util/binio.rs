@@ -1,0 +1,166 @@
+//! Little-endian binary IO substrate for the artifact formats
+//! (`dataset.bin` from python/compile/data.py, and the rust-side model
+//! output caches).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub struct BinReader<R: Read> {
+    inner: R,
+}
+
+impl BinReader<BufReader<File>> {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        Ok(Self {
+            inner: BufReader::new(file),
+        })
+    }
+}
+
+impl<R: Read> BinReader<R> {
+    pub fn new(inner: R) -> Self {
+        Self { inner }
+    }
+
+    pub fn expect_magic(&mut self, magic: &[u8; 8]) -> Result<()> {
+        let mut buf = [0u8; 8];
+        self.inner.read_exact(&mut buf)?;
+        if &buf != magic {
+            bail!(
+                "bad magic: expected {:?}, got {:?}",
+                String::from_utf8_lossy(magic),
+                String::from_utf8_lossy(&buf)
+            );
+        }
+        Ok(())
+    }
+
+    pub fn read_u32(&mut self) -> Result<u32> {
+        let mut buf = [0u8; 4];
+        self.inner.read_exact(&mut buf)?;
+        Ok(u32::from_le_bytes(buf))
+    }
+
+    pub fn read_f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.inner.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn read_i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.inner.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn read_u8_vec(&mut self, n: usize) -> Result<Vec<u8>> {
+        let mut bytes = vec![0u8; n];
+        self.inner.read_exact(&mut bytes)?;
+        Ok(bytes)
+    }
+}
+
+pub struct BinWriter<W: Write> {
+    inner: W,
+}
+
+impl BinWriter<BufWriter<File>> {
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        Ok(Self {
+            inner: BufWriter::new(file),
+        })
+    }
+}
+
+impl<W: Write> BinWriter<W> {
+    pub fn new(inner: W) -> Self {
+        Self { inner }
+    }
+
+    pub fn write_magic(&mut self, magic: &[u8; 8]) -> Result<()> {
+        self.inner.write_all(magic)?;
+        Ok(())
+    }
+
+    pub fn write_u32(&mut self, x: u32) -> Result<()> {
+        self.inner.write_all(&x.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_f32_slice(&mut self, xs: &[f32]) -> Result<()> {
+        for &x in xs {
+            self.inner.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn write_i32_slice(&mut self, xs: &[i32]) -> Result<()> {
+        for &x in xs {
+            self.inner.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn write_u8_slice(&mut self, xs: &[u8]) -> Result<()> {
+        self.inner.write_all(xs)?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.inner.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_vectors() {
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::new(&mut buf);
+            w.write_magic(b"TESTMAG1").unwrap();
+            w.write_u32(3).unwrap();
+            w.write_f32_slice(&[1.5, -2.25, 3.0]).unwrap();
+            w.write_i32_slice(&[-7, 0, 9]).unwrap();
+            w.write_u8_slice(&[1, 0, 255]).unwrap();
+        }
+        let mut r = BinReader::new(buf.as_slice());
+        r.expect_magic(b"TESTMAG1").unwrap();
+        assert_eq!(r.read_u32().unwrap(), 3);
+        assert_eq!(r.read_f32_vec(3).unwrap(), vec![1.5, -2.25, 3.0]);
+        assert_eq!(r.read_i32_vec(3).unwrap(), vec![-7, 0, 9]);
+        assert_eq!(r.read_u8_vec(3).unwrap(), vec![1, 0, 255]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        BinWriter::new(&mut buf).write_magic(b"WRONGMAG").unwrap();
+        let mut r = BinReader::new(buf.as_slice());
+        assert!(r.expect_magic(b"TESTMAG1").is_err());
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let buf = vec![0u8; 3];
+        let mut r = BinReader::new(buf.as_slice());
+        assert!(r.read_u32().is_err());
+    }
+}

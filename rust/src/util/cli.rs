@@ -1,0 +1,242 @@
+//! Declarative CLI flag parser substrate (no `clap` in this offline
+//! environment). Supports `--flag value`, `--flag=value`, boolean
+//! switches, defaults, and auto-generated help.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_switch: bool,
+}
+
+/// A small declarative argument parser.
+///
+/// ```no_run
+/// # use multitascpp::util::cli::Args;
+/// let mut args = Args::new("demo", "demo tool");
+/// args.flag("devices", "number of devices", Some("10"));
+/// args.switch("verbose", "chatty output");
+/// let m = args.parse(&["--devices".into(), "30".into(), "--verbose".into()]).unwrap();
+/// assert_eq!(m.get_usize("devices").unwrap(), 30);
+/// assert!(m.get_bool("verbose"));
+/// ```
+pub struct Args {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    allow_positional: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+            allow_positional: false,
+        }
+    }
+
+    pub fn allow_positional(&mut self) -> &mut Self {
+        self.allow_positional = true;
+        self
+    }
+
+    /// A `--name <value>` flag, optionally with a default.
+    pub fn flag(&mut self, name: &str, help: &str, default: Option<&str>) -> &mut Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// A boolean `--name` switch (default false).
+    pub fn switch(&mut self, name: &str, help: &str) -> &mut Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_switch: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nflags:\n", self.program, self.about);
+        for f in &self.flags {
+            let kind = if f.is_switch { "" } else { " <value>" };
+            let dft = f
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{}{kind}\t{}{dft}\n", f.name, f.help));
+        }
+        out
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Matches> {
+        let mut m = Matches::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                m.values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n{}", self.usage()))?;
+                if spec.is_switch {
+                    if inline_val.is_some() {
+                        bail!("switch --{name} takes no value");
+                    }
+                    m.switches.insert(name.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
+                                .clone()
+                        }
+                    };
+                    m.values.insert(name.to_string(), val);
+                }
+            } else if self.allow_positional {
+                m.positional.push(arg.clone());
+            } else {
+                bail!("unexpected positional argument '{arg}'\n{}", self.usage());
+            }
+            i += 1;
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get_str(name)?.parse()?)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get_str(name)?.parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get_str(name)?.parse()?)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list, e.g. `--slos 100,150,200`.
+    pub fn get_list_f64(&self, name: &str) -> Result<Vec<f64>> {
+        self.get_str(name)?
+            .split(',')
+            .map(|s| s.trim().parse::<f64>().map_err(Into::into))
+            .collect()
+    }
+
+    pub fn get_list_usize(&self, name: &str) -> Result<Vec<usize>> {
+        self.get_str(name)?
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().map_err(Into::into))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn demo() -> Args {
+        let mut a = Args::new("t", "test");
+        a.flag("devices", "n devices", Some("10"))
+            .flag("slos", "slo list ms", Some("100,150,200"))
+            .switch("verbose", "chatty");
+        a
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = demo().parse(&[]).unwrap();
+        assert_eq!(m.get_usize("devices").unwrap(), 10);
+        assert!(!m.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let m = demo().parse(&argv(&["--devices", "30"])).unwrap();
+        assert_eq!(m.get_usize("devices").unwrap(), 30);
+        let m = demo().parse(&argv(&["--devices=40"])).unwrap();
+        assert_eq!(m.get_usize("devices").unwrap(), 40);
+    }
+
+    #[test]
+    fn switches_and_lists() {
+        let m = demo().parse(&argv(&["--verbose", "--slos", "50,75"])).unwrap();
+        assert!(m.get_bool("verbose"));
+        assert_eq!(m.get_list_f64("slos").unwrap(), vec![50.0, 75.0]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(demo().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(demo().parse(&argv(&["--devices"])).is_err());
+    }
+
+    #[test]
+    fn positional_rules() {
+        assert!(demo().parse(&argv(&["stray"])).is_err());
+        let mut a = demo();
+        a.allow_positional();
+        let m = a.parse(&argv(&["fig4"])).unwrap();
+        assert_eq!(m.positional, vec!["fig4"]);
+    }
+}

@@ -1,0 +1,58 @@
+//! Tiny leveled logger backing the `log` crate facade.
+//!
+//! `MTPP_LOG=debug|info|warn|error` controls verbosity (default info).
+
+use std::io::Write;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let tag = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(err, "[{tag}] {}", record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("MTPP_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    // set_logger errors if called twice; that's fine.
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for this offline environment
+//! (no serde / clap / rand / criterion — see DESIGN.md §4).
+
+pub mod binio;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,210 @@
+//! Statistics substrate shared by metrics and the bench harness.
+
+/// Online mean/variance (Welford) plus min/max tracking.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile over a sample set (exact, nearest-rank with linear
+/// interpolation). Used for latency p50/p95/p99 and bench reporting.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "percentile q out of range: {q}");
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Collects samples, then reports summary stats.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.total_cmp(b));
+            self.sorted = true;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        self.ensure_sorted();
+        percentile(&self.xs, q)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.last().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Mean / min / max across repeated runs (the paper's 3-seed protocol).
+#[derive(Clone, Debug)]
+pub struct SeedSummary {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn seed_summary(values: &[f64]) -> SeedSummary {
+    assert!(!values.is_empty(), "seed_summary of empty slice");
+    let mean = values.iter().sum::<f64>() / values.len() as f64;
+    let min = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    SeedSummary { mean, min, max }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+        assert_eq!(r.count(), 8);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_summary() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.mean() - 50.5).abs() < 1e-12);
+        assert!((s.percentile(0.95) - 95.05).abs() < 0.2);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn seed_summary_basic() {
+        let s = seed_summary(&[0.9, 0.95, 1.0]);
+        assert!((s.mean - 0.95).abs() < 1e-12);
+        assert_eq!(s.min, 0.9);
+        assert_eq!(s.max, 1.0);
+    }
+
+    #[test]
+    fn empty_is_nan_not_panic() {
+        assert!(Running::new().mean().is_nan());
+        assert!(Samples::new().mean().is_nan());
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+}

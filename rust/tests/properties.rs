@@ -1,0 +1,241 @@
+//! Property-based tests over coordinator invariants (hand-rolled
+//! generators — proptest is unavailable offline). Each property runs
+//! against hundreds of randomized cases drawn from a seeded generator,
+//! so failures are reproducible.
+
+use multitascpp::cascade::DecisionFn;
+use multitascpp::config::latency::{server_latency_model, ServerLatencyModel};
+use multitascpp::models::Tier;
+use multitascpp::scheduler::{MultiTasc, MultiTascPP, Scheduler, StaticSched};
+use multitascpp::util::json::Json;
+use multitascpp::util::prng::Rng;
+use multitascpp::util::stats::percentile;
+
+const CASES: usize = 300;
+
+/// Property: the Eq.4 + Alg.1 update always yields a threshold in
+/// [0, 1] and a multiplier >= 1, for any gain / SR / population size.
+#[test]
+fn prop_update_rule_stays_in_bounds() {
+    let mut rng = Rng::new(0xA11CE);
+    for _ in 0..CASES {
+        let gain = rng.next_range_f64(1e-4, 0.05);
+        let threshold = rng.next_f64();
+        let multiplier = rng.next_range_f64(1.0, 4.0);
+        let sr_target = rng.next_range_f64(50.0, 100.0);
+        let sr_update = rng.next_range_f64(0.0, 100.0);
+        let n = 1 + rng.next_below(200) as usize;
+        let (c, m) = MultiTascPP::update_rule(gain, threshold, multiplier, sr_target, sr_update, n);
+        assert!((0.0..=1.0).contains(&c), "threshold {c} out of bounds");
+        assert!(m >= 1.0 - 1e-12, "multiplier {m} < 1");
+    }
+}
+
+/// Property: the update moves the threshold in the correct direction —
+/// up when SR exceeds its target, down when below, fixed at target.
+#[test]
+fn prop_update_rule_direction() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..CASES {
+        let gain = rng.next_range_f64(1e-4, 0.02);
+        let c0 = rng.next_range_f64(0.05, 0.95);
+        let target = rng.next_range_f64(60.0, 99.0);
+        let (up, _) = MultiTascPP::update_rule(gain, c0, 1.0, target, target + 1.0, 10);
+        let (down, _) = MultiTascPP::update_rule(gain, c0, 1.0, target, target - 1.0, 10);
+        let (same, _) = MultiTascPP::update_rule(gain, c0, 1.0, target, target, 10);
+        assert!(up >= c0, "SR above target must not lower threshold");
+        assert!(down <= c0, "SR below target must not raise threshold");
+        assert!((same - c0).abs() < 1e-12, "at target must be fixed point");
+    }
+}
+
+/// Property: a full scheduler never reports a threshold outside [0,1]
+/// under arbitrary interleavings of SR updates and on/offline events.
+#[test]
+fn prop_scheduler_fuzz_interleaving() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..60 {
+        let mut s = MultiTascPP::new(0.005);
+        let n = 1 + rng.next_below(20) as usize;
+        for d in 0..n {
+            s.register_device(d, Tier::Low, rng.next_f64(), 95.0);
+        }
+        for _ in 0..400 {
+            let d = rng.next_below(n as u64) as usize;
+            match rng.next_below(4) {
+                0 => {
+                    s.on_sr_update(d, rng.next_range_f64(0.0, 100.0));
+                }
+                1 => s.device_offline(d),
+                2 => s.device_online(d),
+                _ => {
+                    s.on_batch_observed(1 + rng.next_below(64) as usize);
+                }
+            }
+            let c = s.threshold(d);
+            assert!((0.0..=1.0).contains(&c), "case {case}: threshold {c}");
+        }
+        // thresholds() only reports online devices
+        for (_, _, c) in s.thresholds() {
+            assert!((0.0..=1.0).contains(&c));
+        }
+    }
+}
+
+/// Property: MultiTASC's discrete steps are uniform across devices —
+/// after any number of batch observations every online device moved by
+/// the same multiple of the step.
+#[test]
+fn prop_multitasc_uniform_steps() {
+    let mut rng = Rng::new(0xCAFE);
+    let grid = [1usize, 2, 4, 8, 16, 32, 64];
+    for _ in 0..40 {
+        let mut s = MultiTasc::new(server_latency_model("srv_inception"), 150.0, &grid);
+        let n = 2 + rng.next_below(10) as usize;
+        for d in 0..n {
+            s.register_device(d, Tier::Low, 0.5, 95.0);
+        }
+        for _ in 0..100 {
+            s.on_batch_observed(1 + rng.next_below(64) as usize);
+        }
+        let c0 = s.threshold(0);
+        for d in 1..n {
+            assert!(
+                (s.threshold(d) - c0).abs() < 1e-12,
+                "thresholds diverged without per-device signal"
+            );
+        }
+    }
+}
+
+/// Property: Static never changes anything, whatever happens.
+#[test]
+fn prop_static_immutable() {
+    let mut rng = Rng::new(0x5EED);
+    let mut s = StaticSched::new();
+    let inits: Vec<f64> = (0..10).map(|_| rng.next_f64()).collect();
+    for (d, &c) in inits.iter().enumerate() {
+        s.register_device(d, Tier::Mid, c, 95.0);
+    }
+    for _ in 0..500 {
+        let d = rng.next_below(10) as usize;
+        s.on_sr_update(d, rng.next_range_f64(0.0, 100.0));
+        s.on_batch_observed(1 + rng.next_below(64) as usize);
+        assert!((s.threshold(d) - inits[d].clamp(0.0, 1.0)).abs() < 1e-12);
+    }
+}
+
+/// Property: the decision function forwards exactly the sub-threshold
+/// confidence mass: for random confidences, forwarding fraction equals
+/// the empirical CDF at the threshold.
+#[test]
+fn prop_decision_fn_forwards_cdf() {
+    let mut rng = Rng::new(0xD1CE);
+    for _ in 0..50 {
+        let c = rng.next_f64();
+        let d = DecisionFn::new(c);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.next_f64()).collect();
+        let fwd = xs.iter().filter(|&&x| d.forwards(x)).count();
+        let below = xs.iter().filter(|&&x| x < c).count();
+        assert_eq!(fwd, below);
+    }
+}
+
+/// Property: batch latency model is affine => throughput is monotone
+/// non-decreasing in batch size and latency strictly increasing.
+#[test]
+fn prop_latency_model_monotone() {
+    let mut rng = Rng::new(0xABCD);
+    for _ in 0..CASES {
+        let m = ServerLatencyModel {
+            t0_ms: rng.next_range_f64(1.0, 50.0),
+            k_ms: rng.next_range_f64(0.05, 5.0),
+            q_ms: 0.0,
+            max_batch: 64,
+        };
+        let mut prev_lat = 0.0;
+        let mut prev_tp = 0.0;
+        for b in [1usize, 2, 4, 8, 16, 32, 64] {
+            let lat = m.batch_ms(b);
+            let tp = m.throughput_at(b);
+            assert!(lat > prev_lat);
+            assert!(tp >= prev_tp - 1e-9);
+            prev_lat = lat;
+            prev_tp = tp;
+        }
+    }
+}
+
+/// Property: JSON writer output always re-parses to the same value
+/// (fuzzed over random json trees).
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_bool(0.5)),
+            2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0 * 0.5).round() / 8.0),
+            3 => {
+                let len = rng.next_below(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| char::from_u32(32 + rng.next_below(94) as u32).unwrap())
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.next_below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(0x1357);
+    for _ in 0..CASES {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("reparse failed: {e} on {text}"));
+        assert_eq!(back, v, "roundtrip mismatch for {text}");
+    }
+}
+
+/// Property: percentile is bounded by min/max and monotone in q.
+#[test]
+fn prop_percentile_monotone() {
+    let mut rng = Rng::new(0x2468);
+    for _ in 0..CASES {
+        let n = 1 + rng.next_below(200) as usize;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.next_range_f64(-100.0, 100.0)).collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=10 {
+            let q = i as f64 / 10.0;
+            let p = percentile(&xs, q);
+            assert!(p >= prev - 1e-12);
+            assert!(p >= xs[0] - 1e-12 && p <= xs[n - 1] + 1e-12);
+            prev = p;
+        }
+    }
+}
+
+/// Property: stream sampling is exhaustive-free (no duplicates) and
+/// in-pool for arbitrary pool/request sizes.
+#[test]
+fn prop_sampler_invariants() {
+    use multitascpp::data::dataset::Dataset;
+    use multitascpp::data::device_stream;
+    let mut rng = Rng::new(0x9876);
+    for _ in 0..40 {
+        let n = 100 + rng.next_below(2000) as usize;
+        let ds = Dataset::synthetic_for_tests(n, 4, 10);
+        let k = 1 + rng.next_below(n as u64) as usize;
+        let seed = rng.next_u64();
+        let dev = rng.next_below(64) as usize;
+        let s = device_stream(&ds, seed, dev, k);
+        let mut seen = std::collections::HashSet::new();
+        for &i in &s {
+            assert!(ds.eval_pool().contains(&i), "index outside eval pool");
+            assert!(seen.insert(i), "duplicate stream index");
+        }
+    }
+}

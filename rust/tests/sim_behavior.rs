@@ -1,0 +1,224 @@
+//! Behavioral integration tests of the discrete-event simulation,
+//! driven by synthetic output tables (no artifacts required): these
+//! verify the *paper-shaped* dynamics — MultiTASC++ holds its SR target
+//! while Static collapses under load, accuracy trades off correctly,
+//! MultiTASC converges slower, etc.
+
+use multitascpp::config::scenario::{Intermittent, Scenario, SchedulerKind};
+use multitascpp::config::SystemConfig;
+use multitascpp::metrics::RunMetrics;
+use multitascpp::models::outputs::SyntheticOutputs;
+use multitascpp::models::registry::test_meta_json;
+use multitascpp::models::{Registry, Tier};
+use multitascpp::data::dataset::Dataset;
+use multitascpp::sim::{run_scenario, run_scenario_with, Overrides};
+
+fn registry() -> Registry {
+    Registry::from_meta(std::path::Path::new("/tmp/test_artifacts"), &test_meta_json()).unwrap()
+}
+
+fn dataset() -> Dataset {
+    Dataset::synthetic_for_tests(5000, 4, 10)
+}
+
+fn provider(n: usize) -> SyntheticOutputs {
+    SyntheticOutputs::new(
+        n,
+        &[
+            ("dev_low", 0.72),
+            ("dev_mid", 0.75),
+            ("dev_high", 0.77),
+            ("srv_inception", 0.785),
+            ("srv_effnetb3", 0.815),
+        ],
+        42,
+    )
+}
+
+fn run(scn: &Scenario) -> RunMetrics {
+    let cfg = SystemConfig::default();
+    let reg = registry();
+    let ds = dataset();
+    let mut prov = provider(ds.n).into_cached();
+    run_scenario(scn, &cfg, &reg, &ds, &mut prov).unwrap()
+}
+
+fn scenario(n: usize, sched: SchedulerKind) -> Scenario {
+    Scenario::homogeneous(Tier::Low, n, "srv_inception")
+        .with_scheduler(sched)
+        .with_samples(400)
+        .with_slo(150.0)
+}
+
+#[test]
+fn all_samples_complete_and_conserve() {
+    let m = run(&scenario(5, SchedulerKind::MultiTascPP));
+    assert_eq!(m.overall.samples, 5 * 400);
+    assert!(m.makespan_s > 0.0);
+}
+
+#[test]
+fn low_load_everything_meets_slo() {
+    // 2 devices cannot congest an ~985/s server.
+    for kind in [
+        SchedulerKind::MultiTascPP,
+        SchedulerKind::MultiTasc,
+        SchedulerKind::Static,
+    ] {
+        let m = run(&scenario(2, kind));
+        assert!(
+            m.overall.satisfaction_rate() > 97.0,
+            "{kind:?}: SR {}",
+            m.overall.satisfaction_rate()
+        );
+    }
+}
+
+#[test]
+fn static_collapses_under_heavy_load_multitascpp_does_not() {
+    // 80 low-tier devices massively exceed the server's SLO-feasible
+    // capacity at the static ~30% forwarding rate. Streams long enough
+    // for the adaptive transient to wash out (paper uses 5000).
+    let m_static = run(&scenario(80, SchedulerKind::Static).with_samples(1500));
+    let m_mtpp = run(&scenario(80, SchedulerKind::MultiTascPP).with_samples(1500));
+    assert!(
+        m_static.overall.satisfaction_rate() < 70.0,
+        "static SR {}",
+        m_static.overall.satisfaction_rate()
+    );
+    assert!(
+        m_mtpp.overall.satisfaction_rate() > 88.0,
+        "mtpp SR {}",
+        m_mtpp.overall.satisfaction_rate()
+    );
+}
+
+#[test]
+fn multitascpp_trades_accuracy_for_slo_under_load() {
+    let light = run(&scenario(4, SchedulerKind::MultiTascPP));
+    let heavy = run(&scenario(80, SchedulerKind::MultiTascPP));
+    // Under pressure the scheduler lowers thresholds -> fewer forwards
+    // -> accuracy sinks toward the on-device model's.
+    assert!(heavy.overall.forward_rate() < light.overall.forward_rate());
+    assert!(heavy.overall.accuracy() <= light.overall.accuracy() + 0.005);
+    // ... but never below the device-only accuracy (cascade still helps
+    // or at worst matches local-only execution).
+    assert!(heavy.overall.accuracy() > 0.70);
+}
+
+#[test]
+fn throughput_scales_linearly_for_multitascpp() {
+    let m20 = run(&scenario(20, SchedulerKind::MultiTascPP));
+    let m60 = run(&scenario(60, SchedulerKind::MultiTascPP));
+    let ratio = m60.throughput() / m20.throughput();
+    assert!(
+        (2.0..4.5).contains(&ratio),
+        "throughput ratio {ratio} (20dev {} -> 60dev {})",
+        m20.throughput(),
+        m60.throughput()
+    );
+}
+
+#[test]
+fn static_goodput_saturates() {
+    let m20 = run(&scenario(20, SchedulerKind::Static).with_samples(1000));
+    let m80 = run(&scenario(80, SchedulerKind::Static).with_samples(1000));
+    let ratio = m80.throughput_satisfied() / m20.throughput_satisfied();
+    // 4x devices must NOT give ~4x SLO-satisfied throughput when the
+    // server is past its SLO-feasible load (Fig 6's plateau).
+    assert!(ratio < 3.0, "static goodput ratio {ratio}");
+    // ... while MultiTASC++ keeps scaling (Fig 6's linear series).
+    let a20 = run(&scenario(20, SchedulerKind::MultiTascPP).with_samples(1000));
+    let a80 = run(&scenario(80, SchedulerKind::MultiTascPP).with_samples(1000));
+    let aratio = a80.throughput_satisfied() / a20.throughput_satisfied();
+    assert!(aratio > ratio, "mtpp {aratio} vs static {ratio}");
+    assert!(aratio > 3.0, "mtpp goodput ratio {aratio}");
+}
+
+#[test]
+fn seeds_produce_different_but_close_results() {
+    let a = run(&scenario(10, SchedulerKind::MultiTascPP).with_seed(0));
+    let b = run(&scenario(10, SchedulerKind::MultiTascPP).with_seed(1));
+    assert_ne!(a.overall.correct, b.overall.correct);
+    assert!((a.overall.accuracy() - b.overall.accuracy()).abs() < 0.05);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = run(&scenario(10, SchedulerKind::MultiTascPP).with_seed(3));
+    let b = run(&scenario(10, SchedulerKind::MultiTascPP).with_seed(3));
+    assert_eq!(a.overall.samples, b.overall.samples);
+    assert_eq!(a.overall.satisfied, b.overall.satisfied);
+    assert_eq!(a.overall.correct, b.overall.correct);
+    assert!((a.makespan_s - b.makespan_s).abs() < 1e-9);
+}
+
+#[test]
+fn heterogeneous_population_reports_all_tiers() {
+    let scn = Scenario::heterogeneous(30, "srv_inception")
+        .with_samples(300)
+        .with_slo(150.0);
+    let cfg = SystemConfig::default();
+    let ds = dataset();
+    let mut prov = provider(ds.n).into_cached();
+    let m = run_scenario(&scn, &cfg, &registry(), &ds, &mut prov).unwrap();
+    for tier in [Tier::Low, Tier::Mid, Tier::High] {
+        let agg = m.tier(tier).expect("tier missing");
+        assert_eq!(agg.samples, 10 * 300);
+    }
+}
+
+#[test]
+fn intermittent_devices_complete_their_streams() {
+    let scn = scenario(20, SchedulerKind::MultiTascPP)
+        .with_samples(300)
+        .with_intermittent(Intermittent::default());
+    let m = run(&scn);
+    // Offline periods delay but never drop samples.
+    assert_eq!(m.overall.samples, 20 * 300);
+    // The trace must show the active-device dip.
+    let max_active = m.trace.iter().map(|p| p.active_devices).max().unwrap();
+    let min_active = m
+        .trace
+        .iter()
+        .filter(|p| p.t_s > 1.0 && p.active_devices > 0)
+        .map(|p| p.active_devices)
+        .min()
+        .unwrap();
+    assert!(min_active < max_active, "no offline dip visible in trace");
+}
+
+#[test]
+fn static_threshold_override_is_respected() {
+    let scn = scenario(5, SchedulerKind::Static);
+    let cfg = SystemConfig::default();
+    let ds = dataset();
+    let mut prov = provider(ds.n).into_cached();
+    let ovr = Overrides {
+        initial_threshold: Some(0.0),
+    };
+    let m = run_scenario_with(&scn, &cfg, &registry(), &ds, &mut prov, &ovr).unwrap();
+    // threshold 0 => BvSB >= 0 always => nothing ever forwards
+    assert_eq!(m.overall.forwarded, 0);
+}
+
+#[test]
+fn batches_grow_under_load() {
+    let m_small = run(&scenario(3, SchedulerKind::Static));
+    let m_big = run(&scenario(60, SchedulerKind::Static));
+    let mean_small = m_small.batch_sizes.mean();
+    let mean_big = m_big.batch_sizes.mean();
+    assert!(
+        mean_big > mean_small * 2.0,
+        "dynamic batching not engaging: {mean_small} -> {mean_big}"
+    );
+}
+
+#[test]
+fn trace_is_monotone_in_time() {
+    let m = run(&scenario(10, SchedulerKind::MultiTascPP));
+    for w in m.trace.windows(2) {
+        assert!(w[1].t_s >= w[0].t_s);
+    }
+    assert!(!m.trace.is_empty());
+}
