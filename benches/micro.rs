@@ -43,7 +43,7 @@ fn main() {
         let r = bench("event queue: push+pop pair", &fast, |i| {
             let mut q = EventQueue::new();
             for j in 0..64 {
-                q.push((i * 64 + j) as f64, Event::ServerBatchDone);
+                q.push((i * 64 + j) as f64, Event::ServerBatchDone { server: 0 });
             }
             while let Some(e) = q.pop() {
                 black_box(e);

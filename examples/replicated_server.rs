@@ -1,0 +1,72 @@
+//! Replicated server pool with pluggable queue disciplines.
+//!
+//! Runs an overloaded, mixed-criticality heterogeneous population
+//! (low tier: tight 100 ms SLO; high tier: relaxed 400 ms) against
+//! FIFO / EDF / tier-WFQ server queues at 1 and 2 replicas, plus an
+//! admission-control (shedding) variant, and prints overall and
+//! per-tier SLO satisfaction.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example replicated_server
+//! ```
+
+use multitascpp::config::scenario::{QueueKind, Scenario, SchedulerKind};
+use multitascpp::experiments::Ctx;
+use multitascpp::models::Tier;
+use multitascpp::sim::Overrides;
+
+fn main() -> anyhow::Result<()> {
+    multitascpp::util::logging::init();
+    let artifacts = multitascpp::config::SystemConfig::locate_artifacts();
+    let mut ctx = Ctx::load(&artifacts, std::path::Path::new("results"), true)?;
+
+    let base = || {
+        Scenario::heterogeneous(48, "srv_inception")
+            .with_scheduler(SchedulerKind::Static)
+            .with_slo(150.0)
+            .with_tier_slo(Tier::Low, 100.0)
+            .with_tier_slo(Tier::High, 400.0)
+            .with_samples(1500)
+            .with_seed(0)
+    };
+
+    println!(
+        "{:<22} {:>8} {:>8} {:>8} {:>8} {:>8} {:>7}",
+        "configuration", "SR %", "low SR", "mid SR", "high SR", "shed %", "batches"
+    );
+    for (label, queue, replicas, shed) in [
+        ("fifo x1 (seed)", QueueKind::Fifo, 1usize, false),
+        ("edf x1", QueueKind::Edf, 1, false),
+        ("tier-wfq x1", QueueKind::TierWfq, 1, false),
+        ("fifo x2", QueueKind::Fifo, 2, false),
+        ("edf x2", QueueKind::Edf, 2, false),
+        ("edf x1 + shed", QueueKind::Edf, 1, true),
+    ] {
+        let scn = base()
+            .with_queue(queue)
+            .with_replicas(replicas)
+            .with_shed(shed);
+        let m = ctx.run(&scn, &Overrides::default())?;
+        let tier_sr = |t: Tier| {
+            m.tier(t)
+                .map(|a| a.satisfaction_rate())
+                .unwrap_or(f64::NAN)
+        };
+        let batches: usize = m.per_server_batches.iter().sum();
+        println!(
+            "{:<22} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>7}",
+            label,
+            m.overall.satisfaction_rate(),
+            tier_sr(Tier::Low),
+            tier_sr(Tier::Mid),
+            tier_sr(Tier::High),
+            100.0 * m.shed_rate(),
+            batches
+        );
+    }
+    println!(
+        "\nsee `mtpp sim --servers N --queue fifo|edf|tier-wfq [--shed]` and \
+         `mtpp experiment replicas` for the full sweep"
+    );
+    Ok(())
+}

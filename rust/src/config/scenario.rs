@@ -43,6 +43,61 @@ impl SchedulerKind {
     }
 }
 
+/// Queue discipline for the shared server-side request queue
+/// (see `sim::server` for the implementations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueKind {
+    /// First-in first-out (the original single-server behavior).
+    Fifo,
+    /// Earliest-SLO-deadline-first over each request's remaining slack.
+    Edf,
+    /// Weighted fair queueing across device tiers (equal weights):
+    /// bounds per-tier starvation when one tier floods the queue.
+    TierWfq,
+}
+
+impl QueueKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueKind::Fifo => "fifo",
+            QueueKind::Edf => "edf",
+            QueueKind::TierWfq => "tier-wfq",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fifo" => Ok(QueueKind::Fifo),
+            "edf" => Ok(QueueKind::Edf),
+            "wfq" | "tier-wfq" | "tierwfq" => Ok(QueueKind::TierWfq),
+            other => anyhow::bail!("unknown queue discipline '{other}' (fifo|edf|tier-wfq)"),
+        }
+    }
+}
+
+/// Server-side deployment shape: how many replica servers, which queue
+/// discipline feeds them, and whether hopeless requests are shed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServerPolicy {
+    /// Number of replica servers behind the shared queue (>= 1).
+    pub replicas: usize,
+    pub queue: QueueKind,
+    /// Admission control: shed requests whose SLO slack is already
+    /// blown at enqueue time. Shed requests return to the device as
+    /// local-only completions (the device's own prediction stands).
+    pub shed: bool,
+}
+
+impl Default for ServerPolicy {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            queue: QueueKind::Fifo,
+            shed: false,
+        }
+    }
+}
+
 /// How the server produces model outputs during simulation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
@@ -99,6 +154,12 @@ pub struct Scenario {
     /// Intermittent device participation (Fig 19/20), if any.
     pub intermittent: Option<Intermittent>,
     pub exec: ExecMode,
+    /// Server-side deployment: replica count, queue discipline, shed.
+    pub server: ServerPolicy,
+    /// Per-tier SLO overrides in ms; tiers not listed fall back to
+    /// `slo_ms`. Enables mixed-criticality populations (the scenarios
+    /// where EDF/WFQ disciplines differ from FIFO).
+    pub tier_slo_ms: Vec<(Tier, f64)>,
 }
 
 impl Scenario {
@@ -114,6 +175,8 @@ impl Scenario {
             model_switching: false,
             intermittent: None,
             exec: ExecMode::Cached,
+            server: ServerPolicy::default(),
+            tier_slo_ms: Vec::new(),
         }
     }
 
@@ -170,6 +233,43 @@ impl Scenario {
         self.exec = e;
         self
     }
+
+    pub fn with_server_policy(mut self, p: ServerPolicy) -> Self {
+        self.server = p;
+        self
+    }
+
+    pub fn with_replicas(mut self, n: usize) -> Self {
+        assert!(n >= 1, "server pool needs at least one replica");
+        self.server.replicas = n;
+        self
+    }
+
+    pub fn with_queue(mut self, q: QueueKind) -> Self {
+        self.server.queue = q;
+        self
+    }
+
+    pub fn with_shed(mut self, shed: bool) -> Self {
+        self.server.shed = shed;
+        self
+    }
+
+    /// Override the SLO for one tier (other tiers keep `slo_ms`).
+    pub fn with_tier_slo(mut self, tier: Tier, slo_ms: f64) -> Self {
+        self.tier_slo_ms.retain(|&(t, _)| t != tier);
+        self.tier_slo_ms.push((tier, slo_ms));
+        self
+    }
+
+    /// Effective SLO for a tier: per-tier override, else the global.
+    pub fn slo_for(&self, tier: Tier) -> f64 {
+        self.tier_slo_ms
+            .iter()
+            .find(|&&(t, _)| t == tier)
+            .map(|&(_, s)| s)
+            .unwrap_or(self.slo_ms)
+    }
 }
 
 #[cfg(test)]
@@ -200,6 +300,36 @@ mod tests {
         );
         assert_eq!(SchedulerKind::parse("static").unwrap(), SchedulerKind::Static);
         assert!(SchedulerKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn queue_kind_parse_roundtrip() {
+        for q in [QueueKind::Fifo, QueueKind::Edf, QueueKind::TierWfq] {
+            assert_eq!(QueueKind::parse(q.name()).unwrap(), q);
+        }
+        assert_eq!(QueueKind::parse("wfq").unwrap(), QueueKind::TierWfq);
+        assert!(QueueKind::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn server_policy_defaults_match_seed_behavior() {
+        let s = Scenario::homogeneous(Tier::Low, 10, "srv_inception");
+        assert_eq!(s.server.replicas, 1);
+        assert_eq!(s.server.queue, QueueKind::Fifo);
+        assert!(!s.server.shed);
+    }
+
+    #[test]
+    fn tier_slo_overrides() {
+        let s = Scenario::heterogeneous(30, "srv_inception")
+            .with_slo(150.0)
+            .with_tier_slo(Tier::Low, 100.0)
+            .with_tier_slo(Tier::Low, 90.0) // replaces, not duplicates
+            .with_tier_slo(Tier::High, 400.0);
+        assert_eq!(s.slo_for(Tier::Low), 90.0);
+        assert_eq!(s.slo_for(Tier::Mid), 150.0);
+        assert_eq!(s.slo_for(Tier::High), 400.0);
+        assert_eq!(s.tier_slo_ms.len(), 2);
     }
 
     #[test]

@@ -127,6 +127,9 @@ pub struct SweepRow {
     pub goodput_mean: f64,
     pub throughput_mean: f64,
     pub fwd_mean: f64,
+    /// Fraction of samples shed by server admission control (0 unless
+    /// the scenario enables shedding).
+    pub shed_mean: f64,
 }
 
 pub fn aggregate_rows(
@@ -162,6 +165,7 @@ pub fn aggregate_rows(
     let goodputs: Vec<f64> = runs.iter().map(|m| pick(m).2).collect();
     let tputs: Vec<f64> = runs.iter().map(|m| pick(m).3).collect();
     let fwds: Vec<f64> = runs.iter().map(|m| pick(m).4).collect();
+    let sheds: Vec<f64> = runs.iter().map(|m| m.shed_rate()).collect();
     let sr = seed_summary(&srs);
     let acc = seed_summary(&accs);
     SweepRow {
@@ -178,6 +182,7 @@ pub fn aggregate_rows(
         goodput_mean: seed_summary(&goodputs).mean,
         throughput_mean: seed_summary(&tputs).mean,
         fwd_mean: seed_summary(&fwds).mean,
+        shed_mean: seed_summary(&sheds).mean,
     }
 }
 
@@ -195,11 +200,11 @@ fn scheduler_name(k: SchedulerKind) -> &'static str {
 pub fn emit_rows(path: &Path, rows: &[SweepRow]) -> Result<()> {
     let mut csv = String::from(
         "scheduler,slo_ms,devices,tier,sr_mean,sr_min,sr_max,\
-         acc_mean,acc_min,acc_max,goodput,throughput,fwd_frac\n",
+         acc_mean,acc_min,acc_max,goodput,throughput,fwd_frac,shed_frac\n",
     );
     for r in rows {
         csv.push_str(&format!(
-            "{},{},{},{},{:.3},{:.3},{:.3},{:.4},{:.4},{:.4},{:.1},{:.1},{:.4}\n",
+            "{},{},{},{},{:.3},{:.3},{:.3},{:.4},{:.4},{:.4},{:.1},{:.1},{:.4},{:.4}\n",
             r.scheduler,
             r.slo_ms,
             r.devices,
@@ -213,6 +218,7 @@ pub fn emit_rows(path: &Path, rows: &[SweepRow]) -> Result<()> {
             r.goodput_mean,
             r.throughput_mean,
             r.fwd_mean,
+            r.shed_mean,
         ));
     }
     std::fs::write(path, &csv)?;
@@ -244,17 +250,19 @@ pub fn print_rows(title: &str, rows: &[SweepRow]) {
 /// Time-series CSV for the trace experiments (Figs 17-20).
 pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
     let mut csv = String::from(
-        "t_s,active_devices,mean_threshold,running_sr,running_acc,queue_len,server_model_idx\n",
+        "t_s,active_devices,mean_threshold,running_sr,running_acc,queue_len,\
+         busy_servers,server_model_idx\n",
     );
     for p in &metrics.trace {
         csv.push_str(&format!(
-            "{:.2},{},{:.4},{:.2},{:.4},{},{}\n",
+            "{:.2},{},{:.4},{:.2},{:.4},{},{},{}\n",
             p.t_s,
             p.active_devices,
             p.mean_threshold,
             p.running_sr,
             p.running_acc,
             p.queue_len,
+            p.busy_servers,
             p.server_model_idx
         ));
     }

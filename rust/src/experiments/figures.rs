@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::config::scenario::{Intermittent, Scenario, SchedulerKind};
+use crate::config::scenario::{Intermittent, QueueKind, Scenario, SchedulerKind};
 use crate::experiments::common::{
     aggregate_rows, emit_rows, emit_trace, print_rows, Ctx, SweepRow,
 };
@@ -331,6 +331,54 @@ pub fn ablation(ctx: &mut Ctx) -> Result<()> {
     Ok(())
 }
 
+/// Replicated-server extension (beyond the paper's figures;
+/// CascadeServe-style serving): queue discipline x replica count on an
+/// overloaded mixed-criticality heterogeneous population under the
+/// Static scheduler, so the serving layer — not adaptive thresholds —
+/// does the work. Low-tier devices carry a tight SLO and high-tier a
+/// relaxed one, which is where EDF and tier-WFQ separate from FIFO.
+pub fn replicas(ctx: &mut Ctx) -> Result<()> {
+    let grid: Vec<usize> = if ctx.quick {
+        vec![20, 40, 60]
+    } else {
+        vec![10, 20, 30, 40, 60, 80]
+    };
+    let combos: [(QueueKind, usize, &'static str); 7] = [
+        (QueueKind::Fifo, 1, "fifo-x1"),
+        (QueueKind::Edf, 1, "edf-x1"),
+        (QueueKind::TierWfq, 1, "wfq-x1"),
+        (QueueKind::Fifo, 2, "fifo-x2"),
+        (QueueKind::Edf, 2, "edf-x2"),
+        (QueueKind::TierWfq, 2, "wfq-x2"),
+        (QueueKind::Fifo, 4, "fifo-x4"),
+    ];
+    let mut rows = Vec::new();
+    for &(queue, n_srv, label) in &combos {
+        for &n in &grid {
+            let mut runs = Vec::new();
+            for &seed in &ctx.seeds() {
+                let scn = Scenario::heterogeneous(n, "srv_inception")
+                    .with_scheduler(SchedulerKind::Static)
+                    .with_slo(150.0)
+                    .with_tier_slo(Tier::Low, 100.0)
+                    .with_tier_slo(Tier::High, 400.0)
+                    .with_seed(seed)
+                    .with_samples(ctx.samples_per_device())
+                    .with_replicas(n_srv)
+                    .with_queue(queue);
+                runs.push(ctx.run(&scn, &Overrides::default())?);
+            }
+            let mut row = aggregate_rows(SchedulerKind::Static, 150.0, n, None, &runs);
+            // Reuse the scheduler column to tag the series.
+            row.scheduler = label;
+            rows.push(row);
+        }
+    }
+    print_rows("Replicated server pool: queue discipline x replicas", &rows);
+    emit_rows(&ctx.results_dir.join("replicas_queue_disciplines.csv"), &rows)?;
+    Ok(())
+}
+
 /// The experiment registry: id -> driver.
 pub type Driver = fn(&mut Ctx) -> Result<()>;
 
@@ -348,6 +396,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
         ("fig19", "intermittent participation, dynamic", fig19),
         ("fig20", "intermittent participation, static threshold", fig20),
         ("ablation", "MT++ component ablation (extension)", ablation),
+        (
+            "replicas",
+            "replicated server pool x queue discipline (extension)",
+            replicas,
+        ),
     ]
 }
 

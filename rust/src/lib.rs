@@ -17,7 +17,10 @@
 //! * [`device`] — device-side state machine: local inference, the
 //!   forwarding decision function, SLO window accounting.
 //! * [`sim`] — discrete-event engine that reproduces the paper's
-//!   simulation-based evaluation with calibrated latency tables.
+//!   simulation-based evaluation with calibrated latency tables; its
+//!   [`sim::server`] submodule generalizes the server side into a
+//!   replicated pool with pluggable queue disciplines (FIFO / EDF /
+//!   tier-WFQ) and optional admission control.
 //! * [`net`] — live wall-clock serving mode over TCP.
 //! * [`experiments`] — one driver per paper figure/table.
 

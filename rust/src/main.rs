@@ -17,7 +17,7 @@ use multitascpp::config::scenario::{Scenario, SchedulerKind};
 use multitascpp::config::SystemConfig;
 use multitascpp::experiments::{self, Ctx};
 use multitascpp::models::Tier;
-use multitascpp::util::cli::Args;
+use multitascpp::util::cli::{server_flags, server_policy, Args};
 
 fn main() -> Result<()> {
     multitascpp::util::logging::init();
@@ -134,7 +134,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .flag("seed", "experiment seed", Some("0"))
         .switch("switching", "enable §IV-E server model switching")
         .switch("real", "execute artifacts on the request path (slow)");
+    server_flags(&mut args);
     let m = args.parse(argv)?;
+    let policy = server_policy(&m)?;
     let dir = resolve_artifacts(&m);
     let mut ctx = Ctx::load(&dir, &PathBuf::from("results"), false)?;
     let n = m.get_usize("devices")?;
@@ -146,7 +148,8 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
     .with_slo(m.get_f64("slo")?)
     .with_samples(m.get_usize("samples")?)
     .with_seed(m.get_u64("seed")?)
-    .with_switching(m.get_bool("switching"));
+    .with_switching(m.get_bool("switching"))
+    .with_server_policy(policy);
     let t0 = std::time::Instant::now();
     let metrics = if m.get_bool("real") {
         ctx.run_real(&scn)?
@@ -155,10 +158,13 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
     };
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "\nscenario: {} devices ({}), server {}, {} scheduler, SLO {} ms",
+        "\nscenario: {} devices ({}), server {} x{} ({} queue{}), {} scheduler, SLO {} ms",
         n,
         m.get_str("tier")?,
         m.get_str("server")?,
+        policy.replicas,
+        policy.queue.name(),
+        if policy.shed { ", shed" } else { "" },
         m.get_str("scheduler")?,
         m.get_f64("slo")?
     );
@@ -181,5 +187,18 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         wall,
         metrics.real_compute_ms
     );
+    if policy.replicas > 1 || metrics.shed > 0 {
+        let per_server: Vec<String> = metrics
+            .per_server_batches
+            .iter()
+            .map(|b| b.to_string())
+            .collect();
+        println!(
+            "batches per replica [{}]   shed {} ({:.2}%)",
+            per_server.join(", "),
+            metrics.shed,
+            100.0 * metrics.shed_rate()
+        );
+    }
     Ok(())
 }

@@ -88,6 +88,10 @@ impl Aggregate {
 }
 
 /// A point on the Fig 19/20-style time series.
+///
+/// Points sit on a fixed `trace_interval` grid (engine invariant): gaps
+/// between events emit one carried-forward point per elapsed boundary,
+/// so downstream plots never see holes or drift.
 #[derive(Clone, Copy, Debug)]
 pub struct TracePoint {
     pub t_s: f64,
@@ -95,7 +99,10 @@ pub struct TracePoint {
     pub mean_threshold: f64,
     pub running_sr: f64,
     pub running_acc: f64,
+    /// Depth of the shared server-pool queue.
     pub queue_len: usize,
+    /// Replicas with a batch in flight at this instant.
+    pub busy_servers: usize,
     pub server_model_idx: usize,
 }
 
@@ -116,6 +123,10 @@ pub struct RunMetrics {
     pub real_compute_ms: f64,
     /// Which server models served batches: name -> batches run.
     pub server_model_batches: std::collections::BTreeMap<String, usize>,
+    /// Batches served by each replica of the server pool.
+    pub per_server_batches: Vec<usize>,
+    /// Requests shed by admission control (completed as local-only).
+    pub shed: usize,
 }
 
 impl RunMetrics {
@@ -142,6 +153,14 @@ impl RunMetrics {
             return f64::NAN;
         }
         self.overall.samples as f64 / self.makespan_s
+    }
+
+    /// Fraction of all completed samples that admission control shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.overall.samples == 0 {
+            return f64::NAN;
+        }
+        self.shed as f64 / self.overall.samples as f64
     }
 
     /// *Goodput*: SLO-satisfied samples/s — the paper's Figs 6/9 series

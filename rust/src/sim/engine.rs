@@ -7,30 +7,45 @@
 //!
 //! Timing semantics (DESIGN.md §6):
 //! * devices process their sample streams continuously; local inference
-//!   takes `t_inf` (Table I) with small seeded jitter;
+//!   takes `t_inf` (Table I) with small seeded jitter — the *drawn*
+//!   (jittered) duration rides along in [`Event::DeviceInferDone`], so
+//!   per-sample latency accounting is exact, not mean-approximated;
 //! * the forwarding decision (Eq. 3) is instant — BvSB comes out of the
 //!   fused kernel with the softmax;
-//! * forwarded samples pay a comm hop, wait in the server queue, get
-//!   dynamically batched (largest grid batch <= queue length, capped
-//!   per model), pay the batch latency, and a return hop;
+//! * forwarded samples pay a comm hop, wait in the server-pool queue
+//!   (ordered by the scenario's [`QueueDiscipline`]), get dynamically
+//!   batched onto the first idle replica (largest grid batch <= queue
+//!   length, capped per model), pay the batch latency, and a return
+//!   hop; with admission control enabled, requests whose SLO slack is
+//!   already blown are shed and complete as local-only predictions;
 //! * each device throttles at `max_outstanding` in-flight forwards
 //!   (AMQP prefetch): past that the stream stalls — this is what makes
 //!   congestion hurt throughput, not just latency (Fig 6/9);
 //! * every `window_s` a device reports its SR over the window (§IV-B);
 //!   the scheduler reacts per its policy; the switch controller (§IV-E)
 //!   is consulted after each SR update.
-
-use std::collections::VecDeque;
+//!
+//! Trace semantics: the 1 s telemetry trace advances on a fixed grid —
+//! event gaps emit a point per elapsed grid slot boundary instead of
+//! re-arming relative to the triggering event, so Fig 19/20-style time
+//! series stay hole-free and drift-free.
+//!
+//! The server side lives in [`crate::sim::server`]: a [`ServerPool`]
+//! of N replicas behind a pluggable queue discipline. `--servers 1
+//! --queue fifo` (the default) reproduces the seed single-server
+//! engine's event sequence exactly.
 
 use anyhow::Result;
 
 use crate::config::latency::{device_latency_ms, ServerLatencyModel};
+use crate::config::scenario::ServerPolicy;
 use crate::config::SystemConfig;
 use crate::metrics::{RunMetrics, SampleRecord, TracePoint};
 use crate::models::outputs::OutputProvider;
 use crate::models::Tier;
 use crate::scheduler::{Scheduler, SwitchController, ThresholdUpdate};
 use crate::sim::event::{Event, EventQueue};
+use crate::sim::server::{Admission, PendingRequest, ServerPool};
 use crate::util::prng::Rng;
 
 /// Per-device configuration handed to the engine.
@@ -88,6 +103,9 @@ struct Request {
     device: usize,
     sample: usize,
     start_s: f64,
+    /// Correctness of the device's own prediction — the fallback when
+    /// admission control sheds the request.
+    local_correct: bool,
     correct: Option<bool>,
 }
 
@@ -103,10 +121,7 @@ pub struct SimEngine<'a> {
 
     devices: Vec<DeviceState>,
     requests: Vec<Request>,
-    queue: VecDeque<usize>,
-    server_busy: bool,
-    server_model: String,
-    in_flight_batch: Vec<usize>,
+    pool: ServerPool,
 
     events: EventQueue,
     metrics: RunMetrics,
@@ -123,6 +138,7 @@ impl<'a> SimEngine<'a> {
         provider: &'a mut dyn OutputProvider,
         latency_of: LatencyFn<'a>,
         server_model: &str,
+        policy: ServerPolicy,
         specs: Vec<DeviceSpec>,
         seed: u64,
     ) -> Self {
@@ -148,6 +164,7 @@ impl<'a> SimEngine<'a> {
                 spec,
             });
         }
+        let pool = ServerPool::new(policy, server_model);
         Self {
             cfg,
             scheduler,
@@ -156,10 +173,7 @@ impl<'a> SimEngine<'a> {
             latency_of,
             devices,
             requests: Vec::new(),
-            queue: VecDeque::new(),
-            server_busy: false,
-            server_model: server_model.to_string(),
-            in_flight_batch: Vec::new(),
+            pool,
             events: EventQueue::new(),
             metrics: RunMetrics::default(),
             next_trace_s: 0.0,
@@ -180,25 +194,33 @@ impl<'a> SimEngine<'a> {
                 continue;
             }
             let jitter = d.jitter.next_f64();
-            let first = jitter * d.t_inf_s + d.next_inference_s();
-            self.events.push(first, Event::DeviceInferDone { device: id });
+            let dur = d.next_inference_s();
+            let first = jitter * d.t_inf_s + dur;
+            self.events
+                .push(first, Event::DeviceInferDone { device: id, dur_s: dur });
             self.events
                 .push(self.cfg.window_s * (1.0 + jitter), Event::SrWindow { device: id });
         }
         while let Some((t, ev)) = self.events.pop() {
-            if t >= self.next_trace_s {
-                self.record_trace(t);
-                self.next_trace_s = t + self.trace_interval_s;
+            // Advance the telemetry trace on its fixed grid: one point
+            // per elapsed interval boundary, never re-armed off-grid.
+            while t >= self.next_trace_s {
+                let grid_t = self.next_trace_s;
+                self.record_trace(grid_t);
+                self.next_trace_s += self.trace_interval_s;
             }
             match ev {
-                Event::DeviceInferDone { device } => self.on_infer_done(t, device),
+                Event::DeviceInferDone { device, dur_s } => self.on_infer_done(t, device, dur_s),
                 Event::ServerArrival { request } => self.on_server_arrival(t, request),
-                Event::ServerBatchDone => self.on_batch_done(t),
+                Event::ServerBatchDone { server } => self.on_batch_done(t, server),
                 Event::ResultArrival { device, request } => self.on_result(t, device, request),
+                Event::RequestShed { device, request } => self.on_shed(t, device, request),
                 Event::SrWindow { device } => self.on_sr_window(t, device),
                 Event::DeviceResume { device } => self.on_resume(t, device),
             }
         }
+        self.metrics.shed = self.pool.shed_count();
+        self.metrics.per_server_batches = self.pool.batches_per_replica();
         self.metrics.real_compute_ms = self.provider.real_compute_ms();
         Ok(self.metrics)
     }
@@ -233,14 +255,16 @@ impl<'a> SimEngine<'a> {
         self.metrics.record(rec);
     }
 
-    fn on_infer_done(&mut self, t: f64, device: usize) {
+    fn on_infer_done(&mut self, t: f64, device: usize, dur_s: f64) {
         let d = &mut self.devices[device];
         if !d.online || d.done() {
             return;
         }
         let sample = d.spec.stream[d.pos];
         d.pos += 1;
-        let start_s = t - d.t_inf_s; // approximate: jitter folded in
+        // Exact: the event carries the jittered duration that was
+        // actually scheduled, so this is the true inference start.
+        let start_s = t - dur_s;
         let model = d.model;
         let threshold = d.threshold;
         let (bvsb, correct) = self.provider.device_output(model, sample);
@@ -253,6 +277,7 @@ impl<'a> SimEngine<'a> {
                 device,
                 sample,
                 start_s,
+                local_correct: correct,
                 correct: None,
             };
             let rid = self.requests.len();
@@ -282,24 +307,46 @@ impl<'a> SimEngine<'a> {
         }
         if d.outstanding < self.cfg.max_outstanding {
             let dt = d.next_inference_s();
-            self.events.push(t + dt, Event::DeviceInferDone { device });
+            self.events
+                .push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
         } else {
             d.stalled = true; // resume on next result arrival
         }
     }
 
     fn on_server_arrival(&mut self, t: f64, request: usize) {
-        self.queue.push_back(request);
-        if !self.server_busy {
-            self.start_batch(t);
+        let r = &self.requests[request];
+        let d = &self.devices[r.device];
+        let pending = PendingRequest {
+            id: request,
+            tier: d.spec.tier,
+            start_s: r.start_s,
+            deadline_s: r.start_s + d.spec.slo_ms / 1000.0,
+            arrival_s: t,
+        };
+        // Cheapest possible remaining service: a batch-1 run on the
+        // current model plus the return hop. Only worth computing when
+        // admission control is on — this is the per-forward hot path.
+        let min_service_s = if self.pool.shedding() {
+            (self.latency_of)(self.pool.model(0)).batch_ms(1) / 1000.0 + self.comm_s()
+        } else {
+            0.0
+        };
+        let device = r.device;
+        match self.pool.admit(pending, t, min_service_s) {
+            Admission::Shed => {
+                self.events
+                    .push(t + self.comm_s(), Event::RequestShed { device, request });
+            }
+            Admission::Queued => self.dispatch(t),
         }
     }
 
     /// Dynamic batching (§V-A): largest grid batch that the current
-    /// queue can fill, capped by the model's max useful batch.
-    fn pick_batch_size(&self) -> usize {
-        let model = (self.latency_of)(&self.server_model);
-        let qlen = self.queue.len();
+    /// queue can fill, capped by the replica model's max useful batch.
+    fn pick_batch_size(&self, server: usize) -> usize {
+        let model = (self.latency_of)(self.pool.model(server));
+        let qlen = self.pool.queue_len();
         self.cfg
             .batch_grid
             .iter()
@@ -310,53 +357,81 @@ impl<'a> SimEngine<'a> {
             .min(qlen.max(1))
     }
 
-    fn start_batch(&mut self, t: f64) {
-        if self.queue.is_empty() {
-            return;
+    /// Feed every idle replica while the queue has work.
+    fn dispatch(&mut self, t: f64) {
+        while self.pool.queue_len() > 0 {
+            let Some(server) = self.pool.next_idle() else {
+                return;
+            };
+            self.start_batch(t, server);
         }
+    }
+
+    fn start_batch(&mut self, t: f64, server: usize) {
         // The load signal MultiTASC monitors: the batch it WOULD form if
         // the grid were unbounded (i.e. the backlog), so congestion is
         // visible even once the formed batch saturates at the grid cap.
-        let load_signal = self.queue.len();
-        let b = self.pick_batch_size();
-        self.in_flight_batch.clear();
-        for _ in 0..b {
-            if let Some(r) = self.queue.pop_front() {
-                self.in_flight_batch.push(r);
-            }
+        let load_signal = self.pool.queue_len();
+        if load_signal == 0 {
+            return;
         }
-        self.server_busy = true;
-        self.metrics.batch_sizes.push(self.in_flight_batch.len() as f64);
+        let b = self.pick_batch_size(server);
+        let model_name = self.pool.model(server).to_string();
+        // Feasibility estimate for shedding: a popped request rides a
+        // batch of (at most) the planned size `b`. When culls shrink
+        // the actual batch this over-estimates service time and sheds
+        // a borderline request that might have squeaked by — which is
+        // the right bias for an SLO-targeting system: an over-shed
+        // request still returns well before its deadline (costing a
+        // little accuracy), while an under-shed one burns a batch slot
+        // to deliver a guaranteed SLO miss.
+        let min_service_s = if self.pool.shedding() {
+            (self.latency_of)(&model_name).batch_ms(b) / 1000.0 + self.comm_s()
+        } else {
+            0.0
+        };
+        let fb = self.pool.start_batch(server, b, t, min_service_s);
+        for p in &fb.shed {
+            let device = self.requests[p.id].device;
+            self.events
+                .push(t + self.comm_s(), Event::RequestShed { device, request: p.id });
+        }
+        if fb.formed == 0 {
+            // Everything popped was shed; the replica stays idle and the
+            // dispatch loop decides whether the (shrunk) queue warrants
+            // another pass.
+            return;
+        }
+        self.metrics.batch_sizes.push(fb.formed as f64);
         *self
             .metrics
             .server_model_batches
-            .entry(self.server_model.clone())
+            .entry(model_name.clone())
             .or_insert(0) += 1;
         // MultiTASC's congestion signal (batch-size proxy, §I).
-        let updates = self
-            .scheduler
-            .on_batch_observed(load_signal.max(self.in_flight_batch.len()));
+        let updates = self.scheduler.on_batch_observed(load_signal.max(fb.formed));
         self.apply_updates(&updates);
-        let lat = (self.latency_of)(&self.server_model);
-        let dur_s = lat.batch_ms(self.in_flight_batch.len()) / 1000.0;
-        self.events.push(t + dur_s, Event::ServerBatchDone);
+        let lat = (self.latency_of)(&model_name);
+        let dur_s = lat.batch_ms(fb.formed) / 1000.0;
+        self.events.push(t + dur_s, Event::ServerBatchDone { server });
     }
 
-    fn on_batch_done(&mut self, t: f64) {
-        let batch = std::mem::take(&mut self.in_flight_batch);
-        let samples: Vec<usize> = batch.iter().map(|&r| self.requests[r].sample).collect();
-        let correct = self.provider.server_outputs(&self.server_model, &samples);
+    fn on_batch_done(&mut self, t: f64, server: usize) {
+        let batch = self.pool.finish_batch(server);
+        let samples: Vec<usize> = batch
+            .iter()
+            .map(|p| self.requests[p.id].sample)
+            .collect();
+        let model_name = self.pool.model(server).to_string();
+        let correct = self.provider.server_outputs(&model_name, &samples);
         let comm = self.comm_s();
-        for (&rid, ok) in batch.iter().zip(correct) {
-            self.requests[rid].correct = Some(ok);
-            let device = self.requests[rid].device;
+        for (p, ok) in batch.iter().zip(correct) {
+            self.requests[p.id].correct = Some(ok);
+            let device = self.requests[p.id].device;
             self.events
-                .push(t + comm, Event::ResultArrival { device, request: rid });
+                .push(t + comm, Event::ResultArrival { device, request: p.id });
         }
-        self.server_busy = false;
-        if !self.queue.is_empty() {
-            self.start_batch(t);
-        }
+        self.dispatch(t);
     }
 
     fn on_result(&mut self, t: f64, device: usize, request: usize) {
@@ -365,12 +440,34 @@ impl<'a> SimEngine<'a> {
             (r.start_s, r.correct.expect("result without correctness"))
         };
         self.complete_sample(t, device, start_s, true, correct);
+        self.release_outstanding(t, device);
+    }
+
+    /// A shed request's notice reached the device: the local prediction
+    /// stands, completing the sample without server service. The sample
+    /// still counts as forwarded — it paid the comm hop and an
+    /// outstanding slot, so `forward_rate()` keeps measuring offered
+    /// network/server load; `RunMetrics::shed` separates the culled
+    /// share.
+    fn on_shed(&mut self, t: f64, device: usize, request: usize) {
+        let (start_s, correct) = {
+            let r = &self.requests[request];
+            (r.start_s, r.local_correct)
+        };
+        self.complete_sample(t, device, start_s, true, correct);
+        self.release_outstanding(t, device);
+    }
+
+    /// Common post-completion path for forwarded requests: free the
+    /// in-flight slot and un-stall the device stream if throttled.
+    fn release_outstanding(&mut self, t: f64, device: usize) {
         let d = &mut self.devices[device];
         d.outstanding = d.outstanding.saturating_sub(1);
         if d.stalled && d.online && !d.done() && d.outstanding < self.cfg.max_outstanding {
             d.stalled = false;
             let dt = d.next_inference_s();
-            self.events.push(t + dt, Event::DeviceInferDone { device });
+            self.events
+                .push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
         }
     }
 
@@ -401,7 +498,7 @@ impl<'a> SimEngine<'a> {
                 let ths = self.scheduler.thresholds();
                 if let Some(new_model) = ctl.maybe_switch(&ths, t) {
                     log::debug!("t={t:.1}s: server model switch -> {new_model}");
-                    self.server_model = new_model;
+                    self.pool.set_model(&new_model);
                 }
             }
         }
@@ -420,7 +517,8 @@ impl<'a> SimEngine<'a> {
         if !d.done() {
             let dt = d.next_inference_s();
             if d.outstanding < self.cfg.max_outstanding {
-                self.events.push(t + dt, Event::DeviceInferDone { device });
+                self.events
+                    .push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
             } else {
                 d.stalled = true;
             }
@@ -464,8 +562,8 @@ impl<'a> SimEngine<'a> {
                 .map(|p| (p.running_sr, p.running_acc))
                 .unwrap_or((100.0, 0.0))
         };
-        let model_idx = usize::from(self.server_model == "srv_effnetb3")
-            + 2 * usize::from(self.server_model == "srv_deit");
+        let model = self.pool.model(0);
+        let model_idx = usize::from(model == "srv_effnetb3") + 2 * usize::from(model == "srv_deit");
         self.metrics.trace.push(TracePoint {
             t_s: t,
             active_devices: active,
@@ -476,7 +574,8 @@ impl<'a> SimEngine<'a> {
             },
             running_sr,
             running_acc,
-            queue_len: self.queue.len(),
+            queue_len: self.pool.queue_len(),
+            busy_servers: self.pool.busy_count(),
             server_model_idx: model_idx,
         });
     }

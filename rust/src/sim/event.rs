@@ -1,6 +1,12 @@
 //! Event queue for the discrete-event engine: a binary heap over
 //! (virtual time, sequence number) so simultaneous events pop in
 //! deterministic FIFO order.
+//!
+//! Timing invariant: every scheduled time must be finite. `total_cmp`
+//! gives NaN a fixed sort position, so a single NaN timestamp would not
+//! crash — it would silently misorder *every* subsequent pop. The push
+//! path therefore hard-panics on non-finite times in all build
+//! profiles (not just `debug_assert!`).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -9,13 +15,19 @@ use std::collections::BinaryHeap;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Event {
     /// Device finished local inference of its stream position.
-    DeviceInferDone { device: usize },
+    /// `dur_s` is the actual (jittered) inference duration that was
+    /// scheduled, so latency accounting can recover the exact start
+    /// time instead of assuming the Table I mean.
+    DeviceInferDone { device: usize, dur_s: f64 },
     /// A forwarded request reached the server queue.
     ServerArrival { request: usize },
-    /// The server finished the batch started earlier.
-    ServerBatchDone,
+    /// Replica `server` finished the batch started earlier.
+    ServerBatchDone { server: usize },
     /// A server result reached its device.
     ResultArrival { device: usize, request: usize },
+    /// A shed (admission-rejected) request's notice reached its device;
+    /// the device falls back to its local prediction.
+    RequestShed { device: usize, request: usize },
     /// A device's SR window closed (§IV-B telemetry tick).
     SrWindow { device: usize },
     /// Intermittent participation: device returns online.
@@ -66,7 +78,10 @@ impl EventQueue {
     }
 
     pub fn push(&mut self, t: f64, event: Event) {
-        debug_assert!(t.is_finite(), "non-finite event time");
+        assert!(
+            t.is_finite(),
+            "non-finite event time {t} for {event:?}: would corrupt heap ordering"
+        );
         self.heap.push(Scheduled {
             t,
             seq: self.seq,
@@ -95,8 +110,8 @@ mod tests {
     #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
-        q.push(3.0, Event::ServerBatchDone);
-        q.push(1.0, Event::DeviceInferDone { device: 0 });
+        q.push(3.0, Event::ServerBatchDone { server: 0 });
+        q.push(1.0, Event::DeviceInferDone { device: 0, dur_s: 0.03 });
         q.push(2.0, Event::SrWindow { device: 1 });
         assert_eq!(q.pop().unwrap().0, 1.0);
         assert_eq!(q.pop().unwrap().0, 2.0);
@@ -107,12 +122,12 @@ mod tests {
     #[test]
     fn ties_break_fifo() {
         let mut q = EventQueue::new();
-        q.push(1.0, Event::DeviceInferDone { device: 10 });
-        q.push(1.0, Event::DeviceInferDone { device: 20 });
-        q.push(1.0, Event::DeviceInferDone { device: 30 });
+        q.push(1.0, Event::DeviceInferDone { device: 10, dur_s: 0.03 });
+        q.push(1.0, Event::DeviceInferDone { device: 20, dur_s: 0.03 });
+        q.push(1.0, Event::DeviceInferDone { device: 30, dur_s: 0.03 });
         let order: Vec<usize> = (0..3)
             .map(|_| match q.pop().unwrap().1 {
-                Event::DeviceInferDone { device } => device,
+                Event::DeviceInferDone { device, .. } => device,
                 _ => unreachable!(),
             })
             .collect();
@@ -123,9 +138,23 @@ mod tests {
     fn len_tracks() {
         let mut q = EventQueue::new();
         assert!(q.is_empty());
-        q.push(0.5, Event::ServerBatchDone);
+        q.push(0.5, Event::ServerBatchDone { server: 0 });
         assert_eq!(q.len(), 1);
         q.pop();
         assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_time_panics_in_all_profiles() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, Event::SrWindow { device: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_time_panics() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, Event::SrWindow { device: 0 });
     }
 }

@@ -85,7 +85,7 @@ pub fn run_scenario_with(
             stream,
             initial_threshold: initial,
             sr_target: cfg.sr_target,
-            slo_ms: scn.slo_ms,
+            slo_ms: scn.slo_for(tier),
             offline_at,
             offline_duration_s,
         });
@@ -123,6 +123,7 @@ pub fn run_scenario_with(
         provider,
         &latency_of,
         &scn.server_model,
+        scn.server,
         specs,
         scn.seed,
     );

@@ -4,6 +4,8 @@
 pub mod engine;
 pub mod event;
 pub mod experiment;
+pub mod server;
 
 pub use engine::{DeviceSpec, SimEngine};
 pub use experiment::{run_scenario, run_scenario_with, Overrides};
+pub use server::{Admission, PendingRequest, QueueDiscipline, ServerPool};

@@ -1,0 +1,650 @@
+//! Server-side subsystem: a pool of replica servers fed by a pluggable
+//! queue discipline.
+//!
+//! The seed engine hard-coded one FIFO `VecDeque` and a single
+//! `server_busy` bit. This module turns that into the extension point
+//! for replicated consumer-edge deployments (CascadeServe-style
+//! latency-aware serving; "AI Multi-Tenancy on Edge" priority
+//! scheduling):
+//!
+//! * [`ServerPool`] — N replica servers behind one shared queue. Each
+//!   replica carries its own model name (hence its own latency model),
+//!   busy state, in-flight batch, and served-batch counter.
+//! * [`QueueDiscipline`] — the ordering policy of the shared queue,
+//!   with three implementations:
+//!   [`Fifo`] (the seed behavior), [`Edf`] (earliest SLO deadline
+//!   first, tie-broken by arrival), and [`TierWfq`] (weighted fair
+//!   queueing across device tiers — a flooding tier cannot starve the
+//!   others).
+//! * Optional admission control: [`ServerPool::admit`] sheds requests
+//!   whose SLO slack is already blown at enqueue time; the engine
+//!   returns those to the device as local-only completions.
+//!
+//! Determinism: every discipline breaks ties on arrival sequence, so a
+//! given seed replays the exact same schedule. With one replica, the
+//! FIFO discipline, and shedding off, the pool reproduces the seed
+//! engine's event sequence exactly.
+
+use std::collections::VecDeque;
+
+use crate::config::scenario::{QueueKind, ServerPolicy};
+use crate::models::Tier;
+
+fn tier_index(t: Tier) -> usize {
+    match t {
+        Tier::Low => 0,
+        Tier::Mid => 1,
+        Tier::High => 2,
+        Tier::Vit => 3,
+    }
+}
+
+const NUM_TIERS: usize = 4;
+
+/// A forwarded request waiting for (or undergoing) server inference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PendingRequest {
+    /// Engine-side request id.
+    pub id: usize,
+    pub tier: Tier,
+    /// Virtual time the sample's local inference started (s).
+    pub start_s: f64,
+    /// Absolute SLO deadline: `start_s + slo` (s).
+    pub deadline_s: f64,
+    /// Virtual time the request reached the server queue (s).
+    pub arrival_s: f64,
+}
+
+impl PendingRequest {
+    /// Remaining slack before the deadline at virtual time `now`.
+    pub fn slack_s(&self, now: f64) -> f64 {
+        self.deadline_s - now
+    }
+}
+
+/// Ordering policy of the shared server queue.
+///
+/// Implementations must be deterministic: equal-priority requests pop
+/// in arrival order.
+pub trait QueueDiscipline {
+    fn push(&mut self, req: PendingRequest);
+    /// Remove and return the next request to serve at time `now`.
+    fn pop(&mut self, now: f64) -> Option<PendingRequest>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn name(&self) -> &'static str;
+}
+
+/// First-in first-out — the seed engine's behavior.
+#[derive(Debug, Default)]
+pub struct Fifo {
+    queue: VecDeque<PendingRequest>,
+}
+
+impl Fifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl QueueDiscipline for Fifo {
+    fn push(&mut self, req: PendingRequest) {
+        self.queue.push_back(req);
+    }
+
+    fn pop(&mut self, _now: f64) -> Option<PendingRequest> {
+        self.queue.pop_front()
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+/// Earliest-deadline-first: the request with the least remaining SLO
+/// slack pops first; ties break on arrival sequence (FIFO).
+#[derive(Debug, Default)]
+pub struct Edf {
+    heap: std::collections::BinaryHeap<EdfEntry>,
+    seq: u64,
+}
+
+#[derive(Debug)]
+struct EdfEntry {
+    req: PendingRequest,
+    seq: u64,
+}
+
+impl PartialEq for EdfEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for EdfEntry {}
+
+impl PartialOrd for EdfEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EdfEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed for min-heap: earliest deadline (then earliest
+        // arrival) is the max element.
+        other
+            .req
+            .deadline_s
+            .total_cmp(&self.req.deadline_s)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl Edf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl QueueDiscipline for Edf {
+    fn push(&mut self, req: PendingRequest) {
+        self.heap.push(EdfEntry { req, seq: self.seq });
+        self.seq += 1;
+    }
+
+    fn pop(&mut self, _now: f64) -> Option<PendingRequest> {
+        self.heap.pop().map(|e| e.req)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+}
+
+/// Weighted fair queueing across device tiers.
+///
+/// Classic virtual-time WFQ at request granularity: each tier carries a
+/// virtual finish time that advances by `1/weight` per served request;
+/// the non-empty tier with the smallest virtual time serves next. A
+/// tier that floods the queue therefore cannot starve a sparse tier:
+/// the sparse tier's virtual time lags and it wins the next slot as
+/// soon as it has work.
+#[derive(Debug)]
+pub struct TierWfq {
+    queues: [VecDeque<PendingRequest>; NUM_TIERS],
+    weights: [f64; NUM_TIERS],
+    vtime: [f64; NUM_TIERS],
+    /// Virtual time of the last service (newly-busy tiers start here,
+    /// so an idle period does not bank unbounded credit).
+    vnow: f64,
+    len: usize,
+}
+
+impl TierWfq {
+    /// Equal weights across tiers.
+    pub fn new() -> Self {
+        Self::with_weights([1.0; NUM_TIERS])
+    }
+
+    pub fn with_weights(weights: [f64; NUM_TIERS]) -> Self {
+        assert!(
+            weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+            "WFQ weights must be positive and finite: {weights:?}"
+        );
+        Self {
+            queues: Default::default(),
+            weights,
+            vtime: [0.0; NUM_TIERS],
+            vnow: 0.0,
+            len: 0,
+        }
+    }
+}
+
+impl Default for TierWfq {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QueueDiscipline for TierWfq {
+    fn push(&mut self, req: PendingRequest) {
+        let i = tier_index(req.tier);
+        if self.queues[i].is_empty() {
+            self.vtime[i] = self.vtime[i].max(self.vnow);
+        }
+        self.queues[i].push_back(req);
+        self.len += 1;
+    }
+
+    fn pop(&mut self, _now: f64) -> Option<PendingRequest> {
+        let mut best: Option<usize> = None;
+        for i in 0..NUM_TIERS {
+            if self.queues[i].is_empty() {
+                continue;
+            }
+            // Strict `<` keeps the tie-break on the lowest tier index,
+            // which is deterministic run-to-run.
+            let better = match best {
+                Some(b) => self.vtime[i] < self.vtime[b],
+                None => true,
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let i = best?;
+        let req = self.queues[i].pop_front();
+        self.vnow = self.vtime[i];
+        self.vtime[i] += 1.0 / self.weights[i];
+        self.len -= 1;
+        req
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn name(&self) -> &'static str {
+        "tier-wfq"
+    }
+}
+
+/// Build a discipline from its scenario descriptor.
+pub fn build_discipline(kind: QueueKind) -> Box<dyn QueueDiscipline> {
+    match kind {
+        QueueKind::Fifo => Box::new(Fifo::new()),
+        QueueKind::Edf => Box::new(Edf::new()),
+        QueueKind::TierWfq => Box::new(TierWfq::new()),
+    }
+}
+
+/// One replica server: its own model (=> latency model), busy state,
+/// in-flight batch, and served-batch counter.
+#[derive(Debug)]
+pub struct Replica {
+    pub model: String,
+    pub busy: bool,
+    pub in_flight: Vec<PendingRequest>,
+    pub batches_served: usize,
+}
+
+/// Outcome of offering a request to the pool's admission control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Enqueued; the engine should try to dispatch idle replicas.
+    Queued,
+    /// Slack already blown — return to the device as a local-only
+    /// completion.
+    Shed,
+}
+
+/// Result of [`ServerPool::start_batch`]: how many requests went in
+/// flight, and which were shed at formation time.
+#[derive(Debug)]
+pub struct FormedBatch {
+    pub formed: usize,
+    pub shed: Vec<PendingRequest>,
+}
+
+/// N replica servers behind one shared [`QueueDiscipline`].
+pub struct ServerPool {
+    replicas: Vec<Replica>,
+    queue: Box<dyn QueueDiscipline>,
+    shed: bool,
+    shed_count: usize,
+}
+
+impl ServerPool {
+    pub fn new(policy: ServerPolicy, model: &str) -> Self {
+        assert!(policy.replicas >= 1, "server pool needs >= 1 replica");
+        let replicas = (0..policy.replicas)
+            .map(|_| Replica {
+                model: model.to_string(),
+                busy: false,
+                in_flight: Vec::new(),
+                batches_served: 0,
+            })
+            .collect();
+        Self {
+            replicas,
+            queue: build_discipline(policy.queue),
+            shed: policy.shed,
+            shed_count: 0,
+        }
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn busy_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.busy).count()
+    }
+
+    pub fn discipline_name(&self) -> &'static str {
+        self.queue.name()
+    }
+
+    /// Whether admission-control shedding is enabled for this pool.
+    pub fn shedding(&self) -> bool {
+        self.shed
+    }
+
+    /// Requests shed by admission control so far.
+    pub fn shed_count(&self) -> usize {
+        self.shed_count
+    }
+
+    /// Per-replica served-batch counters.
+    pub fn batches_per_replica(&self) -> Vec<usize> {
+        self.replicas.iter().map(|r| r.batches_served).collect()
+    }
+
+    /// The model a replica currently serves.
+    pub fn model(&self, server: usize) -> &str {
+        &self.replicas[server].model
+    }
+
+    /// Switch every replica to `model` (§IV-E model switching; batches
+    /// already in flight keep their scheduled latency).
+    pub fn set_model(&mut self, model: &str) {
+        for r in &mut self.replicas {
+            r.model = model.to_string();
+        }
+    }
+
+    /// Offer a request to admission control and, if admitted, enqueue
+    /// it. `min_service_s` is the cheapest possible remaining service
+    /// (batch-1 latency plus the return hop): if even that cannot make
+    /// the deadline, the request is hopeless and queuing it would only
+    /// grow everyone else's delay.
+    pub fn admit(&mut self, req: PendingRequest, now: f64, min_service_s: f64) -> Admission {
+        if self.shed && now + min_service_s > req.deadline_s {
+            self.shed_count += 1;
+            return Admission::Shed;
+        }
+        self.queue.push(req);
+        Admission::Queued
+    }
+
+    /// Lowest-indexed idle replica, if any.
+    pub fn next_idle(&self) -> Option<usize> {
+        self.replicas.iter().position(|r| !r.busy)
+    }
+
+    /// Pop requests by discipline order to form a batch of up to `max`
+    /// on `server`, marking it busy when anything was formed.
+    ///
+    /// With shedding enabled, requests whose slack expired *while
+    /// queued* (`now + min_service_s` past their deadline) are culled
+    /// here instead of occupying batch slots — this is where admission
+    /// control actually bites, since a request that was feasible at
+    /// enqueue time goes hopeless during the queue wait. Shed requests
+    /// are returned so the engine can complete them as local-only.
+    pub fn start_batch(
+        &mut self,
+        server: usize,
+        max: usize,
+        now: f64,
+        min_service_s: f64,
+    ) -> FormedBatch {
+        let r = &mut self.replicas[server];
+        assert!(!r.busy, "start_batch on busy replica {server}");
+        r.in_flight.clear();
+        let mut shed = Vec::new();
+        while r.in_flight.len() < max {
+            match self.queue.pop(now) {
+                Some(req) => {
+                    if self.shed && now + min_service_s > req.deadline_s {
+                        self.shed_count += 1;
+                        shed.push(req);
+                    } else {
+                        r.in_flight.push(req);
+                    }
+                }
+                None => break,
+            }
+        }
+        let formed = r.in_flight.len();
+        if formed > 0 {
+            r.busy = true;
+            r.batches_served += 1;
+        }
+        FormedBatch { formed, shed }
+    }
+
+    /// The batch currently in flight on `server`.
+    pub fn in_flight(&self, server: usize) -> &[PendingRequest] {
+        &self.replicas[server].in_flight
+    }
+
+    /// Complete the batch on `server`, returning its requests and
+    /// marking the replica idle.
+    pub fn finish_batch(&mut self, server: usize) -> Vec<PendingRequest> {
+        let r = &mut self.replicas[server];
+        assert!(r.busy, "finish_batch on idle replica {server}");
+        r.busy = false;
+        std::mem::take(&mut r.in_flight)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, tier: Tier, deadline_s: f64) -> PendingRequest {
+        PendingRequest {
+            id,
+            tier,
+            start_s: 0.0,
+            deadline_s,
+            arrival_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn fifo_pops_in_arrival_order() {
+        let mut q = Fifo::new();
+        for i in 0..5 {
+            q.push(req(i, Tier::Low, 10.0 - i as f64));
+        }
+        let ids: Vec<usize> = (0..5).map(|_| q.pop(0.0).unwrap().id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(q.pop(0.0).is_none());
+    }
+
+    #[test]
+    fn edf_pops_earliest_deadline_first() {
+        let mut q = Edf::new();
+        q.push(req(0, Tier::Low, 3.0));
+        q.push(req(1, Tier::Low, 1.0));
+        q.push(req(2, Tier::Low, 2.0));
+        let ids: Vec<usize> = (0..3).map(|_| q.pop(0.0).unwrap().id).collect();
+        assert_eq!(ids, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn edf_ties_break_fifo() {
+        let mut q = Edf::new();
+        for i in 0..4 {
+            q.push(req(i, Tier::Low, 1.0));
+        }
+        let ids: Vec<usize> = (0..4).map(|_| q.pop(0.0).unwrap().id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn wfq_interleaves_flooded_and_sparse_tiers() {
+        let mut q = TierWfq::new();
+        // Tier Low floods with 10 requests; tier High has 2.
+        for i in 0..10 {
+            q.push(req(i, Tier::Low, 100.0));
+        }
+        q.push(req(100, Tier::High, 100.0));
+        q.push(req(101, Tier::High, 100.0));
+        // With equal weights the sparse tier's requests must surface in
+        // the first few pops, not after the flood.
+        let first4: Vec<usize> = (0..4).map(|_| q.pop(0.0).unwrap().id).collect();
+        assert!(
+            first4.contains(&100) && first4.contains(&101),
+            "sparse tier starved: first pops {first4:?}"
+        );
+        // All 12 eventually drain.
+        let mut n = first4.len();
+        while q.pop(0.0).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 12);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn wfq_respects_weights() {
+        // Low weighted 3x high: of the first 8 services with both
+        // backlogged, low should get ~6.
+        let mut q = TierWfq::with_weights([3.0, 1.0, 1.0, 1.0]);
+        for i in 0..20 {
+            q.push(req(i, Tier::Low, 100.0));
+            q.push(req(100 + i, Tier::High, 100.0));
+        }
+        let low_share = (0..8)
+            .filter(|_| q.pop(0.0).unwrap().tier == Tier::Low)
+            .count();
+        assert_eq!(low_share, 6, "3:1 weights should serve 6 of 8 from low");
+    }
+
+    #[test]
+    fn wfq_within_tier_is_fifo() {
+        let mut q = TierWfq::new();
+        for i in 0..5 {
+            q.push(req(i, Tier::Mid, 50.0 - i as f64));
+        }
+        let ids: Vec<usize> = (0..5).map(|_| q.pop(0.0).unwrap().id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pool_dispatches_to_all_replicas() {
+        let policy = ServerPolicy {
+            replicas: 3,
+            queue: QueueKind::Fifo,
+            shed: false,
+        };
+        let mut pool = ServerPool::new(policy, "srv_inception");
+        for i in 0..5 {
+            assert_eq!(
+                pool.admit(req(i, Tier::Low, 10.0), 0.0, 0.02),
+                Admission::Queued
+            );
+        }
+        assert_eq!(pool.queue_len(), 5);
+        // Fill all three replicas: 2 + 2 + 1.
+        let s0 = pool.next_idle().unwrap();
+        assert_eq!(pool.start_batch(s0, 2, 0.0, 0.02).formed, 2);
+        let s1 = pool.next_idle().unwrap();
+        assert_ne!(s0, s1);
+        assert_eq!(pool.start_batch(s1, 2, 0.0, 0.02).formed, 2);
+        let s2 = pool.next_idle().unwrap();
+        assert_eq!(pool.start_batch(s2, 2, 0.0, 0.02).formed, 1);
+        assert_eq!(pool.busy_count(), 3);
+        assert_eq!(pool.next_idle(), None);
+        assert_eq!(pool.queue_len(), 0);
+        // Finish one; its requests come back and it frees up.
+        let done = pool.finish_batch(s1);
+        assert_eq!(done.len(), 2);
+        assert_eq!(pool.busy_count(), 2);
+        assert_eq!(pool.next_idle(), Some(s1));
+        assert_eq!(pool.batches_per_replica(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn admission_sheds_hopeless_requests() {
+        let policy = ServerPolicy {
+            replicas: 1,
+            queue: QueueKind::Fifo,
+            shed: true,
+        };
+        let mut pool = ServerPool::new(policy, "srv_inception");
+        // Deadline 1.0s, now 0.5s, min service 0.1s => feasible.
+        assert_eq!(
+            pool.admit(req(0, Tier::Low, 1.0), 0.5, 0.1),
+            Admission::Queued
+        );
+        // Deadline 1.0s, now 0.95s, min service 0.1s => hopeless.
+        assert_eq!(
+            pool.admit(req(1, Tier::Low, 1.0), 0.95, 0.1),
+            Admission::Shed
+        );
+        assert_eq!(pool.shed_count(), 1);
+        assert_eq!(pool.queue_len(), 1);
+        // With shedding disabled the same request queues.
+        let mut keep = ServerPool::new(ServerPolicy::default(), "srv_inception");
+        assert_eq!(
+            keep.admit(req(1, Tier::Low, 1.0), 0.95, 0.1),
+            Admission::Queued
+        );
+    }
+
+    #[test]
+    fn batch_formation_sheds_requests_whose_slack_expired_while_queued() {
+        let policy = ServerPolicy {
+            replicas: 1,
+            queue: QueueKind::Fifo,
+            shed: true,
+        };
+        let mut pool = ServerPool::new(policy, "srv_inception");
+        // All feasible at enqueue time (t=0, min service 0.1).
+        assert_eq!(pool.admit(req(0, Tier::Low, 0.5), 0.0, 0.1), Admission::Queued);
+        assert_eq!(pool.admit(req(1, Tier::Low, 5.0), 0.0, 0.1), Admission::Queued);
+        assert_eq!(pool.admit(req(2, Tier::Low, 0.6), 0.0, 0.1), Admission::Queued);
+        // By t=1.0 the 0.5s and 0.6s deadlines are hopeless: formation
+        // culls them and fills the batch with the survivor.
+        let fb = pool.start_batch(0, 2, 1.0, 0.1);
+        assert_eq!(fb.formed, 1);
+        assert_eq!(pool.in_flight(0)[0].id, 1);
+        let shed_ids: Vec<usize> = fb.shed.iter().map(|r| r.id).collect();
+        assert_eq!(shed_ids, vec![0, 2]);
+        assert_eq!(pool.shed_count(), 2);
+        assert_eq!(pool.queue_len(), 0);
+        // A formation pass where everything is shed leaves the replica
+        // idle (formed == 0, no phantom busy state).
+        assert_eq!(pool.admit(req(3, Tier::Low, 1.05), 1.0, 0.1), Admission::Shed);
+        let done = pool.finish_batch(0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(pool.admit(req(4, Tier::Low, 1.2), 1.0, 0.1), Admission::Queued);
+        let fb = pool.start_batch(0, 4, 1.15, 0.1);
+        assert_eq!(fb.formed, 0);
+        assert_eq!(fb.shed.len(), 1);
+        assert_eq!(pool.busy_count(), 0);
+    }
+
+    #[test]
+    fn model_switch_applies_to_every_replica() {
+        let policy = ServerPolicy {
+            replicas: 2,
+            queue: QueueKind::Edf,
+            shed: false,
+        };
+        let mut pool = ServerPool::new(policy, "srv_inception");
+        pool.set_model("srv_effnetb3");
+        assert_eq!(pool.model(0), "srv_effnetb3");
+        assert_eq!(pool.model(1), "srv_effnetb3");
+        assert_eq!(pool.discipline_name(), "edf");
+    }
+}

@@ -4,7 +4,9 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
+
+use crate::config::scenario::{QueueKind, ServerPolicy};
 
 #[derive(Clone, Debug)]
 struct FlagSpec {
@@ -141,6 +143,29 @@ impl Args {
     }
 }
 
+/// Register the server-pool flags used by `mtpp sim`:
+/// `--servers N --queue fifo|edf|tier-wfq [--shed]`.
+pub fn server_flags(args: &mut Args) -> &mut Args {
+    args.flag("servers", "number of server replicas", Some("1"))
+        .flag(
+            "queue",
+            "server queue discipline: fifo|edf|tier-wfq",
+            Some("fifo"),
+        )
+        .switch("shed", "shed requests whose SLO slack is already blown")
+}
+
+/// Parse the flags registered by [`server_flags`] into a policy.
+pub fn server_policy(m: &Matches) -> Result<ServerPolicy> {
+    let replicas = m.get_usize("servers")?;
+    ensure!(replicas >= 1, "--servers must be >= 1, got {replicas}");
+    Ok(ServerPolicy {
+        replicas,
+        queue: QueueKind::parse(m.get_str("queue")?)?,
+        shed: m.get_bool("shed"),
+    })
+}
+
 impl Matches {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
@@ -229,6 +254,26 @@ mod tests {
     #[test]
     fn missing_value_rejected() {
         assert!(demo().parse(&argv(&["--devices"])).is_err());
+    }
+
+    #[test]
+    fn server_flags_parse_into_policy() {
+        use crate::config::scenario::QueueKind;
+        let mut a = Args::new("t", "test");
+        server_flags(&mut a);
+        // Defaults reproduce the seed single-server behavior.
+        let p = server_policy(&a.parse(&[]).unwrap()).unwrap();
+        assert_eq!(p, crate::config::scenario::ServerPolicy::default());
+        let m = a
+            .parse(&argv(&["--servers", "4", "--queue", "edf", "--shed"]))
+            .unwrap();
+        let p = server_policy(&m).unwrap();
+        assert_eq!(p.replicas, 4);
+        assert_eq!(p.queue, QueueKind::Edf);
+        assert!(p.shed);
+        // Invalid values are rejected.
+        assert!(server_policy(&a.parse(&argv(&["--servers", "0"])).unwrap()).is_err());
+        assert!(server_policy(&a.parse(&argv(&["--queue", "lifo"])).unwrap()).is_err());
     }
 
     #[test]

@@ -81,10 +81,20 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Collects samples, then reports summary stats.
+///
+/// Contract: [`Samples::values`] ALWAYS returns insertion order. Order
+/// statistics are served from an internal sorted copy, rebuilt lazily —
+/// querying a percentile never reorders the observed sequence. (The
+/// previous implementation sorted `xs` in place, so `values()` silently
+/// switched from insertion to sorted order after the first percentile
+/// query.)
 #[derive(Clone, Debug, Default)]
 pub struct Samples {
     xs: Vec<f64>,
-    sorted: bool,
+    /// Lazily-maintained sorted copy of `xs`; empty-and-stale when
+    /// `dirty`.
+    sorted: Vec<f64>,
+    dirty: bool,
 }
 
 impl Samples {
@@ -94,7 +104,7 @@ impl Samples {
 
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
-        self.sorted = false;
+        self.dirty = true;
     }
 
     pub fn len(&self) -> usize {
@@ -106,9 +116,11 @@ impl Samples {
     }
 
     fn ensure_sorted(&mut self) {
-        if !self.sorted {
-            self.xs.sort_by(|a, b| a.total_cmp(b));
-            self.sorted = true;
+        if self.dirty || self.sorted.len() != self.xs.len() {
+            self.sorted.clear();
+            self.sorted.extend_from_slice(&self.xs);
+            self.sorted.sort_by(|a, b| a.total_cmp(b));
+            self.dirty = false;
         }
     }
 
@@ -121,19 +133,21 @@ impl Samples {
 
     pub fn percentile(&mut self, q: f64) -> f64 {
         self.ensure_sorted();
-        percentile(&self.xs, q)
+        percentile(&self.sorted, q)
     }
 
     pub fn min(&mut self) -> f64 {
         self.ensure_sorted();
-        self.xs.first().copied().unwrap_or(f64::NAN)
+        self.sorted.first().copied().unwrap_or(f64::NAN)
     }
 
     pub fn max(&mut self) -> f64 {
         self.ensure_sorted();
-        self.xs.last().copied().unwrap_or(f64::NAN)
+        self.sorted.last().copied().unwrap_or(f64::NAN)
     }
 
+    /// The observed samples in insertion order (deterministic
+    /// regardless of any order-statistic queries in between).
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
@@ -191,6 +205,24 @@ mod tests {
         assert!((s.percentile(0.95) - 95.05).abs() < 0.2);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn values_stay_in_insertion_order_after_percentile() {
+        let mut s = Samples::new();
+        for &x in &[5.0, 1.0, 4.0, 2.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.values(), &[5.0, 1.0, 4.0, 2.0, 3.0]);
+        // Order-statistic queries must not reorder the observations.
+        assert_eq!(s.percentile(0.5), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.values(), &[5.0, 1.0, 4.0, 2.0, 3.0]);
+        // Interleaved pushes keep both views coherent.
+        s.push(0.5);
+        assert_eq!(s.min(), 0.5);
+        assert_eq!(s.values(), &[5.0, 1.0, 4.0, 2.0, 3.0, 0.5]);
     }
 
     #[test]

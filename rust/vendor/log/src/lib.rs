@@ -1,0 +1,243 @@
+//! Vendored minimal `log`-facade shim.
+//!
+//! Implements the subset of the `log` crate this workspace uses:
+//! [`Level`], [`LevelFilter`], [`Record`], [`Metadata`], the [`Log`]
+//! trait, [`set_logger`] / [`set_max_level`], and the five leveled
+//! macros. Records are built from pre-formatted `fmt::Arguments`
+//! rendered to a `String`, which keeps the shim allocation-simple; the
+//! macros check the max level *before* formatting so disabled levels
+//! cost one atomic load.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Verbosity levels, most severe first (matches `log::Level`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// A level filter: `Off` or a maximum enabled [`Level`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+}
+
+/// Metadata about a record (level + target module path).
+#[derive(Clone, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the formatted message.
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// Logger backend interface (matches `log::Log`).
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        false
+    }
+    fn log(&self, _: &Record) {}
+    fn flush(&self) {}
+}
+
+static NOP: NopLogger = NopLogger;
+static LOGGER_SET: AtomicBool = AtomicBool::new(false);
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Info as usize);
+
+// The installed logger. Mutated only once, guarded by LOGGER_SET's
+// compare-exchange, and only ever set to a &'static reference.
+static mut LOGGER: &dyn Log = &NOP;
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("attempted to set a logger after one was already set")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    if LOGGER_SET
+        .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+        .is_ok()
+    {
+        // Safety: guarded by the compare-exchange above — exactly one
+        // thread ever executes this store, before any reader can
+        // observe LOGGER_SET == true with SeqCst ordering.
+        unsafe {
+            LOGGER = logger;
+        }
+        Ok(())
+    } else {
+        Err(SetLoggerError(()))
+    }
+}
+
+/// Set the maximum enabled level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::SeqCst);
+}
+
+/// Current maximum enabled level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::SeqCst) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+fn logger() -> &'static dyn Log {
+    if LOGGER_SET.load(Ordering::SeqCst) {
+        // Safety: LOGGER is written exactly once before LOGGER_SET
+        // becomes true (SeqCst pairing in set_logger).
+        unsafe { LOGGER }
+    } else {
+        &NOP
+    }
+}
+
+/// Macro backend: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments) {
+    if level.as_usize() <= MAX_LEVEL.load(Ordering::Relaxed) {
+        let record = Record {
+            metadata: Metadata { level, target },
+            args,
+        };
+        logger().log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, _: &Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &Record) {
+            assert!(!format!("{}", record.args()).is_empty());
+            HITS.fetch_add(1, Ordering::SeqCst);
+        }
+        fn flush(&self) {}
+    }
+
+    static COUNTER: Counter = Counter;
+
+    #[test]
+    fn filtering_and_dispatch() {
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Info);
+        info!("hello {}", 1);
+        debug!("dropped");
+        assert_eq!(HITS.load(Ordering::SeqCst), 1);
+        set_max_level(LevelFilter::Debug);
+        debug!("now counted");
+        assert_eq!(HITS.load(Ordering::SeqCst), 2);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        assert!(set_logger(&COUNTER).is_err());
+    }
+}
