@@ -75,9 +75,71 @@ impl QueueKind {
     }
 }
 
-/// Server-side deployment shape: how many replica servers, which queue
-/// discipline feeds them, and whether hopeless requests are shed.
+/// How the engine chooses which idle replica serves the next batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchKind {
+    /// Lowest-indexed idle replica (the PR 1 behavior). Kept as the
+    /// comparison baseline for heterogeneous pools.
+    LowestIndex,
+    /// Idle replica minimizing the estimated completion time of the
+    /// batch it would form (its model's batch latency at the planned
+    /// batch size). For a homogeneous pool every candidate scores
+    /// identically and the lowest-index tie-break reproduces
+    /// [`DispatchKind::LowestIndex`] exactly.
+    ModelAware,
+}
+
+impl DispatchKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchKind::LowestIndex => "lowest",
+            DispatchKind::ModelAware => "model-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "lowest" | "lowest-index" => Ok(DispatchKind::LowestIndex),
+            "model-aware" | "aware" => Ok(DispatchKind::ModelAware),
+            other => anyhow::bail!("unknown dispatch policy '{other}' (lowest|model-aware)"),
+        }
+    }
+}
+
+/// Cost-aware autoscaling watermarks: the pool parks idle replicas when
+/// queue pressure is low and unparks them on backlog or shedding.
+/// Parked replicas serve nothing and their parked time is reported as
+/// `RunMetrics::parked_replica_seconds` (the cost the scaler saved).
 #[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscalePolicy {
+    /// Unpark a replica when queued requests per active replica exceed
+    /// this high watermark (or when admission control shed anything
+    /// since the last evaluation).
+    pub queue_high: f64,
+    /// Park an idle replica when queued requests per active replica
+    /// fall below this low watermark and nothing was shed.
+    pub queue_low: f64,
+    /// Never park below this many active replicas.
+    pub min_active: usize,
+    /// Minimum seconds between scaling actions (hysteresis dwell).
+    pub dwell_s: f64,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        Self {
+            queue_high: 8.0,
+            queue_low: 1.0,
+            min_active: 1,
+            dwell_s: 2.0,
+        }
+    }
+}
+
+/// Server-side deployment shape: how many replica servers, which models
+/// they serve, which queue discipline feeds them, how batches are
+/// dispatched and sized, and whether hopeless requests are shed.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServerPolicy {
     /// Number of replica servers behind the shared queue (>= 1).
     pub replicas: usize,
@@ -86,6 +148,22 @@ pub struct ServerPolicy {
     /// blown at enqueue time. Shed requests return to the device as
     /// local-only completions (the device's own prediction stands).
     pub shed: bool,
+    /// Per-replica model placement. Empty means every replica serves
+    /// the scenario's `server_model` (the homogeneous default); a
+    /// non-empty list must name one model per replica.
+    pub models: Vec<String>,
+    /// WFQ service weights per tier `[low, mid, high, vit]` (only used
+    /// by [`QueueKind::TierWfq`]; must be positive and finite).
+    pub wfq_weights: [f64; 4],
+    /// Idle-replica selection policy.
+    pub dispatch: DispatchKind,
+    /// Slack-aware batch sizing (CascadeServe-style): cap the formed
+    /// batch so the tightest-deadline queued request still makes its
+    /// SLO under the chosen replica's batch-latency curve.
+    pub slack_batch: bool,
+    /// Cost-aware replica autoscaling; `None` keeps every replica
+    /// active at all times (the PR 1 behavior).
+    pub autoscale: Option<AutoscalePolicy>,
 }
 
 impl Default for ServerPolicy {
@@ -94,6 +172,11 @@ impl Default for ServerPolicy {
             replicas: 1,
             queue: QueueKind::Fifo,
             shed: false,
+            models: Vec::new(),
+            wfq_weights: [1.0; 4],
+            dispatch: DispatchKind::ModelAware,
+            slack_batch: false,
+            autoscale: None,
         }
     }
 }
@@ -255,6 +338,39 @@ impl Scenario {
         self
     }
 
+    /// Per-replica model placement (implies `replicas = models.len()`).
+    pub fn with_server_models<S: Into<String>>(mut self, models: Vec<S>) -> Self {
+        assert!(!models.is_empty(), "per-replica model list cannot be empty");
+        self.server.models = models.into_iter().map(Into::into).collect();
+        self.server.replicas = self.server.models.len();
+        self
+    }
+
+    /// WFQ tier weights `[low, mid, high, vit]`.
+    pub fn with_wfq_weights(mut self, weights: [f64; 4]) -> Self {
+        assert!(
+            weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+            "WFQ weights must be positive and finite: {weights:?}"
+        );
+        self.server.wfq_weights = weights;
+        self
+    }
+
+    pub fn with_dispatch(mut self, d: DispatchKind) -> Self {
+        self.server.dispatch = d;
+        self
+    }
+
+    pub fn with_slack_batch(mut self, on: bool) -> Self {
+        self.server.slack_batch = on;
+        self
+    }
+
+    pub fn with_autoscale(mut self, p: AutoscalePolicy) -> Self {
+        self.server.autoscale = Some(p);
+        self
+    }
+
     /// Override the SLO for one tier (other tiers keep `slo_ms`).
     pub fn with_tier_slo(mut self, tier: Tier, slo_ms: f64) -> Self {
         self.tier_slo_ms.retain(|&(t, _)| t != tier);
@@ -317,6 +433,38 @@ mod tests {
         assert_eq!(s.server.replicas, 1);
         assert_eq!(s.server.queue, QueueKind::Fifo);
         assert!(!s.server.shed);
+        assert!(s.server.models.is_empty());
+        assert_eq!(s.server.wfq_weights, [1.0; 4]);
+        assert_eq!(s.server.dispatch, DispatchKind::ModelAware);
+        assert!(!s.server.slack_batch);
+        assert!(s.server.autoscale.is_none());
+    }
+
+    #[test]
+    fn server_models_sets_replica_count() {
+        let s = Scenario::homogeneous(Tier::Low, 10, "srv_inception")
+            .with_server_models(vec!["srv_effnetb3", "srv_inception"])
+            .with_slack_batch(true)
+            .with_autoscale(AutoscalePolicy::default());
+        assert_eq!(s.server.replicas, 2);
+        assert_eq!(s.server.models, vec!["srv_effnetb3", "srv_inception"]);
+        assert!(s.server.slack_batch);
+        assert_eq!(s.server.autoscale.unwrap().min_active, 1);
+    }
+
+    #[test]
+    fn dispatch_kind_parse_roundtrip() {
+        for d in [DispatchKind::LowestIndex, DispatchKind::ModelAware] {
+            assert_eq!(DispatchKind::parse(d.name()).unwrap(), d);
+        }
+        assert!(DispatchKind::parse("random").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn wfq_weights_reject_nonpositive() {
+        let _ = Scenario::homogeneous(Tier::Low, 1, "srv_inception")
+            .with_wfq_weights([1.0, 0.0, 1.0, 1.0]);
     }
 
     #[test]

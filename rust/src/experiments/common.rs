@@ -251,11 +251,11 @@ pub fn print_rows(title: &str, rows: &[SweepRow]) {
 pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
     let mut csv = String::from(
         "t_s,active_devices,mean_threshold,running_sr,running_acc,queue_len,\
-         busy_servers,server_model_idx\n",
+         busy_servers,parked_servers,server_model_idx\n",
     );
     for p in &metrics.trace {
         csv.push_str(&format!(
-            "{:.2},{},{:.4},{:.2},{:.4},{},{},{}\n",
+            "{:.2},{},{:.4},{:.2},{:.4},{},{},{},{}\n",
             p.t_s,
             p.active_devices,
             p.mean_threshold,
@@ -263,6 +263,7 @@ pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
             p.running_acc,
             p.queue_len,
             p.busy_servers,
+            p.parked_servers,
             p.server_model_idx
         ));
     }

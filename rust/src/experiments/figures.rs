@@ -7,7 +7,9 @@
 
 use anyhow::Result;
 
-use crate::config::scenario::{Intermittent, QueueKind, Scenario, SchedulerKind};
+use crate::config::scenario::{
+    AutoscalePolicy, DispatchKind, Intermittent, QueueKind, Scenario, SchedulerKind, ServerPolicy,
+};
 use crate::experiments::common::{
     aggregate_rows, emit_rows, emit_trace, print_rows, Ctx, SweepRow,
 };
@@ -379,6 +381,115 @@ pub fn replicas(ctx: &mut Ctx) -> Result<()> {
     Ok(())
 }
 
+/// Server-policy grid for the heterogeneous-pool sweep, shared with
+/// `examples/hetero_pool.rs` and the CI smoke test so the experiment
+/// path cannot rot unexercised. Replica 0 is deliberately the *slow*
+/// model: lowest-index dispatch then parks head-of-queue work on it,
+/// which is exactly what model-aware dispatch fixes.
+pub fn hetero_pool_policies() -> Vec<(&'static str, ServerPolicy)> {
+    let mixed = || vec!["srv_effnetb3".to_string(), "srv_inception".to_string()];
+    vec![
+        (
+            "homog-x2",
+            ServerPolicy {
+                replicas: 2,
+                ..ServerPolicy::default()
+            },
+        ),
+        (
+            "hetero-lowest",
+            ServerPolicy {
+                replicas: 2,
+                models: mixed(),
+                dispatch: DispatchKind::LowestIndex,
+                ..ServerPolicy::default()
+            },
+        ),
+        (
+            "hetero-aware",
+            ServerPolicy {
+                replicas: 2,
+                models: mixed(),
+                ..ServerPolicy::default()
+            },
+        ),
+        (
+            "hetero-slack",
+            ServerPolicy {
+                replicas: 2,
+                models: mixed(),
+                slack_batch: true,
+                ..ServerPolicy::default()
+            },
+        ),
+        (
+            // Autoscaled placement puts FAST models at low indices:
+            // parking is highest-index-first and `min_active` replicas
+            // stay hot from index 0, so the always-on core must be the
+            // fast tier and the slow model the scale-out overflow —
+            // the reverse would serve underload entirely from the
+            // slowest replica.
+            "hetero-auto",
+            ServerPolicy {
+                replicas: 3,
+                models: vec![
+                    "srv_inception".to_string(),
+                    "srv_inception".to_string(),
+                    "srv_effnetb3".to_string(),
+                ],
+                slack_batch: true,
+                autoscale: Some(AutoscalePolicy::default()),
+                ..ServerPolicy::default()
+            },
+        ),
+    ]
+}
+
+/// Heterogeneous-pool extension sweep: the PR 1 `replicas` workload
+/// (overloaded mixed-criticality population, Static scheduler, so the
+/// serving layer decides the outcome) against a mixed
+/// EfficientNetB3 + InceptionV3 pool under lowest-index vs model-aware
+/// dispatch, slack-aware batching, and cost-aware autoscaling.
+pub fn hetero_pool(ctx: &mut Ctx) -> Result<()> {
+    let grid: Vec<usize> = if ctx.quick {
+        vec![20, 40, 60]
+    } else {
+        vec![10, 20, 30, 40, 60, 80]
+    };
+    let mut rows = Vec::new();
+    for (label, policy) in hetero_pool_policies() {
+        for &n in &grid {
+            let mut runs = Vec::new();
+            for &seed in &ctx.seeds() {
+                let scn = Scenario::heterogeneous(n, "srv_inception")
+                    .with_scheduler(SchedulerKind::Static)
+                    .with_slo(150.0)
+                    .with_tier_slo(Tier::Low, 100.0)
+                    .with_tier_slo(Tier::High, 400.0)
+                    .with_seed(seed)
+                    .with_samples(ctx.samples_per_device())
+                    .with_server_policy(policy.clone());
+                runs.push(ctx.run(&scn, &Overrides::default())?);
+            }
+            if policy.autoscale.is_some() {
+                let parked: f64 = runs.iter().map(|m| m.parked_replica_seconds).sum::<f64>()
+                    / runs.len() as f64;
+                println!("[hetero-pool] {label} n={n}: mean parked {parked:.1} replica-s");
+            }
+            let mut row = aggregate_rows(SchedulerKind::Static, 150.0, n, None, &runs);
+            // Reuse the scheduler column to tag the series.
+            row.scheduler = label;
+            rows.push(row);
+        }
+    }
+    print_rows(
+        "Heterogeneous pool: dispatch x slack batching x autoscale",
+        &rows,
+    );
+    emit_rows(&ctx.results_dir.join("hetero_pool.csv"), &rows)?;
+    Ok(())
+}
+
 /// The experiment registry: id -> driver.
 pub type Driver = fn(&mut Ctx) -> Result<()>;
 
@@ -400,6 +511,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, Driver)> {
             "replicas",
             "replicated server pool x queue discipline (extension)",
             replicas,
+        ),
+        (
+            "hetero-pool",
+            "heterogeneous pool: dispatch x slack batching x autoscale (extension)",
+            hetero_pool,
         ),
     ]
 }

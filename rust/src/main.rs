@@ -149,7 +149,7 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
     .with_samples(m.get_usize("samples")?)
     .with_seed(m.get_u64("seed")?)
     .with_switching(m.get_bool("switching"))
-    .with_server_policy(policy);
+    .with_server_policy(policy.clone());
     let t0 = std::time::Instant::now();
     let metrics = if m.get_bool("real") {
         ctx.run_real(&scn)?
@@ -157,14 +157,26 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         ctx.run(&scn, &Default::default())?
     };
     let wall = t0.elapsed().as_secs_f64();
+    let pool_desc = if policy.models.is_empty() {
+        format!("{} x{}", m.get_str("server")?, policy.replicas)
+    } else {
+        policy.models.join("+")
+    };
     println!(
-        "\nscenario: {} devices ({}), server {} x{} ({} queue{}), {} scheduler, SLO {} ms",
+        "\nscenario: {} devices ({}), server {} ({} queue, {} dispatch{}{}{}), {} scheduler, \
+         SLO {} ms",
         n,
         m.get_str("tier")?,
-        m.get_str("server")?,
-        policy.replicas,
+        pool_desc,
         policy.queue.name(),
+        policy.dispatch.name(),
         if policy.shed { ", shed" } else { "" },
+        if policy.slack_batch { ", slack-batch" } else { "" },
+        if policy.autoscale.is_some() {
+            ", autoscale"
+        } else {
+            ""
+        },
         m.get_str("scheduler")?,
         m.get_f64("slo")?
     );
@@ -198,6 +210,12 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
             per_server.join(", "),
             metrics.shed,
             100.0 * metrics.shed_rate()
+        );
+    }
+    if policy.autoscale.is_some() {
+        println!(
+            "autoscaler: {} scale events   parked {:.1} replica-seconds saved",
+            metrics.scale_events, metrics.parked_replica_seconds
         );
     }
     Ok(())

@@ -103,6 +103,9 @@ pub struct TracePoint {
     pub queue_len: usize,
     /// Replicas with a batch in flight at this instant.
     pub busy_servers: usize,
+    /// Replicas parked by the autoscaler at this instant.
+    pub parked_servers: usize,
+    /// Heaviest model placed on any replica (switch-ladder index).
     pub server_model_idx: usize,
 }
 
@@ -127,6 +130,11 @@ pub struct RunMetrics {
     pub per_server_batches: Vec<usize>,
     /// Requests shed by admission control (completed as local-only).
     pub shed: usize,
+    /// Replica-seconds spent parked by the autoscaler — the cost the
+    /// pool did NOT pay versus keeping every replica hot.
+    pub parked_replica_seconds: f64,
+    /// Park/unpark actions the autoscaler applied.
+    pub scale_events: usize,
 }
 
 impl RunMetrics {

@@ -12,6 +12,11 @@
 //! *heavier* one, along a latency/accuracy-ordered ladder (InceptionV3
 //! ⇄ EfficientNetB3 in the paper's Figs 17/18). Limits come from the
 //! calibration sweep (meta.json `switching`).
+//!
+//! With a replicated server pool the engine instantiates one controller
+//! *per replica* (each starting at that replica's placed model), so a
+//! heterogeneous pool walks the ladder replica by replica instead of
+//! switching monolithically — dwell and debounce state are per-replica.
 
 use std::collections::BTreeMap;
 

@@ -14,10 +14,22 @@
 //!   fused kernel with the softmax;
 //! * forwarded samples pay a comm hop, wait in the server-pool queue
 //!   (ordered by the scenario's [`QueueDiscipline`]), get dynamically
-//!   batched onto the first idle replica (largest grid batch <= queue
-//!   length, capped per model), pay the batch latency, and a return
+//!   batched onto an idle replica, pay the batch latency, and a return
 //!   hop; with admission control enabled, requests whose SLO slack is
-//!   already blown are shed and complete as local-only predictions;
+//!   already blown are shed and complete as local-only predictions.
+//!   Replica selection is model-aware by default
+//!   ([`DispatchKind::ModelAware`]): among idle replicas the engine
+//!   picks the one minimizing the estimated completion time of the
+//!   batch it would form — its model's `batch_ms` at the planned batch
+//!   size — tie-broken on the lowest index, which makes a homogeneous
+//!   pool bit-identical to the PR 1 lowest-index rule. Batch sizing is
+//!   "largest grid batch <= queue length, capped per model"; with
+//!   `slack_batch` on, the batch is further capped (CascadeServe-style)
+//!   so the tightest still-feasible queued request makes its SLO under
+//!   the chosen replica's latency curve. Admission-control feasibility
+//!   uses the *fastest* replica's batch-1 latency — with a
+//!   heterogeneous pool, a request is only hopeless if even the fastest
+//!   model cannot make its deadline;
 //! * each device throttles at `max_outstanding` in-flight forwards
 //!   (AMQP prefetch): past that the stream stalls — this is what makes
 //!   congestion hurt throughput, not just latency (Fig 6/9);
@@ -31,21 +43,28 @@
 //! series stay hole-free and drift-free.
 //!
 //! The server side lives in [`crate::sim::server`]: a [`ServerPool`]
-//! of N replicas behind a pluggable queue discipline. `--servers 1
+//! of N replicas behind a pluggable queue discipline, each replica
+//! serving its own model (`ServerPolicy::models`) and switched
+//! independently by its own §IV-E controller. A [`PoolScaler`]
+//! (`ServerPolicy::autoscale`) parks/unparks replicas on queue-pressure
+//! watermarks, evaluated on the fixed telemetry grid; parked time is
+//! reported as `RunMetrics::parked_replica_seconds`. `--servers 1
 //! --queue fifo` (the default) reproduces the seed single-server
 //! engine's event sequence exactly.
+//!
+//! [`DispatchKind::ModelAware`]: crate::config::scenario::DispatchKind::ModelAware
 
 use anyhow::Result;
 
 use crate::config::latency::{device_latency_ms, ServerLatencyModel};
-use crate::config::scenario::ServerPolicy;
+use crate::config::scenario::{DispatchKind, ServerPolicy};
 use crate::config::SystemConfig;
 use crate::metrics::{RunMetrics, SampleRecord, TracePoint};
 use crate::models::outputs::OutputProvider;
 use crate::models::Tier;
 use crate::scheduler::{Scheduler, SwitchController, ThresholdUpdate};
 use crate::sim::event::{Event, EventQueue};
-use crate::sim::server::{Admission, PendingRequest, ServerPool};
+use crate::sim::server::{Admission, PendingRequest, PoolScaler, ScaleAction, ServerPool};
 use crate::util::prng::Rng;
 
 /// Per-device configuration handed to the engine.
@@ -115,13 +134,18 @@ pub type LatencyFn<'a> = &'a dyn Fn(&str) -> ServerLatencyModel;
 pub struct SimEngine<'a> {
     cfg: &'a SystemConfig,
     scheduler: &'a mut dyn Scheduler,
-    switcher: Option<&'a mut SwitchController>,
+    /// One §IV-E controller per replica (empty = switching disabled);
+    /// each drives its own replica independently along the ladder.
+    switchers: Vec<SwitchController>,
     provider: &'a mut dyn OutputProvider,
     latency_of: LatencyFn<'a>,
 
     devices: Vec<DeviceState>,
     requests: Vec<Request>,
     pool: ServerPool,
+    dispatch_kind: DispatchKind,
+    slack_batch: bool,
+    scaler: Option<PoolScaler>,
 
     events: EventQueue,
     metrics: RunMetrics,
@@ -134,11 +158,11 @@ impl<'a> SimEngine<'a> {
     pub fn new(
         cfg: &'a SystemConfig,
         scheduler: &'a mut dyn Scheduler,
-        switcher: Option<&'a mut SwitchController>,
+        switchers: Vec<SwitchController>,
         provider: &'a mut dyn OutputProvider,
         latency_of: LatencyFn<'a>,
         server_model: &str,
-        policy: ServerPolicy,
+        policy: &ServerPolicy,
         specs: Vec<DeviceSpec>,
         seed: u64,
     ) -> Self {
@@ -164,16 +188,25 @@ impl<'a> SimEngine<'a> {
                 spec,
             });
         }
+        assert!(
+            switchers.is_empty() || switchers.len() == policy.replicas,
+            "need one switch controller per replica ({} vs {})",
+            switchers.len(),
+            policy.replicas
+        );
         let pool = ServerPool::new(policy, server_model);
         Self {
             cfg,
             scheduler,
-            switcher,
+            switchers,
             provider,
             latency_of,
             devices,
             requests: Vec::new(),
             pool,
+            dispatch_kind: policy.dispatch,
+            slack_batch: policy.slack_batch,
+            scaler: policy.autoscale.map(PoolScaler::new),
             events: EventQueue::new(),
             metrics: RunMetrics::default(),
             next_trace_s: 0.0,
@@ -201,11 +234,16 @@ impl<'a> SimEngine<'a> {
             self.events
                 .push(self.cfg.window_s * (1.0 + jitter), Event::SrWindow { device: id });
         }
+        let mut last_t = 0.0;
         while let Some((t, ev)) = self.events.pop() {
+            last_t = t;
             // Advance the telemetry trace on its fixed grid: one point
             // per elapsed interval boundary, never re-armed off-grid.
+            // The autoscaler shares the grid, so scaling decisions are
+            // deterministic in virtual time, not event-arrival order.
             while t >= self.next_trace_s {
                 let grid_t = self.next_trace_s;
+                self.autoscale_step(grid_t, t);
                 self.record_trace(grid_t);
                 self.next_trace_s += self.trace_interval_s;
             }
@@ -221,8 +259,42 @@ impl<'a> SimEngine<'a> {
         }
         self.metrics.shed = self.pool.shed_count();
         self.metrics.per_server_batches = self.pool.batches_per_replica();
+        self.metrics.parked_replica_seconds = self.pool.parked_replica_seconds(last_t);
         self.metrics.real_compute_ms = self.provider.real_compute_ms();
         Ok(self.metrics)
+    }
+
+    /// One autoscaler evaluation on the telemetry grid: feed the pool's
+    /// cumulative shed counter into the watermark rule (the scaler
+    /// tracks its own last-seen value, so sheds landing in a
+    /// dwell-blocked window are deferred, not lost) and, if a replica
+    /// was unparked, immediately offer it the queued backlog.
+    ///
+    /// `grid_t` stamps the (deterministic) scaling decision and its
+    /// parked-time accounting; the dispatch that follows an unpark runs
+    /// at `now` — the event time that triggered the grid catch-up —
+    /// because `grid_t` lies in the past of the event currently being
+    /// popped, and scheduling work back there would push events behind
+    /// the virtual clock (non-monotone times, replicas double-booked
+    /// against batches that finish "later" at earlier timestamps).
+    fn autoscale_step(&mut self, grid_t: f64, now: f64) {
+        if self.scaler.is_none() {
+            return;
+        }
+        let shed_total = self.pool.shed_count();
+        let action = self
+            .scaler
+            .as_mut()
+            .expect("checked above")
+            .step(&mut self.pool, shed_total, grid_t);
+        match action {
+            Some(ScaleAction::Unparked(_)) => {
+                self.metrics.scale_events += 1;
+                self.dispatch(now);
+            }
+            Some(ScaleAction::Parked(_)) => self.metrics.scale_events += 1,
+            None => {}
+        }
     }
 
     fn complete_sample(
@@ -325,10 +397,14 @@ impl<'a> SimEngine<'a> {
             arrival_s: t,
         };
         // Cheapest possible remaining service: a batch-1 run on the
-        // current model plus the return hop. Only worth computing when
+        // *fastest* replica's model plus the return hop — in a
+        // heterogeneous pool a request is only hopeless if even the
+        // fastest model cannot make its deadline (replica 0 may be the
+        // slow one). Parked replicas count too: the scaler can unpark
+        // them long before the deadline. Only worth computing when
         // admission control is on — this is the per-forward hot path.
         let min_service_s = if self.pool.shedding() {
-            (self.latency_of)(self.pool.model(0)).batch_ms(1) / 1000.0 + self.comm_s()
+            self.min_batch1_ms() / 1000.0 + self.comm_s()
         } else {
             0.0
         };
@@ -342,9 +418,19 @@ impl<'a> SimEngine<'a> {
         }
     }
 
-    /// Dynamic batching (§V-A): largest grid batch that the current
-    /// queue can fill, capped by the replica model's max useful batch.
-    fn pick_batch_size(&self, server: usize) -> usize {
+    /// Batch-1 latency of the fastest replica's model (ms) — the
+    /// admission-control feasibility floor for a heterogeneous pool.
+    fn min_batch1_ms(&self) -> f64 {
+        (0..self.pool.num_replicas())
+            .map(|s| (self.latency_of)(self.pool.model(s)).batch_ms(1))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Dynamic batching (§V-A), grid part: largest grid batch that the
+    /// current queue can fill, capped by the replica model's max useful
+    /// batch. O(grid) — no queue scan, so replica scoring can call it
+    /// per candidate cheaply.
+    fn base_batch_size(&self, server: usize) -> usize {
         let model = (self.latency_of)(self.pool.model(server));
         let qlen = self.pool.queue_len();
         self.cfg
@@ -357,10 +443,75 @@ impl<'a> SimEngine<'a> {
             .min(qlen.max(1))
     }
 
-    /// Feed every idle replica while the queue has work.
+    /// Batch size actually formed on `server` at `now`.
+    ///
+    /// With `slack_batch` on, a CascadeServe-style deadline cap applies
+    /// on top of [`Self::base_batch_size`]: the batch shrinks to the
+    /// largest grid size whose batch latency (plus the return hop)
+    /// still lets the tightest *feasible* queued request make its SLO
+    /// on this replica's curve. Feasible means servable at batch 1 —
+    /// a request whose deadline is already blown cannot be saved by any
+    /// batch size, so it is screened out rather than allowed to disable
+    /// the cap protecting the requests behind it. When nothing queued
+    /// is feasible the uncapped batch maximizes drain throughput
+    /// (admission control, if on, culls the hopeless at formation).
+    fn pick_batch_size(&self, server: usize, now: f64) -> usize {
+        let base = self.base_batch_size(server);
+        if !self.slack_batch {
+            return base;
+        }
+        let model = (self.latency_of)(self.pool.model(server));
+        let floor_s = now + model.batch_ms(1) / 1000.0 + self.comm_s();
+        let Some(deadline_s) = self.pool.min_feasible_queued_deadline(floor_s) else {
+            return base;
+        };
+        let qlen = self.pool.queue_len();
+        let slack_ms = (deadline_s - now - self.comm_s()) * 1000.0;
+        self.cfg
+            .batch_grid
+            .iter()
+            .filter(|&&b| b <= qlen && b <= model.max_batch && model.batch_ms(b) <= slack_ms)
+            .copied()
+            .max()
+            .unwrap_or(1)
+            .min(qlen.max(1))
+    }
+
+    /// Replica selection: lowest-indexed idle (the PR 1 rule), or
+    /// model-aware — the idle replica minimizing the estimated
+    /// completion time of the batch it would form (its model's batch
+    /// latency at the planned grid size). All idle candidates would
+    /// start at `now`, so comparing batch latencies compares completion
+    /// times. Scoring uses the O(grid) base size — the slack cap only
+    /// shrinks the winner's batch at formation, and scanning the queue
+    /// once per candidate would make dispatch O(replicas x qlen).
+    /// Strict `<` keeps the tie-break on the lowest index, making a
+    /// homogeneous pool bit-identical to the lowest-index rule.
+    fn pick_replica(&self) -> Option<usize> {
+        match self.dispatch_kind {
+            DispatchKind::LowestIndex => self.pool.next_idle(),
+            DispatchKind::ModelAware => {
+                let mut best: Option<(usize, f64)> = None;
+                for s in 0..self.pool.num_replicas() {
+                    if !self.pool.is_idle(s) {
+                        continue;
+                    }
+                    let b = self.base_batch_size(s);
+                    let cost = (self.latency_of)(self.pool.model(s)).batch_ms(b);
+                    if best.map_or(true, |(_, c)| cost < c) {
+                        best = Some((s, cost));
+                    }
+                }
+                best.map(|(s, _)| s)
+            }
+        }
+    }
+
+    /// Feed idle replicas (in dispatch-policy order) while the queue
+    /// has work.
     fn dispatch(&mut self, t: f64) {
         while self.pool.queue_len() > 0 {
-            let Some(server) = self.pool.next_idle() else {
+            let Some(server) = self.pick_replica() else {
                 return;
             };
             self.start_batch(t, server);
@@ -375,7 +526,7 @@ impl<'a> SimEngine<'a> {
         if load_signal == 0 {
             return;
         }
-        let b = self.pick_batch_size(server);
+        let b = self.pick_batch_size(server, t);
         let model_name = self.pool.model(server).to_string();
         // Feasibility estimate for shedding: a popped request rides a
         // batch of (at most) the planned size `b`. When culls shrink
@@ -493,12 +644,17 @@ impl<'a> SimEngine<'a> {
             if let Some(upd) = self.scheduler.on_sr_update(device, sr) {
                 self.apply_updates(&[upd]);
             }
-            // §IV-E: consult the switch controller on fresh telemetry.
-            if let Some(ctl) = self.switcher.as_deref_mut() {
+            // §IV-E: consult each replica's switch controller on fresh
+            // telemetry. All controllers see the same threshold
+            // population but move from their own ladder positions, so
+            // a mixed pool converges replica by replica.
+            if !self.switchers.is_empty() {
                 let ths = self.scheduler.thresholds();
-                if let Some(new_model) = ctl.maybe_switch(&ths, t) {
-                    log::debug!("t={t:.1}s: server model switch -> {new_model}");
-                    self.pool.set_model(&new_model);
+                for (server, ctl) in self.switchers.iter_mut().enumerate() {
+                    if let Some(new_model) = ctl.maybe_switch(&ths, t) {
+                        log::debug!("t={t:.1}s: replica {server} model switch -> {new_model}");
+                        self.pool.set_model(server, &new_model);
+                    }
                 }
             }
         }
@@ -513,6 +669,18 @@ impl<'a> SimEngine<'a> {
     fn on_resume(&mut self, t: f64, device: usize) {
         let d = &mut self.devices[device];
         d.online = true;
+        // A resumed device starts its SR window fresh: counters
+        // accumulated before (or during) the outage would otherwise
+        // bias the first post-outage Eq. 4 update toward stale,
+        // pre-outage conditions — exactly when Fig 19/20 intermittency
+        // needs the scheduler reacting to the *current* regime. The
+        // trace-interval counters reset with it so the Fig 19/20 time
+        // series shows the post-resume regime, not a stale mixture.
+        d.window_completed = 0;
+        d.window_satisfied = 0;
+        d.trace_completed = 0;
+        d.trace_satisfied = 0;
+        d.trace_correct = 0;
         self.scheduler.device_online(device);
         if !d.done() {
             let dt = d.next_inference_s();
@@ -562,8 +730,16 @@ impl<'a> SimEngine<'a> {
                 .map(|p| (p.running_sr, p.running_acc))
                 .unwrap_or((100.0, 0.0))
         };
-        let model = self.pool.model(0);
-        let model_idx = usize::from(model == "srv_effnetb3") + 2 * usize::from(model == "srv_deit");
+        // Heaviest model currently placed on ANY replica (ladder index;
+        // replica 0 alone would under-report a heterogeneous pool or a
+        // pool whose replicas switched independently).
+        let model_idx = (0..self.pool.num_replicas())
+            .map(|s| {
+                let m = self.pool.model(s);
+                usize::from(m == "srv_effnetb3") + 2 * usize::from(m == "srv_deit")
+            })
+            .max()
+            .unwrap_or(0);
         self.metrics.trace.push(TracePoint {
             t_s: t,
             active_devices: active,
@@ -576,6 +752,7 @@ impl<'a> SimEngine<'a> {
             running_acc,
             queue_len: self.pool.queue_len(),
             busy_servers: self.pool.busy_count(),
+            parked_servers: self.pool.parked_count(),
             server_model_idx: model_idx,
         });
     }

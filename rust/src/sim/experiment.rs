@@ -92,6 +92,17 @@ pub fn run_scenario_with(
     }
 
     // --- scheduler + switching --------------------------------------------
+    anyhow::ensure!(
+        scn.server.models.is_empty() || scn.server.models.len() == scn.server.replicas,
+        "per-replica model list ({}) must match replica count ({})",
+        scn.server.models.len(),
+        scn.server.replicas
+    );
+    // Fail fast on unknown replica models (panics with a clear message,
+    // like the scenario-level server_model does).
+    for m in &scn.server.models {
+        let _ = server_latency_model(m);
+    }
     let server_lat = server_latency_model(&scn.server_model);
     let mut sched = scheduler::build(
         scn.scheduler,
@@ -100,18 +111,31 @@ pub fn run_scenario_with(
         scn.slo_ms,
         &cfg.batch_grid,
     );
-    let mut switcher: Option<SwitchController> = if scn.model_switching {
+    // One §IV-E controller per replica, each starting at that replica's
+    // placed model, so a heterogeneous pool walks the ladder replica by
+    // replica instead of switching monolithically.
+    let switchers: Vec<SwitchController> = if scn.model_switching {
         let mut limits = std::collections::BTreeMap::new();
         for (tier_name, lims) in &registry.switching {
             limits.insert(Tier::parse(tier_name)?, *lims);
         }
-        Some(SwitchController::new(
-            SWITCH_LADDER.iter().map(|s| s.to_string()).collect(),
-            &scn.server_model,
-            limits,
-        )?)
+        (0..scn.server.replicas)
+            .map(|i| {
+                let initial = scn
+                    .server
+                    .models
+                    .get(i)
+                    .map(String::as_str)
+                    .unwrap_or(&scn.server_model);
+                SwitchController::new(
+                    SWITCH_LADDER.iter().map(|s| s.to_string()).collect(),
+                    initial,
+                    limits.clone(),
+                )
+            })
+            .collect::<Result<_>>()?
     } else {
-        None
+        Vec::new()
     };
 
     // --- run ----------------------------------------------------------------
@@ -119,11 +143,11 @@ pub fn run_scenario_with(
     let engine = SimEngine::new(
         cfg,
         sched.as_mut(),
-        switcher.as_mut(),
+        switchers,
         provider,
         &latency_of,
         &scn.server_model,
-        scn.server,
+        &scn.server,
         specs,
         scn.seed,
     );

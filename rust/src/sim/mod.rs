@@ -8,4 +8,6 @@ pub mod server;
 
 pub use engine::{DeviceSpec, SimEngine};
 pub use experiment::{run_scenario, run_scenario_with, Overrides};
-pub use server::{Admission, PendingRequest, QueueDiscipline, ServerPool};
+pub use server::{
+    Admission, PendingRequest, PoolScaler, QueueDiscipline, ScaleAction, ServerPool,
+};

@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::scenario::{QueueKind, ServerPolicy};
+use crate::config::scenario::{AutoscalePolicy, DispatchKind, QueueKind, ServerPolicy};
 
 #[derive(Clone, Debug)]
 struct FlagSpec {
@@ -144,7 +144,9 @@ impl Args {
 }
 
 /// Register the server-pool flags used by `mtpp sim`:
-/// `--servers N --queue fifo|edf|tier-wfq [--shed]`.
+/// `--servers N --queue fifo|edf|tier-wfq [--shed]
+///  --server-models a,b --wfq-weights low:3,mid:1
+///  --dispatch lowest|model-aware [--slack-batch] [--autoscale]`.
 pub fn server_flags(args: &mut Args) -> &mut Args {
     args.flag("servers", "number of server replicas", Some("1"))
         .flag(
@@ -153,16 +155,96 @@ pub fn server_flags(args: &mut Args) -> &mut Args {
             Some("fifo"),
         )
         .switch("shed", "shed requests whose SLO slack is already blown")
+        .flag(
+            "server-models",
+            "per-replica model placement, e.g. srv_inception,srv_effnetb3 \
+             (empty: every replica serves --server)",
+            Some(""),
+        )
+        .flag(
+            "wfq-weights",
+            "tier-WFQ service weights as tier:weight pairs, e.g. \
+             low:3,mid:1,high:1,vit:1 (unlisted tiers weigh 1)",
+            Some(""),
+        )
+        .flag(
+            "dispatch",
+            "idle-replica selection: lowest|model-aware",
+            Some("model-aware"),
+        )
+        .switch(
+            "slack-batch",
+            "cap batches so the tightest queued deadline is still met",
+        )
+        .switch(
+            "autoscale",
+            "park idle replicas on low queue pressure, unpark on backlog",
+        )
+}
+
+/// Parse `tier:weight` pairs into the `[low, mid, high, vit]` weight
+/// array (unlisted tiers default to 1). Rejects unknown tiers,
+/// duplicates, and non-positive or non-finite weights — the same
+/// invariant `TierWfq::with_weights` asserts.
+pub fn parse_wfq_weights(spec: &str) -> Result<[f64; 4]> {
+    let mut weights = [1.0; 4];
+    if spec.trim().is_empty() {
+        return Ok(weights);
+    }
+    let mut seen = [false; 4];
+    for pair in spec.split(',') {
+        let pair = pair.trim();
+        let (tier, w) = pair
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("bad WFQ weight '{pair}' (want tier:weight)"))?;
+        let idx = match tier.trim() {
+            "low" => 0,
+            "mid" => 1,
+            "high" => 2,
+            "vit" => 3,
+            other => bail!("unknown tier '{other}' in --wfq-weights (low|mid|high|vit)"),
+        };
+        ensure!(!seen[idx], "duplicate tier '{}' in --wfq-weights", tier.trim());
+        seen[idx] = true;
+        let w: f64 = w
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad WFQ weight value '{w}'"))?;
+        ensure!(
+            w > 0.0 && w.is_finite(),
+            "WFQ weight for '{}' must be positive and finite, got {w}",
+            tier.trim()
+        );
+        weights[idx] = w;
+    }
+    Ok(weights)
 }
 
 /// Parse the flags registered by [`server_flags`] into a policy.
 pub fn server_policy(m: &Matches) -> Result<ServerPolicy> {
     let replicas = m.get_usize("servers")?;
     ensure!(replicas >= 1, "--servers must be >= 1, got {replicas}");
+    let models: Vec<String> = m
+        .get_str("server-models")?
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    ensure!(
+        models.is_empty() || models.len() == replicas,
+        "--server-models names {} models but --servers is {replicas}",
+        models.len()
+    );
     Ok(ServerPolicy {
         replicas,
         queue: QueueKind::parse(m.get_str("queue")?)?,
         shed: m.get_bool("shed"),
+        models,
+        wfq_weights: parse_wfq_weights(m.get_str("wfq-weights")?)?,
+        dispatch: DispatchKind::parse(m.get_str("dispatch")?)?,
+        slack_batch: m.get_bool("slack-batch"),
+        autoscale: m.get_bool("autoscale").then(AutoscalePolicy::default),
     })
 }
 
@@ -274,6 +356,72 @@ mod tests {
         // Invalid values are rejected.
         assert!(server_policy(&a.parse(&argv(&["--servers", "0"])).unwrap()).is_err());
         assert!(server_policy(&a.parse(&argv(&["--queue", "lifo"])).unwrap()).is_err());
+    }
+
+    #[test]
+    fn hetero_pool_flags_parse_into_policy() {
+        use crate::config::scenario::DispatchKind;
+        let mut a = Args::new("t", "test");
+        server_flags(&mut a);
+        let m = a
+            .parse(&argv(&[
+                "--servers",
+                "2",
+                "--server-models",
+                "srv_effnetb3, srv_inception",
+                "--dispatch",
+                "lowest",
+                "--slack-batch",
+                "--autoscale",
+            ]))
+            .unwrap();
+        let p = server_policy(&m).unwrap();
+        assert_eq!(p.models, vec!["srv_effnetb3", "srv_inception"]);
+        assert_eq!(p.dispatch, DispatchKind::LowestIndex);
+        assert!(p.slack_batch);
+        assert!(p.autoscale.is_some());
+        // Model count must match the replica count.
+        let m = a
+            .parse(&argv(&["--servers", "3", "--server-models", "srv_inception"]))
+            .unwrap();
+        assert!(server_policy(&m).is_err());
+        // Unknown dispatch policy is rejected.
+        let m = a.parse(&argv(&["--dispatch", "random"])).unwrap();
+        assert!(server_policy(&m).is_err());
+    }
+
+    #[test]
+    fn wfq_weight_parsing_and_validation() {
+        assert_eq!(parse_wfq_weights("").unwrap(), [1.0; 4]);
+        assert_eq!(
+            parse_wfq_weights("low:3,mid:1,high:1,vit:1").unwrap(),
+            [3.0, 1.0, 1.0, 1.0]
+        );
+        // Unlisted tiers keep weight 1; whitespace tolerated.
+        assert_eq!(
+            parse_wfq_weights(" high : 2.5 ").unwrap(),
+            [1.0, 1.0, 2.5, 1.0]
+        );
+        // Rejections: format, unknown tier, duplicates, non-positive /
+        // non-finite weights (matching the TierWfq assert).
+        assert!(parse_wfq_weights("low").is_err());
+        assert!(parse_wfq_weights("turbo:2").is_err());
+        assert!(parse_wfq_weights("low:1,low:2").is_err());
+        assert!(parse_wfq_weights("low:0").is_err());
+        assert!(parse_wfq_weights("low:-3").is_err());
+        assert!(parse_wfq_weights("low:inf").is_err());
+        assert!(parse_wfq_weights("low:NaN").is_err());
+        assert!(parse_wfq_weights("low:abc").is_err());
+        // End-to-end through the flag surface.
+        let mut a = Args::new("t", "test");
+        server_flags(&mut a);
+        let m = a
+            .parse(&argv(&["--queue", "wfq", "--wfq-weights", "low:3,vit:2"]))
+            .unwrap();
+        let p = server_policy(&m).unwrap();
+        assert_eq!(p.wfq_weights, [3.0, 1.0, 1.0, 2.0]);
+        let m = a.parse(&argv(&["--wfq-weights", "low:0"])).unwrap();
+        assert!(server_policy(&m).is_err());
     }
 
     #[test]

@@ -79,6 +79,7 @@ fn default_policy_is_exactly_single_fifo() {
         replicas: 1,
         queue: QueueKind::Fifo,
         shed: false,
+        ..ServerPolicy::default()
     });
     let a = run(&base);
     let b = run(&explicit);
