@@ -9,7 +9,7 @@ use multitascpp::models::outputs::SyntheticOutputs;
 use multitascpp::models::registry::test_meta_json;
 use multitascpp::models::{Registry, Tier};
 use multitascpp::scheduler::{MultiTascPP, Scheduler};
-use multitascpp::sim::{run_scenario, Overrides};
+use multitascpp::sim::run_scenario;
 use multitascpp::util::json::Json;
 use multitascpp::util::prng::Rng;
 

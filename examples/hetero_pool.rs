@@ -1,35 +1,35 @@
 //! Model-aware heterogeneous replica pool.
 //!
-//! Runs the overloaded mixed-criticality population from the PR 1
-//! replicated-server example against a mixed EfficientNetB3 +
-//! InceptionV3 pool: lowest-index vs model-aware dispatch, slack-aware
-//! batch sizing, and cost-aware autoscaling. Prints overall / per-tier
-//! SLO satisfaction, per-replica batch counts, and the replica-seconds
-//! the autoscaler kept parked.
+//! Loads the shipped `edf-tight-slo` preset (the PR 1 replicated-server
+//! workload: overloaded mixed-criticality population) as a declarative
+//! `ScenarioSpec`, then swaps in each heterogeneous-pool server policy:
+//! lowest-index vs model-aware dispatch over a mixed EfficientNetB3 +
+//! InceptionV3 pool, slack-aware batch sizing, and cost-aware
+//! autoscaling (the `hetero-pool-autoscale` preset is the standalone
+//! version of the last row). Prints overall / per-tier SLO
+//! satisfaction, per-replica batch counts, and the replica-seconds the
+//! autoscaler kept parked.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example hetero_pool
 //! ```
 
-use multitascpp::config::scenario::{Scenario, SchedulerKind};
+use multitascpp::config::spec::ScenarioSpec;
 use multitascpp::experiments::figures::hetero_pool_policies;
 use multitascpp::experiments::Ctx;
 use multitascpp::models::Tier;
-use multitascpp::sim::Overrides;
 
 fn main() -> anyhow::Result<()> {
     multitascpp::util::logging::init();
     let artifacts = multitascpp::config::SystemConfig::locate_artifacts();
     let mut ctx = Ctx::load(&artifacts, std::path::Path::new("results"), true)?;
 
-    let base = || {
-        Scenario::heterogeneous(48, "srv_inception")
-            .with_scheduler(SchedulerKind::Static)
-            .with_slo(150.0)
-            .with_tier_slo(Tier::Low, 100.0)
-            .with_tier_slo(Tier::High, 400.0)
-            .with_samples(1500)
-            .with_seed(0)
+    // Each row replaces the whole `server` section with its policy, so
+    // only the preset's population / SLOs / stream length carry over.
+    let base = {
+        let mut spec = ScenarioSpec::preset("edf-tight-slo")?;
+        spec.set("devices", "hetero:48")?;
+        spec
     };
 
     println!(
@@ -37,8 +37,9 @@ fn main() -> anyhow::Result<()> {
         "configuration", "SR %", "low SR", "mid SR", "high SR", "batches", "parked s"
     );
     for (label, policy) in hetero_pool_policies() {
-        let scn = base().with_server_policy(policy);
-        let m = ctx.run(&scn, &Overrides::default())?;
+        let mut spec = base.clone();
+        spec.server = policy;
+        let m = ctx.run_spec(&spec)?;
         let tier_sr = |t: Tier| {
             m.tier(t)
                 .map(|a| a.satisfaction_rate())
@@ -61,8 +62,8 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!(
-        "\nsee `mtpp sim --server-models a,b --dispatch model-aware --slack-batch \
-         [--autoscale]` and `mtpp experiment hetero-pool` for the full sweep"
+        "\nsee `mtpp sim --preset hetero-pool-autoscale` and \
+         `mtpp experiment hetero-pool` for the full sweep"
     );
     Ok(())
 }

@@ -8,7 +8,6 @@
 use multitascpp::config::scenario::{Scenario, SchedulerKind};
 use multitascpp::experiments::Ctx;
 use multitascpp::models::Tier;
-use multitascpp::sim::Overrides;
 
 fn main() -> anyhow::Result<()> {
     multitascpp::util::logging::init();
@@ -22,7 +21,7 @@ fn main() -> anyhow::Result<()> {
                 .with_scheduler(kind)
                 .with_slo(150.0)
                 .with_samples(2000);
-            let m = ctx.run(&scn, &Overrides::default())?;
+            let m = ctx.run(&scn)?;
             println!("{n} devices, {}:", kind.name());
             for tier in [Tier::Low, Tier::Mid, Tier::High] {
                 if let Some(agg) = m.tier(tier) {

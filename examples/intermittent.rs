@@ -9,34 +9,28 @@
 use multitascpp::config::scenario::{Intermittent, Scenario, SchedulerKind};
 use multitascpp::experiments::Ctx;
 use multitascpp::models::Tier;
-use multitascpp::sim::Overrides;
 
 fn main() -> anyhow::Result<()> {
     multitascpp::util::logging::init();
     let artifacts = multitascpp::config::SystemConfig::locate_artifacts();
     let mut ctx = Ctx::load(&artifacts, std::path::Path::new("results"), true)?;
 
-    for (label, sched, ovr) in [
+    for (label, sched, initial_threshold) in [
         (
             "dynamic threshold (MultiTASC++)",
             SchedulerKind::MultiTascPP,
-            Overrides::default(),
+            None,
         ),
-        (
-            "static threshold 0.35",
-            SchedulerKind::Static,
-            Overrides {
-                initial_threshold: Some(0.35),
-            },
-        ),
+        ("static threshold 0.35", SchedulerKind::Static, Some(0.35)),
     ] {
-        let scn = Scenario::homogeneous(Tier::Low, 20, "srv_effnetb3")
+        let mut scn = Scenario::homogeneous(Tier::Low, 20, "srv_effnetb3")
             .with_scheduler(sched)
             .with_slo(150.0)
             .with_seed(1)
             .with_samples(2500)
             .with_intermittent(Intermittent::default());
-        let m = ctx.run(&scn, &ovr)?;
+        scn.initial_threshold = initial_threshold;
+        let m = ctx.run(&scn)?;
         println!("\n== {label} ==");
         println!(
             "overall SR {:.2}%  accuracy {:.2}%  makespan {:.1}s",

@@ -9,7 +9,6 @@
 use multitascpp::config::scenario::{Scenario, SchedulerKind};
 use multitascpp::experiments::Ctx;
 use multitascpp::models::Tier;
-use multitascpp::sim::Overrides;
 
 fn main() -> anyhow::Result<()> {
     multitascpp::util::logging::init();
@@ -28,7 +27,7 @@ fn main() -> anyhow::Result<()> {
                 .with_slo(150.0)
                 .with_samples(2500)
                 .with_switching(switching);
-            let m = ctx.run(&scn, &Overrides::default())?;
+            let m = ctx.run(&scn)?;
             let inc = m.server_model_batches.get("srv_inception").copied().unwrap_or(0);
             let eff = m.server_model_batches.get("srv_effnetb3").copied().unwrap_or(0);
             println!(

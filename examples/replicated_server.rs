@@ -1,52 +1,49 @@
 //! Replicated server pool with pluggable queue disciplines.
 //!
-//! Runs an overloaded, mixed-criticality heterogeneous population
-//! (low tier: tight 100 ms SLO; high tier: relaxed 400 ms) against
-//! FIFO / EDF / tier-WFQ server queues at 1 and 2 replicas, plus an
-//! admission-control (shedding) variant, and prints overall and
-//! per-tier SLO satisfaction.
+//! Loads the shipped `edf-tight-slo` preset (overloaded
+//! mixed-criticality heterogeneous population: low tier at a tight
+//! 100 ms SLO, high tier relaxed to 400 ms) and sweeps queue
+//! discipline x replica count x shedding through declarative
+//! `ScenarioSpec::set` overrides — the same dotted paths
+//! `mtpp sim --set` takes — printing overall and per-tier SLO
+//! satisfaction.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example replicated_server
 //! ```
 
-use multitascpp::config::scenario::{QueueKind, Scenario, SchedulerKind};
+use multitascpp::config::spec::ScenarioSpec;
 use multitascpp::experiments::Ctx;
 use multitascpp::models::Tier;
-use multitascpp::sim::Overrides;
 
 fn main() -> anyhow::Result<()> {
     multitascpp::util::logging::init();
     let artifacts = multitascpp::config::SystemConfig::locate_artifacts();
     let mut ctx = Ctx::load(&artifacts, std::path::Path::new("results"), true)?;
 
-    let base = || {
-        Scenario::heterogeneous(48, "srv_inception")
-            .with_scheduler(SchedulerKind::Static)
-            .with_slo(150.0)
-            .with_tier_slo(Tier::Low, 100.0)
-            .with_tier_slo(Tier::High, 400.0)
-            .with_samples(1500)
-            .with_seed(0)
+    let base = {
+        let mut spec = ScenarioSpec::preset("edf-tight-slo")?;
+        spec.set("devices", "hetero:48")?;
+        spec
     };
 
     println!(
         "{:<22} {:>8} {:>8} {:>8} {:>8} {:>8} {:>7}",
         "configuration", "SR %", "low SR", "mid SR", "high SR", "shed %", "batches"
     );
-    for (label, queue, replicas, shed) in [
-        ("fifo x1 (seed)", QueueKind::Fifo, 1usize, false),
-        ("edf x1", QueueKind::Edf, 1, false),
-        ("tier-wfq x1", QueueKind::TierWfq, 1, false),
-        ("fifo x2", QueueKind::Fifo, 2, false),
-        ("edf x2", QueueKind::Edf, 2, false),
-        ("edf x1 + shed", QueueKind::Edf, 1, true),
+    for (label, sets) in [
+        ("fifo x1 (seed)", vec!["server.queue=fifo"]),
+        ("edf x1", vec![]),
+        ("tier-wfq x1", vec!["server.queue=tier-wfq"]),
+        ("fifo x2", vec!["server.queue=fifo", "server.replicas=2"]),
+        ("edf x2", vec!["server.replicas=2"]),
+        ("edf x1 + shed", vec!["server.shed=true"]),
     ] {
-        let scn = base()
-            .with_queue(queue)
-            .with_replicas(replicas)
-            .with_shed(shed);
-        let m = ctx.run(&scn, &Overrides::default())?;
+        let mut spec = base.clone();
+        for kv in sets {
+            spec.apply_set(kv)?;
+        }
+        let m = ctx.run_spec(&spec)?;
         let tier_sr = |t: Tier| {
             m.tier(t)
                 .map(|a| a.satisfaction_rate())
@@ -65,7 +62,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!(
-        "\nsee `mtpp sim --servers N --queue fifo|edf|tier-wfq [--shed]` and \
+        "\nsee `mtpp sim --preset edf-tight-slo --set server.replicas=N` and \
          `mtpp experiment replicas` for the full sweep"
     );
     Ok(())

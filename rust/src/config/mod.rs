@@ -1,8 +1,9 @@
 //! Configuration system: scheduler constants, scenario descriptions,
-//! calibrated latency tables.
+//! the declarative scenario spec, calibrated latency tables.
 
 pub mod latency;
 pub mod scenario;
+pub mod spec;
 
 use std::path::PathBuf;
 

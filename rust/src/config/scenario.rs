@@ -20,28 +20,13 @@ pub enum SchedulerKind {
     AblationQuantized,
 }
 
-impl SchedulerKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            SchedulerKind::MultiTascPP => "multitasc++",
-            SchedulerKind::MultiTasc => "multitasc",
-            SchedulerKind::Static => "static",
-            SchedulerKind::AblationNoScaling => "mtpp-noscale",
-            SchedulerKind::AblationQuantized => "mtpp-quant",
-        }
-    }
-
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
-            "multitasc++" | "mtpp" => Ok(SchedulerKind::MultiTascPP),
-            "multitasc" | "mt" => Ok(SchedulerKind::MultiTasc),
-            "static" => Ok(SchedulerKind::Static),
-            "mtpp-noscale" => Ok(SchedulerKind::AblationNoScaling),
-            "mtpp-quant" => Ok(SchedulerKind::AblationQuantized),
-            other => anyhow::bail!("unknown scheduler '{other}'"),
-        }
-    }
-}
+crate::named_enum!("scheduler", SchedulerKind {
+    MultiTascPP => "multitasc++", "mtpp";
+    MultiTasc => "multitasc", "mt";
+    Static => "static";
+    AblationNoScaling => "mtpp-noscale";
+    AblationQuantized => "mtpp-quant";
+});
 
 /// Queue discipline for the shared server-side request queue
 /// (see `sim::server` for the implementations).
@@ -56,24 +41,11 @@ pub enum QueueKind {
     TierWfq,
 }
 
-impl QueueKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            QueueKind::Fifo => "fifo",
-            QueueKind::Edf => "edf",
-            QueueKind::TierWfq => "tier-wfq",
-        }
-    }
-
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
-            "fifo" => Ok(QueueKind::Fifo),
-            "edf" => Ok(QueueKind::Edf),
-            "wfq" | "tier-wfq" | "tierwfq" => Ok(QueueKind::TierWfq),
-            other => anyhow::bail!("unknown queue discipline '{other}' (fifo|edf|tier-wfq)"),
-        }
-    }
-}
+crate::named_enum!("queue discipline", QueueKind {
+    Fifo => "fifo";
+    Edf => "edf";
+    TierWfq => "tier-wfq", "wfq", "tierwfq";
+});
 
 /// How the engine chooses which idle replica serves the next batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,22 +61,10 @@ pub enum DispatchKind {
     ModelAware,
 }
 
-impl DispatchKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            DispatchKind::LowestIndex => "lowest",
-            DispatchKind::ModelAware => "model-aware",
-        }
-    }
-
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
-            "lowest" | "lowest-index" => Ok(DispatchKind::LowestIndex),
-            "model-aware" | "aware" => Ok(DispatchKind::ModelAware),
-            other => anyhow::bail!("unknown dispatch policy '{other}' (lowest|model-aware)"),
-        }
-    }
-}
+crate::named_enum!("dispatch policy", DispatchKind {
+    LowestIndex => "lowest", "lowest-index";
+    ModelAware => "model-aware", "aware";
+});
 
 /// Cost-aware autoscaling watermarks: the pool parks idle replicas when
 /// queue pressure is low and unparks them on backlog or shedding.
@@ -192,8 +152,13 @@ pub enum ExecMode {
     Cached,
 }
 
+crate::named_enum!("exec mode", ExecMode {
+    Real => "real";
+    Cached => "cached";
+});
+
 /// Intermittent-participation parameters (paper §V-B-E, Fig 19/20).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Intermittent {
     /// Probability a device goes offline at all (paper: 0.5).
     pub offline_prob: f64,
@@ -218,8 +183,11 @@ impl Default for Intermittent {
     }
 }
 
-/// A full experiment scenario.
-#[derive(Clone, Debug)]
+/// A full experiment scenario — the *validated product* of a
+/// [`crate::config::spec::ScenarioSpec`]. Construct it through the
+/// builder methods below (engine-level code and tests) or by
+/// validating a declarative spec (everything CLI-reachable).
+#[derive(Clone, Debug, PartialEq)]
 pub struct Scenario {
     /// Device population: (tier, count) pairs.
     pub devices: Vec<(Tier, usize)>,
@@ -243,6 +211,10 @@ pub struct Scenario {
     /// `slo_ms`. Enables mixed-criticality populations (the scenarios
     /// where EDF/WFQ disciplines differ from FIFO).
     pub tier_slo_ms: Vec<(Tier, f64)>,
+    /// Force every device's initial forwarding threshold (Fig 20 uses
+    /// 0.35); `None` starts each device at its calibrated static
+    /// threshold. Subsumes the old per-run `Overrides` side-channel.
+    pub initial_threshold: Option<f64>,
 }
 
 impl Scenario {
@@ -260,6 +232,7 @@ impl Scenario {
             exec: ExecMode::Cached,
             server: ServerPolicy::default(),
             tier_slo_ms: Vec::new(),
+            initial_threshold: None,
         }
     }
 
@@ -267,13 +240,8 @@ impl Scenario {
     /// `n` is the total device count; remainders go to the lower tiers
     /// first so the total is exact.
     pub fn heterogeneous(n: usize, server_model: &str) -> Self {
-        let base = n / 3;
-        let rem = n % 3;
-        let low = base + usize::from(rem >= 1);
-        let mid = base + usize::from(rem >= 2);
-        let high = base;
         Self {
-            devices: vec![(Tier::Low, low), (Tier::Mid, mid), (Tier::High, high)],
+            devices: hetero_split(n),
             ..Self::homogeneous(Tier::Low, 0, server_model)
         }
     }
@@ -309,6 +277,12 @@ impl Scenario {
 
     pub fn with_intermittent(mut self, i: Intermittent) -> Self {
         self.intermittent = Some(i);
+        self
+    }
+
+    /// Force every device's initial forwarding threshold.
+    pub fn with_initial_threshold(mut self, c: f64) -> Self {
+        self.initial_threshold = Some(c);
         self
     }
 
@@ -388,6 +362,20 @@ impl Scenario {
     }
 }
 
+/// Equal-thirds low/mid/high device split (§V-A): remainders go to the
+/// lower tiers first so the total is exact. Shared by
+/// [`Scenario::heterogeneous`] and the spec layer's `devices=hetero:N`
+/// shorthand.
+pub fn hetero_split(n: usize) -> Vec<(Tier, usize)> {
+    let base = n / 3;
+    let rem = n % 3;
+    vec![
+        (Tier::Low, base + usize::from(rem >= 1)),
+        (Tier::Mid, base + usize::from(rem >= 2)),
+        (Tier::High, base),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -458,6 +446,34 @@ mod tests {
             assert_eq!(DispatchKind::parse(d.name()).unwrap(), d);
         }
         assert!(DispatchKind::parse("random").is_err());
+    }
+
+    #[test]
+    fn named_enums_roundtrip_canonical_names_and_aliases() {
+        for &s in SchedulerKind::ALL {
+            assert_eq!(SchedulerKind::parse(s.name()).unwrap(), s);
+            for &a in s.aliases() {
+                assert_eq!(SchedulerKind::parse(a).unwrap(), s, "alias {a}");
+            }
+        }
+        for &q in QueueKind::ALL {
+            assert_eq!(QueueKind::parse(q.name()).unwrap(), q);
+            for &a in q.aliases() {
+                assert_eq!(QueueKind::parse(a).unwrap(), q, "alias {a}");
+            }
+        }
+        for &d in DispatchKind::ALL {
+            assert_eq!(DispatchKind::parse(d.name()).unwrap(), d);
+            for &a in d.aliases() {
+                assert_eq!(DispatchKind::parse(a).unwrap(), d, "alias {a}");
+            }
+        }
+        for &e in ExecMode::ALL {
+            assert_eq!(ExecMode::parse(e.name()).unwrap(), e);
+        }
+        // The once-hand-written aliases still parse.
+        assert_eq!(QueueKind::parse("wfq").unwrap(), QueueKind::TierWfq);
+        assert_eq!(DispatchKind::parse("aware").unwrap(), DispatchKind::ModelAware);
     }
 
     #[test]

@@ -1,0 +1,1030 @@
+//! Declarative, serializable scenario specification — the single
+//! configuration surface for simulation, experiments, and live serving.
+//!
+//! A [`ScenarioSpec`] is a plain-data mirror of [`Scenario`] that can be
+//! written to / read from JSON (via the in-house `util::json`), mutated
+//! through dotted-path [`ScenarioSpec::set`] overrides, and turned into
+//! a runnable [`Scenario`] through one central
+//! [`ScenarioSpec::validate`] that owns every configuration invariant.
+//! The CLI (`mtpp sim --scenario/--preset/--set/--dump-spec`), the
+//! experiment sweeps (`experiments::common::SpecGrid`), and the live
+//! serving mode all speak this type; the schema is documented
+//! field-by-field in `docs/scenario-spec.md`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::scenario::{
+    hetero_split, AutoscalePolicy, DispatchKind, ExecMode, Intermittent, QueueKind, Scenario,
+    SchedulerKind, ServerPolicy,
+};
+use crate::models::registry::SERVER_MODELS;
+use crate::models::Tier;
+use crate::util::json::Json;
+
+/// The shipped named presets (`mtpp sim --preset <name>`), embedded at
+/// compile time from `scenarios/` so a preset can never go missing at
+/// runtime; CI re-runs every one of them against `--dump-spec`
+/// round-trips so the files can never rot either.
+pub const PRESETS: [(&str, &str); 6] = [
+    (
+        "seed-baseline",
+        include_str!("../../../scenarios/seed-baseline.json"),
+    ),
+    (
+        "smart-home-100",
+        include_str!("../../../scenarios/smart-home-100.json"),
+    ),
+    (
+        "mixed-tier-outage-storm",
+        include_str!("../../../scenarios/mixed-tier-outage-storm.json"),
+    ),
+    (
+        "hetero-pool-autoscale",
+        include_str!("../../../scenarios/hetero-pool-autoscale.json"),
+    ),
+    (
+        "wfq-stress",
+        include_str!("../../../scenarios/wfq-stress.json"),
+    ),
+    (
+        "edf-tight-slo",
+        include_str!("../../../scenarios/edf-tight-slo.json"),
+    ),
+];
+
+/// Largest integer the JSON layer stores exactly (comfortably inside
+/// f64's 2^53 exact-integer range): seeds and counts above this are
+/// rejected at both `set()` and `from_json()` time so a dumped spec is
+/// always reloadable bit-identically.
+pub const MAX_JSON_INT: u64 = 9_000_000_000_000_000;
+
+/// A declarative scenario: everything `Scenario` + `ServerPolicy` (and
+/// the old per-run `Overrides`) express, as one serializable object.
+/// May hold invalid combinations until [`ScenarioSpec::validate`] turns
+/// it into a [`Scenario`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Device population as ordered (tier, count) groups — order fixes
+    /// device ids, so it is preserved through serialization.
+    pub devices: Vec<(Tier, usize)>,
+    /// Initial server model name.
+    pub server_model: String,
+    pub scheduler: SchedulerKind,
+    /// Global latency SLO in ms.
+    pub slo_ms: f64,
+    /// Per-tier SLO overrides in ms.
+    pub tier_slo_ms: Vec<(Tier, f64)>,
+    pub samples_per_device: usize,
+    pub seed: u64,
+    /// §IV-E server model switching.
+    pub model_switching: bool,
+    /// Intermittent device participation (Fig 19/20).
+    pub intermittent: Option<Intermittent>,
+    /// Force every device's initial forwarding threshold (Fig 20).
+    pub initial_threshold: Option<f64>,
+    pub exec: ExecMode,
+    /// Server-side deployment shape.
+    pub server: ServerPolicy,
+}
+
+impl Default for ScenarioSpec {
+    /// The `mtpp sim` no-flags defaults — by construction identical to
+    /// the seed-default `Scenario` (pinned by tests).
+    fn default() -> Self {
+        Self::from_scenario(&Scenario::homogeneous(Tier::Low, 10, "srv_inception"))
+    }
+}
+
+impl ScenarioSpec {
+    /// Snapshot an already-built scenario (tests, `--dump-spec` of
+    /// builder-constructed workloads). `validate()` of the result is
+    /// the identity on valid scenarios.
+    pub fn from_scenario(scn: &Scenario) -> Self {
+        Self {
+            devices: scn.devices.clone(),
+            server_model: scn.server_model.clone(),
+            scheduler: scn.scheduler,
+            slo_ms: scn.slo_ms,
+            tier_slo_ms: scn.tier_slo_ms.clone(),
+            samples_per_device: scn.samples_per_device,
+            seed: scn.seed,
+            model_switching: scn.model_switching,
+            intermittent: scn.intermittent,
+            initial_threshold: scn.initial_threshold,
+            exec: scn.exec,
+            server: scn.server.clone(),
+        }
+    }
+
+    pub fn total_devices(&self) -> usize {
+        self.devices.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Rescale the device population to `total` devices while keeping
+    /// the mix's *shape* (per-group proportions and order): largest-
+    /// remainder rounding, ties to earlier groups, so the result is
+    /// exact. Used by `mtpp sim --devices N` on a loaded spec — a
+    /// `low:4,high:4` population scaled to 16 stays `low:8,high:8`
+    /// instead of being silently rebuilt as an equal-thirds split.
+    pub fn scale_devices(&mut self, total: usize) -> Result<()> {
+        let current = self.total_devices();
+        ensure!(
+            current > 0,
+            "cannot scale an empty device mix to {total} devices (set devices explicitly)"
+        );
+        let mut scaled: Vec<(Tier, usize, f64)> = self
+            .devices
+            .iter()
+            .map(|&(tier, count)| {
+                let exact = total as f64 * count as f64 / current as f64;
+                (tier, exact.floor() as usize, exact.fract())
+            })
+            .collect();
+        let mut assigned: usize = scaled.iter().map(|&(_, c, _)| c).sum();
+        while assigned < total {
+            // Largest remainder next; earlier groups win ties.
+            let (i, _) = scaled
+                .iter()
+                .enumerate()
+                .max_by(|(ai, a), (bi, b)| {
+                    a.2.partial_cmp(&b.2)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(bi.cmp(ai))
+                })
+                .expect("non-empty mix");
+            scaled[i].1 += 1;
+            scaled[i].2 = -1.0;
+            assigned += 1;
+        }
+        self.devices = scaled.into_iter().map(|(t, c, _)| (t, c)).collect();
+        Ok(())
+    }
+
+    /// Tier of the device at `idx` in the population (device ids are
+    /// assigned group by group). Lets N live `mtpp device` agents with
+    /// `--seed 0..N` reproduce the spec's device mix.
+    pub fn tier_of_device(&self, idx: usize) -> Option<Tier> {
+        let total = self.total_devices();
+        if total == 0 {
+            return None;
+        }
+        let mut rem = idx % total;
+        for &(tier, count) in &self.devices {
+            if rem < count {
+                return Some(tier);
+            }
+            rem -= count;
+        }
+        None
+    }
+
+    // ----- central validation --------------------------------------
+
+    /// Check every configuration invariant and produce the runnable
+    /// [`Scenario`]. This is the single gate between "data that parsed"
+    /// and "configuration the engine will accept": WFQ weight
+    /// positivity, model-name existence, replica/model-list arity,
+    /// finite positive SLOs and watermarks, etc. all live here instead
+    /// of being scattered across the CLI and the engine.
+    pub fn validate(&self) -> Result<Scenario> {
+        ensure!(
+            self.total_devices() >= 1,
+            "scenario needs at least one device (devices: {:?})",
+            self.devices
+        );
+        known_server_model(&self.server_model)?;
+        for m in &self.server.models {
+            known_server_model(m)?;
+        }
+        ensure!(
+            self.server.replicas >= 1,
+            "server pool needs at least one replica"
+        );
+        ensure!(
+            self.server.models.is_empty() || self.server.models.len() == self.server.replicas,
+            "per-replica model list names {} models but the pool has {} replicas",
+            self.server.models.len(),
+            self.server.replicas
+        );
+        pos_finite("slo_ms", self.slo_ms)?;
+        let mut seen: Vec<Tier> = Vec::new();
+        for &(tier, slo) in &self.tier_slo_ms {
+            ensure!(
+                !seen.contains(&tier),
+                "duplicate tier '{}' in tier_slo_ms",
+                tier.name()
+            );
+            seen.push(tier);
+            pos_finite(&format!("tier_slo_ms[{}]", tier.name()), slo)?;
+        }
+        for (i, &w) in self.server.wfq_weights.iter().enumerate() {
+            ensure!(
+                w.is_finite() && w > 0.0,
+                "WFQ weight for tier '{}' must be positive and finite, got {w}",
+                Tier::ALL[i].name()
+            );
+        }
+        ensure!(
+            self.samples_per_device >= 1,
+            "samples_per_device must be >= 1"
+        );
+        if let Some(im) = &self.intermittent {
+            ensure!(
+                (0.0..=1.0).contains(&im.offline_prob),
+                "intermittent.offline_prob must be in [0, 1], got {}",
+                im.offline_prob
+            );
+            ensure!(
+                im.onset_mean_frac.is_finite()
+                    && im.onset_sd_frac.is_finite()
+                    && im.onset_sd_frac >= 0.0,
+                "intermittent onset parameters must be finite (sd >= 0)"
+            );
+            ensure!(
+                im.duration_alpha.is_finite() && im.duration_alpha > 0.0,
+                "intermittent.duration_alpha must be positive and finite, got {}",
+                im.duration_alpha
+            );
+            ensure!(
+                im.duration_scale_s.is_finite() && im.duration_scale_s >= 0.0,
+                "intermittent.duration_scale_s must be non-negative and finite, got {}",
+                im.duration_scale_s
+            );
+        }
+        if let Some(a) = &self.server.autoscale {
+            ensure!(
+                a.queue_high.is_finite()
+                    && a.queue_low.is_finite()
+                    && a.queue_low >= 0.0
+                    && a.queue_high > a.queue_low,
+                "autoscale watermarks must be finite with queue_high > queue_low >= 0 \
+                 (got high {}, low {})",
+                a.queue_high,
+                a.queue_low
+            );
+            ensure!(a.min_active >= 1, "autoscale.min_active must be >= 1");
+            ensure!(
+                a.min_active <= self.server.replicas,
+                "autoscale.min_active ({}) exceeds the replica count ({})",
+                a.min_active,
+                self.server.replicas
+            );
+            ensure!(
+                a.dwell_s.is_finite() && a.dwell_s >= 0.0,
+                "autoscale.dwell_s must be non-negative and finite, got {}",
+                a.dwell_s
+            );
+        }
+        if let Some(c) = self.initial_threshold {
+            ensure!(
+                (0.0..=1.0).contains(&c),
+                "initial_threshold must be in [0, 1], got {c}"
+            );
+        }
+        self.check_json_ints()?;
+        Ok(Scenario {
+            devices: self.devices.clone(),
+            server_model: self.server_model.clone(),
+            scheduler: self.scheduler,
+            slo_ms: self.slo_ms,
+            samples_per_device: self.samples_per_device,
+            seed: self.seed,
+            model_switching: self.model_switching,
+            intermittent: self.intermittent,
+            exec: self.exec,
+            server: self.server.clone(),
+            tier_slo_ms: self.tier_slo_ms.clone(),
+            initial_threshold: self.initial_threshold,
+        })
+    }
+
+    // ----- JSON ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let devices = Json::Arr(
+            self.devices
+                .iter()
+                .map(|&(tier, count)| {
+                    Json::obj(vec![
+                        ("tier", Json::str(tier.name())),
+                        ("count", Json::num(count as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let tier_slos = Json::Arr(
+            self.tier_slo_ms
+                .iter()
+                .map(|&(tier, slo)| {
+                    Json::obj(vec![
+                        ("tier", Json::str(tier.name())),
+                        ("slo_ms", Json::num(slo)),
+                    ])
+                })
+                .collect(),
+        );
+        let intermittent = match &self.intermittent {
+            None => Json::Null,
+            Some(im) => Json::obj(vec![
+                ("offline_prob", Json::num(im.offline_prob)),
+                ("onset_mean_frac", Json::num(im.onset_mean_frac)),
+                ("onset_sd_frac", Json::num(im.onset_sd_frac)),
+                ("duration_alpha", Json::num(im.duration_alpha)),
+                ("duration_scale_s", Json::num(im.duration_scale_s)),
+            ]),
+        };
+        let autoscale = match &self.server.autoscale {
+            None => Json::Null,
+            Some(a) => Json::obj(vec![
+                ("queue_high", Json::num(a.queue_high)),
+                ("queue_low", Json::num(a.queue_low)),
+                ("min_active", Json::num(a.min_active as f64)),
+                ("dwell_s", Json::num(a.dwell_s)),
+            ]),
+        };
+        let wfq = Json::obj(
+            Tier::ALL
+                .iter()
+                .map(|t| (t.name(), Json::num(self.server.wfq_weights[t.index()])))
+                .collect(),
+        );
+        let server = Json::obj(vec![
+            ("replicas", Json::num(self.server.replicas as f64)),
+            ("queue", Json::str(self.server.queue.name())),
+            ("shed", Json::Bool(self.server.shed)),
+            (
+                "models",
+                Json::Arr(
+                    self.server
+                        .models
+                        .iter()
+                        .map(|m| Json::str(m.as_str()))
+                        .collect(),
+                ),
+            ),
+            ("wfq_weights", wfq),
+            ("dispatch", Json::str(self.server.dispatch.name())),
+            ("slack_batch", Json::Bool(self.server.slack_batch)),
+            ("autoscale", autoscale),
+        ]);
+        Json::obj(vec![
+            ("devices", devices),
+            ("server_model", Json::str(self.server_model.as_str())),
+            ("scheduler", Json::str(self.scheduler.name())),
+            ("slo_ms", Json::num(self.slo_ms)),
+            ("tier_slo_ms", tier_slos),
+            (
+                "samples_per_device",
+                Json::num(self.samples_per_device as f64),
+            ),
+            ("seed", Json::num(self.seed as f64)),
+            ("model_switching", Json::Bool(self.model_switching)),
+            ("intermittent", intermittent),
+            (
+                "initial_threshold",
+                self.initial_threshold.map_or(Json::Null, Json::num),
+            ),
+            ("exec", Json::str(self.exec.name())),
+            ("server", server),
+        ])
+    }
+
+    /// Parse a spec object. Missing or `null` fields keep their
+    /// defaults (presets stay terse); unknown keys are rejected so a
+    /// typo cannot silently configure nothing.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow!("scenario spec must be a JSON object"))?;
+        const KEYS: [&str; 12] = [
+            "devices",
+            "server_model",
+            "scheduler",
+            "slo_ms",
+            "tier_slo_ms",
+            "samples_per_device",
+            "seed",
+            "model_switching",
+            "intermittent",
+            "initial_threshold",
+            "exec",
+            "server",
+        ];
+        for key in obj.keys() {
+            ensure!(
+                KEYS.contains(&key.as_str()),
+                "unknown scenario-spec key '{key}' (known: {})",
+                KEYS.join(", ")
+            );
+        }
+        let mut spec = Self::default();
+        if let Some(d) = opt(v, "devices") {
+            let arr = d.as_arr().ok_or_else(|| anyhow!("'devices' must be an array"))?;
+            let mut devices = Vec::with_capacity(arr.len());
+            for entry in arr {
+                let eobj = entry
+                    .as_obj()
+                    .ok_or_else(|| anyhow!("each 'devices' entry must be an object"))?;
+                for key in eobj.keys() {
+                    ensure!(
+                        key == "tier" || key == "count",
+                        "unknown devices key '{key}' (known: tier, count)"
+                    );
+                }
+                let tier = Tier::parse(entry.str_at("tier")?)?;
+                let count = as_count(entry.req("count")?, "devices.count")?;
+                devices.push((tier, count));
+            }
+            spec.devices = devices;
+        }
+        if let Some(x) = opt(v, "server_model") {
+            spec.server_model = as_str(x, "server_model")?.to_string();
+        }
+        if let Some(x) = opt(v, "scheduler") {
+            spec.scheduler = SchedulerKind::parse(as_str(x, "scheduler")?)?;
+        }
+        if let Some(x) = opt(v, "slo_ms") {
+            spec.slo_ms = as_num(x, "slo_ms")?;
+        }
+        if let Some(x) = opt(v, "tier_slo_ms") {
+            let arr = x
+                .as_arr()
+                .ok_or_else(|| anyhow!("'tier_slo_ms' must be an array"))?;
+            let mut slos = Vec::with_capacity(arr.len());
+            for entry in arr {
+                let eobj = entry
+                    .as_obj()
+                    .ok_or_else(|| anyhow!("each 'tier_slo_ms' entry must be an object"))?;
+                for key in eobj.keys() {
+                    ensure!(
+                        key == "tier" || key == "slo_ms",
+                        "unknown tier_slo_ms key '{key}' (known: tier, slo_ms)"
+                    );
+                }
+                slos.push((Tier::parse(entry.str_at("tier")?)?, entry.f64_at("slo_ms")?));
+            }
+            spec.tier_slo_ms = slos;
+        }
+        if let Some(x) = opt(v, "samples_per_device") {
+            spec.samples_per_device = as_count(x, "samples_per_device")?;
+        }
+        if let Some(x) = opt(v, "seed") {
+            spec.seed = as_count(x, "seed")? as u64;
+        }
+        if let Some(x) = opt(v, "model_switching") {
+            spec.model_switching = as_bool(x, "model_switching")?;
+        }
+        spec.intermittent = match opt(v, "intermittent") {
+            None => None,
+            Some(x) => Some(intermittent_from_json(x)?),
+        };
+        spec.initial_threshold = match opt(v, "initial_threshold") {
+            None => None,
+            Some(x) => Some(as_num(x, "initial_threshold")?),
+        };
+        if let Some(x) = opt(v, "exec") {
+            spec.exec = ExecMode::parse(as_str(x, "exec")?)?;
+        }
+        if let Some(x) = opt(v, "server") {
+            spec.server = server_from_json(x)?;
+        }
+        Ok(spec)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read scenario spec {}", path.display()))?;
+        Self::parse_str(&text).with_context(|| format!("parse scenario spec {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        // Guarded here as well as in validate(): a builder-constructed
+        // spec (from_scenario) must never write a file that cannot
+        // load back.
+        self.check_json_ints()?;
+        let mut text = self.to_json().pretty(2);
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("write scenario spec {}", path.display()))
+    }
+
+    /// Every serialized integer must survive the f64-backed JSON layer
+    /// exactly, or a dumped spec would not be reloadable. Checked by
+    /// both [`ScenarioSpec::validate`] and [`ScenarioSpec::save`];
+    /// `set()`/`from_json()` enforce the same bound on their inputs.
+    fn check_json_ints(&self) -> Result<()> {
+        for (what, x) in [
+            ("seed", self.seed),
+            ("samples_per_device", self.samples_per_device as u64),
+            ("server.replicas", self.server.replicas as u64),
+        ]
+        .into_iter()
+        .chain(
+            self.devices
+                .iter()
+                .map(|&(_, count)| ("devices.count", count as u64)),
+        ) {
+            ensure!(
+                x <= MAX_JSON_INT,
+                "{what} = {x} exceeds {MAX_JSON_INT}, the largest integer the \
+                 JSON spec layer round-trips exactly"
+            );
+        }
+        Ok(())
+    }
+
+    /// Load one of the shipped presets by name.
+    pub fn preset(name: &str) -> Result<Self> {
+        for (preset, text) in PRESETS {
+            if preset == name {
+                return Self::parse_str(text)
+                    .with_context(|| format!("embedded preset '{name}' is invalid"));
+            }
+        }
+        bail!(
+            "unknown preset '{name}' (available: {})",
+            preset_names().join(", ")
+        )
+    }
+
+    // ----- dotted-path overrides -----------------------------------
+
+    /// Apply a `key=value` override (the `--set` grammar).
+    pub fn apply_set(&mut self, kv: &str) -> Result<()> {
+        let (key, value) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow!("bad --set '{kv}' (want key=value)"))?;
+        self.set(key.trim(), value.trim())
+    }
+
+    /// Set one field by dotted path, e.g. `slo_ms=100`,
+    /// `server.queue=edf`, `tier_slo.low=100`, `devices=hetero:48`,
+    /// `intermittent.offline_prob=0.8` (optional sections auto-enable
+    /// with their defaults when a subfield is set). Values are checked
+    /// for shape here (numbers parse, numbers are finite); cross-field
+    /// invariants stay in [`ScenarioSpec::validate`].
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "devices" => self.devices = parse_devices(value)?,
+            "server_model" => self.server_model = value.to_string(),
+            "scheduler" => self.scheduler = SchedulerKind::parse(value)?,
+            "slo_ms" | "slo" => self.slo_ms = parse_finite(key, value)?,
+            "samples_per_device" | "samples" => {
+                self.samples_per_device = parse_count(key, value)?
+            }
+            "seed" => self.seed = parse_count(key, value)? as u64,
+            "model_switching" | "switching" => self.model_switching = parse_bool(key, value)?,
+            "initial_threshold" => {
+                self.initial_threshold = if value == "none" {
+                    None
+                } else {
+                    Some(parse_finite(key, value)?)
+                }
+            }
+            "exec" => self.exec = ExecMode::parse(value)?,
+            "intermittent" => {
+                self.intermittent = if parse_bool(key, value)? {
+                    Some(self.intermittent.unwrap_or_default())
+                } else {
+                    None
+                }
+            }
+            "server.replicas" => self.server.replicas = parse_count(key, value)?,
+            "server.queue" => self.server.queue = QueueKind::parse(value)?,
+            "server.shed" => self.server.shed = parse_bool(key, value)?,
+            "server.models" => {
+                self.server.models = value
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty() && *s != "none")
+                    .map(str::to_string)
+                    .collect()
+            }
+            "server.wfq_weights" => self.server.wfq_weights = parse_wfq_weights(value)?,
+            "server.dispatch" => self.server.dispatch = DispatchKind::parse(value)?,
+            "server.slack_batch" => self.server.slack_batch = parse_bool(key, value)?,
+            "server.autoscale" => {
+                self.server.autoscale = if parse_bool(key, value)? {
+                    Some(self.server.autoscale.unwrap_or_default())
+                } else {
+                    None
+                }
+            }
+            _ => {
+                if let Some(tier) = key.strip_prefix("tier_slo.") {
+                    let tier = Tier::parse(tier)?;
+                    self.tier_slo_ms.retain(|&(t, _)| t != tier);
+                    if value != "none" {
+                        self.tier_slo_ms.push((tier, parse_finite(key, value)?));
+                    }
+                } else if let Some(field) = key.strip_prefix("intermittent.") {
+                    let im = self.intermittent.get_or_insert_with(Intermittent::default);
+                    match field {
+                        "offline_prob" => im.offline_prob = parse_finite(key, value)?,
+                        "onset_mean_frac" => im.onset_mean_frac = parse_finite(key, value)?,
+                        "onset_sd_frac" => im.onset_sd_frac = parse_finite(key, value)?,
+                        "duration_alpha" => im.duration_alpha = parse_finite(key, value)?,
+                        "duration_scale_s" => im.duration_scale_s = parse_finite(key, value)?,
+                        _ => bail!("unknown spec key '{key}' (see docs/scenario-spec.md)"),
+                    }
+                } else if let Some(field) = key.strip_prefix("server.autoscale.") {
+                    let a = self
+                        .server
+                        .autoscale
+                        .get_or_insert_with(AutoscalePolicy::default);
+                    match field {
+                        "queue_high" => a.queue_high = parse_finite(key, value)?,
+                        "queue_low" => a.queue_low = parse_finite(key, value)?,
+                        "min_active" => a.min_active = parse_count(key, value)?,
+                        "dwell_s" => a.dwell_s = parse_finite(key, value)?,
+                        _ => bail!("unknown spec key '{key}' (see docs/scenario-spec.md)"),
+                    }
+                } else {
+                    bail!("unknown spec key '{key}' (see docs/scenario-spec.md for the schema)")
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Names of the shipped presets, in declaration order.
+pub fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|&(name, _)| name).collect()
+}
+
+/// Parse `tier:weight` pairs into the `[low, mid, high, vit]` weight
+/// array (unlisted tiers default to 1). Rejects unknown tiers,
+/// duplicates, and non-positive or non-finite weights — the same
+/// invariant `validate()` re-checks on the assembled spec.
+pub fn parse_wfq_weights(spec: &str) -> Result<[f64; 4]> {
+    let mut weights = [1.0; 4];
+    if spec.trim().is_empty() {
+        return Ok(weights);
+    }
+    let mut seen = [false; 4];
+    for pair in spec.split(',') {
+        let pair = pair.trim();
+        let (tier, w) = pair
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad WFQ weight '{pair}' (want tier:weight)"))?;
+        let tier = tier.trim();
+        let idx = Tier::parse(tier)
+            .map_err(|_| anyhow!("unknown tier '{tier}' in WFQ weights (low|mid|high|vit)"))?
+            .index();
+        ensure!(!seen[idx], "duplicate tier '{tier}' in WFQ weights");
+        seen[idx] = true;
+        let w: f64 = w
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad WFQ weight value '{w}'"))?;
+        ensure!(
+            w > 0.0 && w.is_finite(),
+            "WFQ weight for '{tier}' must be positive and finite, got {w}"
+        );
+        weights[idx] = w;
+    }
+    Ok(weights)
+}
+
+// ----- helpers ------------------------------------------------------
+
+fn known_server_model(name: &str) -> Result<()> {
+    ensure!(
+        SERVER_MODELS.contains(&name),
+        "unknown server model '{name}' (expected {})",
+        SERVER_MODELS.join("|")
+    );
+    Ok(())
+}
+
+fn pos_finite(what: &str, x: f64) -> Result<()> {
+    ensure!(
+        x.is_finite() && x > 0.0,
+        "{what} must be positive and finite, got {x}"
+    );
+    Ok(())
+}
+
+/// Present-and-non-null field access.
+fn opt<'a>(v: &'a Json, key: &str) -> Option<&'a Json> {
+    v.get(key).filter(|j| !matches!(j, Json::Null))
+}
+
+fn as_num(v: &Json, what: &str) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| anyhow!("spec field '{what}' must be a number"))
+}
+
+fn as_count(v: &Json, what: &str) -> Result<usize> {
+    let x = as_num(v, what)?;
+    ensure!(
+        x >= 0.0 && x.fract() == 0.0 && x <= MAX_JSON_INT as f64,
+        "spec field '{what}' must be a non-negative integer, got {x}"
+    );
+    Ok(x as usize)
+}
+
+fn as_bool(v: &Json, what: &str) -> Result<bool> {
+    v.as_bool()
+        .ok_or_else(|| anyhow!("spec field '{what}' must be a boolean"))
+}
+
+fn as_str<'a>(v: &'a Json, what: &str) -> Result<&'a str> {
+    v.as_str()
+        .ok_or_else(|| anyhow!("spec field '{what}' must be a string"))
+}
+
+fn intermittent_from_json(v: &Json) -> Result<Intermittent> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| anyhow!("'intermittent' must be an object or null"))?;
+    const KEYS: [&str; 5] = [
+        "offline_prob",
+        "onset_mean_frac",
+        "onset_sd_frac",
+        "duration_alpha",
+        "duration_scale_s",
+    ];
+    for key in obj.keys() {
+        ensure!(
+            KEYS.contains(&key.as_str()),
+            "unknown intermittent key '{key}' (known: {})",
+            KEYS.join(", ")
+        );
+    }
+    let mut im = Intermittent::default();
+    if let Some(x) = opt(v, "offline_prob") {
+        im.offline_prob = as_num(x, "intermittent.offline_prob")?;
+    }
+    if let Some(x) = opt(v, "onset_mean_frac") {
+        im.onset_mean_frac = as_num(x, "intermittent.onset_mean_frac")?;
+    }
+    if let Some(x) = opt(v, "onset_sd_frac") {
+        im.onset_sd_frac = as_num(x, "intermittent.onset_sd_frac")?;
+    }
+    if let Some(x) = opt(v, "duration_alpha") {
+        im.duration_alpha = as_num(x, "intermittent.duration_alpha")?;
+    }
+    if let Some(x) = opt(v, "duration_scale_s") {
+        im.duration_scale_s = as_num(x, "intermittent.duration_scale_s")?;
+    }
+    Ok(im)
+}
+
+fn server_from_json(v: &Json) -> Result<ServerPolicy> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| anyhow!("'server' must be an object"))?;
+    const KEYS: [&str; 8] = [
+        "replicas",
+        "queue",
+        "shed",
+        "models",
+        "wfq_weights",
+        "dispatch",
+        "slack_batch",
+        "autoscale",
+    ];
+    for key in obj.keys() {
+        ensure!(
+            KEYS.contains(&key.as_str()),
+            "unknown server key '{key}' (known: {})",
+            KEYS.join(", ")
+        );
+    }
+    let mut p = ServerPolicy::default();
+    if let Some(x) = opt(v, "replicas") {
+        p.replicas = as_count(x, "server.replicas")?;
+    }
+    if let Some(x) = opt(v, "queue") {
+        p.queue = QueueKind::parse(as_str(x, "server.queue")?)?;
+    }
+    if let Some(x) = opt(v, "shed") {
+        p.shed = as_bool(x, "server.shed")?;
+    }
+    if let Some(x) = opt(v, "models") {
+        let arr = x
+            .as_arr()
+            .ok_or_else(|| anyhow!("'server.models' must be an array of strings"))?;
+        p.models = arr
+            .iter()
+            .map(|m| Ok(as_str(m, "server.models[]")?.to_string()))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(x) = opt(v, "wfq_weights") {
+        let wobj = x
+            .as_obj()
+            .ok_or_else(|| anyhow!("'server.wfq_weights' must be a tier->weight object"))?;
+        let mut weights = [1.0; 4];
+        for (tier, w) in wobj {
+            let idx = Tier::parse(tier)
+                .map_err(|_| anyhow!("unknown tier '{tier}' in server.wfq_weights"))?
+                .index();
+            weights[idx] = as_num(w, "server.wfq_weights")?;
+        }
+        p.wfq_weights = weights;
+    }
+    if let Some(x) = opt(v, "dispatch") {
+        p.dispatch = DispatchKind::parse(as_str(x, "server.dispatch")?)?;
+    }
+    if let Some(x) = opt(v, "slack_batch") {
+        p.slack_batch = as_bool(x, "server.slack_batch")?;
+    }
+    if let Some(x) = opt(v, "autoscale") {
+        let aobj = x
+            .as_obj()
+            .ok_or_else(|| anyhow!("'server.autoscale' must be an object or null"))?;
+        const AKEYS: [&str; 4] = ["queue_high", "queue_low", "min_active", "dwell_s"];
+        for key in aobj.keys() {
+            ensure!(
+                AKEYS.contains(&key.as_str()),
+                "unknown autoscale key '{key}' (known: {})",
+                AKEYS.join(", ")
+            );
+        }
+        let mut a = AutoscalePolicy::default();
+        if let Some(y) = opt(x, "queue_high") {
+            a.queue_high = as_num(y, "autoscale.queue_high")?;
+        }
+        if let Some(y) = opt(x, "queue_low") {
+            a.queue_low = as_num(y, "autoscale.queue_low")?;
+        }
+        if let Some(y) = opt(x, "min_active") {
+            a.min_active = as_count(y, "autoscale.min_active")?;
+        }
+        if let Some(y) = opt(x, "dwell_s") {
+            a.dwell_s = as_num(y, "autoscale.dwell_s")?;
+        }
+        p.autoscale = Some(a);
+    }
+    Ok(p)
+}
+
+fn parse_devices(value: &str) -> Result<Vec<(Tier, usize)>> {
+    if let Some(n) = value.strip_prefix("hetero:") {
+        let n: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad device count in 'hetero:{n}'"))?;
+        return Ok(hetero_split(n));
+    }
+    value
+        .split(',')
+        .map(|pair| {
+            let pair = pair.trim();
+            let (tier, count) = pair.split_once(':').ok_or_else(|| {
+                anyhow!("bad devices entry '{pair}' (want tier:count or hetero:N)")
+            })?;
+            Ok((Tier::parse(tier.trim())?, parse_count("devices", count.trim())?))
+        })
+        .collect()
+}
+
+fn parse_finite(key: &str, value: &str) -> Result<f64> {
+    let x: f64 = value
+        .parse()
+        .map_err(|_| anyhow!("spec key '{key}': bad number '{value}'"))?;
+    ensure!(x.is_finite(), "spec key '{key}' must be finite, got {value}");
+    Ok(x)
+}
+
+fn parse_count(key: &str, value: &str) -> Result<usize> {
+    let x: usize = value
+        .parse()
+        .map_err(|_| anyhow!("spec key '{key}': bad non-negative integer '{value}'"))?;
+    ensure!(
+        x as u64 <= MAX_JSON_INT,
+        "spec key '{key}': {x} exceeds {MAX_JSON_INT}, the largest integer the \
+         JSON spec layer round-trips exactly"
+    );
+    Ok(x)
+}
+
+fn parse_bool(key: &str, value: &str) -> Result<bool> {
+    match value {
+        "true" | "on" | "yes" | "1" => Ok(true),
+        "false" | "off" | "no" | "0" => Ok(false),
+        other => bail!("spec key '{key}': bad boolean '{other}' (true|false|on|off)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_seed_default_scenario() {
+        let spec = ScenarioSpec::default();
+        let scn = spec.validate().unwrap();
+        assert_eq!(scn, Scenario::homogeneous(Tier::Low, 10, "srv_inception"));
+    }
+
+    #[test]
+    fn json_roundtrip_of_default() {
+        let spec = ScenarioSpec::default();
+        let back = ScenarioSpec::parse_str(&spec.to_json().pretty(2)).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn empty_object_is_the_default_spec() {
+        assert_eq!(ScenarioSpec::parse_str("{}").unwrap(), ScenarioSpec::default());
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(ScenarioSpec::parse_str(r#"{"slo": 100}"#).is_err());
+        assert!(ScenarioSpec::parse_str(r#"{"server": {"queues": "edf"}}"#).is_err());
+    }
+
+    #[test]
+    fn dotted_set_paths() {
+        let mut spec = ScenarioSpec::default();
+        spec.set("devices", "hetero:31").unwrap();
+        assert_eq!(spec.total_devices(), 31);
+        assert_eq!(spec.devices[0], (Tier::Low, 11));
+        spec.set("devices", "low:4, high:4").unwrap();
+        assert_eq!(spec.devices, vec![(Tier::Low, 4), (Tier::High, 4)]);
+        spec.set("server.queue", "wfq").unwrap();
+        assert_eq!(spec.server.queue, QueueKind::TierWfq);
+        spec.set("server.wfq_weights", "low:8,high:1").unwrap();
+        assert_eq!(spec.server.wfq_weights, [8.0, 1.0, 1.0, 1.0]);
+        spec.set("tier_slo.low", "100").unwrap();
+        spec.set("tier_slo.low", "90").unwrap(); // replaces, not duplicates
+        assert_eq!(spec.tier_slo_ms, vec![(Tier::Low, 90.0)]);
+        spec.set("tier_slo.low", "none").unwrap();
+        assert!(spec.tier_slo_ms.is_empty());
+        spec.set("intermittent.offline_prob", "0.8").unwrap();
+        assert_eq!(spec.intermittent.unwrap().offline_prob, 0.8);
+        spec.set("server.autoscale.min_active", "2").unwrap();
+        assert_eq!(spec.server.autoscale.unwrap().min_active, 2);
+        assert!(spec.set("nope", "1").is_err());
+        assert!(spec.set("slo_ms", "NaN").is_err());
+        // Seeds beyond the exact-JSON-integer range are rejected here,
+        // not at reload time — a dumped spec must always load back.
+        assert!(spec.set("seed", "9100000000000000").is_err());
+        spec.set("seed", "9000000000000000").unwrap();
+        assert!(spec.apply_set("slo_ms").is_err());
+        spec.apply_set("slo_ms=120").unwrap();
+        assert_eq!(spec.slo_ms, 120.0);
+    }
+
+    #[test]
+    fn presets_parse_and_validate() {
+        for name in preset_names() {
+            let spec = ScenarioSpec::preset(name).expect(name);
+            spec.validate().expect(name);
+            // JSON round-trip is the identity.
+            let back = ScenarioSpec::parse_str(&spec.to_json().pretty(2)).unwrap();
+            assert_eq!(back, spec, "{name}");
+        }
+        assert!(ScenarioSpec::preset("bogus").is_err());
+    }
+
+    #[test]
+    fn save_rejects_specs_that_could_not_reload() {
+        let spec = ScenarioSpec::from_scenario(
+            &Scenario::homogeneous(Tier::Low, 1, "srv_inception").with_seed(u64::MAX),
+        );
+        let path = std::env::temp_dir().join("mtpp_spec_bad_seed.json");
+        assert!(spec.save(&path).is_err());
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn scale_devices_preserves_mix_shape() {
+        let mut spec = ScenarioSpec::default();
+        spec.set("devices", "low:4,high:4").unwrap();
+        spec.scale_devices(16).unwrap();
+        assert_eq!(spec.devices, vec![(Tier::Low, 8), (Tier::High, 8)]);
+        // Remainders go largest-first, earlier groups winning ties.
+        spec.set("devices", "low:1,mid:1,high:1").unwrap();
+        spec.scale_devices(5).unwrap();
+        assert_eq!(spec.total_devices(), 5);
+        assert_eq!(spec.devices, vec![(Tier::Low, 2), (Tier::Mid, 2), (Tier::High, 1)]);
+        // Single-group mixes scale trivially; empty mixes are an error.
+        spec.set("devices", "low:10").unwrap();
+        spec.scale_devices(3).unwrap();
+        assert_eq!(spec.devices, vec![(Tier::Low, 3)]);
+        spec.devices.clear();
+        assert!(spec.scale_devices(4).is_err());
+    }
+
+    #[test]
+    fn tier_of_device_walks_the_mix() {
+        let mut spec = ScenarioSpec::default();
+        spec.set("devices", "low:2,high:1").unwrap();
+        assert_eq!(spec.tier_of_device(0), Some(Tier::Low));
+        assert_eq!(spec.tier_of_device(1), Some(Tier::Low));
+        assert_eq!(spec.tier_of_device(2), Some(Tier::High));
+        assert_eq!(spec.tier_of_device(3), Some(Tier::Low)); // wraps
+    }
+}

@@ -7,13 +7,14 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context as _, Result};
 
 use crate::config::scenario::{Scenario, SchedulerKind};
+use crate::config::spec::ScenarioSpec;
 use crate::config::SystemConfig;
 use crate::data::Dataset;
 use crate::metrics::RunMetrics;
-use crate::models::outputs::{CachedOutputs, RealExecProvider};
+use crate::models::outputs::{CachedOutputs, RealExecProvider, SyntheticOutputs};
 use crate::models::Registry;
 use crate::runtime::Engine;
-use crate::sim::{run_scenario_with, Overrides};
+use crate::util::json::Json;
 use crate::util::stats::seed_summary;
 
 /// Everything an experiment driver needs.
@@ -83,15 +84,59 @@ impl Ctx {
         }
     }
 
-    /// Execute one scenario against the cached output provider.
-    pub fn run(&mut self, scn: &Scenario, ovr: &Overrides) -> Result<RunMetrics> {
-        run_scenario_with(
+    /// Artifact-free context backed by the synthetic registry, dataset,
+    /// and output tables the integration tests use (`--synthetic` on
+    /// the CLI; also what CI's preset smoke runs). Supports the
+    /// low/mid/high tiers and the srv_inception / srv_effnetb3 servers.
+    pub fn synthetic(results_dir: &Path, quick: bool) -> Result<Self> {
+        let registry = Registry::from_meta(
+            Path::new("/tmp/mtpp_synthetic_artifacts"),
+            &crate::models::registry::test_meta_json(),
+        )?;
+        let dataset = Dataset::synthetic_for_tests(5000, 4, 10);
+        let outputs = SyntheticOutputs::new(
+            dataset.n,
+            &[
+                ("dev_low", 0.72),
+                ("dev_mid", 0.75),
+                ("dev_high", 0.77),
+                ("srv_inception", 0.785),
+                ("srv_effnetb3", 0.815),
+            ],
+            42,
+        )
+        .into_cached();
+        std::fs::create_dir_all(results_dir)?;
+        Ok(Self {
+            cfg: SystemConfig::default(),
+            registry,
+            dataset,
+            outputs,
+            results_dir: results_dir.to_path_buf(),
+            quick,
+        })
+    }
+
+    /// Execute one already-validated scenario against the cached
+    /// output provider.
+    pub fn run(&mut self, scn: &Scenario) -> Result<RunMetrics> {
+        crate::sim::run_scenario(
             scn,
             &self.cfg,
             &self.registry,
             &self.dataset,
             &mut self.outputs,
-            ovr,
+        )
+    }
+
+    /// Validate and execute one declarative spec.
+    pub fn run_spec(&mut self, spec: &ScenarioSpec) -> Result<RunMetrics> {
+        crate::sim::run_spec(
+            spec,
+            &self.cfg,
+            &self.registry,
+            &self.dataset,
+            &mut self.outputs,
         )
     }
 
@@ -100,21 +145,106 @@ impl Ctx {
     pub fn run_real(&self, scn: &Scenario) -> Result<RunMetrics> {
         let engine = Engine::new(self.registry.clone())?;
         let mut provider = RealExecProvider::new(&engine, &self.dataset);
-        run_scenario_with(
-            scn,
-            &self.cfg,
-            &self.registry,
-            &self.dataset,
-            &mut provider,
-            &Overrides::default(),
-        )
+        crate::sim::run_scenario(scn, &self.cfg, &self.registry, &self.dataset, &mut provider)
+    }
+}
+
+/// A declarative experiment sweep: labeled spec variants crossed with a
+/// total-device-count axis (applied as the §V-A heterogeneous split)
+/// and a seed axis. Sweeps become data instead of bespoke loop code —
+/// the same stream-of-specs shape a future placement search iterates
+/// over — and the whole grid dumps to JSON next to its CSV so any cell
+/// can be re-run standalone via `mtpp sim --scenario`.
+pub struct SpecGrid {
+    /// (series label, fully-formed base spec for that series).
+    pub variants: Vec<(String, ScenarioSpec)>,
+    /// Total-device-count axis.
+    pub devices: Vec<usize>,
+    /// Seed axis; runs at equal (variant, devices) are aggregated.
+    pub seeds: Vec<u64>,
+}
+
+impl SpecGrid {
+    /// Materialize one cell: variant `vi` at `devices` total devices
+    /// and `seed`.
+    pub fn cell(&self, vi: usize, devices: usize, seed: u64) -> Result<ScenarioSpec> {
+        let (_, base) = &self.variants[vi];
+        let mut spec = base.clone();
+        spec.set("devices", &format!("hetero:{devices}"))?;
+        spec.set("seed", &seed.to_string())?;
+        Ok(spec)
+    }
+
+    /// Number of simulation runs the grid expands to.
+    pub fn runs(&self) -> usize {
+        self.variants.len() * self.devices.len() * self.seeds.len()
+    }
+
+    /// Execute every cell, invoking `row` once per (variant label,
+    /// device count) with that cell's per-seed metrics.
+    pub fn run(
+        &self,
+        ctx: &mut Ctx,
+        mut row: impl FnMut(&str, usize, &[RunMetrics]) -> Result<()>,
+    ) -> Result<()> {
+        for (vi, (label, _)) in self.variants.iter().enumerate() {
+            for &n in &self.devices {
+                let mut runs = Vec::with_capacity(self.seeds.len());
+                for &seed in &self.seeds {
+                    runs.push(ctx.run_spec(&self.cell(vi, n, seed)?)?);
+                }
+                row(label, n, &runs)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "devices",
+                Json::Arr(self.devices.iter().map(|&n| Json::num(n as f64)).collect()),
+            ),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+            (
+                // An array (not a label-keyed object) so declaration
+                // order survives and duplicate labels cannot silently
+                // drop a variant from the reproducibility dump.
+                "variants",
+                Json::Arr(
+                    self.variants
+                        .iter()
+                        .map(|(label, spec)| {
+                            Json::obj(vec![
+                                ("label", Json::str(label.as_str())),
+                                ("spec", spec.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Dump the grid next to the sweep's CSV for reproducibility.
+    pub fn dump(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().pretty(2);
+        text.push('\n');
+        std::fs::write(path, text)?;
+        println!("wrote {}", path.display());
+        Ok(())
     }
 }
 
 /// One aggregated sweep cell (mean/min/max over seeds).
 #[derive(Clone, Debug)]
 pub struct SweepRow {
-    pub scheduler: &'static str,
+    /// Series tag: the scheduler's canonical name, or a sweep-specific
+    /// label (e.g. `fifo-x2`) for grids over server policies.
+    pub scheduler: String,
     pub slo_ms: f64,
     pub devices: usize,
     pub tier: Option<&'static str>,
@@ -169,7 +299,7 @@ pub fn aggregate_rows(
     let sr = seed_summary(&srs);
     let acc = seed_summary(&accs);
     SweepRow {
-        scheduler: scheduler_name(scheduler),
+        scheduler: scheduler.name().to_string(),
         slo_ms,
         devices,
         tier: tier.map(|(n, _)| n),
@@ -183,16 +313,6 @@ pub fn aggregate_rows(
         throughput_mean: seed_summary(&tputs).mean,
         fwd_mean: seed_summary(&fwds).mean,
         shed_mean: seed_summary(&sheds).mean,
-    }
-}
-
-fn scheduler_name(k: SchedulerKind) -> &'static str {
-    match k {
-        SchedulerKind::MultiTascPP => "multitasc++",
-        SchedulerKind::MultiTasc => "multitasc",
-        SchedulerKind::Static => "static",
-        SchedulerKind::AblationNoScaling => "mtpp-noscale",
-        SchedulerKind::AblationQuantized => "mtpp-quant",
     }
 }
 

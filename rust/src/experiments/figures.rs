@@ -10,11 +10,11 @@ use anyhow::Result;
 use crate::config::scenario::{
     AutoscalePolicy, DispatchKind, Intermittent, QueueKind, Scenario, SchedulerKind, ServerPolicy,
 };
+use crate::config::spec::ScenarioSpec;
 use crate::experiments::common::{
-    aggregate_rows, emit_rows, emit_trace, print_rows, Ctx, SweepRow,
+    aggregate_rows, emit_rows, emit_trace, print_rows, Ctx, SpecGrid, SweepRow,
 };
 use crate::models::Tier;
-use crate::sim::Overrides;
 
 const SLOS: [f64; 3] = [100.0, 150.0, 200.0];
 const SCHEDULERS: [SchedulerKind; 3] = [
@@ -48,7 +48,7 @@ fn sweep(
                         .with_slo(slo)
                         .with_seed(seed)
                         .with_samples(samples);
-                    runs.push(ctx.run(&scn, &Overrides::default())?);
+                    runs.push(ctx.run(&scn)?);
                 }
                 if per_tier.is_empty() {
                     rows.push(aggregate_rows(sched, slo, n, None, &runs));
@@ -190,11 +190,11 @@ fn fig_switch(ctx: &mut Ctx, init_model: &str, csv: &str, title: &str) -> Result
                     .with_seed(seed)
                     .with_samples(ctx.samples_per_device())
                     .with_switching(switching);
-                runs.push(ctx.run(&scn, &Overrides::default())?);
+                runs.push(ctx.run(&scn)?);
             }
             let mut row = aggregate_rows(SchedulerKind::MultiTascPP, 150.0, n, None, &runs);
             // Reuse the scheduler column to tag the series.
-            row.scheduler = if switching { "mtpp+switch" } else { "mtpp" };
+            row.scheduler = if switching { "mtpp+switch" } else { "mtpp" }.to_string();
             rows.push(row);
         }
     }
@@ -223,9 +223,14 @@ pub fn fig18(ctx: &mut Ctx) -> Result<()> {
 
 /// Figs 19 / 20: intermittent device participation time-series (20
 /// low-tier devices, 50% offline probability, EfficientNetB3 server).
-fn fig_intermittent(ctx: &mut Ctx, ovr: Overrides, csv: &str, title: &str) -> Result<()> {
-    let scn = Scenario::homogeneous(Tier::Low, 20, "srv_effnetb3")
-        .with_scheduler(if ovr.initial_threshold.is_some() {
+fn fig_intermittent(
+    ctx: &mut Ctx,
+    initial_threshold: Option<f64>,
+    csv: &str,
+    title: &str,
+) -> Result<()> {
+    let mut scn = Scenario::homogeneous(Tier::Low, 20, "srv_effnetb3")
+        .with_scheduler(if initial_threshold.is_some() {
             SchedulerKind::Static
         } else {
             SchedulerKind::MultiTascPP
@@ -234,7 +239,8 @@ fn fig_intermittent(ctx: &mut Ctx, ovr: Overrides, csv: &str, title: &str) -> Re
         .with_seed(1)
         .with_samples(ctx.samples_per_device())
         .with_intermittent(Intermittent::default());
-    let metrics = ctx.run(&scn, &ovr)?;
+    scn.initial_threshold = initial_threshold;
+    let metrics = ctx.run(&scn)?;
     println!(
         "\n== {title} ==\nSR {:.2}%  acc {:.2}%  makespan {:.1}s  trace points {}",
         metrics.overall.satisfaction_rate(),
@@ -249,7 +255,7 @@ fn fig_intermittent(ctx: &mut Ctx, ovr: Overrides, csv: &str, title: &str) -> Re
 pub fn fig19(ctx: &mut Ctx) -> Result<()> {
     fig_intermittent(
         ctx,
-        Overrides::default(),
+        None,
         "fig19_intermittent_dynamic.csv",
         "Fig 19: intermittent participation, dynamic threshold",
     )
@@ -258,9 +264,7 @@ pub fn fig19(ctx: &mut Ctx) -> Result<()> {
 pub fn fig20(ctx: &mut Ctx) -> Result<()> {
     fig_intermittent(
         ctx,
-        Overrides {
-            initial_threshold: Some(0.35),
-        },
+        Some(0.35),
         "fig20_intermittent_static.csv",
         "Fig 20: intermittent participation, static threshold 0.35",
     )
@@ -333,6 +337,20 @@ pub fn ablation(ctx: &mut Ctx) -> Result<()> {
     Ok(())
 }
 
+/// The overloaded mixed-criticality base workload shared by the
+/// `replicas` and `hetero-pool` sweeps, as a declarative spec (device
+/// count and seed are grid axes, filled in per cell by [`SpecGrid`]).
+fn mixed_criticality_spec(samples: usize) -> ScenarioSpec {
+    ScenarioSpec::from_scenario(
+        &Scenario::heterogeneous(10, "srv_inception")
+            .with_scheduler(SchedulerKind::Static)
+            .with_slo(150.0)
+            .with_tier_slo(Tier::Low, 100.0)
+            .with_tier_slo(Tier::High, 400.0)
+            .with_samples(samples),
+    )
+}
+
 /// Replicated-server extension (beyond the paper's figures;
 /// CascadeServe-style serving): queue discipline x replica count on an
 /// overloaded mixed-criticality heterogeneous population under the
@@ -340,42 +358,42 @@ pub fn ablation(ctx: &mut Ctx) -> Result<()> {
 /// does the work. Low-tier devices carry a tight SLO and high-tier a
 /// relaxed one, which is where EDF and tier-WFQ separate from FIFO.
 pub fn replicas(ctx: &mut Ctx) -> Result<()> {
-    let grid: Vec<usize> = if ctx.quick {
+    let devices: Vec<usize> = if ctx.quick {
         vec![20, 40, 60]
     } else {
         vec![10, 20, 30, 40, 60, 80]
     };
-    let combos: [(QueueKind, usize, &'static str); 7] = [
-        (QueueKind::Fifo, 1, "fifo-x1"),
-        (QueueKind::Edf, 1, "edf-x1"),
-        (QueueKind::TierWfq, 1, "wfq-x1"),
-        (QueueKind::Fifo, 2, "fifo-x2"),
-        (QueueKind::Edf, 2, "edf-x2"),
-        (QueueKind::TierWfq, 2, "wfq-x2"),
-        (QueueKind::Fifo, 4, "fifo-x4"),
+    let combos: [(&str, QueueKind, usize); 7] = [
+        ("fifo-x1", QueueKind::Fifo, 1),
+        ("edf-x1", QueueKind::Edf, 1),
+        ("wfq-x1", QueueKind::TierWfq, 1),
+        ("fifo-x2", QueueKind::Fifo, 2),
+        ("edf-x2", QueueKind::Edf, 2),
+        ("wfq-x2", QueueKind::TierWfq, 2),
+        ("fifo-x4", QueueKind::Fifo, 4),
     ];
-    let mut rows = Vec::new();
-    for &(queue, n_srv, label) in &combos {
-        for &n in &grid {
-            let mut runs = Vec::new();
-            for &seed in &ctx.seeds() {
-                let scn = Scenario::heterogeneous(n, "srv_inception")
-                    .with_scheduler(SchedulerKind::Static)
-                    .with_slo(150.0)
-                    .with_tier_slo(Tier::Low, 100.0)
-                    .with_tier_slo(Tier::High, 400.0)
-                    .with_seed(seed)
-                    .with_samples(ctx.samples_per_device())
-                    .with_replicas(n_srv)
-                    .with_queue(queue);
-                runs.push(ctx.run(&scn, &Overrides::default())?);
-            }
-            let mut row = aggregate_rows(SchedulerKind::Static, 150.0, n, None, &runs);
-            // Reuse the scheduler column to tag the series.
-            row.scheduler = label;
-            rows.push(row);
-        }
+    let base = mixed_criticality_spec(ctx.samples_per_device());
+    let mut variants = Vec::with_capacity(combos.len());
+    for &(label, queue, n_srv) in &combos {
+        let mut spec = base.clone();
+        spec.set("server.queue", queue.name())?;
+        spec.set("server.replicas", &n_srv.to_string())?;
+        variants.push((label.to_string(), spec));
     }
+    let grid = SpecGrid {
+        variants,
+        devices,
+        seeds: ctx.seeds(),
+    };
+    grid.dump(&ctx.results_dir.join("replicas_queue_disciplines.spec.json"))?;
+    let mut rows = Vec::new();
+    grid.run(ctx, |label, n, runs| {
+        let mut row = aggregate_rows(SchedulerKind::Static, 150.0, n, None, runs);
+        // Reuse the scheduler column to tag the series.
+        row.scheduler = label.to_string();
+        rows.push(row);
+        Ok(())
+    })?;
     print_rows("Replicated server pool: queue discipline x replicas", &rows);
     emit_rows(&ctx.results_dir.join("replicas_queue_disciplines.csv"), &rows)?;
     Ok(())
@@ -451,37 +469,41 @@ pub fn hetero_pool_policies() -> Vec<(&'static str, ServerPolicy)> {
 /// EfficientNetB3 + InceptionV3 pool under lowest-index vs model-aware
 /// dispatch, slack-aware batching, and cost-aware autoscaling.
 pub fn hetero_pool(ctx: &mut Ctx) -> Result<()> {
-    let grid: Vec<usize> = if ctx.quick {
+    let devices: Vec<usize> = if ctx.quick {
         vec![20, 40, 60]
     } else {
         vec![10, 20, 30, 40, 60, 80]
     };
-    let mut rows = Vec::new();
+    let base = mixed_criticality_spec(ctx.samples_per_device());
+    let mut variants = Vec::new();
+    let mut autoscaled = std::collections::BTreeSet::new();
     for (label, policy) in hetero_pool_policies() {
-        for &n in &grid {
-            let mut runs = Vec::new();
-            for &seed in &ctx.seeds() {
-                let scn = Scenario::heterogeneous(n, "srv_inception")
-                    .with_scheduler(SchedulerKind::Static)
-                    .with_slo(150.0)
-                    .with_tier_slo(Tier::Low, 100.0)
-                    .with_tier_slo(Tier::High, 400.0)
-                    .with_seed(seed)
-                    .with_samples(ctx.samples_per_device())
-                    .with_server_policy(policy.clone());
-                runs.push(ctx.run(&scn, &Overrides::default())?);
-            }
-            if policy.autoscale.is_some() {
-                let parked: f64 = runs.iter().map(|m| m.parked_replica_seconds).sum::<f64>()
-                    / runs.len() as f64;
-                println!("[hetero-pool] {label} n={n}: mean parked {parked:.1} replica-s");
-            }
-            let mut row = aggregate_rows(SchedulerKind::Static, 150.0, n, None, &runs);
-            // Reuse the scheduler column to tag the series.
-            row.scheduler = label;
-            rows.push(row);
+        if policy.autoscale.is_some() {
+            autoscaled.insert(label.to_string());
         }
+        let mut spec = base.clone();
+        spec.server = policy;
+        variants.push((label.to_string(), spec));
     }
+    let grid = SpecGrid {
+        variants,
+        devices,
+        seeds: ctx.seeds(),
+    };
+    grid.dump(&ctx.results_dir.join("hetero_pool.spec.json"))?;
+    let mut rows = Vec::new();
+    grid.run(ctx, |label, n, runs| {
+        if autoscaled.contains(label) {
+            let parked: f64 =
+                runs.iter().map(|m| m.parked_replica_seconds).sum::<f64>() / runs.len() as f64;
+            println!("[hetero-pool] {label} n={n}: mean parked {parked:.1} replica-s");
+        }
+        let mut row = aggregate_rows(SchedulerKind::Static, 150.0, n, None, runs);
+        // Reuse the scheduler column to tag the series.
+        row.scheduler = label.to_string();
+        rows.push(row);
+        Ok(())
+    })?;
     print_rows(
         "Heterogeneous pool: dispatch x slack batching x autoscale",
         &rows,

@@ -4,5 +4,5 @@
 pub mod common;
 pub mod figures;
 
-pub use common::Ctx;
+pub use common::{Ctx, SpecGrid};
 pub use figures::{registry, resolve};

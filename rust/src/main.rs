@@ -9,15 +9,16 @@
 //!   device                  live TCP device client
 //!   list                    list available experiments
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
-use multitascpp::config::scenario::{Scenario, SchedulerKind};
+use multitascpp::config::scenario::ExecMode;
+use multitascpp::config::spec::{preset_names, ScenarioSpec};
 use multitascpp::config::SystemConfig;
 use multitascpp::experiments::{self, Ctx};
 use multitascpp::models::Tier;
-use multitascpp::util::cli::{server_flags, server_policy, Args};
+use multitascpp::util::cli::{server_flags, Args, Matches};
 
 fn main() -> Result<()> {
     multitascpp::util::logging::init();
@@ -122,51 +123,153 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Build the resolved spec for `mtpp sim`: start from `--scenario`
+/// file / `--preset` name / built-in defaults, overlay the CLI flags
+/// the user actually typed, then apply `--set` dotted-path overrides
+/// in command-line order.
+fn resolve_sim_spec(m: &Matches) -> Result<ScenarioSpec> {
+    let file = m.get("scenario").filter(|s| !s.is_empty());
+    let preset = m.get("preset").filter(|s| !s.is_empty());
+    ensure!(
+        file.is_none() || preset.is_none(),
+        "--scenario and --preset are mutually exclusive"
+    );
+    let loaded = file.is_some() || preset.is_some();
+    let mut spec = match (file, preset) {
+        (Some(path), _) => ScenarioSpec::load(Path::new(path))?,
+        (_, Some(name)) => ScenarioSpec::preset(name)?,
+        _ => ScenarioSpec::default(),
+    };
+    // Explicit flags override the loaded spec; with no spec loaded the
+    // flag defaults are the default spec, so everything applies.
+    let explicit = |name: &str| !loaded || m.was_set(name);
+    if explicit("tier") {
+        // An explicit tier rebuilds the population outright (hetero =
+        // the §V-A equal-thirds split).
+        let n = if explicit("devices") {
+            m.get_usize("devices")?
+        } else {
+            spec.total_devices()
+        };
+        spec.set("devices", &format!("{}:{n}", m.get_str("tier")?))?;
+    } else if explicit("devices") {
+        // `--devices N` alone rescales the loaded spec's mix in shape
+        // (a low:4,high:4 spec stays 1:1) instead of replacing it.
+        spec.scale_devices(m.get_usize("devices")?)?;
+    }
+    for (flag, path) in [
+        ("server", "server_model"),
+        ("scheduler", "scheduler"),
+        ("slo", "slo_ms"),
+        ("samples", "samples_per_device"),
+        ("seed", "seed"),
+        ("servers", "server.replicas"),
+        ("queue", "server.queue"),
+        ("server-models", "server.models"),
+        ("wfq-weights", "server.wfq_weights"),
+        ("dispatch", "server.dispatch"),
+    ] {
+        if explicit(flag) {
+            spec.set(path, m.get_str(flag)?)?;
+        }
+    }
+    for (switch, path) in [
+        ("switching", "model_switching"),
+        ("real", "exec"),
+        ("shed", "server.shed"),
+        ("slack-batch", "server.slack_batch"),
+        ("autoscale", "server.autoscale"),
+    ] {
+        if m.get_bool(switch) {
+            let value = if switch == "real" { "real" } else { "true" };
+            spec.set(path, value)?;
+        }
+    }
+    for kv in m.get_all("set") {
+        spec.apply_set(kv)?;
+    }
+    Ok(spec)
+}
+
+fn population_desc(devices: &[(Tier, usize)]) -> String {
+    devices
+        .iter()
+        .filter(|&&(_, n)| n > 0)
+        .map(|&(t, n)| format!("{n} {}", t.name()))
+        .collect::<Vec<_>>()
+        .join(" + ")
+}
+
 fn cmd_sim(argv: &[String]) -> Result<()> {
     let mut args = Args::new("mtpp sim", "run one custom scenario");
     artifacts_flag(&mut args);
-    args.flag("devices", "number of devices", Some("10"))
-        .flag("tier", "device tier: low|mid|high|vit|hetero", Some("low"))
-        .flag("server", "server model", Some("srv_inception"))
-        .flag("scheduler", "multitasc++|multitasc|static", Some("multitasc++"))
-        .flag("slo", "latency SLO in ms", Some("150"))
-        .flag("samples", "samples per device", Some("5000"))
-        .flag("seed", "experiment seed", Some("0"))
-        .switch("switching", "enable §IV-E server model switching")
-        .switch("real", "execute artifacts on the request path (slow)");
+    args.flag(
+        "scenario",
+        "load a scenario spec JSON file (see docs/scenario-spec.md)",
+        None,
+    )
+    .flag(
+        "preset",
+        &format!("load a named preset: {}", preset_names().join("|")),
+        None,
+    )
+    .multi("set", "dotted-path spec override, e.g. --set server.queue=edf")
+    .flag(
+        "dump-spec",
+        "write the fully-resolved spec JSON to this path (re-runnable via --scenario)",
+        None,
+    )
+    .switch(
+        "synthetic",
+        "run without artifacts on the synthetic test tables \
+         (low|mid|high tiers, srv_inception|srv_effnetb3)",
+    )
+    .flag("devices", "number of devices", Some("10"))
+    .flag("tier", "device tier: low|mid|high|vit|hetero", Some("low"))
+    .flag("server", "server model", Some("srv_inception"))
+    .flag("scheduler", "multitasc++|multitasc|static", Some("multitasc++"))
+    .flag("slo", "latency SLO in ms", Some("150"))
+    .flag("samples", "samples per device", Some("5000"))
+    .flag("seed", "experiment seed", Some("0"))
+    .switch("switching", "enable §IV-E server model switching")
+    .switch("real", "execute artifacts on the request path (slow)");
     server_flags(&mut args);
     let m = args.parse(argv)?;
-    let policy = server_policy(&m)?;
-    let dir = resolve_artifacts(&m);
-    let mut ctx = Ctx::load(&dir, &PathBuf::from("results"), false)?;
-    let n = m.get_usize("devices")?;
-    let scn = match m.get_str("tier")? {
-        "hetero" => Scenario::heterogeneous(n, m.get_str("server")?),
-        t => Scenario::homogeneous(Tier::parse(t)?, n, m.get_str("server")?),
+    let spec = resolve_sim_spec(&m)?;
+    let scn = spec.validate()?;
+    if let Some(path) = m.get("dump-spec").filter(|s| !s.is_empty()) {
+        spec.save(Path::new(path))?;
+        println!("wrote {path}");
     }
-    .with_scheduler(SchedulerKind::parse(m.get_str("scheduler")?)?)
-    .with_slo(m.get_f64("slo")?)
-    .with_samples(m.get_usize("samples")?)
-    .with_seed(m.get_u64("seed")?)
-    .with_switching(m.get_bool("switching"))
-    .with_server_policy(policy.clone());
-    let t0 = std::time::Instant::now();
-    let metrics = if m.get_bool("real") {
-        ctx.run_real(&scn)?
+    let mut ctx = if m.get_bool("synthetic") {
+        Ctx::synthetic(Path::new("results"), false)?
     } else {
-        ctx.run(&scn, &Default::default())?
+        let dir = resolve_artifacts(&m);
+        Ctx::load(&dir, &PathBuf::from("results"), false)?
+    };
+    let t0 = std::time::Instant::now();
+    let metrics = match scn.exec {
+        ExecMode::Real => {
+            ensure!(
+                !m.get_bool("synthetic"),
+                "--real needs real artifacts (drop --synthetic)"
+            );
+            ctx.run_real(&scn)?
+        }
+        ExecMode::Cached => ctx.run(&scn)?,
     };
     let wall = t0.elapsed().as_secs_f64();
+    let policy = &scn.server;
     let pool_desc = if policy.models.is_empty() {
-        format!("{} x{}", m.get_str("server")?, policy.replicas)
+        format!("{} x{}", scn.server_model, policy.replicas)
     } else {
         policy.models.join("+")
     };
     println!(
         "\nscenario: {} devices ({}), server {} ({} queue, {} dispatch{}{}{}), {} scheduler, \
          SLO {} ms",
-        n,
-        m.get_str("tier")?,
+        scn.total_devices(),
+        population_desc(&scn.devices),
         pool_desc,
         policy.queue.name(),
         policy.dispatch.name(),
@@ -177,8 +280,8 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         } else {
             ""
         },
-        m.get_str("scheduler")?,
-        m.get_f64("slo")?
+        scn.scheduler.name(),
+        scn.slo_ms
     );
     println!(
         "samples {}   SR {:.2}%   accuracy {:.2}%   fwd {:.1}%",

@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
@@ -22,6 +22,13 @@ pub enum Tier {
     Vit,
 }
 
+crate::named_enum!("tier", Tier {
+    Low => "low";
+    Mid => "mid";
+    High => "high";
+    Vit => "vit";
+});
+
 impl Tier {
     pub fn device_model(&self) -> &'static str {
         match self {
@@ -32,26 +39,16 @@ impl Tier {
         }
     }
 
-    pub fn name(&self) -> &'static str {
+    /// Position in [`Tier::ALL`] — the index used by per-tier weight
+    /// arrays like `ServerPolicy::wfq_weights`.
+    pub fn index(&self) -> usize {
         match self {
-            Tier::Low => "low",
-            Tier::Mid => "mid",
-            Tier::High => "high",
-            Tier::Vit => "vit",
+            Tier::Low => 0,
+            Tier::Mid => 1,
+            Tier::High => 2,
+            Tier::Vit => 3,
         }
     }
-
-    pub fn parse(s: &str) -> Result<Tier> {
-        match s {
-            "low" => Ok(Tier::Low),
-            "mid" => Ok(Tier::Mid),
-            "high" => Ok(Tier::High),
-            "vit" => Ok(Tier::Vit),
-            other => bail!("unknown tier '{other}'"),
-        }
-    }
-
-    pub const ALL: [Tier; 4] = [Tier::Low, Tier::Mid, Tier::High, Tier::Vit];
 }
 
 /// Static metadata for one model.

@@ -6,17 +6,33 @@ pub mod client;
 pub mod proto;
 pub mod server;
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
+use crate::config::spec::ScenarioSpec;
 use crate::config::SystemConfig;
 use crate::data::Dataset;
 use crate::models::{Registry, Tier};
-use crate::util::cli::Args;
+use crate::util::cli::{Args, Matches};
 
 pub use client::{run_device, DeviceOptions, DeviceReport};
 pub use server::{serve, ServeOptions};
+
+/// Load the `--scenario` spec, if given, and validate it. Explicit
+/// flags still win over spec values — the spec provides the defaults,
+/// so one file can configure the sim, the leader, and every device
+/// agent consistently.
+fn load_net_spec(m: &Matches) -> Result<Option<ScenarioSpec>> {
+    match m.get("scenario").filter(|s| !s.is_empty()) {
+        Some(path) => {
+            let spec = ScenarioSpec::load(Path::new(path))?;
+            spec.validate()?;
+            Ok(Some(spec))
+        }
+        None => Ok(None),
+    }
+}
 
 pub fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut args = Args::new("mtpp serve", "live leader: queue + batcher + PJRT");
@@ -24,19 +40,31 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("server", "server model", Some("srv_inception"))
         .flag("answers", "exit after N answers (0 = forever)", Some("0"))
         .flag("idle-timeout", "exit after idle seconds", Some("30"))
+        .flag(
+            "scenario",
+            "scenario spec JSON: supplies the server model unless --server is given",
+            None,
+        )
         .flag("artifacts", "artifacts directory", None);
     let m = args.parse(argv)?;
+    let spec = load_net_spec(&m)?;
     let dir = m
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(SystemConfig::locate_artifacts);
     let registry = Registry::load(&dir)?;
     let cfg = SystemConfig::default();
+    let server_model = match &spec {
+        Some(spec) if !m.was_set("server") => spec.server_model.clone(),
+        _ => m.get_str("server")?.to_string(),
+    };
+    let idle_s = m.get_f64("idle-timeout")?;
+    anyhow::ensure!(idle_s >= 0.0, "--idle-timeout must be >= 0, got {idle_s}");
     let opts = ServeOptions {
         addr: m.get_str("addr")?.to_string(),
-        server_model: m.get_str("server")?.to_string(),
+        server_model,
         answer_limit: m.get_usize("answers")?,
-        idle_timeout: std::time::Duration::from_secs_f64(m.get_f64("idle-timeout")?),
+        idle_timeout: std::time::Duration::from_secs_f64(idle_s),
     };
     let answered = serve(registry, &cfg, &opts)?;
     println!("served {answered} heavy-model answers");
@@ -51,8 +79,15 @@ pub fn cmd_device(argv: &[String]) -> Result<()> {
         .flag("seed", "stream seed / device index", Some("0"))
         .flag("slo", "latency SLO ms", Some("150"))
         .switch("flat-out", "do not pace at the tier latency")
+        .flag(
+            "scenario",
+            "scenario spec JSON: supplies tier (by device index = --seed), \
+             samples, and SLO unless the matching flags are given",
+            None,
+        )
         .flag("artifacts", "artifacts directory", None);
     let m = args.parse(argv)?;
+    let spec = load_net_spec(&m)?;
     let dir = m
         .get("artifacts")
         .map(PathBuf::from)
@@ -60,12 +95,27 @@ pub fn cmd_device(argv: &[String]) -> Result<()> {
     let registry = Registry::load(&dir)?;
     let ds = Dataset::load(&dir.join("dataset.bin"))?;
     let cfg = SystemConfig::default();
+    let seed = m.get_u64("seed")?;
+    let tier = match &spec {
+        Some(spec) if !m.was_set("tier") => spec
+            .tier_of_device(seed as usize)
+            .context("scenario spec has no devices")?,
+        _ => Tier::parse(m.get_str("tier")?)?,
+    };
+    let samples = match &spec {
+        Some(spec) if !m.was_set("samples") => spec.samples_per_device,
+        _ => m.get_usize("samples")?,
+    };
+    let slo_ms = match &spec {
+        Some(spec) if !m.was_set("slo") => spec.validate()?.slo_for(tier),
+        _ => m.get_f64_pos("slo")?,
+    };
     let opts = DeviceOptions {
         addr: m.get_str("addr")?.to_string(),
-        tier: Tier::parse(m.get_str("tier")?)?,
-        samples: m.get_usize("samples")?,
-        seed: m.get_u64("seed")?,
-        slo_ms: m.get_f64("slo")?,
+        tier,
+        samples,
+        seed,
+        slo_ms,
         paced: !m.get_bool("flat-out"),
     };
     let report = run_device(registry, &ds, &cfg, &opts)?;

@@ -5,6 +5,7 @@ use anyhow::{Context, Result};
 
 use crate::config::latency::server_latency_model;
 use crate::config::scenario::Scenario;
+use crate::config::spec::ScenarioSpec;
 use crate::config::SystemConfig;
 use crate::data::{device_stream, Dataset};
 use crate::metrics::RunMetrics;
@@ -17,11 +18,20 @@ use crate::util::prng::Rng;
 /// The §IV-E switching ladder (fast -> heavy), as in Figs 17/18.
 pub const SWITCH_LADDER: [&str; 2] = ["srv_inception", "srv_effnetb3"];
 
-/// Optional per-run overrides that don't belong in the Scenario.
-#[derive(Clone, Debug, Default)]
-pub struct Overrides {
-    /// Force every device's initial threshold (Fig 20 uses 0.35).
-    pub initial_threshold: Option<f64>,
+/// Validate a declarative spec and run the resulting scenario — the
+/// single entry point for everything CLI- or file-configured. The old
+/// `run_scenario`/`run_scenario_with`/`Overrides` trio collapsed into
+/// this plus [`run_scenario`] (the engine-level runner for
+/// already-validated scenarios; the one-off initial-threshold override
+/// now lives in the scenario itself).
+pub fn run_spec(
+    spec: &ScenarioSpec,
+    cfg: &SystemConfig,
+    registry: &Registry,
+    ds: &Dataset,
+    provider: &mut dyn OutputProvider,
+) -> Result<RunMetrics> {
+    run_scenario(&spec.validate()?, cfg, registry, ds, provider)
 }
 
 pub fn run_scenario(
@@ -30,17 +40,6 @@ pub fn run_scenario(
     registry: &Registry,
     ds: &Dataset,
     provider: &mut dyn OutputProvider,
-) -> Result<RunMetrics> {
-    run_scenario_with(scn, cfg, registry, ds, provider, &Overrides::default())
-}
-
-pub fn run_scenario_with(
-    scn: &Scenario,
-    cfg: &SystemConfig,
-    registry: &Registry,
-    ds: &Dataset,
-    provider: &mut dyn OutputProvider,
-    ovr: &Overrides,
 ) -> Result<RunMetrics> {
     // --- device population -------------------------------------------------
     let mut tiers: Vec<Tier> = Vec::new();
@@ -51,7 +50,7 @@ pub fn run_scenario_with(
     let mut specs = Vec::with_capacity(tiers.len());
     for (id, &tier) in tiers.iter().enumerate() {
         let stream = device_stream(ds, scn.seed, id, scn.samples_per_device);
-        let initial = match ovr.initial_threshold {
+        let initial = match scn.initial_threshold {
             Some(c) => c,
             None => {
                 registry

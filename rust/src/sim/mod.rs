@@ -7,7 +7,7 @@ pub mod experiment;
 pub mod server;
 
 pub use engine::{DeviceSpec, SimEngine};
-pub use experiment::{run_scenario, run_scenario_with, Overrides};
+pub use experiment::{run_scenario, run_spec};
 pub use server::{
     Admission, PendingRequest, PoolScaler, QueueDiscipline, ScaleAction, ServerPool,
 };

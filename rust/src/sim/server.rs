@@ -45,15 +45,6 @@ use std::collections::VecDeque;
 use crate::config::scenario::{AutoscalePolicy, QueueKind, ServerPolicy};
 use crate::models::Tier;
 
-fn tier_index(t: Tier) -> usize {
-    match t {
-        Tier::Low => 0,
-        Tier::Mid => 1,
-        Tier::High => 2,
-        Tier::Vit => 3,
-    }
-}
-
 const NUM_TIERS: usize = 4;
 
 /// A forwarded request waiting for (or undergoing) server inference.
@@ -264,7 +255,7 @@ impl Default for TierWfq {
 
 impl QueueDiscipline for TierWfq {
     fn push(&mut self, req: PendingRequest) {
-        let i = tier_index(req.tier);
+        let i = req.tier.index();
         if self.queues[i].is_empty() {
             self.vtime[i] = self.vtime[i].max(self.vnow);
         }

@@ -2,18 +2,28 @@
 //! environment). Supports `--flag value`, `--flag=value`, boolean
 //! switches, defaults, and auto-generated help.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::scenario::{AutoscalePolicy, DispatchKind, QueueKind, ServerPolicy};
+pub use crate::config::spec::parse_wfq_weights;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FlagKind {
+    /// `--name <value>`, optionally with a default.
+    Value,
+    /// Boolean `--name` (default false).
+    Switch,
+    /// `--name <value>`, repeatable; values accumulate in order.
+    Multi,
+}
 
 #[derive(Clone, Debug)]
 struct FlagSpec {
     name: String,
     help: String,
     default: Option<String>,
-    is_switch: bool,
+    kind: FlagKind,
 }
 
 /// A small declarative argument parser.
@@ -38,6 +48,10 @@ pub struct Args {
 pub struct Matches {
     values: BTreeMap<String, String>,
     switches: BTreeMap<String, bool>,
+    multis: BTreeMap<String, Vec<String>>,
+    /// Flags the user passed explicitly (as opposed to defaults) —
+    /// lets spec-file workflows apply only what was actually typed.
+    explicit: BTreeSet<String>,
     pub positional: Vec<String>,
 }
 
@@ -62,7 +76,7 @@ impl Args {
             name: name.to_string(),
             help: help.to_string(),
             default: default.map(|s| s.to_string()),
-            is_switch: false,
+            kind: FlagKind::Value,
         });
         self
     }
@@ -73,7 +87,19 @@ impl Args {
             name: name.to_string(),
             help: help.to_string(),
             default: None,
-            is_switch: true,
+            kind: FlagKind::Switch,
+        });
+        self
+    }
+
+    /// A repeatable `--name <value>` flag; occurrences accumulate in
+    /// command-line order (e.g. `--set a=1 --set b=2`).
+    pub fn multi(&mut self, name: &str, help: &str) -> &mut Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            kind: FlagKind::Multi,
         });
         self
     }
@@ -81,7 +107,11 @@ impl Args {
     pub fn usage(&self) -> String {
         let mut out = format!("{} — {}\n\nflags:\n", self.program, self.about);
         for f in &self.flags {
-            let kind = if f.is_switch { "" } else { " <value>" };
+            let kind = match f.kind {
+                FlagKind::Switch => "",
+                FlagKind::Value => " <value>",
+                FlagKind::Multi => " <value> (repeatable)",
+            };
             let dft = f
                 .default
                 .as_ref()
@@ -115,22 +145,32 @@ impl Args {
                     .iter()
                     .find(|f| f.name == name)
                     .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n{}", self.usage()))?;
-                if spec.is_switch {
-                    if inline_val.is_some() {
-                        bail!("switch --{name} takes no value");
-                    }
-                    m.switches.insert(name.to_string(), true);
-                } else {
-                    let val = match inline_val {
-                        Some(v) => v,
-                        None => {
-                            i += 1;
-                            argv.get(i)
-                                .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
-                                .clone()
+                m.explicit.insert(name.to_string());
+                match spec.kind {
+                    FlagKind::Switch => {
+                        if inline_val.is_some() {
+                            bail!("switch --{name} takes no value");
                         }
-                    };
-                    m.values.insert(name.to_string(), val);
+                        m.switches.insert(name.to_string(), true);
+                    }
+                    FlagKind::Value | FlagKind::Multi => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .ok_or_else(|| {
+                                        anyhow::anyhow!("--{name} requires a value")
+                                    })?
+                                    .clone()
+                            }
+                        };
+                        if spec.kind == FlagKind::Multi {
+                            m.multis.entry(name.to_string()).or_default().push(val);
+                        } else {
+                            m.values.insert(name.to_string(), val);
+                        }
+                    }
                 }
             } else if self.allow_positional {
                 m.positional.push(arg.clone());
@@ -147,6 +187,9 @@ impl Args {
 /// `--servers N --queue fifo|edf|tier-wfq [--shed]
 ///  --server-models a,b --wfq-weights low:3,mid:1
 ///  --dispatch lowest|model-aware [--slack-batch] [--autoscale]`.
+/// The values map onto `ScenarioSpec` dotted paths in `cmd_sim`
+/// (`--servers` -> `server.replicas`, ...); parsing and every
+/// invariant live in `config::spec`, not here.
 pub fn server_flags(args: &mut Args) -> &mut Args {
     args.flag("servers", "number of server replicas", Some("1"))
         .flag(
@@ -182,72 +225,6 @@ pub fn server_flags(args: &mut Args) -> &mut Args {
         )
 }
 
-/// Parse `tier:weight` pairs into the `[low, mid, high, vit]` weight
-/// array (unlisted tiers default to 1). Rejects unknown tiers,
-/// duplicates, and non-positive or non-finite weights — the same
-/// invariant `TierWfq::with_weights` asserts.
-pub fn parse_wfq_weights(spec: &str) -> Result<[f64; 4]> {
-    let mut weights = [1.0; 4];
-    if spec.trim().is_empty() {
-        return Ok(weights);
-    }
-    let mut seen = [false; 4];
-    for pair in spec.split(',') {
-        let pair = pair.trim();
-        let (tier, w) = pair
-            .split_once(':')
-            .ok_or_else(|| anyhow::anyhow!("bad WFQ weight '{pair}' (want tier:weight)"))?;
-        let idx = match tier.trim() {
-            "low" => 0,
-            "mid" => 1,
-            "high" => 2,
-            "vit" => 3,
-            other => bail!("unknown tier '{other}' in --wfq-weights (low|mid|high|vit)"),
-        };
-        ensure!(!seen[idx], "duplicate tier '{}' in --wfq-weights", tier.trim());
-        seen[idx] = true;
-        let w: f64 = w
-            .trim()
-            .parse()
-            .map_err(|_| anyhow::anyhow!("bad WFQ weight value '{w}'"))?;
-        ensure!(
-            w > 0.0 && w.is_finite(),
-            "WFQ weight for '{}' must be positive and finite, got {w}",
-            tier.trim()
-        );
-        weights[idx] = w;
-    }
-    Ok(weights)
-}
-
-/// Parse the flags registered by [`server_flags`] into a policy.
-pub fn server_policy(m: &Matches) -> Result<ServerPolicy> {
-    let replicas = m.get_usize("servers")?;
-    ensure!(replicas >= 1, "--servers must be >= 1, got {replicas}");
-    let models: Vec<String> = m
-        .get_str("server-models")?
-        .split(',')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-        .map(str::to_string)
-        .collect();
-    ensure!(
-        models.is_empty() || models.len() == replicas,
-        "--server-models names {} models but --servers is {replicas}",
-        models.len()
-    );
-    Ok(ServerPolicy {
-        replicas,
-        queue: QueueKind::parse(m.get_str("queue")?)?,
-        shed: m.get_bool("shed"),
-        models,
-        wfq_weights: parse_wfq_weights(m.get_str("wfq-weights")?)?,
-        dispatch: DispatchKind::parse(m.get_str("dispatch")?)?,
-        slack_batch: m.get_bool("slack-batch"),
-        autoscale: m.get_bool("autoscale").then(AutoscalePolicy::default),
-    })
-}
-
 impl Matches {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
@@ -266,12 +243,37 @@ impl Matches {
         Ok(self.get_str(name)?.parse()?)
     }
 
+    /// Parse a float flag, rejecting NaN/inf at the CLI boundary so a
+    /// non-finite value can never reach `EventQueue::push`'s hard panic
+    /// deep inside a run.
     pub fn get_f64(&self, name: &str) -> Result<f64> {
-        Ok(self.get_str(name)?.parse()?)
+        let x: f64 = self.get_str(name)?.parse()?;
+        ensure!(x.is_finite(), "--{name} must be a finite number, got {x}");
+        Ok(x)
+    }
+
+    /// [`Matches::get_f64`] plus a positivity check (SLOs, watermarks).
+    pub fn get_f64_pos(&self, name: &str) -> Result<f64> {
+        let x = self.get_f64(name)?;
+        ensure!(x > 0.0, "--{name} must be positive, got {x}");
+        Ok(x)
     }
 
     pub fn get_bool(&self, name: &str) -> bool {
         self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    /// All values of a repeatable flag, in command-line order.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        match self.multis.get(name) {
+            Some(v) => v.as_slice(),
+            None => &[],
+        }
+    }
+
+    /// Whether the user passed this flag explicitly (vs. a default).
+    pub fn was_set(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 
     /// Comma-separated list, e.g. `--slos 100,150,200`.
@@ -339,55 +341,27 @@ mod tests {
     }
 
     #[test]
-    fn server_flags_parse_into_policy() {
-        use crate::config::scenario::QueueKind;
+    fn server_flags_register_with_seed_defaults() {
         let mut a = Args::new("t", "test");
         server_flags(&mut a);
-        // Defaults reproduce the seed single-server behavior.
-        let p = server_policy(&a.parse(&[]).unwrap()).unwrap();
-        assert_eq!(p, crate::config::scenario::ServerPolicy::default());
+        // Defaults reproduce the seed single-server behavior; the
+        // values feed `ScenarioSpec::set` in cmd_sim, whose defaults
+        // are pinned separately against `ServerPolicy::default()`.
+        let m = a.parse(&[]).unwrap();
+        assert_eq!(m.get_usize("servers").unwrap(), 1);
+        assert_eq!(m.get_str("queue").unwrap(), "fifo");
+        assert_eq!(m.get_str("server-models").unwrap(), "");
+        assert_eq!(m.get_str("wfq-weights").unwrap(), "");
+        assert_eq!(m.get_str("dispatch").unwrap(), "model-aware");
+        assert!(!m.get_bool("shed"));
+        assert!(!m.get_bool("slack-batch"));
+        assert!(!m.get_bool("autoscale"));
         let m = a
             .parse(&argv(&["--servers", "4", "--queue", "edf", "--shed"]))
             .unwrap();
-        let p = server_policy(&m).unwrap();
-        assert_eq!(p.replicas, 4);
-        assert_eq!(p.queue, QueueKind::Edf);
-        assert!(p.shed);
-        // Invalid values are rejected.
-        assert!(server_policy(&a.parse(&argv(&["--servers", "0"])).unwrap()).is_err());
-        assert!(server_policy(&a.parse(&argv(&["--queue", "lifo"])).unwrap()).is_err());
-    }
-
-    #[test]
-    fn hetero_pool_flags_parse_into_policy() {
-        use crate::config::scenario::DispatchKind;
-        let mut a = Args::new("t", "test");
-        server_flags(&mut a);
-        let m = a
-            .parse(&argv(&[
-                "--servers",
-                "2",
-                "--server-models",
-                "srv_effnetb3, srv_inception",
-                "--dispatch",
-                "lowest",
-                "--slack-batch",
-                "--autoscale",
-            ]))
-            .unwrap();
-        let p = server_policy(&m).unwrap();
-        assert_eq!(p.models, vec!["srv_effnetb3", "srv_inception"]);
-        assert_eq!(p.dispatch, DispatchKind::LowestIndex);
-        assert!(p.slack_batch);
-        assert!(p.autoscale.is_some());
-        // Model count must match the replica count.
-        let m = a
-            .parse(&argv(&["--servers", "3", "--server-models", "srv_inception"]))
-            .unwrap();
-        assert!(server_policy(&m).is_err());
-        // Unknown dispatch policy is rejected.
-        let m = a.parse(&argv(&["--dispatch", "random"])).unwrap();
-        assert!(server_policy(&m).is_err());
+        assert_eq!(m.get_usize("servers").unwrap(), 4);
+        assert_eq!(m.get_str("queue").unwrap(), "edf");
+        assert!(m.get_bool("shed"));
     }
 
     #[test]
@@ -412,16 +386,45 @@ mod tests {
         assert!(parse_wfq_weights("low:inf").is_err());
         assert!(parse_wfq_weights("low:NaN").is_err());
         assert!(parse_wfq_weights("low:abc").is_err());
-        // End-to-end through the flag surface.
+    }
+
+    #[test]
+    fn nonfinite_numbers_rejected_at_parse_time() {
+        let m = demo().parse(&argv(&["--devices", "NaN"])).unwrap();
+        assert!(m.get_usize("devices").is_err());
         let mut a = Args::new("t", "test");
-        server_flags(&mut a);
+        a.flag("slo", "slo ms", Some("150"));
+        for bad in ["NaN", "inf", "-inf"] {
+            let m = a.parse(&argv(&["--slo", bad])).unwrap();
+            assert!(m.get_f64("slo").is_err(), "{bad} must not parse");
+        }
+        let m = a.parse(&argv(&["--slo", "-3"])).unwrap();
+        assert!(m.get_f64("slo").is_ok());
+        assert!(m.get_f64_pos("slo").is_err());
+        let m = a.parse(&[]).unwrap();
+        assert_eq!(m.get_f64_pos("slo").unwrap(), 150.0);
+    }
+
+    #[test]
+    fn multi_flags_accumulate_in_order() {
+        let mut a = Args::new("t", "test");
+        a.multi("set", "spec override");
         let m = a
-            .parse(&argv(&["--queue", "wfq", "--wfq-weights", "low:3,vit:2"]))
+            .parse(&argv(&["--set", "a=1", "--set=b=2", "--set", "c=3"]))
             .unwrap();
-        let p = server_policy(&m).unwrap();
-        assert_eq!(p.wfq_weights, [3.0, 1.0, 1.0, 2.0]);
-        let m = a.parse(&argv(&["--wfq-weights", "low:0"])).unwrap();
-        assert!(server_policy(&m).is_err());
+        assert_eq!(m.get_all("set"), ["a=1", "b=2", "c=3"]);
+        assert!(m.get_all("other").is_empty());
+        assert!(m.was_set("set"));
+    }
+
+    #[test]
+    fn explicit_flags_are_tracked() {
+        let m = demo().parse(&argv(&["--devices", "30"])).unwrap();
+        assert!(m.was_set("devices"));
+        assert!(!m.was_set("slos"));
+        assert!(!m.was_set("verbose"));
+        let m = demo().parse(&argv(&["--verbose"])).unwrap();
+        assert!(m.was_set("verbose"));
     }
 
     #[test]

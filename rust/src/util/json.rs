@@ -129,6 +129,54 @@ impl Json {
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
+
+    /// Pretty-print with `indent`-space nesting (keys stay in the
+    /// writer's stable BTreeMap order). Parses back to the identical
+    /// value — used for scenario-spec dumps meant for human editing.
+    pub fn pretty(&self, indent: usize) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, indent, 0);
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, indent: usize, level: usize) {
+        let pad = |out: &mut String, level: usize| {
+            for _ in 0..indent * level {
+                out.push(' ');
+            }
+        };
+        match self {
+            Json::Arr(items) if !items.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in items.iter().enumerate() {
+                    pad(out, level + 1);
+                    v.pretty_into(out, indent, level + 1);
+                    if i + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, level);
+                out.push(']');
+            }
+            Json::Obj(map) if !map.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in map.iter().enumerate() {
+                    pad(out, level + 1);
+                    out.push_str(&Json::Str(k.clone()).to_string());
+                    out.push_str(": ");
+                    v.pretty_into(out, indent, level + 1);
+                    if i + 1 < map.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, level);
+                out.push('}');
+            }
+            other => out.push_str(&other.to_string()),
+        }
+    }
 }
 
 struct Parser<'a> {
@@ -428,6 +476,17 @@ mod tests {
         assert_eq!(v.str_at("s").unwrap(), "x");
         assert!(v.f64_at("missing").is_err());
         assert!(v.f64_at("s").is_err());
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let src = r#"{"a":[1,2,{"b":"c"}],"d":null,"e":[],"f":{}}"#;
+        let v = Json::parse(src).unwrap();
+        let pretty = v.pretty(2);
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+        assert!(pretty.contains("\n  \"a\": [\n"));
+        assert!(pretty.contains("\"e\": []"));
+        assert!(pretty.contains("\"f\": {}"));
     }
 
     #[test]

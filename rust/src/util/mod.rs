@@ -7,3 +7,49 @@ pub mod json;
 pub mod logging;
 pub mod prng;
 pub mod stats;
+
+/// Single source of truth for string-named enums: generates `ALL`,
+/// `name()` (the canonical wire name), `aliases()` (extra spellings
+/// `parse` accepts), and `parse()` for a plain fieldless enum.
+///
+/// Guarantees by construction that `parse(v.name()) == v` for every
+/// variant and that every alias maps somewhere — the two halves can no
+/// longer drift apart the way hand-written `name`/`parse` pairs did
+/// (where `parse` accepted `"wfq"`/`"aware"` spellings `name` never
+/// emitted, with nothing tying them together).
+#[macro_export]
+macro_rules! named_enum {
+    ($what:literal, $ty:ident { $($variant:ident => $canon:literal $(, $alias:literal)* ;)+ }) => {
+        impl $ty {
+            /// Every variant, in declaration order.
+            pub const ALL: &'static [$ty] = &[$($ty::$variant),+];
+
+            /// The canonical wire name (round-trips through `parse`).
+            pub fn name(&self) -> &'static str {
+                match self { $($ty::$variant => $canon),+ }
+            }
+
+            /// Additional spellings `parse` accepts for this variant.
+            pub fn aliases(&self) -> &'static [&'static str] {
+                match self { $($ty::$variant => &[$($alias),*]),+ }
+            }
+
+            /// Parse the canonical name or a documented alias.
+            pub fn parse(s: &str) -> anyhow::Result<Self> {
+                match s {
+                    $($canon $(| $alias)* => Ok($ty::$variant),)+
+                    other => anyhow::bail!(
+                        "unknown {} '{}' (expected {})",
+                        $what,
+                        other,
+                        $ty::ALL
+                            .iter()
+                            .map(|v| v.name())
+                            .collect::<Vec<_>>()
+                            .join("|")
+                    ),
+                }
+            }
+        }
+    };
+}

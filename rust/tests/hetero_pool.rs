@@ -31,7 +31,7 @@ use multitascpp::models::outputs::{OutputProvider, SyntheticOutputs};
 use multitascpp::models::registry::test_meta_json;
 use multitascpp::models::{Registry, Tier};
 use multitascpp::scheduler::{DeviceId, Scheduler, StaticSched, ThresholdUpdate};
-use multitascpp::sim::{run_scenario, run_scenario_with, DeviceSpec, Overrides, SimEngine};
+use multitascpp::sim::{run_scenario, DeviceSpec, SimEngine};
 
 // --- scenario-level harness (same shape as tests/server_pool.rs) -----------
 
@@ -55,13 +55,6 @@ fn provider(n: usize) -> SyntheticOutputs {
         ],
         42,
     )
-}
-
-fn run_with_cfg_ovr(scn: &Scenario, cfg: &SystemConfig, ovr: &Overrides) -> RunMetrics {
-    let reg = registry();
-    let ds = dataset();
-    let mut prov = provider(ds.n).into_cached();
-    run_scenario_with(scn, cfg, &reg, &ds, &mut prov, ovr).unwrap()
 }
 
 fn run_with_cfg(scn: &Scenario, cfg: &SystemConfig) -> RunMetrics {
@@ -331,15 +324,14 @@ fn sr_window_resets_after_outage() {
 /// tier keeps a visibly higher SLO satisfaction in each direction.
 #[test]
 fn cli_wfq_weights_shift_tier_service_shares() {
-    use multitascpp::util::cli::{server_flags, server_policy, Args};
-    let parse = |spec: &str| {
-        let mut a = Args::new("t", "test");
-        server_flags(&mut a);
-        let argv: Vec<String> = ["--queue", "tier-wfq", "--wfq-weights", spec]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
-        server_policy(&a.parse(&argv).unwrap()).unwrap()
+    use multitascpp::config::spec::ScenarioSpec;
+    // The same dotted paths `mtpp sim` maps `--queue`/`--wfq-weights`
+    // onto; validate() assembles the runnable policy.
+    let parse = |weights: &str| {
+        let mut spec = ScenarioSpec::default();
+        spec.set("server.queue", "tier-wfq").unwrap();
+        spec.set("server.wfq_weights", weights).unwrap();
+        spec.validate().unwrap().server
     };
     let favor_low = parse("low:8,high:1");
     let favor_high = parse("low:1,high:8");
@@ -360,17 +352,15 @@ fn cli_wfq_weights_shift_tier_service_shares() {
             .with_slo(150.0)
             .with_samples(300)
             .with_seed(0)
-            .with_server_policy(policy.clone());
+            .with_server_policy(policy.clone())
+            .with_initial_threshold(1.0);
         scn.devices = vec![(Tier::Low, 4), (Tier::High, 4)];
         scn
     };
     let mut cfg = SystemConfig::default();
     cfg.batch_grid = vec![1, 2, 4];
-    let ovr = Overrides {
-        initial_threshold: Some(1.0),
-    };
-    let a = run_with_cfg_ovr(&scenario(&favor_low), &cfg, &ovr);
-    let b = run_with_cfg_ovr(&scenario(&favor_high), &cfg, &ovr);
+    let a = run_with_cfg(&scenario(&favor_low), &cfg);
+    let b = run_with_cfg(&scenario(&favor_high), &cfg);
     assert_eq!(a.overall.samples, 8 * 300);
     assert_eq!(b.overall.samples, 8 * 300);
     let (a_low, a_high) = (

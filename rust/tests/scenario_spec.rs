@@ -1,0 +1,327 @@
+//! Integration tests for the declarative `ScenarioSpec` surface:
+//!
+//! * JSON round-trips are the identity, on randomized specs as well as
+//!   the shipped presets (compact and pretty forms);
+//! * the default spec resolves to a `Scenario` bit-identical to the
+//!   seed defaults, and `run_spec` of a snapshot spec reproduces
+//!   `run_scenario` of the scenario it snapshots, pinned on the
+//!   `hetero_pool.rs` mixed-criticality parity workload;
+//! * every `validate()` invariant has a failing-table entry;
+//! * every shipped preset runs end-to-end on the synthetic harness and
+//!   survives a save -> load -> re-run round trip bit-identically.
+
+use multitascpp::config::scenario::{
+    AutoscalePolicy, DispatchKind, ExecMode, Intermittent, QueueKind, Scenario, SchedulerKind,
+    ServerPolicy,
+};
+use multitascpp::config::spec::{preset_names, ScenarioSpec};
+use multitascpp::experiments::Ctx;
+use multitascpp::metrics::RunMetrics;
+use multitascpp::models::Tier;
+use multitascpp::util::prng::Rng;
+
+// --- synthetic harness: exactly what `mtpp sim --synthetic` runs -----------
+
+fn ctx() -> Ctx {
+    let results = std::env::temp_dir().join("mtpp_spec_test_results");
+    Ctx::synthetic(&results, false).unwrap()
+}
+
+fn run_scn(scn: &Scenario) -> RunMetrics {
+    ctx().run(scn).unwrap()
+}
+
+fn run_via_spec(spec: &ScenarioSpec) -> RunMetrics {
+    ctx().run_spec(spec).unwrap()
+}
+
+fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.overall.samples, b.overall.samples, "{what}: samples");
+    assert_eq!(a.overall.satisfied, b.overall.satisfied, "{what}: satisfied");
+    assert_eq!(a.overall.correct, b.overall.correct, "{what}: correct");
+    assert_eq!(a.overall.forwarded, b.overall.forwarded, "{what}: forwarded");
+    assert_eq!(a.shed, b.shed, "{what}: shed");
+    assert_eq!(
+        a.per_server_batches, b.per_server_batches,
+        "{what}: per-replica batches"
+    );
+    assert_eq!(
+        a.latencies.values(),
+        b.latencies.values(),
+        "{what}: latency sequence"
+    );
+    assert!(
+        (a.makespan_s - b.makespan_s).abs() < 1e-12,
+        "{what}: makespan {} vs {}",
+        a.makespan_s,
+        b.makespan_s
+    );
+}
+
+/// The `hetero_pool.rs` parity workload: overloaded mixed-criticality
+/// heterogeneous population under the Static scheduler.
+fn mixed_criticality(n: usize, samples: usize) -> Scenario {
+    Scenario::heterogeneous(n, "srv_inception")
+        .with_scheduler(SchedulerKind::Static)
+        .with_slo(150.0)
+        .with_tier_slo(Tier::Low, 100.0)
+        .with_tier_slo(Tier::High, 400.0)
+        .with_samples(samples)
+        .with_seed(0)
+}
+
+// --- defaults and scenario parity ------------------------------------------
+
+#[test]
+fn default_spec_resolves_to_seed_default_scenario() {
+    let scn = ScenarioSpec::default().validate().unwrap();
+    assert_eq!(scn, Scenario::homogeneous(Tier::Low, 10, "srv_inception"));
+    assert_eq!(scn.server, ServerPolicy::default());
+}
+
+#[test]
+fn run_spec_reproduces_run_scenario_bit_identically() {
+    let scn = mixed_criticality(12, 300).with_replicas(2);
+    let spec = ScenarioSpec::from_scenario(&scn);
+    assert_eq!(spec.validate().unwrap(), scn);
+    assert_bit_identical(&run_scn(&scn), &run_via_spec(&spec), "spec parity");
+}
+
+#[test]
+fn spec_json_roundtrip_reproduces_metrics_bit_identically() {
+    // The acceptance-criteria loop at test scale: scenario -> spec ->
+    // JSON -> spec -> run must equal the direct run.
+    let scn = mixed_criticality(12, 200)
+        .with_server_models(vec!["srv_effnetb3", "srv_inception"])
+        .with_slack_batch(true)
+        .with_shed(true);
+    let spec = ScenarioSpec::from_scenario(&scn);
+    let reparsed = ScenarioSpec::parse_str(&spec.to_json().pretty(2)).unwrap();
+    assert_eq!(reparsed, spec);
+    assert_bit_identical(&run_scn(&scn), &run_via_spec(&reparsed), "json roundtrip");
+}
+
+#[test]
+fn save_load_roundtrip_through_disk() {
+    let dir = std::env::temp_dir().join("mtpp_spec_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("spec.json");
+    let mut spec = ScenarioSpec::from_scenario(&mixed_criticality(9, 150));
+    spec.set("server.autoscale", "on").unwrap();
+    spec.set("intermittent.offline_prob", "0.25").unwrap();
+    spec.save(&path).unwrap();
+    let back = ScenarioSpec::load(&path).unwrap();
+    assert_eq!(back, spec);
+}
+
+// --- randomized round-trip property ----------------------------------------
+
+fn random_spec(rng: &mut Rng) -> ScenarioSpec {
+    let servers = ["srv_inception", "srv_effnetb3", "srv_deit"];
+    let devices = (0..1 + rng.next_below(3))
+        .map(|_| {
+            (
+                Tier::ALL[rng.next_below(Tier::ALL.len() as u64) as usize],
+                rng.next_below(50) as usize,
+            )
+        })
+        .collect();
+    let server_model = servers[rng.next_below(3) as usize].to_string();
+    let scheduler = SchedulerKind::ALL[rng.next_below(SchedulerKind::ALL.len() as u64) as usize];
+    let slo_ms = rng.next_range_f64(20.0, 500.0);
+    let tier_slo_ms = if rng.next_bool(0.5) {
+        vec![(Tier::Low, rng.next_range_f64(50.0, 150.0))]
+    } else {
+        Vec::new()
+    };
+    let samples_per_device = 1 + rng.next_below(5000) as usize;
+    let seed = rng.next_below(1 << 50);
+    let model_switching = rng.next_bool(0.5);
+    let intermittent = rng.next_bool(0.5).then(|| Intermittent {
+        offline_prob: rng.next_f64(),
+        onset_mean_frac: rng.next_f64(),
+        onset_sd_frac: rng.next_f64(),
+        duration_alpha: rng.next_range_f64(1.0, 100.0),
+        duration_scale_s: rng.next_range_f64(0.1, 5.0),
+    });
+    let initial_threshold = rng.next_bool(0.5).then(|| rng.next_f64());
+    let exec = ExecMode::ALL[rng.next_below(ExecMode::ALL.len() as u64) as usize];
+    let replicas = 1 + rng.next_below(4) as usize;
+    let server = ServerPolicy {
+        replicas,
+        queue: QueueKind::ALL[rng.next_below(QueueKind::ALL.len() as u64) as usize],
+        shed: rng.next_bool(0.5),
+        models: if rng.next_bool(0.5) {
+            (0..replicas)
+                .map(|_| servers[rng.next_below(3) as usize].to_string())
+                .collect()
+        } else {
+            Vec::new()
+        },
+        wfq_weights: [
+            rng.next_range_f64(0.5, 8.0),
+            rng.next_range_f64(0.5, 8.0),
+            rng.next_range_f64(0.5, 8.0),
+            rng.next_range_f64(0.5, 8.0),
+        ],
+        dispatch: DispatchKind::ALL[rng.next_below(DispatchKind::ALL.len() as u64) as usize],
+        slack_batch: rng.next_bool(0.5),
+        autoscale: rng.next_bool(0.5).then(|| AutoscalePolicy {
+            queue_high: rng.next_range_f64(4.0, 16.0),
+            queue_low: rng.next_range_f64(0.0, 2.0),
+            min_active: 1 + rng.next_below(replicas as u64) as usize,
+            dwell_s: rng.next_range_f64(0.0, 5.0),
+        }),
+    };
+    ScenarioSpec {
+        devices,
+        server_model,
+        scheduler,
+        slo_ms,
+        tier_slo_ms,
+        samples_per_device,
+        seed,
+        model_switching,
+        intermittent,
+        initial_threshold,
+        exec,
+        server,
+    }
+}
+
+#[test]
+fn randomized_specs_roundtrip_through_json() {
+    let mut rng = Rng::new(7);
+    for i in 0..200 {
+        let spec = random_spec(&mut rng);
+        let compact = spec.to_json().to_string();
+        let back = ScenarioSpec::parse_str(&compact).unwrap();
+        assert_eq!(back, spec, "compact roundtrip, iteration {i}");
+        let pretty = spec.to_json().pretty(2);
+        let back = ScenarioSpec::parse_str(&pretty).unwrap();
+        assert_eq!(back, spec, "pretty roundtrip, iteration {i}");
+    }
+}
+
+// --- validation table -------------------------------------------------------
+
+#[test]
+fn every_validation_invariant_rejects() {
+    fn rejects(what: &str, needle: &str, mutate: impl FnOnce(&mut ScenarioSpec)) {
+        let mut spec = ScenarioSpec::from_scenario(&mixed_criticality(12, 100));
+        mutate(&mut spec);
+        let err = match spec.validate() {
+            Ok(_) => panic!("{what}: expected validation to fail"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(
+            err.contains(needle),
+            "{what}: error '{err}' does not mention '{needle}'"
+        );
+    }
+
+    rejects("no devices", "at least one device", |s| s.devices.clear());
+    rejects("zero-count devices", "at least one device", |s| {
+        s.devices = vec![(Tier::Low, 0)]
+    });
+    rejects("unknown server model", "unknown server model", |s| {
+        s.server_model = "srv_bogus".into()
+    });
+    rejects("unknown replica model", "unknown server model", |s| {
+        s.server.models = vec!["srv_bogus".into()]
+    });
+    rejects("zero replicas", "at least one replica", |s| {
+        s.server.replicas = 0
+    });
+    rejects("model-list arity", "names 1 models", |s| {
+        s.server.replicas = 2;
+        s.server.models = vec!["srv_inception".into()];
+    });
+    rejects("NaN slo", "slo_ms must be positive", |s| s.slo_ms = f64::NAN);
+    rejects("negative slo", "slo_ms must be positive", |s| s.slo_ms = -5.0);
+    rejects("infinite tier slo", "tier_slo_ms[low]", |s| {
+        s.tier_slo_ms = vec![(Tier::Low, f64::INFINITY)]
+    });
+    rejects("duplicate tier slo", "duplicate tier", |s| {
+        s.tier_slo_ms = vec![(Tier::Low, 100.0), (Tier::Low, 90.0)]
+    });
+    rejects("zero wfq weight", "WFQ weight", |s| {
+        s.server.wfq_weights = [1.0, 0.0, 1.0, 1.0]
+    });
+    rejects("NaN wfq weight", "WFQ weight", |s| {
+        s.server.wfq_weights = [f64::NAN, 1.0, 1.0, 1.0]
+    });
+    rejects("zero samples", "samples_per_device", |s| {
+        s.samples_per_device = 0
+    });
+    rejects("offline prob out of range", "offline_prob", |s| {
+        s.intermittent = Some(Intermittent {
+            offline_prob: 1.5,
+            ..Intermittent::default()
+        })
+    });
+    rejects("non-positive duration alpha", "duration_alpha", |s| {
+        s.intermittent = Some(Intermittent {
+            duration_alpha: 0.0,
+            ..Intermittent::default()
+        })
+    });
+    rejects("inverted watermarks", "watermarks", |s| {
+        s.server.autoscale = Some(AutoscalePolicy {
+            queue_high: 1.0,
+            queue_low: 8.0,
+            ..AutoscalePolicy::default()
+        })
+    });
+    rejects("zero min_active", "min_active", |s| {
+        s.server.autoscale = Some(AutoscalePolicy {
+            min_active: 0,
+            ..AutoscalePolicy::default()
+        })
+    });
+    rejects("min_active over replicas", "exceeds the replica count", |s| {
+        s.server.replicas = 2;
+        s.server.autoscale = Some(AutoscalePolicy {
+            min_active: 3,
+            ..AutoscalePolicy::default()
+        });
+    });
+    rejects("negative dwell", "dwell_s", |s| {
+        s.server.autoscale = Some(AutoscalePolicy {
+            dwell_s: -1.0,
+            ..AutoscalePolicy::default()
+        })
+    });
+    rejects("threshold out of range", "initial_threshold", |s| {
+        s.initial_threshold = Some(1.5)
+    });
+    rejects("seed beyond exact JSON range", "round-trips exactly", |s| {
+        s.seed = u64::MAX
+    });
+}
+
+// --- presets ----------------------------------------------------------------
+
+#[test]
+fn every_preset_runs_and_roundtrips_on_the_synthetic_harness() {
+    for name in preset_names() {
+        let mut spec = ScenarioSpec::preset(name).expect(name);
+        // Clip stream length so the full preset population stays cheap.
+        spec.set("samples", "120").unwrap();
+        let scn = spec.validate().expect(name);
+        let m = run_via_spec(&spec);
+        assert_eq!(
+            m.overall.samples,
+            scn.total_devices() * 120,
+            "{name}: sample conservation"
+        );
+        assert!(
+            m.overall.satisfaction_rate().is_finite(),
+            "{name}: SR must be finite"
+        );
+        // Dump -> reload -> re-run is bit-identical.
+        let reparsed = ScenarioSpec::parse_str(&spec.to_json().pretty(2)).unwrap();
+        assert_eq!(reparsed, spec, "{name}: dump/load identity");
+        assert_bit_identical(&m, &run_via_spec(&reparsed), name);
+    }
+}

@@ -11,7 +11,7 @@ use multitascpp::models::outputs::SyntheticOutputs;
 use multitascpp::models::registry::test_meta_json;
 use multitascpp::models::{Registry, Tier};
 use multitascpp::data::dataset::Dataset;
-use multitascpp::sim::{run_scenario, run_scenario_with, Overrides};
+use multitascpp::sim::run_scenario;
 
 fn registry() -> Registry {
     Registry::from_meta(std::path::Path::new("/tmp/test_artifacts"), &test_meta_json()).unwrap()
@@ -190,14 +190,11 @@ fn intermittent_devices_complete_their_streams() {
 
 #[test]
 fn static_threshold_override_is_respected() {
-    let scn = scenario(5, SchedulerKind::Static);
+    let scn = scenario(5, SchedulerKind::Static).with_initial_threshold(0.0);
     let cfg = SystemConfig::default();
     let ds = dataset();
     let mut prov = provider(ds.n).into_cached();
-    let ovr = Overrides {
-        initial_threshold: Some(0.0),
-    };
-    let m = run_scenario_with(&scn, &cfg, &registry(), &ds, &mut prov, &ovr).unwrap();
+    let m = run_scenario(&scn, &cfg, &registry(), &ds, &mut prov).unwrap();
     // threshold 0 => BvSB >= 0 always => nothing ever forwards
     assert_eq!(m.overall.forwarded, 0);
 }
