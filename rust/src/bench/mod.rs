@@ -1,9 +1,13 @@
 //! Hand-rolled micro/e2e benchmark harness (no `criterion` in this
-//! offline environment). Used by `benches/*.rs` with `harness = false`.
+//! offline environment). Used by `benches/*.rs` with `harness = false`,
+//! and by `mtpp bench scale` ([`scale`]) for the fleet-scale
+//! events/sec trajectory.
 //!
 //! Protocol per benchmark: warm up for `warmup` iterations, then time
 //! `samples` batches of `iters_per_sample` iterations and report mean /
 //! p50 / p95 per-iteration time plus derived throughput.
+
+pub mod scale;
 
 use std::time::Instant;
 

@@ -1,0 +1,138 @@
+//! `mtpp bench scale` — wall-clock engine throughput at synthetic
+//! fleet scales (100 / 500 / 1000 devices; `--smoke` shrinks the grid
+//! for CI). Starts the repo's perf trajectory: every run appends a
+//! machine-readable `BENCH_scale.json` with events/sec and simulated
+//! samples/sec per (devices, sharding) cell, so regressions in the
+//! event-loop hot path show up as numbers, not vibes.
+//!
+//! Runs entirely on the synthetic harness (no artifacts): a §V-A
+//! heterogeneous population against a two-replica mixed pool with
+//! shedding, once over the single shared queue and once over
+//! per-model shards with work stealing — the comparison the sharding
+//! work is accountable to.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::spec::ScenarioSpec;
+use crate::experiments::Ctx;
+use crate::util::json::Json;
+
+/// One measured cell of the scale grid.
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    /// Sharding variant label (`single` | `sharded`).
+    pub label: &'static str,
+    pub devices: usize,
+    pub samples_per_device: usize,
+    /// Discrete events the engine processed.
+    pub events: u64,
+    /// Requests shed by admission control (sanity signal: overload is
+    /// actually exercised at the larger scales).
+    pub shed: usize,
+    /// Work-stealing batches (0 for the single-queue variant).
+    pub steals: usize,
+    pub wall_s: f64,
+    pub events_per_sec: f64,
+    pub samples_per_sec: f64,
+}
+
+/// The spec one cell runs: `hetero:N` devices, two-replica mixed pool
+/// (InceptionV3 + EfficientNetB3), shedding on, sharding per variant.
+fn cell_spec(devices: usize, samples: usize, sharding: &str) -> Result<ScenarioSpec> {
+    let mut spec = ScenarioSpec::default();
+    spec.set("devices", &format!("hetero:{devices}"))?;
+    spec.set("samples", &samples.to_string())?;
+    spec.set("server.replicas", "2")?;
+    spec.set("server.models", "srv_inception,srv_effnetb3")?;
+    spec.set("server.shed", "true")?;
+    spec.set("server.sharding", sharding)?;
+    Ok(spec)
+}
+
+/// Run the grid and write `out` (JSON). Smoke mode shrinks the device
+/// counts and stream length so CI can afford it while still crossing
+/// every code path (sharded + single, shed, steal).
+pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
+    let (device_counts, samples) = if smoke {
+        (vec![20usize, 60], 80usize)
+    } else {
+        (vec![100usize, 500, 1000], 300usize)
+    };
+    // The synthetic ctx wants a results dir it never writes benches
+    // into; keep it out of the repo tree.
+    let mut ctx = Ctx::synthetic(&std::env::temp_dir().join("mtpp_bench_scale"), true)?;
+    let mut points = Vec::new();
+    println!(
+        "== bench scale ({} mode: devices {:?} x {} samples) ==",
+        if smoke { "smoke" } else { "full" },
+        device_counts,
+        samples
+    );
+    for &n in &device_counts {
+        for (label, sharding) in [("single", "1"), ("sharded", "per-model")] {
+            let spec = cell_spec(n, samples, sharding)?;
+            let t0 = Instant::now();
+            let m = ctx.run_spec(&spec)?;
+            let wall_s = t0.elapsed().as_secs_f64();
+            let point = ScalePoint {
+                label,
+                devices: n,
+                samples_per_device: samples,
+                events: m.events,
+                shed: m.shed,
+                steals: m.steals,
+                wall_s,
+                events_per_sec: m.events as f64 / wall_s.max(1e-9),
+                samples_per_sec: m.overall.samples as f64 / wall_s.max(1e-9),
+            };
+            println!(
+                "{label:<8} n={n:<5} {:>9} events in {:>6.2}s  ({:>10.0} events/s, \
+                 {:>9.0} samples/s, shed {}, steals {})",
+                point.events,
+                point.wall_s,
+                point.events_per_sec,
+                point.samples_per_sec,
+                point.shed,
+                point.steals
+            );
+            points.push(point);
+        }
+    }
+    write_report(smoke, &points, out)?;
+    println!("wrote {}", out.display());
+    Ok(points)
+}
+
+fn write_report(smoke: bool, points: &[ScalePoint], out: &Path) -> Result<()> {
+    let json = Json::obj(vec![
+        ("bench", Json::str("scale")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("label", Json::str(p.label)),
+                            ("devices", Json::num(p.devices as f64)),
+                            ("samples_per_device", Json::num(p.samples_per_device as f64)),
+                            ("events", Json::num(p.events as f64)),
+                            ("shed", Json::num(p.shed as f64)),
+                            ("steals", Json::num(p.steals as f64)),
+                            ("wall_s", Json::num(p.wall_s)),
+                            ("events_per_sec", Json::num(p.events_per_sec)),
+                            ("samples_per_sec", Json::num(p.samples_per_sec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let mut text = json.pretty(2);
+    text.push('\n');
+    std::fs::write(out, text).with_context(|| format!("write {}", out.display()))
+}

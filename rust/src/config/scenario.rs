@@ -66,6 +66,29 @@ crate::named_enum!("dispatch policy", DispatchKind {
     ModelAware => "model-aware", "aware";
 });
 
+/// How the server pool's request queue is sharded across replicas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardingKind {
+    /// One queue shared by every replica (the pre-sharding behavior;
+    /// bit-identical to it by construction).
+    Single,
+    /// One queue per distinct placed model. Replicas drain their own
+    /// model's shard first and steal the most-slack-endangered work
+    /// from sibling shards when idle.
+    PerModel,
+    /// Resolve to [`ShardingKind::PerModel`] at pool construction —
+    /// the forward-looking default for new configurations (on a
+    /// homogeneous pool one model means one shard, which is the same
+    /// schedule as [`ShardingKind::Single`]).
+    Auto,
+}
+
+crate::named_enum!("sharding mode", ShardingKind {
+    Single => "single", "1", "shared";
+    PerModel => "per-model", "per_model", "model";
+    Auto => "auto";
+});
+
 /// Cost-aware autoscaling watermarks: the pool parks idle replicas when
 /// queue pressure is low and unparks them on backlog or shedding.
 /// Parked replicas serve nothing and their parked time is reported as
@@ -117,6 +140,10 @@ pub struct ServerPolicy {
     pub wfq_weights: [f64; 4],
     /// Idle-replica selection policy.
     pub dispatch: DispatchKind,
+    /// Queue sharding: one shared queue ([`ShardingKind::Single`], the
+    /// default — bit-identical to the pre-sharding pool) or per-model
+    /// shards with work stealing.
+    pub sharding: ShardingKind,
     /// Slack-aware batch sizing (CascadeServe-style): cap the formed
     /// batch so the tightest-deadline queued request still makes its
     /// SLO under the chosen replica's batch-latency curve.
@@ -135,6 +162,7 @@ impl Default for ServerPolicy {
             models: Vec::new(),
             wfq_weights: [1.0; 4],
             dispatch: DispatchKind::ModelAware,
+            sharding: ShardingKind::Single,
             slack_batch: false,
             autoscale: None,
         }
@@ -335,6 +363,11 @@ impl Scenario {
         self
     }
 
+    pub fn with_sharding(mut self, s: ShardingKind) -> Self {
+        self.server.sharding = s;
+        self
+    }
+
     pub fn with_slack_batch(mut self, on: bool) -> Self {
         self.server.slack_batch = on;
         self
@@ -424,6 +457,7 @@ mod tests {
         assert!(s.server.models.is_empty());
         assert_eq!(s.server.wfq_weights, [1.0; 4]);
         assert_eq!(s.server.dispatch, DispatchKind::ModelAware);
+        assert_eq!(s.server.sharding, ShardingKind::Single);
         assert!(!s.server.slack_batch);
         assert!(s.server.autoscale.is_none());
     }
@@ -471,9 +505,17 @@ mod tests {
         for &e in ExecMode::ALL {
             assert_eq!(ExecMode::parse(e.name()).unwrap(), e);
         }
+        for &s in ShardingKind::ALL {
+            assert_eq!(ShardingKind::parse(s.name()).unwrap(), s);
+            for &a in s.aliases() {
+                assert_eq!(ShardingKind::parse(a).unwrap(), s, "alias {a}");
+            }
+        }
         // The once-hand-written aliases still parse.
         assert_eq!(QueueKind::parse("wfq").unwrap(), QueueKind::TierWfq);
         assert_eq!(DispatchKind::parse("aware").unwrap(), DispatchKind::ModelAware);
+        // The CLI's `--shards 1` spelling maps onto the single queue.
+        assert_eq!(ShardingKind::parse("1").unwrap(), ShardingKind::Single);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::config::scenario::{
     hetero_split, AutoscalePolicy, DispatchKind, ExecMode, Intermittent, QueueKind, Scenario,
-    SchedulerKind, ServerPolicy,
+    SchedulerKind, ServerPolicy, ShardingKind,
 };
 use crate::models::registry::SERVER_MODELS;
 use crate::models::Tier;
@@ -27,7 +27,7 @@ use crate::util::json::Json;
 /// compile time from `scenarios/` so a preset can never go missing at
 /// runtime; CI re-runs every one of them against `--dump-spec`
 /// round-trips so the files can never rot either.
-pub const PRESETS: [(&str, &str); 6] = [
+pub const PRESETS: [(&str, &str); 7] = [
     (
         "seed-baseline",
         include_str!("../../../scenarios/seed-baseline.json"),
@@ -51,6 +51,10 @@ pub const PRESETS: [(&str, &str); 6] = [
     (
         "edf-tight-slo",
         include_str!("../../../scenarios/edf-tight-slo.json"),
+    ),
+    (
+        "sharded-pool",
+        include_str!("../../../scenarios/sharded-pool.json"),
     ),
 ];
 
@@ -366,6 +370,7 @@ impl ScenarioSpec {
             ),
             ("wfq_weights", wfq),
             ("dispatch", Json::str(self.server.dispatch.name())),
+            ("sharding", Json::str(self.server.sharding.name())),
             ("slack_batch", Json::Bool(self.server.slack_batch)),
             ("autoscale", autoscale),
         ]);
@@ -609,6 +614,7 @@ impl ScenarioSpec {
             }
             "server.wfq_weights" => self.server.wfq_weights = parse_wfq_weights(value)?,
             "server.dispatch" => self.server.dispatch = DispatchKind::parse(value)?,
+            "server.sharding" => self.server.sharding = ShardingKind::parse(value)?,
             "server.slack_batch" => self.server.slack_batch = parse_bool(key, value)?,
             "server.autoscale" => {
                 self.server.autoscale = if parse_bool(key, value)? {
@@ -783,13 +789,14 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
     let obj = v
         .as_obj()
         .ok_or_else(|| anyhow!("'server' must be an object"))?;
-    const KEYS: [&str; 8] = [
+    const KEYS: [&str; 9] = [
         "replicas",
         "queue",
         "shed",
         "models",
         "wfq_weights",
         "dispatch",
+        "sharding",
         "slack_batch",
         "autoscale",
     ];
@@ -834,6 +841,9 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
     }
     if let Some(x) = opt(v, "dispatch") {
         p.dispatch = DispatchKind::parse(as_str(x, "server.dispatch")?)?;
+    }
+    if let Some(x) = opt(v, "sharding") {
+        p.sharding = ShardingKind::parse(as_str(x, "server.sharding")?)?;
     }
     if let Some(x) = opt(v, "slack_batch") {
         p.slack_batch = as_bool(x, "server.slack_batch")?;
@@ -957,6 +967,10 @@ mod tests {
         assert_eq!(spec.server.queue, QueueKind::TierWfq);
         spec.set("server.wfq_weights", "low:8,high:1").unwrap();
         assert_eq!(spec.server.wfq_weights, [8.0, 1.0, 1.0, 1.0]);
+        spec.set("server.sharding", "per-model").unwrap();
+        assert_eq!(spec.server.sharding, ShardingKind::PerModel);
+        spec.set("server.sharding", "1").unwrap();
+        assert_eq!(spec.server.sharding, ShardingKind::Single);
         spec.set("tier_slo.low", "100").unwrap();
         spec.set("tier_slo.low", "90").unwrap(); // replaces, not duplicates
         assert_eq!(spec.tier_slo_ms, vec![(Tier::Low, 90.0)]);

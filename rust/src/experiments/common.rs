@@ -367,15 +367,24 @@ pub fn print_rows(title: &str, rows: &[SweepRow]) {
     }
 }
 
-/// Time-series CSV for the trace experiments (Figs 17-20).
+/// Time-series CSV for the trace experiments (Figs 17-20). The
+/// `per_shard_depth` column packs the per-shard queue depths as
+/// `|`-separated values (a single value on unsharded pools); `steals`
+/// is the cumulative work-stealing batch count.
 pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
     let mut csv = String::from(
         "t_s,active_devices,mean_threshold,running_sr,running_acc,queue_len,\
-         busy_servers,parked_servers,server_model_idx\n",
+         busy_servers,parked_servers,server_model_idx,per_shard_depth,steals\n",
     );
     for p in &metrics.trace {
+        let depths = p
+            .per_shard_depth
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("|");
         csv.push_str(&format!(
-            "{:.2},{},{:.4},{:.2},{:.4},{},{},{},{}\n",
+            "{:.2},{},{:.4},{:.2},{:.4},{},{},{},{},{},{}\n",
             p.t_s,
             p.active_devices,
             p.mean_threshold,
@@ -384,7 +393,9 @@ pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
             p.queue_len,
             p.busy_servers,
             p.parked_servers,
-            p.server_model_idx
+            p.server_model_idx,
+            depths,
+            p.steals
         ));
     }
     std::fs::write(path, &csv)?;

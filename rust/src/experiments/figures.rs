@@ -9,6 +9,7 @@ use anyhow::Result;
 
 use crate::config::scenario::{
     AutoscalePolicy, DispatchKind, Intermittent, QueueKind, Scenario, SchedulerKind, ServerPolicy,
+    ShardingKind,
 };
 use crate::config::spec::ScenarioSpec;
 use crate::experiments::common::{
@@ -457,6 +458,41 @@ pub fn hetero_pool_policies() -> Vec<(&'static str, ServerPolicy)> {
                 ],
                 slack_batch: true,
                 autoscale: Some(AutoscalePolicy::default()),
+                ..ServerPolicy::default()
+            },
+        ),
+        (
+            // Per-model shards on the same mixed pool: arrivals route
+            // to the shard with the least estimated drain work, each
+            // shard admits against its own model's latency, and an
+            // idle replica with a drained shard steals the most
+            // deadline-endangered sibling work.
+            "hetero-sharded",
+            ServerPolicy {
+                replicas: 2,
+                models: mixed(),
+                sharding: ShardingKind::PerModel,
+                slack_batch: true,
+                ..ServerPolicy::default()
+            },
+        ),
+        (
+            // The sharding headline config: two fast + two slow
+            // replicas, per-model shards, EDF within each shard,
+            // shedding on (the `sharded-pool` preset's policy).
+            "sharded-steal-x4",
+            ServerPolicy {
+                replicas: 4,
+                models: vec![
+                    "srv_inception".to_string(),
+                    "srv_inception".to_string(),
+                    "srv_effnetb3".to_string(),
+                    "srv_effnetb3".to_string(),
+                ],
+                queue: QueueKind::Edf,
+                sharding: ShardingKind::PerModel,
+                slack_batch: true,
+                shed: true,
                 ..ServerPolicy::default()
             },
         ),

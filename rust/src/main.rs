@@ -5,6 +5,7 @@
 //!   experiment <id>         regenerate a paper figure/table (see list)
 //!   experiment all          regenerate everything
 //!   sim                     run a single custom scenario
+//!   bench scale             fleet-scale events/sec harness -> BENCH_scale.json
 //!   serve                   live TCP serving mode (leader)
 //!   device                  live TCP device client
 //!   list                    list available experiments
@@ -13,7 +14,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Result};
 
-use multitascpp::config::scenario::ExecMode;
+use multitascpp::config::scenario::{ExecMode, ShardingKind};
 use multitascpp::config::spec::{preset_names, ScenarioSpec};
 use multitascpp::config::SystemConfig;
 use multitascpp::experiments::{self, Ctx};
@@ -31,6 +32,7 @@ fn main() -> Result<()> {
         "precompute" => cmd_precompute(rest),
         "experiment" => cmd_experiment(rest),
         "sim" => cmd_sim(rest),
+        "bench" => cmd_bench(rest),
         "serve" => multitascpp::net::cmd_serve(rest),
         "device" => multitascpp::net::cmd_device(rest),
         "list" => {
@@ -50,9 +52,24 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "mtpp — MultiTASC++ multi-device cascade scheduler\n\n\
-         usage: mtpp <precompute|experiment|sim|serve|device|list> [flags]\n\
+         usage: mtpp <precompute|experiment|sim|bench|serve|device|list> [flags]\n\
          run `mtpp <cmd> --help` for per-command flags"
     );
+}
+
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    let mut args = Args::new("mtpp bench", "performance harnesses (scale)");
+    args.flag("out", "output JSON path", Some("BENCH_scale.json"))
+        .switch("smoke", "reduced grid (small N) for CI")
+        .allow_positional();
+    let m = args.parse(argv)?;
+    match m.positional.as_slice() {
+        [id] if id.as_str() == "scale" => {
+            multitascpp::bench::scale::run_scale(m.get_bool("smoke"), Path::new(m.get_str("out")?))
+                .map(|_| ())
+        }
+        _ => bail!("usage: mtpp bench scale [--smoke] [--out BENCH_scale.json]"),
+    }
 }
 
 fn artifacts_flag(args: &mut Args) {
@@ -168,6 +185,7 @@ fn resolve_sim_spec(m: &Matches) -> Result<ScenarioSpec> {
         ("server-models", "server.models"),
         ("wfq-weights", "server.wfq_weights"),
         ("dispatch", "server.dispatch"),
+        ("shards", "server.sharding"),
     ] {
         if explicit(flag) {
             spec.set(path, m.get_str(flag)?)?;
@@ -266,13 +284,18 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         policy.models.join("+")
     };
     println!(
-        "\nscenario: {} devices ({}), server {} ({} queue, {} dispatch{}{}{}), {} scheduler, \
+        "\nscenario: {} devices ({}), server {} ({} queue, {} dispatch{}{}{}{}), {} scheduler, \
          SLO {} ms",
         scn.total_devices(),
         population_desc(&scn.devices),
         pool_desc,
         policy.queue.name(),
         policy.dispatch.name(),
+        if policy.sharding == ShardingKind::Single {
+            String::new()
+        } else {
+            format!(", {} sharding", policy.sharding.name())
+        },
         if policy.shed { ", shed" } else { "" },
         if policy.slack_batch { ", slack-batch" } else { "" },
         if policy.autoscale.is_some() {
@@ -314,6 +337,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
             metrics.shed,
             100.0 * metrics.shed_rate()
         );
+    }
+    if policy.sharding != ShardingKind::Single {
+        println!("sharded pool: {} work-stealing batches", metrics.steals);
     }
     if policy.autoscale.is_some() {
         println!(

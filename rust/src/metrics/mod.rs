@@ -92,14 +92,14 @@ impl Aggregate {
 /// Points sit on a fixed `trace_interval` grid (engine invariant): gaps
 /// between events emit one carried-forward point per elapsed boundary,
 /// so downstream plots never see holes or drift.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct TracePoint {
     pub t_s: f64,
     pub active_devices: usize,
     pub mean_threshold: f64,
     pub running_sr: f64,
     pub running_acc: f64,
-    /// Depth of the shared server-pool queue.
+    /// Total queued requests across every pool shard.
     pub queue_len: usize,
     /// Replicas with a batch in flight at this instant.
     pub busy_servers: usize,
@@ -107,6 +107,11 @@ pub struct TracePoint {
     pub parked_servers: usize,
     /// Heaviest model placed on any replica (switch-ladder index).
     pub server_model_idx: usize,
+    /// Queue depth of each pool shard, in shard order (a single entry
+    /// for unsharded pools).
+    pub per_shard_depth: Vec<usize>,
+    /// Cumulative work-stealing batches up to this instant.
+    pub steals: usize,
 }
 
 /// Full result of one experiment run.
@@ -130,11 +135,17 @@ pub struct RunMetrics {
     pub per_server_batches: Vec<usize>,
     /// Requests shed by admission control (completed as local-only).
     pub shed: usize,
+    /// Batches an idle replica formed out of a sibling shard's queue
+    /// (work stealing; 0 on unsharded pools).
+    pub steals: usize,
     /// Replica-seconds spent parked by the autoscaler — the cost the
     /// pool did NOT pay versus keeping every replica hot.
     pub parked_replica_seconds: f64,
     /// Park/unpark actions the autoscaler applied.
     pub scale_events: usize,
+    /// Discrete events the engine processed (the `bench scale`
+    /// denominator for wall-clock events/sec).
+    pub events: u64,
 }
 
 impl RunMetrics {

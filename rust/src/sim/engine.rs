@@ -1,152 +1,77 @@
-//! The discrete-event simulation engine.
+//! The discrete-event simulation engine — now a thin coordinator over
+//! two subsystems (see `docs/architecture.md` for the full picture):
 //!
-//! Reproduces the paper's evaluation methodology (§V-A: latencies
-//! measured once, experiments driven from those tables) with model
-//! *outputs* supplied by an [`OutputProvider`] — either real PJRT
-//! execution of the AOT artifacts or the PJRT-built output cache.
+//! * [`DeviceFleet`] (`sim::fleet`) owns the device streams: local
+//!   inference timing, forwarding decisions (Eq. 3), SR windows
+//!   (§IV-B), the scheduler's threshold control loop, outage/resume
+//!   bookkeeping, and the request table for forwarded samples.
+//! * [`ServerSubsystem`] (`sim::subsystem`) owns everything server
+//!   side: request routing to per-model shards, shard-local admission
+//!   control, dispatch, (slack-aware) dynamic batching, work stealing,
+//!   cost-aware autoscaling, and the §IV-E switch controllers over the
+//!   sharded [`crate::sim::server::ServerPool`].
 //!
-//! Timing semantics (DESIGN.md §6):
+//! The two communicate only through the typed [`Event`] queue plus a
+//! narrow interface: forwarded work crosses as
+//! [`crate::sim::server::PendingRequest`] descriptors, the server's
+//! arrival decision comes back as a
+//! [`crate::sim::subsystem::ForwardingVerdict`], completions return as
+//! [`CompletionNotice`]s, and the scheduler hears about congestion
+//! only through the dispatch rounds' load-signal observations. The
+//! engine itself owns just the clock: the event loop, the fixed-grid
+//! telemetry trace, and final metric accounting. No queue, batch, or
+//! scaling decision lives here.
+//!
+//! Timing semantics (DESIGN.md §6, unchanged by the split):
 //! * devices process their sample streams continuously; local inference
 //!   takes `t_inf` (Table I) with small seeded jitter — the *drawn*
 //!   (jittered) duration rides along in [`Event::DeviceInferDone`], so
 //!   per-sample latency accounting is exact, not mean-approximated;
 //! * the forwarding decision (Eq. 3) is instant — BvSB comes out of the
 //!   fused kernel with the softmax;
-//! * forwarded samples pay a comm hop, wait in the server-pool queue
-//!   (ordered by the scenario's [`QueueDiscipline`]), get dynamically
+//! * forwarded samples pay a comm hop, wait in their shard's queue
+//!   (ordered by the scenario's queue discipline), get dynamically
 //!   batched onto an idle replica, pay the batch latency, and a return
 //!   hop; with admission control enabled, requests whose SLO slack is
-//!   already blown are shed and complete as local-only predictions.
-//!   Replica selection is model-aware by default
-//!   ([`DispatchKind::ModelAware`]): among idle replicas the engine
-//!   picks the one minimizing the estimated completion time of the
-//!   batch it would form — its model's `batch_ms` at the planned batch
-//!   size — tie-broken on the lowest index, which makes a homogeneous
-//!   pool bit-identical to the PR 1 lowest-index rule. Batch sizing is
-//!   "largest grid batch <= queue length, capped per model"; with
-//!   `slack_batch` on, the batch is further capped (CascadeServe-style)
-//!   so the tightest still-feasible queued request makes its SLO under
-//!   the chosen replica's latency curve. Admission-control feasibility
-//!   uses the *fastest* replica's batch-1 latency — with a
-//!   heterogeneous pool, a request is only hopeless if even the fastest
-//!   model cannot make its deadline;
+//!   already blown are shed and complete as local-only predictions;
 //! * each device throttles at `max_outstanding` in-flight forwards
 //!   (AMQP prefetch): past that the stream stalls — this is what makes
 //!   congestion hurt throughput, not just latency (Fig 6/9);
 //! * every `window_s` a device reports its SR over the window (§IV-B);
-//!   the scheduler reacts per its policy; the switch controller (§IV-E)
-//!   is consulted after each SR update.
+//!   the scheduler reacts per its policy; the switch controllers
+//!   (§IV-E) are consulted after each SR update.
 //!
 //! Trace semantics: the 1 s telemetry trace advances on a fixed grid —
 //! event gaps emit a point per elapsed grid slot boundary instead of
 //! re-arming relative to the triggering event, so Fig 19/20-style time
-//! series stay hole-free and drift-free.
+//! series stay hole-free and drift-free. The autoscaler shares the
+//! grid, so scaling decisions are deterministic in virtual time.
 //!
-//! The server side lives in [`crate::sim::server`]: a [`ServerPool`]
-//! of N replicas behind a pluggable queue discipline, each replica
-//! serving its own model (`ServerPolicy::models`) and switched
-//! independently by its own §IV-E controller. A [`PoolScaler`]
-//! (`ServerPolicy::autoscale`) parks/unparks replicas on queue-pressure
-//! watermarks, evaluated on the fixed telemetry grid; parked time is
-//! reported as `RunMetrics::parked_replica_seconds`. `--servers 1
-//! --queue fifo` (the default) reproduces the seed single-server
-//! engine's event sequence exactly.
-//!
-//! [`DispatchKind::ModelAware`]: crate::config::scenario::DispatchKind::ModelAware
+//! `--servers 1 --queue fifo --shards 1` (the defaults) reproduces the
+//! seed single-server engine's event sequence exactly, and `--shards
+//! 1` with any policy is bit-identical to the pre-split engine (pinned
+//! by `rust/tests/sharded_pool.rs`).
 
 use anyhow::Result;
 
-use crate::config::latency::{device_latency_ms, ServerLatencyModel};
-use crate::config::scenario::{DispatchKind, ServerPolicy};
+use crate::config::scenario::ServerPolicy;
 use crate::config::SystemConfig;
-use crate::metrics::{RunMetrics, SampleRecord, TracePoint};
+use crate::metrics::{RunMetrics, TracePoint};
 use crate::models::outputs::OutputProvider;
-use crate::models::Tier;
-use crate::scheduler::{Scheduler, SwitchController, ThresholdUpdate};
+use crate::scheduler::{Scheduler, SwitchController};
 use crate::sim::event::{Event, EventQueue};
-use crate::sim::server::{Admission, PendingRequest, PoolScaler, ScaleAction, ServerPool};
-use crate::util::prng::Rng;
+use crate::sim::fleet::{CompletionNotice, DeviceFleet};
+use crate::sim::server::ScaleAction;
+use crate::sim::subsystem::{ForwardingVerdict, ServerSubsystem};
 
-/// Per-device configuration handed to the engine.
-#[derive(Clone, Debug)]
-pub struct DeviceSpec {
-    pub tier: Tier,
-    /// Dataset indices this device will stream through.
-    pub stream: Vec<usize>,
-    pub initial_threshold: f64,
-    pub sr_target: f64,
-    pub slo_ms: f64,
-    /// Sample position at which the device drops offline, if any.
-    pub offline_at: Option<usize>,
-    /// How long it stays offline (seconds).
-    pub offline_duration_s: f64,
-}
-
-struct DeviceState {
-    spec: DeviceSpec,
-    model: &'static str,
-    t_inf_s: f64,
-    threshold: f64,
-    pos: usize,
-    outstanding: usize,
-    stalled: bool,
-    online: bool,
-    // SR window accounting (§IV-B)
-    window_completed: usize,
-    window_satisfied: usize,
-    // trace-interval accounting
-    trace_completed: usize,
-    trace_satisfied: usize,
-    trace_correct: usize,
-    jitter: Rng,
-}
-
-impl DeviceState {
-    fn done(&self) -> bool {
-        self.pos >= self.spec.stream.len()
-    }
-
-    fn fully_drained(&self) -> bool {
-        self.done() && self.outstanding == 0
-    }
-
-    fn next_inference_s(&mut self) -> f64 {
-        // ±3% gaussian jitter breaks lockstep artifacts while keeping
-        // the Table I mean.
-        let j = 1.0 + 0.03 * self.jitter.next_gaussian().clamp(-3.0, 3.0);
-        self.t_inf_s * j.max(0.5)
-    }
-}
-
-struct Request {
-    device: usize,
-    sample: usize,
-    start_s: f64,
-    /// Correctness of the device's own prediction — the fallback when
-    /// admission control sheds the request.
-    local_correct: bool,
-    correct: Option<bool>,
-}
-
-/// Latency model resolver so the engine can follow model switches.
-pub type LatencyFn<'a> = &'a dyn Fn(&str) -> ServerLatencyModel;
+pub use crate::sim::fleet::DeviceSpec;
+pub use crate::sim::subsystem::LatencyFn;
 
 pub struct SimEngine<'a> {
     cfg: &'a SystemConfig,
-    scheduler: &'a mut dyn Scheduler,
-    /// One §IV-E controller per replica (empty = switching disabled);
-    /// each drives its own replica independently along the ladder.
-    switchers: Vec<SwitchController>,
     provider: &'a mut dyn OutputProvider,
-    latency_of: LatencyFn<'a>,
-
-    devices: Vec<DeviceState>,
-    requests: Vec<Request>,
-    pool: ServerPool,
-    dispatch_kind: DispatchKind,
-    slack_batch: bool,
-    scaler: Option<PoolScaler>,
-
+    fleet: DeviceFleet<'a>,
+    server: ServerSubsystem<'a>,
     events: EventQueue,
     metrics: RunMetrics,
     next_trace_s: f64,
@@ -166,47 +91,13 @@ impl<'a> SimEngine<'a> {
         specs: Vec<DeviceSpec>,
         seed: u64,
     ) -> Self {
-        let mut devices = Vec::with_capacity(specs.len());
-        for (id, spec) in specs.into_iter().enumerate() {
-            let tier = spec.tier;
-            let threshold =
-                scheduler.register_device(id, tier, spec.initial_threshold, spec.sr_target);
-            devices.push(DeviceState {
-                model: tier.device_model(),
-                t_inf_s: device_latency_ms(tier) / 1000.0,
-                threshold,
-                pos: 0,
-                outstanding: 0,
-                stalled: false,
-                online: true,
-                window_completed: 0,
-                window_satisfied: 0,
-                trace_completed: 0,
-                trace_satisfied: 0,
-                trace_correct: 0,
-                jitter: Rng::stream(seed ^ 0x5151_5151, id as u64),
-                spec,
-            });
-        }
-        assert!(
-            switchers.is_empty() || switchers.len() == policy.replicas,
-            "need one switch controller per replica ({} vs {})",
-            switchers.len(),
-            policy.replicas
-        );
-        let pool = ServerPool::new(policy, server_model);
+        let fleet = DeviceFleet::new(cfg, scheduler, specs, seed);
+        let server = ServerSubsystem::new(cfg, policy, server_model, switchers, latency_of);
         Self {
             cfg,
-            scheduler,
-            switchers,
             provider,
-            latency_of,
-            devices,
-            requests: Vec::new(),
-            pool,
-            dispatch_kind: policy.dispatch,
-            slack_batch: policy.slack_batch,
-            scaler: policy.autoscale.map(PoolScaler::new),
+            fleet,
+            server,
             events: EventQueue::new(),
             metrics: RunMetrics::default(),
             next_trace_s: 0.0,
@@ -220,27 +111,13 @@ impl<'a> SimEngine<'a> {
 
     /// Run to completion; returns the collected metrics.
     pub fn run(mut self) -> Result<RunMetrics> {
-        // Stagger device starts uniformly over one inference period.
-        for id in 0..self.devices.len() {
-            let d = &mut self.devices[id];
-            if d.spec.stream.is_empty() {
-                continue;
-            }
-            let jitter = d.jitter.next_f64();
-            let dur = d.next_inference_s();
-            let first = jitter * d.t_inf_s + dur;
-            self.events
-                .push(first, Event::DeviceInferDone { device: id, dur_s: dur });
-            self.events
-                .push(self.cfg.window_s * (1.0 + jitter), Event::SrWindow { device: id });
-        }
+        self.fleet.bootstrap(&mut self.events);
         let mut last_t = 0.0;
         while let Some((t, ev)) = self.events.pop() {
             last_t = t;
+            self.metrics.events += 1;
             // Advance the telemetry trace on its fixed grid: one point
             // per elapsed interval boundary, never re-armed off-grid.
-            // The autoscaler shares the grid, so scaling decisions are
-            // deterministic in virtual time, not event-arrival order.
             while t >= self.next_trace_s {
                 let grid_t = self.next_trace_s;
                 self.autoscale_step(grid_t, t);
@@ -248,27 +125,62 @@ impl<'a> SimEngine<'a> {
                 self.next_trace_s += self.trace_interval_s;
             }
             match ev {
-                Event::DeviceInferDone { device, dur_s } => self.on_infer_done(t, device, dur_s),
+                Event::DeviceInferDone { device, dur_s } => {
+                    self.fleet.on_infer_done(
+                        t,
+                        device,
+                        dur_s,
+                        &mut *self.provider,
+                        &mut self.events,
+                        &mut self.metrics,
+                    );
+                }
                 Event::ServerArrival { request } => self.on_server_arrival(t, request),
                 Event::ServerBatchDone { server } => self.on_batch_done(t, server),
-                Event::ResultArrival { device, request } => self.on_result(t, device, request),
-                Event::RequestShed { device, request } => self.on_shed(t, device, request),
-                Event::SrWindow { device } => self.on_sr_window(t, device),
-                Event::DeviceResume { device } => self.on_resume(t, device),
+                Event::ResultArrival { device, request } => {
+                    self.fleet.on_completion(
+                        t,
+                        device,
+                        request,
+                        CompletionNotice::Served,
+                        &mut self.events,
+                        &mut self.metrics,
+                    );
+                }
+                Event::RequestShed { device, request } => {
+                    self.fleet.on_completion(
+                        t,
+                        device,
+                        request,
+                        CompletionNotice::Shed,
+                        &mut self.events,
+                        &mut self.metrics,
+                    );
+                }
+                Event::SrWindow { device } => {
+                    // Fresh SR telemetry also drives the server side's
+                    // §IV-E switch controllers (threshold snapshot only
+                    // assembled when switching is actually on).
+                    let updated = self.fleet.on_sr_window(t, device, &mut self.events);
+                    if updated && self.server.wants_switch_telemetry() {
+                        let ths = self.fleet.thresholds();
+                        self.server.consult_switchers(&ths, t);
+                    }
+                }
+                Event::DeviceResume { device } => {
+                    self.fleet.on_resume(t, device, &mut self.events);
+                }
             }
         }
-        self.metrics.shed = self.pool.shed_count();
-        self.metrics.per_server_batches = self.pool.batches_per_replica();
-        self.metrics.parked_replica_seconds = self.pool.parked_replica_seconds(last_t);
+        self.metrics.shed = self.server.shed_count();
+        self.metrics.steals = self.server.steal_count();
+        self.metrics.per_server_batches = self.server.batches_per_replica();
+        self.metrics.parked_replica_seconds = self.server.parked_replica_seconds(last_t);
         self.metrics.real_compute_ms = self.provider.real_compute_ms();
         Ok(self.metrics)
     }
 
-    /// One autoscaler evaluation on the telemetry grid: feed the pool's
-    /// cumulative shed counter into the watermark rule (the scaler
-    /// tracks its own last-seen value, so sheds landing in a
-    /// dwell-blocked window are deferred, not lost) and, if a replica
-    /// was unparked, immediately offer it the queued backlog.
+    /// One autoscaler evaluation on the telemetry grid.
     ///
     /// `grid_t` stamps the (deterministic) scaling decision and its
     /// parked-time accounting; the dispatch that follows an unpark runs
@@ -278,449 +190,69 @@ impl<'a> SimEngine<'a> {
     /// the virtual clock (non-monotone times, replicas double-booked
     /// against batches that finish "later" at earlier timestamps).
     fn autoscale_step(&mut self, grid_t: f64, now: f64) {
-        if self.scaler.is_none() {
-            return;
-        }
-        let shed_total = self.pool.shed_count();
-        let action = self
-            .scaler
-            .as_mut()
-            .expect("checked above")
-            .step(&mut self.pool, shed_total, grid_t);
-        match action {
+        match self.server.autoscale_step(grid_t) {
             Some(ScaleAction::Unparked(_)) => {
                 self.metrics.scale_events += 1;
-                self.dispatch(now);
+                let observed = self.server.dispatch(now, &mut self.events, &mut self.metrics);
+                for load in observed {
+                    self.fleet.on_batch_observed(load);
+                }
             }
             Some(ScaleAction::Parked(_)) => self.metrics.scale_events += 1,
             None => {}
         }
     }
 
-    fn complete_sample(
-        &mut self,
-        t: f64,
-        device: usize,
-        start_s: f64,
-        forwarded: bool,
-        correct: bool,
-    ) {
-        let d = &mut self.devices[device];
-        let rec = SampleRecord {
-            device,
-            tier: d.spec.tier,
-            start_s,
-            done_s: t,
-            forwarded,
-            correct,
-            slo_ms: d.spec.slo_ms,
-        };
-        d.window_completed += 1;
-        d.trace_completed += 1;
-        if rec.slo_satisfied() {
-            d.window_satisfied += 1;
-            d.trace_satisfied += 1;
-        }
-        if correct {
-            d.trace_correct += 1;
-        }
-        self.metrics.record(rec);
-    }
-
-    fn on_infer_done(&mut self, t: f64, device: usize, dur_s: f64) {
-        let d = &mut self.devices[device];
-        if !d.online || d.done() {
-            return;
-        }
-        let sample = d.spec.stream[d.pos];
-        d.pos += 1;
-        // Exact: the event carries the jittered duration that was
-        // actually scheduled, so this is the true inference start.
-        let start_s = t - dur_s;
-        let model = d.model;
-        let threshold = d.threshold;
-        let (bvsb, correct) = self.provider.device_output(model, sample);
-        if (bvsb as f64) >= threshold {
-            // Confident: the local prediction stands (Eq. 3, d = 0).
-            self.complete_sample(t, device, start_s, false, correct);
-        } else {
-            // Forward to the server (d = 1).
-            let req = Request {
-                device,
-                sample,
-                start_s,
-                local_correct: correct,
-                correct: None,
-            };
-            let rid = self.requests.len();
-            self.requests.push(req);
-            self.devices[device].outstanding += 1;
-            self.events
-                .push(t + self.comm_s(), Event::ServerArrival { request: rid });
-        }
-        self.after_sample(t, device);
-    }
-
-    /// Post-sample bookkeeping: offline transitions, next inference.
-    fn after_sample(&mut self, t: f64, device: usize) {
-        let d = &mut self.devices[device];
-        if let Some(off_at) = d.spec.offline_at {
-            if d.pos == off_at && !d.done() {
-                d.online = false;
-                d.stalled = false;
-                let dur = d.spec.offline_duration_s;
-                self.scheduler.device_offline(device);
-                self.events.push(t + dur, Event::DeviceResume { device });
-                return;
-            }
-        }
-        if d.done() {
-            return;
-        }
-        if d.outstanding < self.cfg.max_outstanding {
-            let dt = d.next_inference_s();
-            self.events
-                .push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
-        } else {
-            d.stalled = true; // resume on next result arrival
-        }
-    }
-
+    /// A forwarded request reached the server: hand its descriptor to
+    /// the subsystem; on a shed verdict the device gets a notice after
+    /// the return hop, otherwise dispatch ran and its congestion
+    /// observations feed the scheduler control loop.
     fn on_server_arrival(&mut self, t: f64, request: usize) {
-        let r = &self.requests[request];
-        let d = &self.devices[r.device];
-        let pending = PendingRequest {
-            id: request,
-            tier: d.spec.tier,
-            start_s: r.start_s,
-            deadline_s: r.start_s + d.spec.slo_ms / 1000.0,
-            arrival_s: t,
-        };
-        // Cheapest possible remaining service: a batch-1 run on the
-        // *fastest* replica's model plus the return hop — in a
-        // heterogeneous pool a request is only hopeless if even the
-        // fastest model cannot make its deadline (replica 0 may be the
-        // slow one). Parked replicas count too: the scaler can unpark
-        // them long before the deadline. Only worth computing when
-        // admission control is on — this is the per-forward hot path.
-        let min_service_s = if self.pool.shedding() {
-            self.min_batch1_ms() / 1000.0 + self.comm_s()
-        } else {
-            0.0
-        };
-        let device = r.device;
-        match self.pool.admit(pending, t, min_service_s) {
-            Admission::Shed => {
+        let req = self.fleet.forward_descriptor(request, t);
+        let device = req.device;
+        let (verdict, observed) =
+            self.server
+                .on_arrival(t, req, &mut self.events, &mut self.metrics);
+        match verdict {
+            ForwardingVerdict::Shed => {
                 self.events
                     .push(t + self.comm_s(), Event::RequestShed { device, request });
             }
-            Admission::Queued => self.dispatch(t),
-        }
-    }
-
-    /// Batch-1 latency of the fastest replica's model (ms) — the
-    /// admission-control feasibility floor for a heterogeneous pool.
-    fn min_batch1_ms(&self) -> f64 {
-        (0..self.pool.num_replicas())
-            .map(|s| (self.latency_of)(self.pool.model(s)).batch_ms(1))
-            .fold(f64::INFINITY, f64::min)
-    }
-
-    /// Dynamic batching (§V-A), grid part: largest grid batch that the
-    /// current queue can fill, capped by the replica model's max useful
-    /// batch. O(grid) — no queue scan, so replica scoring can call it
-    /// per candidate cheaply.
-    fn base_batch_size(&self, server: usize) -> usize {
-        let model = (self.latency_of)(self.pool.model(server));
-        let qlen = self.pool.queue_len();
-        self.cfg
-            .batch_grid
-            .iter()
-            .filter(|&&b| b <= qlen && b <= model.max_batch)
-            .copied()
-            .max()
-            .unwrap_or(1)
-            .min(qlen.max(1))
-    }
-
-    /// Batch size actually formed on `server` at `now`.
-    ///
-    /// With `slack_batch` on, a CascadeServe-style deadline cap applies
-    /// on top of [`Self::base_batch_size`]: the batch shrinks to the
-    /// largest grid size whose batch latency (plus the return hop)
-    /// still lets the tightest *feasible* queued request make its SLO
-    /// on this replica's curve. Feasible means servable at batch 1 —
-    /// a request whose deadline is already blown cannot be saved by any
-    /// batch size, so it is screened out rather than allowed to disable
-    /// the cap protecting the requests behind it. When nothing queued
-    /// is feasible the uncapped batch maximizes drain throughput
-    /// (admission control, if on, culls the hopeless at formation).
-    fn pick_batch_size(&self, server: usize, now: f64) -> usize {
-        let base = self.base_batch_size(server);
-        if !self.slack_batch {
-            return base;
-        }
-        let model = (self.latency_of)(self.pool.model(server));
-        let floor_s = now + model.batch_ms(1) / 1000.0 + self.comm_s();
-        let Some(deadline_s) = self.pool.min_feasible_queued_deadline(floor_s) else {
-            return base;
-        };
-        let qlen = self.pool.queue_len();
-        let slack_ms = (deadline_s - now - self.comm_s()) * 1000.0;
-        self.cfg
-            .batch_grid
-            .iter()
-            .filter(|&&b| b <= qlen && b <= model.max_batch && model.batch_ms(b) <= slack_ms)
-            .copied()
-            .max()
-            .unwrap_or(1)
-            .min(qlen.max(1))
-    }
-
-    /// Replica selection: lowest-indexed idle (the PR 1 rule), or
-    /// model-aware — the idle replica minimizing the estimated
-    /// completion time of the batch it would form (its model's batch
-    /// latency at the planned grid size). All idle candidates would
-    /// start at `now`, so comparing batch latencies compares completion
-    /// times. Scoring uses the O(grid) base size — the slack cap only
-    /// shrinks the winner's batch at formation, and scanning the queue
-    /// once per candidate would make dispatch O(replicas x qlen).
-    /// Strict `<` keeps the tie-break on the lowest index, making a
-    /// homogeneous pool bit-identical to the lowest-index rule.
-    fn pick_replica(&self) -> Option<usize> {
-        match self.dispatch_kind {
-            DispatchKind::LowestIndex => self.pool.next_idle(),
-            DispatchKind::ModelAware => {
-                let mut best: Option<(usize, f64)> = None;
-                for s in 0..self.pool.num_replicas() {
-                    if !self.pool.is_idle(s) {
-                        continue;
-                    }
-                    let b = self.base_batch_size(s);
-                    let cost = (self.latency_of)(self.pool.model(s)).batch_ms(b);
-                    if best.map_or(true, |(_, c)| cost < c) {
-                        best = Some((s, cost));
-                    }
+            ForwardingVerdict::Queued => {
+                for load in observed {
+                    self.fleet.on_batch_observed(load);
                 }
-                best.map(|(s, _)| s)
             }
         }
-    }
-
-    /// Feed idle replicas (in dispatch-policy order) while the queue
-    /// has work.
-    fn dispatch(&mut self, t: f64) {
-        while self.pool.queue_len() > 0 {
-            let Some(server) = self.pick_replica() else {
-                return;
-            };
-            self.start_batch(t, server);
-        }
-    }
-
-    fn start_batch(&mut self, t: f64, server: usize) {
-        // The load signal MultiTASC monitors: the batch it WOULD form if
-        // the grid were unbounded (i.e. the backlog), so congestion is
-        // visible even once the formed batch saturates at the grid cap.
-        let load_signal = self.pool.queue_len();
-        if load_signal == 0 {
-            return;
-        }
-        let b = self.pick_batch_size(server, t);
-        let model_name = self.pool.model(server).to_string();
-        // Feasibility estimate for shedding: a popped request rides a
-        // batch of (at most) the planned size `b`. When culls shrink
-        // the actual batch this over-estimates service time and sheds
-        // a borderline request that might have squeaked by — which is
-        // the right bias for an SLO-targeting system: an over-shed
-        // request still returns well before its deadline (costing a
-        // little accuracy), while an under-shed one burns a batch slot
-        // to deliver a guaranteed SLO miss.
-        let min_service_s = if self.pool.shedding() {
-            (self.latency_of)(&model_name).batch_ms(b) / 1000.0 + self.comm_s()
-        } else {
-            0.0
-        };
-        let fb = self.pool.start_batch(server, b, t, min_service_s);
-        for p in &fb.shed {
-            let device = self.requests[p.id].device;
-            self.events
-                .push(t + self.comm_s(), Event::RequestShed { device, request: p.id });
-        }
-        if fb.formed == 0 {
-            // Everything popped was shed; the replica stays idle and the
-            // dispatch loop decides whether the (shrunk) queue warrants
-            // another pass.
-            return;
-        }
-        self.metrics.batch_sizes.push(fb.formed as f64);
-        *self
-            .metrics
-            .server_model_batches
-            .entry(model_name.clone())
-            .or_insert(0) += 1;
-        // MultiTASC's congestion signal (batch-size proxy, §I).
-        let updates = self.scheduler.on_batch_observed(load_signal.max(fb.formed));
-        self.apply_updates(&updates);
-        let lat = (self.latency_of)(&model_name);
-        let dur_s = lat.batch_ms(fb.formed) / 1000.0;
-        self.events.push(t + dur_s, Event::ServerBatchDone { server });
     }
 
     fn on_batch_done(&mut self, t: f64, server: usize) {
-        let batch = self.pool.finish_batch(server);
-        let samples: Vec<usize> = batch
-            .iter()
-            .map(|p| self.requests[p.id].sample)
-            .collect();
-        let model_name = self.pool.model(server).to_string();
+        let (model_name, batch) = self.server.finish_batch(server);
+        let samples = self.fleet.samples_for(&batch);
         let correct = self.provider.server_outputs(&model_name, &samples);
         let comm = self.comm_s();
         for (p, ok) in batch.iter().zip(correct) {
-            self.requests[p.id].correct = Some(ok);
-            let device = self.requests[p.id].device;
-            self.events
-                .push(t + comm, Event::ResultArrival { device, request: p.id });
+            self.fleet.record_server_result(p.id, ok);
+            self.events.push(
+                t + comm,
+                Event::ResultArrival {
+                    device: p.device,
+                    request: p.id,
+                },
+            );
         }
-        self.dispatch(t);
-    }
-
-    fn on_result(&mut self, t: f64, device: usize, request: usize) {
-        let (start_s, correct) = {
-            let r = &self.requests[request];
-            (r.start_s, r.correct.expect("result without correctness"))
-        };
-        self.complete_sample(t, device, start_s, true, correct);
-        self.release_outstanding(t, device);
-    }
-
-    /// A shed request's notice reached the device: the local prediction
-    /// stands, completing the sample without server service. The sample
-    /// still counts as forwarded — it paid the comm hop and an
-    /// outstanding slot, so `forward_rate()` keeps measuring offered
-    /// network/server load; `RunMetrics::shed` separates the culled
-    /// share.
-    fn on_shed(&mut self, t: f64, device: usize, request: usize) {
-        let (start_s, correct) = {
-            let r = &self.requests[request];
-            (r.start_s, r.local_correct)
-        };
-        self.complete_sample(t, device, start_s, true, correct);
-        self.release_outstanding(t, device);
-    }
-
-    /// Common post-completion path for forwarded requests: free the
-    /// in-flight slot and un-stall the device stream if throttled.
-    fn release_outstanding(&mut self, t: f64, device: usize) {
-        let d = &mut self.devices[device];
-        d.outstanding = d.outstanding.saturating_sub(1);
-        if d.stalled && d.online && !d.done() && d.outstanding < self.cfg.max_outstanding {
-            d.stalled = false;
-            let dt = d.next_inference_s();
-            self.events
-                .push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
-        }
-    }
-
-    fn on_sr_window(&mut self, t: f64, device: usize) {
-        let (sr, should_update) = {
-            let d = &mut self.devices[device];
-            if !d.online {
-                (0.0, false)
-            } else if d.window_completed > 0 {
-                let sr = 100.0 * d.window_satisfied as f64 / d.window_completed as f64;
-                d.window_completed = 0;
-                d.window_satisfied = 0;
-                (sr, true)
-            } else if d.outstanding > 0 {
-                // Nothing completed but work is stuck at the server:
-                // report full SLO violation.
-                (0.0, true)
-            } else {
-                (0.0, false)
-            }
-        };
-        if should_update {
-            if let Some(upd) = self.scheduler.on_sr_update(device, sr) {
-                self.apply_updates(&[upd]);
-            }
-            // §IV-E: consult each replica's switch controller on fresh
-            // telemetry. All controllers see the same threshold
-            // population but move from their own ladder positions, so
-            // a mixed pool converges replica by replica.
-            if !self.switchers.is_empty() {
-                let ths = self.scheduler.thresholds();
-                for (server, ctl) in self.switchers.iter_mut().enumerate() {
-                    if let Some(new_model) = ctl.maybe_switch(&ths, t) {
-                        log::debug!("t={t:.1}s: replica {server} model switch -> {new_model}");
-                        self.pool.set_model(server, &new_model);
-                    }
-                }
-            }
-        }
-        // Keep the window ticking while the device still has work.
-        let d = &self.devices[device];
-        if !d.fully_drained() {
-            self.events
-                .push(t + self.cfg.window_s, Event::SrWindow { device });
-        }
-    }
-
-    fn on_resume(&mut self, t: f64, device: usize) {
-        let d = &mut self.devices[device];
-        d.online = true;
-        // A resumed device starts its SR window fresh: counters
-        // accumulated before (or during) the outage would otherwise
-        // bias the first post-outage Eq. 4 update toward stale,
-        // pre-outage conditions — exactly when Fig 19/20 intermittency
-        // needs the scheduler reacting to the *current* regime. The
-        // trace-interval counters reset with it so the Fig 19/20 time
-        // series shows the post-resume regime, not a stale mixture.
-        d.window_completed = 0;
-        d.window_satisfied = 0;
-        d.trace_completed = 0;
-        d.trace_satisfied = 0;
-        d.trace_correct = 0;
-        self.scheduler.device_online(device);
-        if !d.done() {
-            let dt = d.next_inference_s();
-            if d.outstanding < self.cfg.max_outstanding {
-                self.events
-                    .push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
-            } else {
-                d.stalled = true;
-            }
-        }
-    }
-
-    fn apply_updates(&mut self, updates: &[ThresholdUpdate]) {
-        for u in updates {
-            if let Some(d) = self.devices.get_mut(u.device) {
-                d.threshold = u.threshold;
-            }
+        let observed = self.server.dispatch(t, &mut self.events, &mut self.metrics);
+        for load in observed {
+            self.fleet.on_batch_observed(load);
         }
     }
 
     fn record_trace(&mut self, t: f64) {
-        let mut active = 0;
-        let mut thresh_sum = 0.0;
-        let (mut comp, mut sat, mut corr) = (0usize, 0usize, 0usize);
-        for d in self.devices.iter_mut() {
-            if d.online && !d.done() {
-                active += 1;
-                thresh_sum += d.threshold;
-            }
-            comp += d.trace_completed;
-            sat += d.trace_satisfied;
-            corr += d.trace_correct;
-            d.trace_completed = 0;
-            d.trace_satisfied = 0;
-            d.trace_correct = 0;
-        }
-        let (running_sr, running_acc) = if comp > 0 {
+        let scan = self.fleet.trace_scan();
+        let (running_sr, running_acc) = if scan.completed > 0 {
             (
-                100.0 * sat as f64 / comp as f64,
-                corr as f64 / comp as f64,
+                100.0 * scan.satisfied as f64 / scan.completed as f64,
+                scan.correct as f64 / scan.completed as f64,
             )
         } else {
             // carry previous values forward if idle
@@ -730,30 +262,18 @@ impl<'a> SimEngine<'a> {
                 .map(|p| (p.running_sr, p.running_acc))
                 .unwrap_or((100.0, 0.0))
         };
-        // Heaviest model currently placed on ANY replica (ladder index;
-        // replica 0 alone would under-report a heterogeneous pool or a
-        // pool whose replicas switched independently).
-        let model_idx = (0..self.pool.num_replicas())
-            .map(|s| {
-                let m = self.pool.model(s);
-                usize::from(m == "srv_effnetb3") + 2 * usize::from(m == "srv_deit")
-            })
-            .max()
-            .unwrap_or(0);
         self.metrics.trace.push(TracePoint {
             t_s: t,
-            active_devices: active,
-            mean_threshold: if active > 0 {
-                thresh_sum / active as f64
-            } else {
-                0.0
-            },
+            active_devices: scan.active_devices,
+            mean_threshold: scan.mean_threshold,
             running_sr,
             running_acc,
-            queue_len: self.pool.queue_len(),
-            busy_servers: self.pool.busy_count(),
-            parked_servers: self.pool.parked_count(),
-            server_model_idx: model_idx,
+            queue_len: self.server.queue_len(),
+            busy_servers: self.server.busy_count(),
+            parked_servers: self.server.parked_count(),
+            server_model_idx: self.server.model_ladder_idx(),
+            per_shard_depth: self.server.shard_depths(),
+            steals: self.server.steal_count(),
         });
     }
 }

@@ -1,0 +1,460 @@
+//! Device-side subsystem: the fleet of device streams and the
+//! scheduler control loop around them.
+//!
+//! One half of the engine split (see `docs/architecture.md`): the
+//! fleet owns every per-device concern — stream positions, local
+//! inference timing (jittered Table I latencies), forwarding decisions
+//! (Eq. 3), in-flight throttling, SR-window telemetry (§IV-B), the
+//! scheduler's threshold updates (Eq. 4 / Alg. 1), and intermittent
+//! outage/resume bookkeeping — plus the engine-side request table for
+//! forwarded samples. It never touches the server pool: the server
+//! side sees forwarded work only as [`PendingRequest`] descriptors and
+//! answers only through [`CompletionNotice`]s delivered back here by
+//! the engine via the typed event queue.
+
+use crate::config::latency::device_latency_ms;
+use crate::config::SystemConfig;
+use crate::metrics::{RunMetrics, SampleRecord};
+use crate::models::outputs::OutputProvider;
+use crate::models::Tier;
+use crate::scheduler::{DeviceId, Scheduler, ThresholdUpdate};
+use crate::sim::event::{Event, EventQueue};
+use crate::sim::server::PendingRequest;
+use crate::util::prng::Rng;
+
+/// Per-device configuration handed to the engine.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub tier: Tier,
+    /// Dataset indices this device will stream through.
+    pub stream: Vec<usize>,
+    pub initial_threshold: f64,
+    pub sr_target: f64,
+    pub slo_ms: f64,
+    /// Sample position at which the device drops offline, if any.
+    pub offline_at: Option<usize>,
+    /// How long it stays offline (seconds).
+    pub offline_duration_s: f64,
+}
+
+struct DeviceState {
+    spec: DeviceSpec,
+    model: &'static str,
+    t_inf_s: f64,
+    threshold: f64,
+    pos: usize,
+    outstanding: usize,
+    stalled: bool,
+    online: bool,
+    // SR window accounting (§IV-B)
+    window_completed: usize,
+    window_satisfied: usize,
+    // trace-interval accounting
+    trace_completed: usize,
+    trace_satisfied: usize,
+    trace_correct: usize,
+    jitter: Rng,
+}
+
+impl DeviceState {
+    fn done(&self) -> bool {
+        self.pos >= self.spec.stream.len()
+    }
+
+    fn fully_drained(&self) -> bool {
+        self.done() && self.outstanding == 0
+    }
+
+    fn next_inference_s(&mut self) -> f64 {
+        // ±3% gaussian jitter breaks lockstep artifacts while keeping
+        // the Table I mean.
+        let j = 1.0 + 0.03 * self.jitter.next_gaussian().clamp(-3.0, 3.0);
+        self.t_inf_s * j.max(0.5)
+    }
+}
+
+struct Request {
+    device: usize,
+    sample: usize,
+    start_s: f64,
+    /// Correctness of the device's own prediction — the fallback when
+    /// admission control sheds the request.
+    local_correct: bool,
+    correct: Option<bool>,
+}
+
+/// How a forwarded request came back to its device — the server side's
+/// half of the fleet/server interface (the other half is the
+/// [`PendingRequest`] the fleet hands out).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompletionNotice {
+    /// The server served the request; the result (recorded earlier via
+    /// [`DeviceFleet::record_server_result`]) stands.
+    Served,
+    /// Admission control shed the request; the device's own prediction
+    /// stands as a local-only completion.
+    Shed,
+}
+
+/// Device-side counters scanned out at each telemetry grid point
+/// (consumed and reset by the engine's trace recorder).
+pub struct FleetTraceScan {
+    pub active_devices: usize,
+    pub mean_threshold: f64,
+    pub completed: usize,
+    pub satisfied: usize,
+    pub correct: usize,
+}
+
+/// The device fleet plus its scheduler control loop.
+pub struct DeviceFleet<'a> {
+    cfg: &'a SystemConfig,
+    scheduler: &'a mut dyn Scheduler,
+    devices: Vec<DeviceState>,
+    requests: Vec<Request>,
+}
+
+impl<'a> DeviceFleet<'a> {
+    pub fn new(
+        cfg: &'a SystemConfig,
+        scheduler: &'a mut dyn Scheduler,
+        specs: Vec<DeviceSpec>,
+        seed: u64,
+    ) -> Self {
+        let mut devices = Vec::with_capacity(specs.len());
+        for (id, spec) in specs.into_iter().enumerate() {
+            let tier = spec.tier;
+            let threshold =
+                scheduler.register_device(id, tier, spec.initial_threshold, spec.sr_target);
+            devices.push(DeviceState {
+                model: tier.device_model(),
+                t_inf_s: device_latency_ms(tier) / 1000.0,
+                threshold,
+                pos: 0,
+                outstanding: 0,
+                stalled: false,
+                online: true,
+                window_completed: 0,
+                window_satisfied: 0,
+                trace_completed: 0,
+                trace_satisfied: 0,
+                trace_correct: 0,
+                jitter: Rng::stream(seed ^ 0x5151_5151, id as u64),
+                spec,
+            });
+        }
+        Self {
+            cfg,
+            scheduler,
+            devices,
+            requests: Vec::new(),
+        }
+    }
+
+    fn comm_s(&self) -> f64 {
+        self.cfg.comm_ms / 1000.0
+    }
+
+    /// Schedule every device's first inference and SR window, staggered
+    /// uniformly over one inference period.
+    pub fn bootstrap(&mut self, events: &mut EventQueue) {
+        for id in 0..self.devices.len() {
+            let d = &mut self.devices[id];
+            if d.spec.stream.is_empty() {
+                continue;
+            }
+            let jitter = d.jitter.next_f64();
+            let dur = d.next_inference_s();
+            let first = jitter * d.t_inf_s + dur;
+            events.push(first, Event::DeviceInferDone { device: id, dur_s: dur });
+            events.push(
+                self.cfg.window_s * (1.0 + jitter),
+                Event::SrWindow { device: id },
+            );
+        }
+    }
+
+    // ----- request table accessors (engine plumbing) -----------------
+
+    /// The [`PendingRequest`] descriptor the server subsystem sees for
+    /// a forwarded request — the device-side half of the interface.
+    pub fn forward_descriptor(&self, request: usize, arrival_s: f64) -> PendingRequest {
+        let r = &self.requests[request];
+        let d = &self.devices[r.device];
+        PendingRequest {
+            id: request,
+            device: r.device,
+            tier: d.spec.tier,
+            start_s: r.start_s,
+            deadline_s: r.start_s + d.spec.slo_ms / 1000.0,
+            arrival_s,
+        }
+    }
+
+    /// Dataset sample indices behind a served batch, in batch order.
+    pub fn samples_for(&self, batch: &[PendingRequest]) -> Vec<usize> {
+        batch.iter().map(|p| self.requests[p.id].sample).collect()
+    }
+
+    /// Record a server verdict for one request (consumed by the
+    /// [`CompletionNotice::Served`] path when the result lands).
+    pub fn record_server_result(&mut self, request: usize, correct: bool) {
+        self.requests[request].correct = Some(correct);
+    }
+
+    // ----- event handlers ---------------------------------------------
+
+    fn complete_sample(
+        &mut self,
+        t: f64,
+        device: usize,
+        start_s: f64,
+        forwarded: bool,
+        correct: bool,
+        metrics: &mut RunMetrics,
+    ) {
+        let d = &mut self.devices[device];
+        let rec = SampleRecord {
+            device,
+            tier: d.spec.tier,
+            start_s,
+            done_s: t,
+            forwarded,
+            correct,
+            slo_ms: d.spec.slo_ms,
+        };
+        d.window_completed += 1;
+        d.trace_completed += 1;
+        if rec.slo_satisfied() {
+            d.window_satisfied += 1;
+            d.trace_satisfied += 1;
+        }
+        if correct {
+            d.trace_correct += 1;
+        }
+        metrics.record(rec);
+    }
+
+    /// Local inference finished: complete confidently (Eq. 3, d = 0) or
+    /// forward to the server (d = 1, scheduling a `ServerArrival`).
+    pub fn on_infer_done(
+        &mut self,
+        t: f64,
+        device: usize,
+        dur_s: f64,
+        provider: &mut dyn OutputProvider,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+    ) {
+        let d = &mut self.devices[device];
+        if !d.online || d.done() {
+            return;
+        }
+        let sample = d.spec.stream[d.pos];
+        d.pos += 1;
+        // Exact: the event carries the jittered duration that was
+        // actually scheduled, so this is the true inference start.
+        let start_s = t - dur_s;
+        let model = d.model;
+        let threshold = d.threshold;
+        let (bvsb, correct) = provider.device_output(model, sample);
+        if (bvsb as f64) >= threshold {
+            // Confident: the local prediction stands (Eq. 3, d = 0).
+            self.complete_sample(t, device, start_s, false, correct, metrics);
+        } else {
+            // Forward to the server (d = 1).
+            let req = Request {
+                device,
+                sample,
+                start_s,
+                local_correct: correct,
+                correct: None,
+            };
+            let rid = self.requests.len();
+            self.requests.push(req);
+            self.devices[device].outstanding += 1;
+            events.push(t + self.comm_s(), Event::ServerArrival { request: rid });
+        }
+        self.after_sample(t, device, events);
+    }
+
+    /// Post-sample bookkeeping: offline transitions, next inference.
+    fn after_sample(&mut self, t: f64, device: usize, events: &mut EventQueue) {
+        let d = &mut self.devices[device];
+        if let Some(off_at) = d.spec.offline_at {
+            if d.pos == off_at && !d.done() {
+                d.online = false;
+                d.stalled = false;
+                let dur = d.spec.offline_duration_s;
+                self.scheduler.device_offline(device);
+                events.push(t + dur, Event::DeviceResume { device });
+                return;
+            }
+        }
+        if d.done() {
+            return;
+        }
+        if d.outstanding < self.cfg.max_outstanding {
+            let dt = d.next_inference_s();
+            events.push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
+        } else {
+            d.stalled = true; // resume on next result arrival
+        }
+    }
+
+    /// A forwarded request completed — served result or shed notice
+    /// reached the device. A shed sample still counts as forwarded: it
+    /// paid the comm hop and an outstanding slot, so `forward_rate()`
+    /// keeps measuring offered network/server load (`RunMetrics::shed`
+    /// separates the culled share).
+    pub fn on_completion(
+        &mut self,
+        t: f64,
+        device: usize,
+        request: usize,
+        notice: CompletionNotice,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+    ) {
+        let (start_s, correct) = {
+            let r = &self.requests[request];
+            let correct = match notice {
+                CompletionNotice::Served => r.correct.expect("result without correctness"),
+                CompletionNotice::Shed => r.local_correct,
+            };
+            (r.start_s, correct)
+        };
+        self.complete_sample(t, device, start_s, true, correct, metrics);
+        self.release_outstanding(t, device, events);
+    }
+
+    /// Common post-completion path for forwarded requests: free the
+    /// in-flight slot and un-stall the device stream if throttled.
+    fn release_outstanding(&mut self, t: f64, device: usize, events: &mut EventQueue) {
+        let d = &mut self.devices[device];
+        d.outstanding = d.outstanding.saturating_sub(1);
+        if d.stalled && d.online && !d.done() && d.outstanding < self.cfg.max_outstanding {
+            d.stalled = false;
+            let dt = d.next_inference_s();
+            events.push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
+        }
+    }
+
+    /// A device's SR window closed (§IV-B). Feeds the scheduler and
+    /// applies any threshold update; returns `true` when fresh
+    /// telemetry landed, so the engine can consult the server side's
+    /// §IV-E switch controllers.
+    pub fn on_sr_window(&mut self, t: f64, device: usize, events: &mut EventQueue) -> bool {
+        let (sr, should_update) = {
+            let d = &mut self.devices[device];
+            if !d.online {
+                (0.0, false)
+            } else if d.window_completed > 0 {
+                let sr = 100.0 * d.window_satisfied as f64 / d.window_completed as f64;
+                d.window_completed = 0;
+                d.window_satisfied = 0;
+                (sr, true)
+            } else if d.outstanding > 0 {
+                // Nothing completed but work is stuck at the server:
+                // report full SLO violation.
+                (0.0, true)
+            } else {
+                (0.0, false)
+            }
+        };
+        if should_update {
+            if let Some(upd) = self.scheduler.on_sr_update(device, sr) {
+                self.apply_updates(&[upd]);
+            }
+        }
+        // Keep the window ticking while the device still has work.
+        let d = &self.devices[device];
+        if !d.fully_drained() {
+            events.push(t + self.cfg.window_s, Event::SrWindow { device });
+        }
+        should_update
+    }
+
+    /// Intermittent participation: the device returns online with a
+    /// fresh SR window. Counters accumulated before (or during) the
+    /// outage would otherwise bias the first post-outage Eq. 4 update
+    /// toward stale, pre-outage conditions — exactly when Fig 19/20
+    /// intermittency needs the scheduler reacting to the *current*
+    /// regime. The trace-interval counters reset with it so the
+    /// Fig 19/20 time series shows the post-resume regime, not a stale
+    /// mixture.
+    pub fn on_resume(&mut self, t: f64, device: usize, events: &mut EventQueue) {
+        let d = &mut self.devices[device];
+        d.online = true;
+        d.window_completed = 0;
+        d.window_satisfied = 0;
+        d.trace_completed = 0;
+        d.trace_satisfied = 0;
+        d.trace_correct = 0;
+        self.scheduler.device_online(device);
+        if !d.done() {
+            let dt = d.next_inference_s();
+            if d.outstanding < self.cfg.max_outstanding {
+                events.push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
+            } else {
+                d.stalled = true;
+            }
+        }
+    }
+
+    // ----- scheduler control loop -------------------------------------
+
+    /// MultiTASC's congestion signal (batch-size proxy, §I): one call
+    /// per batch the server formed, in formation order.
+    pub fn on_batch_observed(&mut self, load_signal: usize) {
+        let updates = self.scheduler.on_batch_observed(load_signal);
+        self.apply_updates(&updates);
+    }
+
+    /// The scheduler's current threshold population (input to the
+    /// §IV-E switch controllers).
+    pub fn thresholds(&self) -> Vec<(DeviceId, Tier, f64)> {
+        self.scheduler.thresholds()
+    }
+
+    fn apply_updates(&mut self, updates: &[ThresholdUpdate]) {
+        for u in updates {
+            if let Some(d) = self.devices.get_mut(u.device) {
+                d.threshold = u.threshold;
+            }
+        }
+    }
+
+    // ----- telemetry ---------------------------------------------------
+
+    /// Scan (and reset) the per-device trace-interval counters for one
+    /// telemetry grid point.
+    pub fn trace_scan(&mut self) -> FleetTraceScan {
+        let mut active = 0;
+        let mut thresh_sum = 0.0;
+        let (mut comp, mut sat, mut corr) = (0usize, 0usize, 0usize);
+        for d in self.devices.iter_mut() {
+            if d.online && !d.done() {
+                active += 1;
+                thresh_sum += d.threshold;
+            }
+            comp += d.trace_completed;
+            sat += d.trace_satisfied;
+            corr += d.trace_correct;
+            d.trace_completed = 0;
+            d.trace_satisfied = 0;
+            d.trace_correct = 0;
+        }
+        FleetTraceScan {
+            active_devices: active,
+            mean_threshold: if active > 0 {
+                thresh_sum / active as f64
+            } else {
+                0.0
+            },
+            completed: comp,
+            satisfied: sat,
+            correct: corr,
+        }
+    }
+}

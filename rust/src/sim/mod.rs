@@ -1,13 +1,23 @@
 //! Discrete-event simulation of the multi-device cascade (paper §V
 //! methodology: calibrated latency tables + real model outputs).
+//!
+//! Structured as two subsystems around a thin event-loop coordinator
+//! (`docs/architecture.md`): the device-side [`DeviceFleet`]
+//! (`fleet`), the server-side [`ServerSubsystem`] (`subsystem`) over
+//! the sharded [`ServerPool`] (`server`), and the [`SimEngine`]
+//! (`engine`) routing typed events between them.
 
 pub mod engine;
 pub mod event;
 pub mod experiment;
+pub mod fleet;
 pub mod server;
+pub mod subsystem;
 
 pub use engine::{DeviceSpec, SimEngine};
 pub use experiment::{run_scenario, run_spec};
+pub use fleet::{CompletionNotice, DeviceFleet};
 pub use server::{
     Admission, PendingRequest, PoolScaler, QueueDiscipline, ScaleAction, ServerPool,
 };
+pub use subsystem::{ForwardingVerdict, ServerSubsystem};

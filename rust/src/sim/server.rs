@@ -7,13 +7,18 @@
 //! latency-aware serving; "AI Multi-Tenancy on Edge" priority
 //! scheduling):
 //!
-//! * [`ServerPool`] — N replica servers behind one shared queue. Each
+//! * [`ServerPool`] — N replica servers behind per-model-sharded
+//!   queues (`ServerPolicy::sharding`; one shared queue in the default
+//!   `single` mode, bit-identical to the pre-sharding pool). Each
 //!   replica carries its own model name (hence its own latency model),
 //!   busy/parked state, in-flight batch, and served-batch counter. The
 //!   pool is genuinely *heterogeneous*: `ServerPolicy::models` places a
 //!   (possibly different) model on every replica, and the §IV-E switch
 //!   controller drives each replica independently along the ladder via
-//!   [`ServerPool::set_model`].
+//!   [`ServerPool::set_model`], which also moves it to its new model's
+//!   shard. Idle replicas drain their own shard first and steal the
+//!   most-deadline-endangered sibling-shard work ([`ServerPool::steal_batch`]
+//!   enforces the steal-only-when-idle invariant).
 //! * [`QueueDiscipline`] — the ordering policy of the shared queue,
 //!   with three implementations:
 //!   [`Fifo`] (the seed behavior), [`Edf`] (earliest SLO deadline
@@ -42,7 +47,7 @@
 
 use std::collections::VecDeque;
 
-use crate::config::scenario::{AutoscalePolicy, QueueKind, ServerPolicy};
+use crate::config::scenario::{AutoscalePolicy, QueueKind, ServerPolicy, ShardingKind};
 use crate::models::Tier;
 
 const NUM_TIERS: usize = 4;
@@ -52,6 +57,8 @@ const NUM_TIERS: usize = 4;
 pub struct PendingRequest {
     /// Engine-side request id.
     pub id: usize,
+    /// Device that forwarded the request (the shed-notice address).
+    pub device: usize,
     pub tier: Tier,
     /// Virtual time the sample's local inference started (s).
     pub start_s: f64,
@@ -307,10 +314,16 @@ impl QueueDiscipline for TierWfq {
 /// Build a discipline from the scenario's server policy (queue kind
 /// plus, for tier-WFQ, the configured per-tier weights).
 pub fn build_discipline(policy: &ServerPolicy) -> Box<dyn QueueDiscipline> {
-    match policy.queue {
+    build_discipline_parts(policy.queue, policy.wfq_weights)
+}
+
+/// Discipline construction from its parts — shards created lazily on a
+/// model switch need a fresh queue without the full policy in hand.
+pub fn build_discipline_parts(queue: QueueKind, wfq_weights: [f64; 4]) -> Box<dyn QueueDiscipline> {
+    match queue {
         QueueKind::Fifo => Box::new(Fifo::new()),
         QueueKind::Edf => Box::new(Edf::new()),
-        QueueKind::TierWfq => Box::new(TierWfq::with_weights(policy.wfq_weights)),
+        QueueKind::TierWfq => Box::new(TierWfq::with_weights(wfq_weights)),
     }
 }
 
@@ -346,12 +359,40 @@ pub struct FormedBatch {
     pub shed: Vec<PendingRequest>,
 }
 
-/// N replica servers behind one shared [`QueueDiscipline`].
+/// One model-keyed queue of the sharded pool. An unsharded pool has a
+/// single shard with `model: None`, shared by every replica.
+struct Shard {
+    /// Placed model this shard's queue feeds; `None` for the shared
+    /// shard of an unsharded pool.
+    model: Option<String>,
+    queue: Box<dyn QueueDiscipline>,
+}
+
+/// N replica servers behind per-model-sharded [`QueueDiscipline`]s.
+///
+/// With [`ShardingKind::Single`] (the default) the pool keeps exactly
+/// one shard that every replica drains — bit-identical to the
+/// pre-sharding single shared queue. With per-model sharding each
+/// distinct placed model owns a shard; replicas are assigned to their
+/// current model's shard (following §IV-E switches), drain it first,
+/// and may steal work from sibling shards only while their own shard
+/// is empty (`sim::subsystem` owns the steal policy; the pool enforces
+/// the steal-only-when-idle invariant).
 pub struct ServerPool {
     replicas: Vec<Replica>,
-    queue: Box<dyn QueueDiscipline>,
+    shards: Vec<Shard>,
+    /// Replica index -> shard index (tracks the replica's model under
+    /// per-model sharding).
+    shard_by_replica: Vec<usize>,
+    /// Per-model shards; `false` = one shared shard.
+    sharded: bool,
+    /// Queue construction recipe for shards created on a model switch.
+    queue_kind: QueueKind,
+    wfq_weights: [f64; 4],
     shed: bool,
     shed_count: usize,
+    /// Batches formed out of a sibling shard's queue (work stealing).
+    steal_count: usize,
     /// Completed parked intervals, in replica-seconds.
     parked_s_total: f64,
 }
@@ -373,7 +414,7 @@ impl ServerPool {
             Some(scale) => scale.min_active.clamp(1, policy.replicas),
             None => policy.replicas,
         };
-        let replicas = (0..policy.replicas)
+        let replicas: Vec<Replica> = (0..policy.replicas)
             .map(|i| Replica {
                 model: policy
                     .models
@@ -388,11 +429,50 @@ impl ServerPool {
                 batches_served: 0,
             })
             .collect();
+        let sharded = match policy.sharding {
+            ShardingKind::Single => false,
+            // Auto resolves to per-model: on a homogeneous pool that is
+            // one shard, the same schedule as the single shared queue.
+            ShardingKind::PerModel | ShardingKind::Auto => true,
+        };
+        let mut shards: Vec<Shard> = Vec::new();
+        let mut shard_by_replica = Vec::with_capacity(replicas.len());
+        if sharded {
+            // Shard order = first appearance of each model over replica
+            // indices, so construction is deterministic.
+            for r in &replicas {
+                let idx = match shards
+                    .iter()
+                    .position(|s| s.model.as_deref() == Some(r.model.as_str()))
+                {
+                    Some(i) => i,
+                    None => {
+                        shards.push(Shard {
+                            model: Some(r.model.clone()),
+                            queue: build_discipline_parts(policy.queue, policy.wfq_weights),
+                        });
+                        shards.len() - 1
+                    }
+                };
+                shard_by_replica.push(idx);
+            }
+        } else {
+            shards.push(Shard {
+                model: None,
+                queue: build_discipline(policy),
+            });
+            shard_by_replica = vec![0; replicas.len()];
+        }
         Self {
             replicas,
-            queue: build_discipline(policy),
+            shards,
+            shard_by_replica,
+            sharded,
+            queue_kind: policy.queue,
+            wfq_weights: policy.wfq_weights,
             shed: policy.shed,
             shed_count: 0,
+            steal_count: 0,
             parked_s_total: 0.0,
         }
     }
@@ -401,15 +481,59 @@ impl ServerPool {
         self.replicas.len()
     }
 
-    pub fn queue_len(&self) -> usize {
-        self.queue.len()
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Tightest queued deadline at or after `floor_s` (slack-aware
-    /// batch sizing: the floor screens out requests already hopeless
-    /// on the forming replica).
-    pub fn min_feasible_queued_deadline(&self, floor_s: f64) -> Option<f64> {
-        self.queue.min_deadline_at_least(floor_s)
+    /// Whether the pool runs per-model shards (vs one shared queue).
+    pub fn is_sharded(&self) -> bool {
+        self.sharded
+    }
+
+    /// The model a shard's queue feeds (`None` = the shared shard of an
+    /// unsharded pool).
+    pub fn shard_model(&self, shard: usize) -> Option<&str> {
+        self.shards[shard].model.as_deref()
+    }
+
+    /// The shard `server` currently drains (its model's shard under
+    /// per-model sharding; shard 0 otherwise).
+    pub fn shard_of(&self, server: usize) -> usize {
+        self.shard_by_replica[server]
+    }
+
+    /// Replicas currently assigned to `shard` (parked ones included —
+    /// the scaler can unpark them).
+    pub fn assigned_count(&self, shard: usize) -> usize {
+        self.shard_by_replica.iter().filter(|&&s| s == shard).count()
+    }
+
+    pub fn shard_queue_len(&self, shard: usize) -> usize {
+        self.shards[shard].queue.len()
+    }
+
+    /// Queue depth of every shard, in shard order (the
+    /// `per_shard_depth` trace column).
+    pub fn shard_depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.queue.len()).collect()
+    }
+
+    /// Total queued requests across all shards.
+    pub fn queue_len(&self) -> usize {
+        self.shards.iter().map(|s| s.queue.len()).sum()
+    }
+
+    /// Tightest deadline queued in `shard` (steal-victim selection).
+    pub fn shard_min_deadline(&self, shard: usize) -> Option<f64> {
+        self.shards[shard].queue.min_deadline()
+    }
+
+    /// Tightest deadline queued in `shard` at or after `floor_s`
+    /// (slack-aware batch sizing, scoped to the queue the batch pops
+    /// from; the floor screens out requests already hopeless on the
+    /// forming replica).
+    pub fn shard_min_feasible_deadline(&self, shard: usize, floor_s: f64) -> Option<f64> {
+        self.shards[shard].queue.min_deadline_at_least(floor_s)
     }
 
     pub fn busy_count(&self) -> usize {
@@ -417,7 +541,7 @@ impl ServerPool {
     }
 
     pub fn discipline_name(&self) -> &'static str {
-        self.queue.name()
+        self.shards[0].queue.name()
     }
 
     /// Whether admission-control shedding is enabled for this pool.
@@ -442,9 +566,28 @@ impl ServerPool {
 
     /// Switch one replica to `model` (§IV-E model switching, driven
     /// per-replica by its own controller; a batch already in flight
-    /// keeps its scheduled latency).
+    /// keeps its scheduled latency). Under per-model sharding the
+    /// replica moves to its new model's shard, creating it on first
+    /// use; work left in an orphaned shard is drained by stealing.
     pub fn set_model(&mut self, server: usize, model: &str) {
         self.replicas[server].model = model.to_string();
+        if self.sharded {
+            let idx = match self
+                .shards
+                .iter()
+                .position(|s| s.model.as_deref() == Some(model))
+            {
+                Some(i) => i,
+                None => {
+                    self.shards.push(Shard {
+                        model: Some(model.to_string()),
+                        queue: build_discipline_parts(self.queue_kind, self.wfq_weights),
+                    });
+                    self.shards.len() - 1
+                }
+            };
+            self.shard_by_replica[server] = idx;
+        }
     }
 
     /// Idle = neither busy nor parked: eligible for dispatch.
@@ -498,18 +641,32 @@ impl ServerPool {
                 .sum::<f64>()
     }
 
-    /// Offer a request to admission control and, if admitted, enqueue
-    /// it. `min_service_s` is the cheapest possible remaining service
-    /// (batch-1 latency plus the return hop): if even that cannot make
-    /// the deadline, the request is hopeless and queuing it would only
-    /// grow everyone else's delay.
-    pub fn admit(&mut self, req: PendingRequest, now: f64, min_service_s: f64) -> Admission {
+    /// Offer a request to `shard`'s admission control and, if admitted,
+    /// enqueue it there. `min_service_s` is the cheapest possible
+    /// remaining service on that shard (its fastest replica's batch-1
+    /// latency plus the return hop): if even that cannot make the
+    /// deadline, the request is hopeless and queuing it would only grow
+    /// everyone else's delay.
+    pub fn admit_to(
+        &mut self,
+        shard: usize,
+        req: PendingRequest,
+        now: f64,
+        min_service_s: f64,
+    ) -> Admission {
         if self.shed && now + min_service_s > req.deadline_s {
             self.shed_count += 1;
             return Admission::Shed;
         }
-        self.queue.push(req);
+        self.shards[shard].queue.push(req);
         Admission::Queued
+    }
+
+    /// Single-shard convenience: admit to shard 0. Correct for
+    /// unsharded pools (and the unit tests that drive them); the
+    /// subsystem routes explicitly on sharded pools.
+    pub fn admit(&mut self, req: PendingRequest, now: f64, min_service_s: f64) -> Admission {
+        self.admit_to(0, req, now, min_service_s)
     }
 
     /// Lowest-indexed idle (non-parked) replica, if any — the
@@ -520,18 +677,17 @@ impl ServerPool {
         (0..self.replicas.len()).find(|&i| self.is_idle(i))
     }
 
-    /// Pop requests by discipline order to form a batch of up to `max`
-    /// on `server`, marking it busy when anything was formed.
-    ///
-    /// With shedding enabled, requests whose slack expired *while
-    /// queued* (`now + min_service_s` past their deadline) are culled
-    /// here instead of occupying batch slots — this is where admission
-    /// control actually bites, since a request that was feasible at
-    /// enqueue time goes hopeless during the queue wait. Shed requests
-    /// are returned so the engine can complete them as local-only.
-    pub fn start_batch(
+    /// Lowest-indexed idle replica assigned to `shard`, if any.
+    pub fn next_idle_in_shard(&self, shard: usize) -> Option<usize> {
+        (0..self.replicas.len()).find(|&i| self.shard_by_replica[i] == shard && self.is_idle(i))
+    }
+
+    /// Pop requests (discipline order) from `shard` to form a batch of
+    /// up to `max` on `server`, marking it busy when anything formed.
+    fn form_batch(
         &mut self,
         server: usize,
+        shard: usize,
         max: usize,
         now: f64,
         min_service_s: f64,
@@ -540,9 +696,10 @@ impl ServerPool {
         assert!(!r.busy, "start_batch on busy replica {server}");
         assert!(!r.parked, "start_batch on parked replica {server}");
         r.in_flight.clear();
+        let q = &mut self.shards[shard].queue;
         let mut shed = Vec::new();
         while r.in_flight.len() < max {
-            match self.queue.pop(now) {
+            match q.pop(now) {
                 Some(req) => {
                     if self.shed && now + min_service_s > req.deadline_s {
                         self.shed_count += 1;
@@ -560,6 +717,56 @@ impl ServerPool {
             r.batches_served += 1;
         }
         FormedBatch { formed, shed }
+    }
+
+    /// Form a batch from `server`'s own shard.
+    ///
+    /// With shedding enabled, requests whose slack expired *while
+    /// queued* (`now + min_service_s` past their deadline) are culled
+    /// here instead of occupying batch slots — this is where admission
+    /// control actually bites, since a request that was feasible at
+    /// enqueue time goes hopeless during the queue wait. Shed requests
+    /// are returned so the engine can complete them as local-only.
+    pub fn start_batch(
+        &mut self,
+        server: usize,
+        max: usize,
+        now: f64,
+        min_service_s: f64,
+    ) -> FormedBatch {
+        let shard = self.shard_by_replica[server];
+        self.form_batch(server, shard, max, now, min_service_s)
+    }
+
+    /// Form a batch from a *sibling* shard's queue — work stealing.
+    /// The pool enforces the steal-only-when-idle invariant: a replica
+    /// may steal only when its own shard is fully drained, and never
+    /// from its own shard.
+    pub fn steal_batch(
+        &mut self,
+        server: usize,
+        victim: usize,
+        max: usize,
+        now: f64,
+        min_service_s: f64,
+    ) -> FormedBatch {
+        let own = self.shard_by_replica[server];
+        assert_ne!(own, victim, "replica {server} stealing from its own shard");
+        assert_eq!(
+            self.shards[own].queue.len(),
+            0,
+            "replica {server} stealing while its own shard has work"
+        );
+        let fb = self.form_batch(server, victim, max, now, min_service_s);
+        if fb.formed > 0 {
+            self.steal_count += 1;
+        }
+        fb
+    }
+
+    /// Batches formed by work stealing so far.
+    pub fn steal_count(&self) -> usize {
+        self.steal_count
     }
 
     /// The batch currently in flight on `server`.
@@ -664,6 +871,7 @@ mod tests {
     fn req(id: usize, tier: Tier, deadline_s: f64) -> PendingRequest {
         PendingRequest {
             id,
+            device: 0,
             tier,
             start_s: 0.0,
             deadline_s,
@@ -1017,5 +1225,142 @@ mod tests {
             Some(ScaleAction::Unparked(2))
         );
         assert_eq!(scaler.step(&mut pool, 6, 15.0), None);
+    }
+
+    fn mixed_sharded_policy() -> ServerPolicy {
+        ServerPolicy {
+            replicas: 3,
+            models: vec![
+                "srv_inception".into(),
+                "srv_effnetb3".into(),
+                "srv_inception".into(),
+            ],
+            sharding: ShardingKind::PerModel,
+            ..ServerPolicy::default()
+        }
+    }
+
+    #[test]
+    fn per_model_sharding_builds_one_shard_per_distinct_model() {
+        let pool = ServerPool::new(&mixed_sharded_policy(), "srv_inception");
+        assert!(pool.is_sharded());
+        assert_eq!(pool.num_shards(), 2);
+        // Shard order = first appearance over replica indices.
+        assert_eq!(pool.shard_model(0), Some("srv_inception"));
+        assert_eq!(pool.shard_model(1), Some("srv_effnetb3"));
+        assert_eq!(pool.shard_of(0), 0);
+        assert_eq!(pool.shard_of(1), 1);
+        assert_eq!(pool.shard_of(2), 0);
+        assert_eq!(pool.assigned_count(0), 2);
+        assert_eq!(pool.assigned_count(1), 1);
+        // Single-mode pools keep one shared, model-less shard.
+        let single = ServerPool::new(
+            &ServerPolicy {
+                replicas: 2,
+                models: vec!["srv_inception".into(), "srv_effnetb3".into()],
+                ..ServerPolicy::default()
+            },
+            "srv_inception",
+        );
+        assert!(!single.is_sharded());
+        assert_eq!(single.num_shards(), 1);
+        assert_eq!(single.shard_model(0), None);
+        assert_eq!(single.shard_of(0), 0);
+        assert_eq!(single.shard_of(1), 0);
+        // Auto resolves to per-model (one shard on a homogeneous pool).
+        let auto = ServerPool::new(
+            &ServerPolicy {
+                replicas: 2,
+                sharding: ShardingKind::Auto,
+                ..ServerPolicy::default()
+            },
+            "srv_inception",
+        );
+        assert!(auto.is_sharded());
+        assert_eq!(auto.num_shards(), 1);
+    }
+
+    #[test]
+    fn sharded_admission_and_depths_are_shard_local() {
+        let mut pool = ServerPool::new(&mixed_sharded_policy(), "srv_inception");
+        pool.admit_to(0, req(0, Tier::Low, 10.0), 0.0, 0.0);
+        pool.admit_to(0, req(1, Tier::Low, 10.0), 0.0, 0.0);
+        pool.admit_to(1, req(2, Tier::Low, 10.0), 0.0, 0.0);
+        assert_eq!(pool.shard_depths(), vec![2, 1]);
+        assert_eq!(pool.queue_len(), 3);
+        assert_eq!(pool.shard_queue_len(0), 2);
+        // A replica's start_batch drains its OWN shard only.
+        let fb = pool.start_batch(1, 4, 0.0, 0.0);
+        assert_eq!(fb.formed, 1);
+        assert_eq!(pool.in_flight(1)[0].id, 2);
+        assert_eq!(pool.shard_depths(), vec![2, 0]);
+    }
+
+    #[test]
+    fn steal_batch_requires_idle_own_shard_and_counts() {
+        let mut pool = ServerPool::new(&mixed_sharded_policy(), "srv_inception");
+        // Work piles into the inception shard; the effnet replica's own
+        // shard is empty, so it may steal.
+        pool.admit_to(0, req(0, Tier::Low, 10.0), 0.0, 0.0);
+        pool.admit_to(0, req(1, Tier::Low, 12.0), 0.0, 0.0);
+        assert_eq!(pool.steal_count(), 0);
+        let fb = pool.steal_batch(1, 0, 1, 0.0, 0.0);
+        assert_eq!(fb.formed, 1);
+        assert_eq!(pool.in_flight(1)[0].id, 0);
+        assert_eq!(pool.steal_count(), 1);
+        assert_eq!(pool.shard_queue_len(0), 1);
+        // A steal that forms nothing (all culled) is not counted.
+        let mut shedding = ServerPool::new(
+            &ServerPolicy {
+                shed: true,
+                ..mixed_sharded_policy()
+            },
+            "srv_inception",
+        );
+        shedding.admit_to(0, req(5, Tier::Low, 1.0), 0.0, 0.0);
+        let fb = shedding.steal_batch(1, 0, 4, 2.0, 0.5);
+        assert_eq!(fb.formed, 0);
+        assert_eq!(fb.shed.len(), 1);
+        assert_eq!(shedding.steal_count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "stealing while its own shard has work")]
+    fn steal_with_backlogged_own_shard_panics() {
+        let mut pool = ServerPool::new(&mixed_sharded_policy(), "srv_inception");
+        pool.admit_to(0, req(0, Tier::Low, 10.0), 0.0, 0.0);
+        pool.admit_to(1, req(1, Tier::Low, 10.0), 0.0, 0.0);
+        // Replica 1's own shard (1) has work: stealing must panic.
+        let _ = pool.steal_batch(1, 0, 1, 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "stealing from its own shard")]
+    fn steal_from_own_shard_panics() {
+        let mut pool = ServerPool::new(&mixed_sharded_policy(), "srv_inception");
+        let _ = pool.steal_batch(0, 0, 1, 0.0, 0.0);
+    }
+
+    #[test]
+    fn model_switch_moves_replica_between_shards() {
+        let mut pool = ServerPool::new(&mixed_sharded_policy(), "srv_inception");
+        assert_eq!(pool.num_shards(), 2);
+        // Replica 2 switches to effnetb3: joins the existing shard.
+        pool.set_model(2, "srv_effnetb3");
+        assert_eq!(pool.num_shards(), 2);
+        assert_eq!(pool.shard_of(2), 1);
+        assert_eq!(pool.assigned_count(0), 1);
+        assert_eq!(pool.assigned_count(1), 2);
+        // A switch to a never-placed model creates its shard lazily.
+        pool.set_model(0, "srv_deit");
+        assert_eq!(pool.num_shards(), 3);
+        assert_eq!(pool.shard_model(2), Some("srv_deit"));
+        assert_eq!(pool.shard_of(0), 2);
+        // Orphaned-shard work stays queued (stealing drains it).
+        pool.admit_to(0, req(9, Tier::Low, 10.0), 0.0, 0.0);
+        assert_eq!(pool.assigned_count(0), 0);
+        assert_eq!(pool.shard_queue_len(0), 1);
+        assert_eq!(pool.next_idle_in_shard(0), None);
+        assert_eq!(pool.next_idle_in_shard(1), Some(1));
     }
 }

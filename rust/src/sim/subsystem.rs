@@ -1,0 +1,517 @@
+//! Server-side subsystem: every queue/batch/dispatch/scaling decision
+//! behind the pool, plus the §IV-E switch controllers.
+//!
+//! The other half of the engine split (see `docs/architecture.md`).
+//! The [`ServerSubsystem`] wraps the sharded [`ServerPool`] and owns
+//! the *policy* around it: request routing to shards, shard-local
+//! admission control, idle-replica selection, (slack-aware) batch
+//! sizing, work stealing, autoscaling, and per-replica model
+//! switching. The device side never reaches in: forwarded work arrives
+//! as [`PendingRequest`] descriptors and leaves as events the engine
+//! converts to `CompletionNotice`s; the scheduler control loop hears
+//! about congestion only through the load signals in a
+//! [`ForwardingVerdict`]'s / dispatch round's observation list.
+//!
+//! Hot-path note: the latency curves behind admission feasibility and
+//! replica scoring used to be re-resolved from model names on every
+//! arrival (`min_batch1_ms`) and every dispatch (`pick_replica`). They
+//! are now cached per replica and per shard in a [`LatencyCache`],
+//! invalidated only on model switch and park/unpark — the only events
+//! that change what the pool can serve.
+
+use crate::config::latency::ServerLatencyModel;
+use crate::config::scenario::{DispatchKind, ServerPolicy};
+use crate::config::SystemConfig;
+use crate::metrics::RunMetrics;
+use crate::models::Tier;
+use crate::scheduler::{DeviceId, SwitchController};
+use crate::sim::event::{Event, EventQueue};
+use crate::sim::server::{Admission, PendingRequest, PoolScaler, ScaleAction, ServerPool};
+
+/// Latency model resolver so the subsystem can follow model switches.
+pub type LatencyFn<'a> = &'a dyn Fn(&str) -> ServerLatencyModel;
+
+/// What the server side decided about a forwarded request at arrival —
+/// the server's half of the fleet/server interface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForwardingVerdict {
+    /// Admitted to a shard queue (batches may have started).
+    Queued,
+    /// Shed by admission control: the device's local prediction stands.
+    Shed,
+}
+
+/// Cached latency curves — the admission/dispatch hot path never
+/// resolves a model name while the placement is unchanged.
+struct LatencyCache {
+    /// Per-replica latency model (follows `set_model`).
+    replica: Vec<ServerLatencyModel>,
+    /// Per-shard admission floor: the shard model's batch-1 latency in
+    /// ms, or — for the shared shard of an unsharded pool — the
+    /// pool-wide fastest, parked replicas included (every replica
+    /// drains the shared queue and the scaler can unpark the parked
+    /// ones long before a deadline: the pre-sharding feasibility
+    /// rule).
+    shard_batch1_ms: Vec<f64>,
+}
+
+impl LatencyCache {
+    fn build(pool: &ServerPool, latency_of: LatencyFn<'_>) -> Self {
+        let replica: Vec<ServerLatencyModel> = (0..pool.num_replicas())
+            .map(|s| (latency_of)(pool.model(s)))
+            .collect();
+        let min_batch1_ms = replica
+            .iter()
+            .map(|m| m.batch_ms(1))
+            .fold(f64::INFINITY, f64::min);
+        let shard_batch1_ms = (0..pool.num_shards())
+            .map(|s| match pool.shard_model(s) {
+                Some(m) => (latency_of)(m).batch_ms(1),
+                None => min_batch1_ms,
+            })
+            .collect();
+        Self {
+            replica,
+            shard_batch1_ms,
+        }
+    }
+}
+
+/// The server subsystem: the sharded pool plus every policy decision
+/// around it.
+pub struct ServerSubsystem<'a> {
+    pool: ServerPool,
+    dispatch_kind: DispatchKind,
+    slack_batch: bool,
+    scaler: Option<PoolScaler>,
+    /// One §IV-E controller per replica (empty = switching disabled);
+    /// each drives its own replica independently along the ladder.
+    switchers: Vec<SwitchController>,
+    latency_of: LatencyFn<'a>,
+    cache: LatencyCache,
+    batch_grid: &'a [usize],
+    comm_s: f64,
+}
+
+impl<'a> ServerSubsystem<'a> {
+    pub fn new(
+        cfg: &'a SystemConfig,
+        policy: &ServerPolicy,
+        server_model: &str,
+        switchers: Vec<SwitchController>,
+        latency_of: LatencyFn<'a>,
+    ) -> Self {
+        assert!(
+            switchers.is_empty() || switchers.len() == policy.replicas,
+            "need one switch controller per replica ({} vs {})",
+            switchers.len(),
+            policy.replicas
+        );
+        let pool = ServerPool::new(policy, server_model);
+        let cache = LatencyCache::build(&pool, latency_of);
+        Self {
+            pool,
+            dispatch_kind: policy.dispatch,
+            slack_batch: policy.slack_batch,
+            scaler: policy.autoscale.map(PoolScaler::new),
+            switchers,
+            latency_of,
+            cache,
+            batch_grid: &cfg.batch_grid,
+            comm_s: cfg.comm_ms / 1000.0,
+        }
+    }
+
+    fn rebuild_cache(&mut self) {
+        self.cache = LatencyCache::build(&self.pool, self.latency_of);
+    }
+
+    // ----- arrival: routing + shard-local admission -------------------
+
+    /// Route an arriving request to a shard: the shard with the least
+    /// estimated drain work per assigned replica, `(depth + 1) x
+    /// batch-1 latency / assigned replicas`, tie-broken on the lowest
+    /// shard index. Shards orphaned by model switches (no assigned
+    /// replicas) are skipped — stealing drains their leftovers.
+    fn route(&self) -> usize {
+        if self.pool.num_shards() == 1 {
+            return 0;
+        }
+        let mut best = 0;
+        let mut best_score = f64::INFINITY;
+        for s in 0..self.pool.num_shards() {
+            let assigned = self.pool.assigned_count(s);
+            if assigned == 0 {
+                continue;
+            }
+            let score = (self.pool.shard_queue_len(s) as f64 + 1.0)
+                * self.cache.shard_batch1_ms[s]
+                / assigned as f64;
+            if score < best_score {
+                best_score = score;
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// A forwarded request reached the server: route it to a shard,
+    /// apply that shard's admission control (cheapest possible
+    /// remaining service = the shard's fastest replica at batch 1 plus
+    /// the return hop), and, if admitted, feed idle replicas. Returns
+    /// the verdict plus the batch-load observations for the scheduler.
+    pub fn on_arrival(
+        &mut self,
+        t: f64,
+        req: PendingRequest,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+    ) -> (ForwardingVerdict, Vec<usize>) {
+        let shard = self.route();
+        // Only worth computing when admission control is on — this is
+        // the per-forward hot path (and now a cache read, not a model
+        // lookup).
+        let min_service_s = if self.pool.shedding() {
+            self.cache.shard_batch1_ms[shard] / 1000.0 + self.comm_s
+        } else {
+            0.0
+        };
+        match self.pool.admit_to(shard, req, t, min_service_s) {
+            Admission::Shed => (ForwardingVerdict::Shed, Vec::new()),
+            Admission::Queued => (ForwardingVerdict::Queued, self.dispatch(t, events, metrics)),
+        }
+    }
+
+    // ----- batching ----------------------------------------------------
+
+    /// Dynamic batching (§V-A), grid part: largest grid batch that the
+    /// source shard's queue can fill, capped by the replica model's max
+    /// useful batch. O(grid) — no queue scan, so replica scoring can
+    /// call it per candidate cheaply.
+    fn base_batch_size(&self, server: usize, shard: usize) -> usize {
+        let model = &self.cache.replica[server];
+        let qlen = self.pool.shard_queue_len(shard);
+        self.batch_grid
+            .iter()
+            .filter(|&&b| b <= qlen && b <= model.max_batch)
+            .copied()
+            .max()
+            .unwrap_or(1)
+            .min(qlen.max(1))
+    }
+
+    /// Batch size actually formed on `server` out of `shard` at `now`.
+    ///
+    /// With `slack_batch` on, a CascadeServe-style deadline cap applies
+    /// on top of [`Self::base_batch_size`]: the batch shrinks to the
+    /// largest grid size whose batch latency (plus the return hop)
+    /// still lets the tightest *feasible* request queued in the source
+    /// shard make its SLO on this replica's curve. Feasible means
+    /// servable at batch 1 — a request whose deadline is already blown
+    /// cannot be saved by any batch size, so it is screened out rather
+    /// than allowed to disable the cap protecting the requests behind
+    /// it. When nothing queued is feasible the uncapped batch maximizes
+    /// drain throughput (admission control, if on, culls the hopeless
+    /// at formation).
+    fn pick_batch_size(&self, server: usize, shard: usize, now: f64) -> usize {
+        let base = self.base_batch_size(server, shard);
+        if !self.slack_batch {
+            return base;
+        }
+        let model = &self.cache.replica[server];
+        let floor_s = now + model.batch_ms(1) / 1000.0 + self.comm_s;
+        let Some(deadline_s) = self.pool.shard_min_feasible_deadline(shard, floor_s) else {
+            return base;
+        };
+        let qlen = self.pool.shard_queue_len(shard);
+        let slack_ms = (deadline_s - now - self.comm_s) * 1000.0;
+        self.batch_grid
+            .iter()
+            .filter(|&&b| b <= qlen && b <= model.max_batch && model.batch_ms(b) <= slack_ms)
+            .copied()
+            .max()
+            .unwrap_or(1)
+            .min(qlen.max(1))
+    }
+
+    // ----- dispatch ----------------------------------------------------
+
+    /// Replica selection for one shard: lowest-indexed idle assigned
+    /// replica (the original rule), or model-aware — the idle assigned
+    /// replica minimizing the estimated completion time of the batch
+    /// it would form (its model's batch latency at the planned grid
+    /// size). All idle candidates would start at `now`, so comparing
+    /// batch latencies compares completion times. Scoring uses the
+    /// O(grid) base size — the slack cap only shrinks the winner's
+    /// batch at formation. Strict `<` keeps the tie-break on the
+    /// lowest index, making a homogeneous shard bit-identical to the
+    /// lowest-index rule.
+    fn pick_replica_for(&self, shard: usize) -> Option<usize> {
+        match self.dispatch_kind {
+            DispatchKind::LowestIndex => self.pool.next_idle_in_shard(shard),
+            DispatchKind::ModelAware => {
+                let mut best: Option<(usize, f64)> = None;
+                for s in 0..self.pool.num_replicas() {
+                    if self.pool.shard_of(s) != shard || !self.pool.is_idle(s) {
+                        continue;
+                    }
+                    let b = self.base_batch_size(s, shard);
+                    let cost = self.cache.replica[s].batch_ms(b);
+                    if best.map_or(true, |(_, c)| cost < c) {
+                        best = Some((s, cost));
+                    }
+                }
+                best.map(|(s, _)| s)
+            }
+        }
+    }
+
+    /// Work stealing, evaluated once own-shard service is exhausted:
+    /// the lowest-indexed idle replica whose own shard is drained
+    /// steals from the sibling shard holding the most
+    /// slack-endangered queued work (tightest absolute deadline;
+    /// strict `<` tie-breaks on the lowest shard index).
+    fn pick_steal(&self) -> Option<(usize, usize)> {
+        for server in 0..self.pool.num_replicas() {
+            if !self.pool.is_idle(server) {
+                continue;
+            }
+            let own = self.pool.shard_of(server);
+            if self.pool.shard_queue_len(own) > 0 {
+                // Own shard first, always (phase 1 only leaves a shard
+                // backlogged when none of its replicas are idle, so
+                // this is defensive).
+                continue;
+            }
+            let mut victim: Option<(usize, f64)> = None;
+            for s in 0..self.pool.num_shards() {
+                if s == own || self.pool.shard_queue_len(s) == 0 {
+                    continue;
+                }
+                let Some(d) = self.pool.shard_min_deadline(s) else {
+                    continue;
+                };
+                if victim.map_or(true, |(_, vd)| d < vd) {
+                    victim = Some((s, d));
+                }
+            }
+            if let Some((s, _)) = victim {
+                return Some((server, s));
+            }
+        }
+        None
+    }
+
+    /// Feed idle replicas while shards have work: own-shard service
+    /// first (shards in index order, replicas by the dispatch policy),
+    /// then work stealing. Returns the scheduler's congestion
+    /// observations — one `max(backlog, formed)` load signal per batch
+    /// formed, in formation order — for the engine to relay to the
+    /// fleet's control loop.
+    ///
+    /// With a single shard this is exactly the pre-split dispatch
+    /// loop: phase 1 serves shard 0 with every idle replica and phase
+    /// 2 finds no sibling to steal from.
+    pub fn dispatch(
+        &mut self,
+        t: f64,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+    ) -> Vec<usize> {
+        let mut observed = Vec::new();
+        // Phase 1: own-shard service.
+        for shard in 0..self.pool.num_shards() {
+            while self.pool.shard_queue_len(shard) > 0 {
+                let Some(server) = self.pick_replica_for(shard) else {
+                    break;
+                };
+                self.start_batch(t, server, shard, false, events, metrics, &mut observed);
+            }
+        }
+        // Phase 2: stealing (sharded pools only; each round pops at
+        // least one request from the victim, so this terminates).
+        if self.pool.num_shards() > 1 {
+            while let Some((server, victim)) = self.pick_steal() {
+                self.start_batch(t, server, victim, true, events, metrics, &mut observed);
+            }
+        }
+        observed
+    }
+
+    /// Form and launch one batch on `server` out of `shard`.
+    #[allow(clippy::too_many_arguments)]
+    fn start_batch(
+        &mut self,
+        t: f64,
+        server: usize,
+        shard: usize,
+        steal: bool,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+        observed: &mut Vec<usize>,
+    ) {
+        // The load signal MultiTASC monitors: the batch it WOULD form if
+        // the grid were unbounded (i.e. the total backlog), so
+        // congestion is visible even once the formed batch saturates at
+        // the grid cap.
+        let load_signal = self.pool.queue_len();
+        if load_signal == 0 {
+            return;
+        }
+        let b = self.pick_batch_size(server, shard, t);
+        // Feasibility estimate for shedding: a popped request rides a
+        // batch of (at most) the planned size `b` on this replica's
+        // model (its own model even when stealing — the thief serves
+        // with what it has placed). When culls shrink the actual batch
+        // this over-estimates service time and sheds a borderline
+        // request that might have squeaked by — which is the right
+        // bias for an SLO-targeting system: an over-shed request still
+        // returns well before its deadline (costing a little
+        // accuracy), while an under-shed one burns a batch slot to
+        // deliver a guaranteed SLO miss.
+        let min_service_s = if self.pool.shedding() {
+            self.cache.replica[server].batch_ms(b) / 1000.0 + self.comm_s
+        } else {
+            0.0
+        };
+        let fb = if steal {
+            self.pool.steal_batch(server, shard, b, t, min_service_s)
+        } else {
+            self.pool.start_batch(server, b, t, min_service_s)
+        };
+        for p in &fb.shed {
+            events.push(
+                t + self.comm_s,
+                Event::RequestShed {
+                    device: p.device,
+                    request: p.id,
+                },
+            );
+        }
+        if fb.formed == 0 {
+            // Everything popped was shed; the replica stays idle and
+            // the dispatch loop decides whether the (shrunk) queue
+            // warrants another pass.
+            return;
+        }
+        metrics.batch_sizes.push(fb.formed as f64);
+        *metrics
+            .server_model_batches
+            .entry(self.pool.model(server).to_string())
+            .or_insert(0) += 1;
+        observed.push(load_signal.max(fb.formed));
+        let dur_s = self.cache.replica[server].batch_ms(fb.formed) / 1000.0;
+        events.push(t + dur_s, Event::ServerBatchDone { server });
+    }
+
+    /// Complete the batch on `server`: returns its requests and the
+    /// model that served them, leaving the replica idle.
+    ///
+    /// The reported model is the replica's *current* one — a §IV-E
+    /// switch landing mid-flight scores the batch with the post-switch
+    /// model even though it was formed and latency-priced on the
+    /// pre-switch curve (pre-split behavior, kept for `--shards 1`
+    /// bit-parity; switches are dwell-limited so the window is rare).
+    pub fn finish_batch(&mut self, server: usize) -> (String, Vec<PendingRequest>) {
+        let batch = self.pool.finish_batch(server);
+        (self.pool.model(server).to_string(), batch)
+    }
+
+    // ----- scaling + switching ----------------------------------------
+
+    /// One autoscaler evaluation on the telemetry grid: feed the
+    /// pool's cumulative shed counter into the watermark rule (the
+    /// scaler tracks its own last-seen value, so sheds landing in a
+    /// dwell-blocked window are deferred, not lost). Returns the
+    /// action, if any; on an unpark the engine immediately offers the
+    /// queued backlog via [`Self::dispatch`].
+    pub fn autoscale_step(&mut self, grid_t: f64) -> Option<ScaleAction> {
+        let scaler = self.scaler.as_mut()?;
+        let shed_total = self.pool.shed_count();
+        let action = scaler.step(&mut self.pool, shed_total, grid_t);
+        if action.is_some() {
+            // Park/unpark changes nothing the cache stores today (the
+            // admission floor deliberately counts parked replicas),
+            // but scale events are rare and this keeps the cache
+            // contract trivial: rebuilt on any placement/state change.
+            self.rebuild_cache();
+        }
+        action
+    }
+
+    /// Whether any §IV-E switch controller is installed — lets the
+    /// engine skip assembling the threshold snapshot on every SR
+    /// window when switching is disabled.
+    pub fn wants_switch_telemetry(&self) -> bool {
+        !self.switchers.is_empty()
+    }
+
+    /// §IV-E: consult each replica's switch controller on fresh SR
+    /// telemetry. All controllers see the same threshold population
+    /// but move from their own ladder positions, so a mixed pool
+    /// converges replica by replica (and each switch moves the replica
+    /// to its new model's shard).
+    pub fn consult_switchers(&mut self, thresholds: &[(DeviceId, Tier, f64)], t: f64) {
+        if self.switchers.is_empty() {
+            return;
+        }
+        let mut switched = false;
+        for (server, ctl) in self.switchers.iter_mut().enumerate() {
+            if let Some(new_model) = ctl.maybe_switch(thresholds, t) {
+                log::debug!("t={t:.1}s: replica {server} model switch -> {new_model}");
+                self.pool.set_model(server, &new_model);
+                switched = true;
+            }
+        }
+        if switched {
+            self.rebuild_cache();
+        }
+    }
+
+    // ----- telemetry / final accounting --------------------------------
+
+    pub fn queue_len(&self) -> usize {
+        self.pool.queue_len()
+    }
+
+    pub fn shard_depths(&self) -> Vec<usize> {
+        self.pool.shard_depths()
+    }
+
+    pub fn busy_count(&self) -> usize {
+        self.pool.busy_count()
+    }
+
+    pub fn parked_count(&self) -> usize {
+        self.pool.parked_count()
+    }
+
+    pub fn steal_count(&self) -> usize {
+        self.pool.steal_count()
+    }
+
+    pub fn shed_count(&self) -> usize {
+        self.pool.shed_count()
+    }
+
+    pub fn batches_per_replica(&self) -> Vec<usize> {
+        self.pool.batches_per_replica()
+    }
+
+    pub fn parked_replica_seconds(&self, now: f64) -> f64 {
+        self.pool.parked_replica_seconds(now)
+    }
+
+    /// Heaviest model currently placed on ANY replica (switch-ladder
+    /// index; replica 0 alone would under-report a heterogeneous pool
+    /// or a pool whose replicas switched independently).
+    pub fn model_ladder_idx(&self) -> usize {
+        (0..self.pool.num_replicas())
+            .map(|s| {
+                let m = self.pool.model(s);
+                usize::from(m == "srv_effnetb3") + 2 * usize::from(m == "srv_deit")
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}

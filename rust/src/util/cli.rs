@@ -215,6 +215,12 @@ pub fn server_flags(args: &mut Args) -> &mut Args {
             "idle-replica selection: lowest|model-aware",
             Some("model-aware"),
         )
+        .flag(
+            "shards",
+            "pool queue sharding: auto|per-model|1 (single shared queue, \
+             the pre-sharding behavior)",
+            Some("1"),
+        )
         .switch(
             "slack-batch",
             "cap batches so the tightest queued deadline is still met",
@@ -353,6 +359,7 @@ mod tests {
         assert_eq!(m.get_str("server-models").unwrap(), "");
         assert_eq!(m.get_str("wfq-weights").unwrap(), "");
         assert_eq!(m.get_str("dispatch").unwrap(), "model-aware");
+        assert_eq!(m.get_str("shards").unwrap(), "1");
         assert!(!m.get_bool("shed"));
         assert!(!m.get_bool("slack-batch"));
         assert!(!m.get_bool("autoscale"));

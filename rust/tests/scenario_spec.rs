@@ -12,7 +12,7 @@
 
 use multitascpp::config::scenario::{
     AutoscalePolicy, DispatchKind, ExecMode, Intermittent, QueueKind, Scenario, SchedulerKind,
-    ServerPolicy,
+    ServerPolicy, ShardingKind,
 };
 use multitascpp::config::spec::{preset_names, ScenarioSpec};
 use multitascpp::experiments::Ctx;
@@ -165,6 +165,7 @@ fn random_spec(rng: &mut Rng) -> ScenarioSpec {
             rng.next_range_f64(0.5, 8.0),
         ],
         dispatch: DispatchKind::ALL[rng.next_below(DispatchKind::ALL.len() as u64) as usize],
+        sharding: ShardingKind::ALL[rng.next_below(ShardingKind::ALL.len() as u64) as usize],
         slack_batch: rng.next_bool(0.5),
         autoscale: rng.next_bool(0.5).then(|| AutoscalePolicy {
             queue_high: rng.next_range_f64(4.0, 16.0),

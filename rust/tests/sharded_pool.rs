@@ -1,0 +1,362 @@
+//! Regression tests for the sharded server pool and the engine split.
+//!
+//! Invariants pinned here:
+//! * `--shards 1` (the default, `ShardingKind::Single`) is the
+//!   pre-split engine: the mixed-pool admission fixture reproduces its
+//!   exact pre-refactor values, and an explicit `--set
+//!   server.sharding=1` run is bit-identical to the default path;
+//! * per-model sharding on a *homogeneous* pool builds one shard and
+//!   is bit-identical to the single shared queue;
+//! * admission is shard-local: a request the pool-wide fastest model
+//!   could serve is shed when its routed shard's own model cannot make
+//!   the deadline (and the same request is admitted unsharded);
+//! * replicas steal only when their own shard is drained (pool-level
+//!   panics cover the invariant; end-to-end, a mixed sharded pool
+//!   steals without losing samples and the trace exposes per-shard
+//!   depths + the cumulative steal counter);
+//! * the `sharded-pool` preset and the `bench scale` smoke harness run
+//!   end-to-end on the synthetic tables.
+
+use multitascpp::config::latency::server_latency_model;
+use multitascpp::config::scenario::{Scenario, SchedulerKind, ServerPolicy, ShardingKind};
+use multitascpp::config::spec::ScenarioSpec;
+use multitascpp::config::SystemConfig;
+use multitascpp::data::dataset::Dataset;
+use multitascpp::metrics::RunMetrics;
+use multitascpp::models::outputs::{OutputProvider, SyntheticOutputs};
+use multitascpp::models::registry::test_meta_json;
+use multitascpp::models::{Registry, Tier};
+use multitascpp::scheduler::{Scheduler, StaticSched};
+use multitascpp::sim::event::EventQueue;
+use multitascpp::sim::{
+    run_scenario, DeviceSpec, ForwardingVerdict, PendingRequest, ServerSubsystem, SimEngine,
+};
+
+// --- harness (same shape as tests/hetero_pool.rs) ---------------------------
+
+fn registry() -> Registry {
+    Registry::from_meta(std::path::Path::new("/tmp/test_artifacts"), &test_meta_json()).unwrap()
+}
+
+fn dataset() -> Dataset {
+    Dataset::synthetic_for_tests(5000, 4, 10)
+}
+
+fn provider(n: usize) -> SyntheticOutputs {
+    SyntheticOutputs::new(
+        n,
+        &[
+            ("dev_low", 0.72),
+            ("dev_mid", 0.75),
+            ("dev_high", 0.77),
+            ("srv_inception", 0.785),
+            ("srv_effnetb3", 0.815),
+        ],
+        42,
+    )
+}
+
+fn run(scn: &Scenario) -> RunMetrics {
+    let cfg = SystemConfig::default();
+    let reg = registry();
+    let ds = dataset();
+    let mut prov = provider(ds.n).into_cached();
+    run_scenario(scn, &cfg, &reg, &ds, &mut prov).unwrap()
+}
+
+fn mixed_criticality(n: usize, samples: usize) -> Scenario {
+    Scenario::heterogeneous(n, "srv_inception")
+        .with_scheduler(SchedulerKind::Static)
+        .with_slo(150.0)
+        .with_tier_slo(Tier::Low, 100.0)
+        .with_tier_slo(Tier::High, 400.0)
+        .with_samples(samples)
+        .with_seed(0)
+}
+
+fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.overall.samples, b.overall.samples, "{what}: samples");
+    assert_eq!(a.overall.satisfied, b.overall.satisfied, "{what}: satisfied");
+    assert_eq!(a.overall.correct, b.overall.correct, "{what}: correct");
+    assert_eq!(a.overall.forwarded, b.overall.forwarded, "{what}: forwarded");
+    assert_eq!(a.shed, b.shed, "{what}: shed");
+    assert_eq!(a.steals, b.steals, "{what}: steals");
+    assert_eq!(
+        a.per_server_batches, b.per_server_batches,
+        "{what}: per-replica batches"
+    );
+    assert_eq!(
+        a.latencies.values(),
+        b.latencies.values(),
+        "{what}: latency sequence"
+    );
+    assert!(
+        (a.makespan_s - b.makespan_s).abs() < 1e-12,
+        "{what}: makespan {} vs {}",
+        a.makespan_s,
+        b.makespan_s
+    );
+}
+
+// --- `--shards 1` is the pre-split engine -----------------------------------
+
+/// Forwards every sample (BvSB 0 < any threshold); device predictions
+/// are always correct so accuracy never confounds the assertions.
+struct ForwardAll;
+
+impl OutputProvider for ForwardAll {
+    fn device_output(&mut self, _model: &str, _sample: usize) -> (f32, bool) {
+        (0.0, true)
+    }
+
+    fn server_outputs(&mut self, _model: &str, samples: &[usize]) -> Vec<bool> {
+        vec![true; samples.len()]
+    }
+}
+
+fn one_low_device(slo_ms: f64, samples: usize) -> DeviceSpec {
+    DeviceSpec {
+        tier: Tier::Low,
+        stream: (0..samples).collect(),
+        initial_threshold: 0.5,
+        sr_target: 95.0,
+        slo_ms,
+        offline_at: None,
+        offline_duration_s: 0.0,
+    }
+}
+
+fn run_engine(
+    scheduler: &mut dyn Scheduler,
+    provider: &mut dyn OutputProvider,
+    policy: &ServerPolicy,
+    specs: Vec<DeviceSpec>,
+) -> RunMetrics {
+    let cfg = SystemConfig::default();
+    let latency_of = |m: &str| server_latency_model(m);
+    SimEngine::new(
+        &cfg,
+        scheduler,
+        Vec::new(),
+        provider,
+        &latency_of,
+        "srv_inception",
+        policy,
+        specs,
+        0,
+    )
+    .run()
+    .unwrap()
+}
+
+/// The PR 3 mixed-pool admission fixture, re-pinned through the split
+/// engine with explicit single sharding: exact pre-refactor values
+/// (nothing shed, every sample in SLO, every batch on the fast
+/// replica). A change to the `--shards 1` path breaks this before any
+/// sweep does.
+#[test]
+fn single_sharding_reproduces_pre_split_fixture_values() {
+    let policy = ServerPolicy {
+        replicas: 2,
+        models: vec!["srv_effnetb3".into(), "srv_inception".into()],
+        shed: true,
+        sharding: ShardingKind::Single,
+        ..ServerPolicy::default()
+    };
+    let mut sched = StaticSched::new();
+    let mut prov = ForwardAll;
+    let m = run_engine(&mut sched, &mut prov, &policy, vec![one_low_device(55.0, 10)]);
+    assert_eq!(m.overall.samples, 10);
+    assert_eq!(m.shed, 0, "feasible-on-fast-replica requests were shed");
+    assert_eq!(m.overall.satisfied, 10, "served via inception => in-SLO");
+    assert_eq!(m.per_server_batches, vec![0, 10]);
+    assert_eq!(m.steals, 0, "single shard has nothing to steal");
+}
+
+#[test]
+fn explicit_single_sharding_is_bit_identical_to_default() {
+    // The `--set server.sharding=1` path and the untouched default
+    // must take the identical code path on a mixed heterogeneous pool.
+    let base = mixed_criticality(12, 300)
+        .with_server_models(vec!["srv_effnetb3", "srv_inception"])
+        .with_slack_batch(true)
+        .with_shed(true);
+    let explicit = base.clone().with_sharding(ShardingKind::Single);
+    assert_bit_identical(&run(&base), &run(&explicit), "explicit single sharding");
+}
+
+#[test]
+fn per_model_sharding_on_homogeneous_pool_is_bit_identical_to_single() {
+    // One placed model = one shard: the sharded pool must reproduce the
+    // shared-queue schedule exactly (routing is trivial, stealing never
+    // fires, shard-local admission is pool-wide admission).
+    let single = mixed_criticality(12, 300).with_replicas(2);
+    let sharded = single.clone().with_sharding(ShardingKind::PerModel);
+    let auto = single.clone().with_sharding(ShardingKind::Auto);
+    let a = run(&single);
+    let b = run(&sharded);
+    assert_bit_identical(&a, &b, "homogeneous per-model sharding");
+    assert_bit_identical(&a, &run(&auto), "homogeneous auto sharding");
+    assert_eq!(b.steals, 0);
+    // The trace still reports the (single) shard's depth.
+    assert!(b
+        .trace
+        .iter()
+        .all(|p| p.per_shard_depth.len() == 1 && p.per_shard_depth[0] == p.queue_len));
+}
+
+// --- shard-local admission ---------------------------------------------------
+
+/// Drives the server subsystem directly through the fleet/server
+/// interface: shard-local admission must shed a request whose routed
+/// shard cannot make the deadline even though the pool-wide fastest
+/// model could — and the identical request is admitted unsharded.
+#[test]
+fn admission_is_shard_local_on_a_mixed_pool() {
+    let cfg = SystemConfig::default();
+    let latency_of = |m: &str| server_latency_model(m);
+    let policy = ServerPolicy {
+        replicas: 2,
+        models: vec!["srv_effnetb3".into(), "srv_inception".into()],
+        shed: true,
+        sharding: ShardingKind::PerModel,
+        ..ServerPolicy::default()
+    };
+    let mut sub = ServerSubsystem::new(&cfg, &policy, "srv_inception", Vec::new(), &latency_of);
+    let mut events = EventQueue::new();
+    let mut metrics = RunMetrics::default();
+    let req = |id: usize, deadline_s: f64| PendingRequest {
+        id,
+        device: 0,
+        tier: Tier::Low,
+        start_s: 0.0,
+        deadline_s,
+        arrival_s: 0.0,
+    };
+    // Generous deadlines: r0 routes to the faster inception shard and
+    // goes straight in flight on replica 1.
+    let (v, _) = sub.on_arrival(0.0, req(0, 1.0), &mut events, &mut metrics);
+    assert_eq!(v, ForwardingVerdict::Queued);
+    assert_eq!(sub.busy_count(), 1);
+    // r1 also routes to the inception shard (its replica is busy), and
+    // the idle effnet replica — its own shard empty — steals it.
+    let (v, _) = sub.on_arrival(0.0, req(1, 1.0), &mut events, &mut metrics);
+    assert_eq!(v, ForwardingVerdict::Queued);
+    assert_eq!(sub.busy_count(), 2);
+    assert_eq!(sub.steal_count(), 1, "idle effnet replica must steal");
+    // r2 queues in the inception shard (both replicas busy now).
+    let (v, _) = sub.on_arrival(0.0, req(2, 1.0), &mut events, &mut metrics);
+    assert_eq!(v, ForwardingVerdict::Queued);
+    assert_eq!(sub.shard_depths(), vec![0, 1]);
+    // r3: 20 ms of slack. The inception shard's floor (15.03 ms batch-1
+    // + 2 ms return hop) fits, but its backlog makes routing pick the
+    // effnet shard — whose own floor (25.06 + 2 ms) cannot make the
+    // deadline. Shard-local admission sheds it.
+    let (v, _) = sub.on_arrival(0.0, req(3, 0.020), &mut events, &mut metrics);
+    assert_eq!(v, ForwardingVerdict::Shed);
+    assert_eq!(sub.shed_count(), 1);
+    // The identical request against an unsharded pool is admitted: the
+    // shared queue's floor is the pool-wide fastest (inception).
+    let single = ServerPolicy {
+        sharding: ShardingKind::Single,
+        ..policy.clone()
+    };
+    let mut sub1 = ServerSubsystem::new(&cfg, &single, "srv_inception", Vec::new(), &latency_of);
+    let (v, _) = sub1.on_arrival(0.0, req(3, 0.020), &mut events, &mut metrics);
+    assert_eq!(v, ForwardingVerdict::Queued);
+}
+
+// --- work stealing end-to-end ------------------------------------------------
+
+/// A mixed sharded pool under real load: routing concentrates work on
+/// the fast shard, so the slow replica's only path to work is
+/// stealing. Samples conserve, steals happen, and the trace exposes
+/// consistent per-shard depths plus a monotone cumulative steal count.
+#[test]
+fn sharded_mixed_pool_steals_without_losing_samples() {
+    let scn = mixed_criticality(24, 300)
+        .with_server_models(vec!["srv_effnetb3", "srv_inception"])
+        .with_sharding(ShardingKind::PerModel);
+    let m = run(&scn);
+    assert_eq!(m.overall.samples, 24 * 300, "sample conservation");
+    assert!(m.steals > 0, "slow replica must steal from the fast shard");
+    assert!(
+        m.per_server_batches[0] > 0,
+        "stolen batches run on the effnet replica: {:?}",
+        m.per_server_batches
+    );
+    assert!(m.overall.satisfaction_rate().is_finite());
+    for p in &m.trace {
+        assert_eq!(p.per_shard_depth.len(), 2, "one depth per shard");
+        assert_eq!(
+            p.per_shard_depth.iter().sum::<usize>(),
+            p.queue_len,
+            "shard depths must sum to the pool depth"
+        );
+    }
+    let steals: Vec<usize> = m.trace.iter().map(|p| p.steals).collect();
+    assert!(
+        steals.windows(2).all(|w| w[0] <= w[1]),
+        "cumulative steal trace must be monotone"
+    );
+    assert_eq!(*steals.last().unwrap(), m.steals);
+}
+
+/// Stealing is an improvement lever, not a regression: on the same
+/// workload the sharded pool must stay within noise of — or beat — the
+/// shared queue on SLO satisfaction (here: not collapse).
+#[test]
+fn sharding_does_not_collapse_slo_satisfaction() {
+    let base = mixed_criticality(24, 300).with_server_models(vec!["srv_effnetb3", "srv_inception"]);
+    let single = run(&base);
+    let sharded = run(&base.clone().with_sharding(ShardingKind::PerModel));
+    assert_eq!(single.overall.samples, sharded.overall.samples);
+    assert!(
+        sharded.overall.satisfaction_rate() > single.overall.satisfaction_rate() - 15.0,
+        "single {:.2} vs sharded {:.2}",
+        single.overall.satisfaction_rate(),
+        sharded.overall.satisfaction_rate()
+    );
+}
+
+// --- surface -----------------------------------------------------------------
+
+#[test]
+fn sharded_pool_preset_runs_end_to_end() {
+    let mut spec = ScenarioSpec::preset("sharded-pool").unwrap();
+    spec.set("samples", "120").unwrap();
+    assert_eq!(spec.server.sharding, ShardingKind::PerModel);
+    let scn = spec.validate().unwrap();
+    assert_eq!(scn.server.replicas, 4);
+    let reg = registry();
+    let ds = dataset();
+    let mut prov = provider(ds.n).into_cached();
+    let m = run_scenario(&scn, &SystemConfig::default(), &reg, &ds, &mut prov).unwrap();
+    assert_eq!(m.overall.samples, scn.total_devices() * 120);
+    assert!(m.overall.satisfaction_rate().is_finite());
+    // Two distinct models -> two shards in the trace.
+    assert!(m.trace.iter().all(|p| p.per_shard_depth.len() == 2));
+}
+
+#[test]
+fn bench_scale_smoke_emits_report() {
+    let out = std::env::temp_dir().join("mtpp_test_bench_scale.json");
+    let points = multitascpp::bench::scale::run_scale(true, &out).unwrap();
+    // 2 device counts x {single, sharded}.
+    assert_eq!(points.len(), 4);
+    assert!(points.iter().all(|p| p.events > 0 && p.wall_s > 0.0));
+    assert!(
+        points
+            .iter()
+            .filter(|p| p.label == "single")
+            .all(|p| p.steals == 0),
+        "single-queue cells cannot steal"
+    );
+    let text = std::fs::read_to_string(&out).unwrap();
+    let json = multitascpp::util::json::Json::parse(&text).unwrap();
+    assert_eq!(json.get("bench").and_then(|j| j.as_str()), Some("scale"));
+    assert_eq!(
+        json.get("points").and_then(|j| j.as_arr()).map(|a| a.len()),
+        Some(4)
+    );
+}
