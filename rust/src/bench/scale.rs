@@ -19,6 +19,7 @@ use anyhow::{Context, Result};
 use crate::config::spec::ScenarioSpec;
 use crate::experiments::Ctx;
 use crate::util::json::Json;
+use crate::util::stats::fnv1a64;
 
 /// One measured cell of the scale grid.
 #[derive(Clone, Debug)]
@@ -27,6 +28,12 @@ pub struct ScalePoint {
     pub label: &'static str,
     pub devices: usize,
     pub samples_per_device: usize,
+    /// The cell spec's seed (workload identity, PR-over-PR).
+    pub seed: u64,
+    /// FNV-1a digest of the cell's fully-resolved spec JSON: two
+    /// reports are only comparable when their digests match, so the
+    /// perf trajectory cannot silently compare different workloads.
+    pub scenario_digest: String,
     /// Discrete events the engine processed.
     pub events: u64,
     /// Requests shed by admission control (sanity signal: overload is
@@ -74,6 +81,7 @@ pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
     for &n in &device_counts {
         for (label, sharding) in [("single", "1"), ("sharded", "per-model")] {
             let spec = cell_spec(n, samples, sharding)?;
+            let digest = format!("{:016x}", fnv1a64(spec.to_json().to_string().as_bytes()));
             let t0 = Instant::now();
             let m = ctx.run_spec(&spec)?;
             let wall_s = t0.elapsed().as_secs_f64();
@@ -81,6 +89,8 @@ pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
                 label,
                 devices: n,
                 samples_per_device: samples,
+                seed: spec.seed,
+                scenario_digest: digest,
                 events: m.events,
                 shed: m.shed,
                 steals: m.steals,
@@ -107,9 +117,22 @@ pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
 }
 
 fn write_report(smoke: bool, points: &[ScalePoint], out: &Path) -> Result<()> {
+    // Top-level run identity (device grid + shared seed) so one glance
+    // tells whether two BENCH_scale.json files measured the same
+    // workload grid; per-point digests pin the exact cell specs.
+    let mut device_counts: Vec<usize> = points.iter().map(|p| p.devices).collect();
+    device_counts.dedup();
     let json = Json::obj(vec![
         ("bench", Json::str("scale")),
         ("smoke", Json::Bool(smoke)),
+        (
+            "device_counts",
+            Json::Arr(device_counts.iter().map(|&n| Json::num(n as f64)).collect()),
+        ),
+        (
+            "seed",
+            Json::num(points.first().map_or(0.0, |p| p.seed as f64)),
+        ),
         (
             "points",
             Json::Arr(
@@ -120,6 +143,8 @@ fn write_report(smoke: bool, points: &[ScalePoint], out: &Path) -> Result<()> {
                             ("label", Json::str(p.label)),
                             ("devices", Json::num(p.devices as f64)),
                             ("samples_per_device", Json::num(p.samples_per_device as f64)),
+                            ("seed", Json::num(p.seed as f64)),
+                            ("scenario_digest", Json::str(p.scenario_digest.as_str())),
                             ("events", Json::num(p.events as f64)),
                             ("shed", Json::num(p.shed as f64)),
                             ("steals", Json::num(p.steals as f64)),

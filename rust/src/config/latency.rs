@@ -38,6 +38,13 @@ pub struct ServerLatencyModel {
     /// Largest batch worth forming (diminishing returns beyond this —
     /// the paper caps EfficientNetB3 at 16).
     pub max_batch: usize,
+    /// Warm-up cost on unpark, in ms: a replica the autoscaler resumes
+    /// stays out of dispatch until this long after the unpark (weight
+    /// upload, allocator re-warm, first-batch compilation). The shipped
+    /// registry defaults are 0 — instant resume, the pre-warm-up
+    /// behavior — and `ServerPolicy::warmup_ms` overrides the value
+    /// scenario-wide.
+    pub warmup_ms: f64,
 }
 
 impl ServerLatencyModel {
@@ -71,6 +78,7 @@ pub fn server_latency_model(model: &str) -> ServerLatencyModel {
             k_ms: 3.03,
             q_ms: 0.0,
             max_batch: 64,
+            warmup_ms: 0.0,
         },
         // EfficientNetB3: 25 ms @ b=1; peak ~82/s at the b=16 cap, and
         // throughput DROPS past 16 (Fig 9 plateau + §V-A cap).
@@ -79,6 +87,7 @@ pub fn server_latency_model(model: &str) -> ServerLatencyModel {
             k_ms: 10.4,
             q_ms: 0.057,
             max_batch: 16,
+            warmup_ms: 0.0,
         },
         // DeiT-Base-Distilled: 14 ms @ b=1; ~350/s peak @ b=64.
         "srv_deit" => ServerLatencyModel {
@@ -86,6 +95,7 @@ pub fn server_latency_model(model: &str) -> ServerLatencyModel {
             k_ms: 2.70,
             q_ms: 0.0,
             max_batch: 64,
+            warmup_ms: 0.0,
         },
         other => panic!("no latency model for server model '{other}'"),
     }

@@ -89,30 +89,68 @@ crate::named_enum!("sharding mode", ShardingKind {
     Auto => "auto";
 });
 
+/// Which signal drives the autoscaler's park/unpark decisions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutoscaleMode {
+    /// Queue-pressure watermarks (queued requests per active replica,
+    /// plus any shedding) — the original scaler, pool-global decisions.
+    Queue,
+    /// SLO-headroom watermarks: per-shard EWMA of normalized deadline
+    /// slack over requests offered to the shard. Decisions are
+    /// per-shard and never park a shard's last unparked replica.
+    Headroom,
+}
+
+crate::named_enum!("autoscale mode", AutoscaleMode {
+    Queue => "queue";
+    Headroom => "headroom", "slo-headroom";
+});
+
 /// Cost-aware autoscaling watermarks: the pool parks idle replicas when
-/// queue pressure is low and unparks them on backlog or shedding.
-/// Parked replicas serve nothing and their parked time is reported as
+/// the controller's signal says capacity is surplus and unparks them
+/// when it says the SLOs need it. Parked replicas serve nothing and
+/// their parked time is reported as
 /// `RunMetrics::parked_replica_seconds` (the cost the scaler saved).
+///
+/// Two controllers share this policy ([`AutoscaleMode`]): `queue`
+/// reads the `queue_*` watermarks (queued requests per active
+/// replica; any shedding forces scale-up), `headroom` reads the
+/// `headroom_*` watermarks against each shard's EWMA of normalized
+/// deadline slack (`(deadline - predicted completion) / SLO`, so 1 is
+/// a whole SLO of slack and negative means predicted misses).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AutoscalePolicy {
-    /// Unpark a replica when queued requests per active replica exceed
-    /// this high watermark (or when admission control shed anything
-    /// since the last evaluation).
+    /// Which signal drives park/unpark decisions.
+    pub mode: AutoscaleMode,
+    /// Queue mode: unpark a replica when queued requests per active
+    /// replica exceed this high watermark (or when admission control
+    /// shed anything since the last evaluation).
     pub queue_high: f64,
-    /// Park an idle replica when queued requests per active replica
-    /// fall below this low watermark and nothing was shed.
+    /// Queue mode: park an idle replica when queued requests per
+    /// active replica fall below this low watermark and nothing was
+    /// shed.
     pub queue_low: f64,
-    /// Never park below this many active replicas.
+    /// Headroom mode: park a shard replica while the shard's headroom
+    /// EWMA stays above this high watermark (plenty of slack left).
+    pub headroom_high: f64,
+    /// Headroom mode: unpark a shard replica when the shard's headroom
+    /// EWMA dips below this low watermark (slack eroding).
+    pub headroom_low: f64,
+    /// Never park below this many active replicas (pool-wide).
     pub min_active: usize,
-    /// Minimum seconds between scaling actions (hysteresis dwell).
+    /// Minimum seconds between scaling actions (hysteresis dwell;
+    /// per-shard in headroom mode).
     pub dwell_s: f64,
 }
 
 impl Default for AutoscalePolicy {
     fn default() -> Self {
         Self {
+            mode: AutoscaleMode::Queue,
             queue_high: 8.0,
             queue_low: 1.0,
+            headroom_high: 0.6,
+            headroom_low: 0.2,
             min_active: 1,
             dwell_s: 2.0,
         }
@@ -151,6 +189,12 @@ pub struct ServerPolicy {
     /// Cost-aware replica autoscaling; `None` keeps every replica
     /// active at all times (the PR 1 behavior).
     pub autoscale: Option<AutoscalePolicy>,
+    /// Scenario-wide override of the per-model registry warm-up cost
+    /// (`ServerLatencyModel::warmup_ms`): how long an unparked replica
+    /// stays out of dispatch after the autoscaler resumes it. `None`
+    /// keeps each model's registry value (the shipped defaults are 0 —
+    /// instant resume, bit-identical to the pre-warm-up scaler).
+    pub warmup_ms: Option<f64>,
 }
 
 impl Default for ServerPolicy {
@@ -165,6 +209,7 @@ impl Default for ServerPolicy {
             sharding: ShardingKind::Single,
             slack_batch: false,
             autoscale: None,
+            warmup_ms: None,
         }
     }
 }
@@ -378,6 +423,17 @@ impl Scenario {
         self
     }
 
+    /// Scenario-wide replica warm-up cost on unpark (overrides each
+    /// model's registry `warmup_ms`).
+    pub fn with_warmup_ms(mut self, ms: f64) -> Self {
+        assert!(
+            ms.is_finite() && ms >= 0.0,
+            "warmup_ms must be non-negative and finite, got {ms}"
+        );
+        self.server.warmup_ms = Some(ms);
+        self
+    }
+
     /// Override the SLO for one tier (other tiers keep `slo_ms`).
     pub fn with_tier_slo(mut self, tier: Tier, slo_ms: f64) -> Self {
         self.tier_slo_ms.retain(|&(t, _)| t != tier);
@@ -460,6 +516,32 @@ mod tests {
         assert_eq!(s.server.sharding, ShardingKind::Single);
         assert!(!s.server.slack_batch);
         assert!(s.server.autoscale.is_none());
+        assert!(s.server.warmup_ms.is_none());
+    }
+
+    #[test]
+    fn autoscale_mode_parse_roundtrip_and_defaults() {
+        for m in [AutoscaleMode::Queue, AutoscaleMode::Headroom] {
+            assert_eq!(AutoscaleMode::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(
+            AutoscaleMode::parse("slo-headroom").unwrap(),
+            AutoscaleMode::Headroom
+        );
+        assert!(AutoscaleMode::parse("latency").is_err());
+        // The default policy is the queue-pressure scaler with the
+        // pre-headroom watermarks: PR 4 parity by construction.
+        let a = AutoscalePolicy::default();
+        assert_eq!(a.mode, AutoscaleMode::Queue);
+        assert_eq!(a.queue_high, 8.0);
+        assert_eq!(a.queue_low, 1.0);
+        assert!(a.headroom_high > a.headroom_low);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative and finite")]
+    fn warmup_rejects_negative() {
+        let _ = Scenario::homogeneous(Tier::Low, 1, "srv_inception").with_warmup_ms(-1.0);
     }
 
     #[test]

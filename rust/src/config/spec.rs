@@ -16,8 +16,8 @@ use std::path::Path;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::config::scenario::{
-    hetero_split, AutoscalePolicy, DispatchKind, ExecMode, Intermittent, QueueKind, Scenario,
-    SchedulerKind, ServerPolicy, ShardingKind,
+    hetero_split, AutoscaleMode, AutoscalePolicy, DispatchKind, ExecMode, Intermittent, QueueKind,
+    Scenario, SchedulerKind, ServerPolicy, ShardingKind,
 };
 use crate::models::registry::SERVER_MODELS;
 use crate::models::Tier;
@@ -27,7 +27,7 @@ use crate::util::json::Json;
 /// compile time from `scenarios/` so a preset can never go missing at
 /// runtime; CI re-runs every one of them against `--dump-spec`
 /// round-trips so the files can never rot either.
-pub const PRESETS: [(&str, &str); 7] = [
+pub const PRESETS: [(&str, &str); 8] = [
     (
         "seed-baseline",
         include_str!("../../../scenarios/seed-baseline.json"),
@@ -55,6 +55,10 @@ pub const PRESETS: [(&str, &str); 7] = [
     (
         "sharded-pool",
         include_str!("../../../scenarios/sharded-pool.json"),
+    ),
+    (
+        "headroom-autoscale",
+        include_str!("../../../scenarios/headroom-autoscale.json"),
     ),
 ];
 
@@ -257,6 +261,12 @@ impl ScenarioSpec {
                 im.duration_scale_s
             );
         }
+        if let Some(w) = self.server.warmup_ms {
+            ensure!(
+                w.is_finite() && w >= 0.0,
+                "server.warmup_ms must be non-negative and finite, got {w}"
+            );
+        }
         if let Some(a) = &self.server.autoscale {
             ensure!(
                 a.queue_high.is_finite()
@@ -267,6 +277,15 @@ impl ScenarioSpec {
                  (got high {}, low {})",
                 a.queue_high,
                 a.queue_low
+            );
+            ensure!(
+                a.headroom_high.is_finite()
+                    && a.headroom_low.is_finite()
+                    && a.headroom_high > a.headroom_low,
+                "autoscale headroom watermarks must be finite with \
+                 headroom_high > headroom_low (got high {}, low {})",
+                a.headroom_high,
+                a.headroom_low
             );
             ensure!(a.min_active >= 1, "autoscale.min_active must be >= 1");
             ensure!(
@@ -342,8 +361,11 @@ impl ScenarioSpec {
         let autoscale = match &self.server.autoscale {
             None => Json::Null,
             Some(a) => Json::obj(vec![
+                ("mode", Json::str(a.mode.name())),
                 ("queue_high", Json::num(a.queue_high)),
                 ("queue_low", Json::num(a.queue_low)),
+                ("headroom_high", Json::num(a.headroom_high)),
+                ("headroom_low", Json::num(a.headroom_low)),
                 ("min_active", Json::num(a.min_active as f64)),
                 ("dwell_s", Json::num(a.dwell_s)),
             ]),
@@ -373,6 +395,10 @@ impl ScenarioSpec {
             ("sharding", Json::str(self.server.sharding.name())),
             ("slack_batch", Json::Bool(self.server.slack_batch)),
             ("autoscale", autoscale),
+            (
+                "warmup_ms",
+                self.server.warmup_ms.map_or(Json::Null, Json::num),
+            ),
         ]);
         Json::obj(vec![
             ("devices", devices),
@@ -616,6 +642,13 @@ impl ScenarioSpec {
             "server.dispatch" => self.server.dispatch = DispatchKind::parse(value)?,
             "server.sharding" => self.server.sharding = ShardingKind::parse(value)?,
             "server.slack_batch" => self.server.slack_batch = parse_bool(key, value)?,
+            "server.warmup_ms" => {
+                self.server.warmup_ms = if value == "none" {
+                    None
+                } else {
+                    Some(parse_finite(key, value)?)
+                }
+            }
             "server.autoscale" => {
                 self.server.autoscale = if parse_bool(key, value)? {
                     Some(self.server.autoscale.unwrap_or_default())
@@ -646,8 +679,11 @@ impl ScenarioSpec {
                         .autoscale
                         .get_or_insert_with(AutoscalePolicy::default);
                     match field {
+                        "mode" => a.mode = AutoscaleMode::parse(value)?,
                         "queue_high" => a.queue_high = parse_finite(key, value)?,
                         "queue_low" => a.queue_low = parse_finite(key, value)?,
+                        "headroom_high" => a.headroom_high = parse_finite(key, value)?,
+                        "headroom_low" => a.headroom_low = parse_finite(key, value)?,
                         "min_active" => a.min_active = parse_count(key, value)?,
                         "dwell_s" => a.dwell_s = parse_finite(key, value)?,
                         _ => bail!("unknown spec key '{key}' (see docs/scenario-spec.md)"),
@@ -789,7 +825,7 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
     let obj = v
         .as_obj()
         .ok_or_else(|| anyhow!("'server' must be an object"))?;
-    const KEYS: [&str; 9] = [
+    const KEYS: [&str; 10] = [
         "replicas",
         "queue",
         "shed",
@@ -799,6 +835,7 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
         "sharding",
         "slack_batch",
         "autoscale",
+        "warmup_ms",
     ];
     for key in obj.keys() {
         ensure!(
@@ -852,7 +889,15 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
         let aobj = x
             .as_obj()
             .ok_or_else(|| anyhow!("'server.autoscale' must be an object or null"))?;
-        const AKEYS: [&str; 4] = ["queue_high", "queue_low", "min_active", "dwell_s"];
+        const AKEYS: [&str; 7] = [
+            "mode",
+            "queue_high",
+            "queue_low",
+            "headroom_high",
+            "headroom_low",
+            "min_active",
+            "dwell_s",
+        ];
         for key in aobj.keys() {
             ensure!(
                 AKEYS.contains(&key.as_str()),
@@ -861,11 +906,20 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
             );
         }
         let mut a = AutoscalePolicy::default();
+        if let Some(y) = opt(x, "mode") {
+            a.mode = AutoscaleMode::parse(as_str(y, "autoscale.mode")?)?;
+        }
         if let Some(y) = opt(x, "queue_high") {
             a.queue_high = as_num(y, "autoscale.queue_high")?;
         }
         if let Some(y) = opt(x, "queue_low") {
             a.queue_low = as_num(y, "autoscale.queue_low")?;
+        }
+        if let Some(y) = opt(x, "headroom_high") {
+            a.headroom_high = as_num(y, "autoscale.headroom_high")?;
+        }
+        if let Some(y) = opt(x, "headroom_low") {
+            a.headroom_low = as_num(y, "autoscale.headroom_low")?;
         }
         if let Some(y) = opt(x, "min_active") {
             a.min_active = as_count(y, "autoscale.min_active")?;
@@ -874,6 +928,9 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
             a.dwell_s = as_num(y, "autoscale.dwell_s")?;
         }
         p.autoscale = Some(a);
+    }
+    if let Some(x) = opt(v, "warmup_ms") {
+        p.warmup_ms = Some(as_num(x, "server.warmup_ms")?);
     }
     Ok(p)
 }
@@ -980,6 +1037,22 @@ mod tests {
         assert_eq!(spec.intermittent.unwrap().offline_prob, 0.8);
         spec.set("server.autoscale.min_active", "2").unwrap();
         assert_eq!(spec.server.autoscale.unwrap().min_active, 2);
+        spec.set("server.autoscale.mode", "headroom").unwrap();
+        assert_eq!(
+            spec.server.autoscale.unwrap().mode,
+            AutoscaleMode::Headroom
+        );
+        spec.set("server.autoscale.headroom_high", "0.7").unwrap();
+        spec.set("server.autoscale.headroom_low", "0.3").unwrap();
+        let a = spec.server.autoscale.unwrap();
+        assert_eq!(a.headroom_high, 0.7);
+        assert_eq!(a.headroom_low, 0.3);
+        // min_active set earlier must have survived the mode override.
+        assert_eq!(a.min_active, 2);
+        spec.set("server.warmup_ms", "250").unwrap();
+        assert_eq!(spec.server.warmup_ms, Some(250.0));
+        spec.set("server.warmup_ms", "none").unwrap();
+        assert_eq!(spec.server.warmup_ms, None);
         assert!(spec.set("nope", "1").is_err());
         assert!(spec.set("slo_ms", "NaN").is_err());
         // Seeds beyond the exact-JSON-integer range are rejected here,

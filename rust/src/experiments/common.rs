@@ -367,14 +367,17 @@ pub fn print_rows(title: &str, rows: &[SweepRow]) {
     }
 }
 
-/// Time-series CSV for the trace experiments (Figs 17-20). The
-/// `per_shard_depth` column packs the per-shard queue depths as
-/// `|`-separated values (a single value on unsharded pools); `steals`
-/// is the cumulative work-stealing batch count.
-pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
+/// Time-series CSV for the trace experiments (Figs 17-20), as a
+/// string. The `per_shard_depth` column packs the per-shard queue
+/// depths as `|`-separated values (a single value on unsharded
+/// pools); `steals` is the cumulative work-stealing batch count;
+/// `warming_servers` counts unparked replicas still paying their
+/// warm-up. Shared by [`emit_trace`] and the golden-trace test
+/// harness (which hashes it).
+pub fn trace_csv(metrics: &RunMetrics) -> String {
     let mut csv = String::from(
         "t_s,active_devices,mean_threshold,running_sr,running_acc,queue_len,\
-         busy_servers,parked_servers,server_model_idx,per_shard_depth,steals\n",
+         busy_servers,parked_servers,warming_servers,server_model_idx,per_shard_depth,steals\n",
     );
     for p in &metrics.trace {
         let depths = p
@@ -384,7 +387,7 @@ pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
             .collect::<Vec<_>>()
             .join("|");
         csv.push_str(&format!(
-            "{:.2},{},{:.4},{:.2},{:.4},{},{},{},{},{},{}\n",
+            "{:.2},{},{:.4},{:.2},{:.4},{},{},{},{},{},{},{}\n",
             p.t_s,
             p.active_devices,
             p.mean_threshold,
@@ -393,12 +396,18 @@ pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
             p.queue_len,
             p.busy_servers,
             p.parked_servers,
+            p.warming_servers,
             p.server_model_idx,
             depths,
             p.steals
         ));
     }
-    std::fs::write(path, &csv)?;
+    csv
+}
+
+/// Write [`trace_csv`] to `path` and echo the location.
+pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
+    std::fs::write(path, trace_csv(metrics))?;
     println!("wrote {}", path.display());
     Ok(())
 }

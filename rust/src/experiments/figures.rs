@@ -8,8 +8,8 @@
 use anyhow::Result;
 
 use crate::config::scenario::{
-    AutoscalePolicy, DispatchKind, Intermittent, QueueKind, Scenario, SchedulerKind, ServerPolicy,
-    ShardingKind,
+    AutoscaleMode, AutoscalePolicy, DispatchKind, Intermittent, QueueKind, Scenario,
+    SchedulerKind, ServerPolicy, ShardingKind,
 };
 use crate::config::spec::ScenarioSpec;
 use crate::experiments::common::{
@@ -496,6 +496,56 @@ pub fn hetero_pool_policies() -> Vec<(&'static str, ServerPolicy)> {
                 ..ServerPolicy::default()
             },
         ),
+        (
+            // The headroom-vs-queue comparison cell: the hetero-auto
+            // pool under the SLO-headroom controller instead of the
+            // queue-pressure watermarks. Starts hot, parks only when
+            // measured slack proves the surplus — lower
+            // parked_replica_seconds at equal-or-better SR is the
+            // acceptance bar against hetero-auto.
+            "auto-headroom",
+            ServerPolicy {
+                replicas: 3,
+                models: vec![
+                    "srv_inception".to_string(),
+                    "srv_inception".to_string(),
+                    "srv_effnetb3".to_string(),
+                ],
+                slack_batch: true,
+                autoscale: Some(AutoscalePolicy {
+                    mode: AutoscaleMode::Headroom,
+                    ..AutoscalePolicy::default()
+                }),
+                ..ServerPolicy::default()
+            },
+        ),
+        (
+            // The headroom controller on the sharded headline pool
+            // with non-zero warm-up: per-shard park/unpark (never a
+            // shard's last replica), each unpark paying 250 ms before
+            // dispatch (the `headroom-autoscale` preset's policy).
+            "sharded-headroom-warm",
+            ServerPolicy {
+                replicas: 4,
+                models: vec![
+                    "srv_inception".to_string(),
+                    "srv_inception".to_string(),
+                    "srv_effnetb3".to_string(),
+                    "srv_effnetb3".to_string(),
+                ],
+                queue: QueueKind::Edf,
+                sharding: ShardingKind::PerModel,
+                slack_batch: true,
+                shed: true,
+                warmup_ms: Some(250.0),
+                autoscale: Some(AutoscalePolicy {
+                    mode: AutoscaleMode::Headroom,
+                    min_active: 2,
+                    ..AutoscalePolicy::default()
+                }),
+                ..ServerPolicy::default()
+            },
+        ),
     ]
 }
 
@@ -532,7 +582,12 @@ pub fn hetero_pool(ctx: &mut Ctx) -> Result<()> {
         if autoscaled.contains(label) {
             let parked: f64 =
                 runs.iter().map(|m| m.parked_replica_seconds).sum::<f64>() / runs.len() as f64;
-            println!("[hetero-pool] {label} n={n}: mean parked {parked:.1} replica-s");
+            let warm: f64 =
+                runs.iter().map(|m| m.warmup_replica_seconds).sum::<f64>() / runs.len() as f64;
+            println!(
+                "[hetero-pool] {label} n={n}: mean parked {parked:.1} replica-s, \
+                 warm-up {warm:.1} replica-s"
+            );
         }
         let mut row = aggregate_rows(SchedulerKind::Static, 150.0, n, None, runs);
         // Reuse the scheduler column to tag the series.

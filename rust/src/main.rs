@@ -203,6 +203,16 @@ fn resolve_sim_spec(m: &Matches) -> Result<ScenarioSpec> {
             spec.set(path, value)?;
         }
     }
+    // No-default flags: absent unless the user typed them, so they
+    // overlay loaded specs without perturbing untouched runs.
+    if let Some(mode) = m.get("autoscale-mode") {
+        // Selecting a controller implies the autoscale section (with
+        // default watermarks unless the spec or --set says otherwise).
+        spec.set("server.autoscale.mode", mode)?;
+    }
+    if let Some(warmup) = m.get("warmup-ms") {
+        spec.set("server.warmup_ms", warmup)?;
+    }
     for kv in m.get_all("set") {
         spec.apply_set(kv)?;
     }
@@ -341,10 +351,14 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
     if policy.sharding != ShardingKind::Single {
         println!("sharded pool: {} work-stealing batches", metrics.steals);
     }
-    if policy.autoscale.is_some() {
+    if let Some(scale) = &policy.autoscale {
         println!(
-            "autoscaler: {} scale events   parked {:.1} replica-seconds saved",
-            metrics.scale_events, metrics.parked_replica_seconds
+            "autoscaler[{}]: {} scale events   parked {:.1} replica-seconds saved   \
+             warm-up {:.1} replica-seconds paid",
+            scale.mode.name(),
+            metrics.scale_events,
+            metrics.parked_replica_seconds,
+            metrics.warmup_replica_seconds
         );
     }
     Ok(())

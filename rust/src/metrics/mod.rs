@@ -105,6 +105,9 @@ pub struct TracePoint {
     pub busy_servers: usize,
     /// Replicas parked by the autoscaler at this instant.
     pub parked_servers: usize,
+    /// Unparked replicas still paying their warm-up at this instant
+    /// (not yet dispatchable).
+    pub warming_servers: usize,
     /// Heaviest model placed on any replica (switch-ladder index).
     pub server_model_idx: usize,
     /// Queue depth of each pool shard, in shard order (a single entry
@@ -141,6 +144,10 @@ pub struct RunMetrics {
     /// Replica-seconds spent parked by the autoscaler — the cost the
     /// pool did NOT pay versus keeping every replica hot.
     pub parked_replica_seconds: f64,
+    /// Replica-seconds spent warming up after unparks — capacity that
+    /// was powered but not yet servable, the price warm-up costs
+    /// attach to every scale-up decision.
+    pub warmup_replica_seconds: f64,
     /// Park/unpark actions the autoscaler applied.
     pub scale_events: usize,
     /// Discrete events the engine processed (the `bench scale`

@@ -137,6 +137,15 @@ impl<'a> SimEngine<'a> {
                 }
                 Event::ServerArrival { request } => self.on_server_arrival(t, request),
                 Event::ServerBatchDone { server } => self.on_batch_done(t, server),
+                Event::ReplicaWarm { server } => {
+                    // Warm-up over: the replica joins dispatch and the
+                    // queued backlog is offered immediately.
+                    self.server.on_replica_warm(server, t);
+                    let observed = self.server.dispatch(t, &mut self.events, &mut self.metrics);
+                    for load in observed {
+                        self.fleet.on_batch_observed(load);
+                    }
+                }
                 Event::ResultArrival { device, request } => {
                     self.fleet.on_completion(
                         t,
@@ -176,6 +185,7 @@ impl<'a> SimEngine<'a> {
         self.metrics.steals = self.server.steal_count();
         self.metrics.per_server_batches = self.server.batches_per_replica();
         self.metrics.parked_replica_seconds = self.server.parked_replica_seconds(last_t);
+        self.metrics.warmup_replica_seconds = self.server.warmup_replica_seconds(last_t);
         self.metrics.real_compute_ms = self.provider.real_compute_ms();
         Ok(self.metrics)
     }
@@ -183,23 +193,31 @@ impl<'a> SimEngine<'a> {
     /// One autoscaler evaluation on the telemetry grid.
     ///
     /// `grid_t` stamps the (deterministic) scaling decision and its
-    /// parked-time accounting; the dispatch that follows an unpark runs
-    /// at `now` — the event time that triggered the grid catch-up —
-    /// because `grid_t` lies in the past of the event currently being
-    /// popped, and scheduling work back there would push events behind
-    /// the virtual clock (non-monotone times, replicas double-booked
+    /// parked/warm-up accounting; the dispatch that follows an unpark
+    /// — and the `ReplicaWarm` scheduled for a warming one — runs from
+    /// `now`, the event time that triggered the grid catch-up, because
+    /// `grid_t` lies in the past of the event currently being popped,
+    /// and scheduling work back there would push events behind the
+    /// virtual clock (non-monotone times, replicas double-booked
     /// against batches that finish "later" at earlier timestamps).
     fn autoscale_step(&mut self, grid_t: f64, now: f64) {
-        match self.server.autoscale_step(grid_t) {
-            Some(ScaleAction::Unparked(_)) => {
-                self.metrics.scale_events += 1;
-                let observed = self.server.dispatch(now, &mut self.events, &mut self.metrics);
-                for load in observed {
-                    self.fleet.on_batch_observed(load);
+        let mut unparked_hot = false;
+        for outcome in self.server.autoscale_step(grid_t) {
+            self.metrics.scale_events += 1;
+            if let ScaleAction::Unparked(server) = outcome.action {
+                if outcome.warmup_s > 0.0 {
+                    self.events
+                        .push(now + outcome.warmup_s, Event::ReplicaWarm { server });
+                } else {
+                    unparked_hot = true;
                 }
             }
-            Some(ScaleAction::Parked(_)) => self.metrics.scale_events += 1,
-            None => {}
+        }
+        if unparked_hot {
+            let observed = self.server.dispatch(now, &mut self.events, &mut self.metrics);
+            for load in observed {
+                self.fleet.on_batch_observed(load);
+            }
         }
     }
 
@@ -271,6 +289,7 @@ impl<'a> SimEngine<'a> {
             queue_len: self.server.queue_len(),
             busy_servers: self.server.busy_count(),
             parked_servers: self.server.parked_count(),
+            warming_servers: self.server.warming_count(),
             server_model_idx: self.server.model_ladder_idx(),
             per_shard_depth: self.server.shard_depths(),
             steals: self.server.steal_count(),

@@ -28,6 +28,9 @@ pub enum Event {
     /// A shed (admission-rejected) request's notice reached its device;
     /// the device falls back to its local prediction.
     RequestShed { device: usize, request: usize },
+    /// A replica the autoscaler resumed finished its warm-up and is
+    /// dispatchable again (`warmup_ms` elapsed since the unpark).
+    ReplicaWarm { server: usize },
     /// A device's SR window closed (§IV-B telemetry tick).
     SrWindow { device: usize },
     /// Intermittent participation: device returns online.

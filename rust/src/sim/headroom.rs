@@ -1,0 +1,123 @@
+//! Per-shard SLO-headroom telemetry for the autoscaler.
+//!
+//! The paper's scheduler holds a target satisfaction rate (§IV); the
+//! queue-pressure autoscaler reacts to a lagging proxy of that goal
+//! (backlog + sheds). The [`HeadroomTracker`] measures the goal
+//! directly: for every request offered to a shard it records the
+//! *normalized deadline slack*
+//!
+//! ```text
+//! headroom = (deadline - predicted completion) / SLO
+//! ```
+//!
+//! where the predicted completion folds in the shard's queue depth and
+//! unparked capacity (`now + (depth + 1) x batch-1 latency /
+//! unparked replicas + return hop`). A value of 1 means the whole SLO
+//! is still available, 0 means the request is predicted to land
+//! exactly on its deadline, and negative values are predicted misses
+//! (a shed request contributes the negative slack that got it shed, so
+//! overload keeps pulling the signal down instead of vanishing from
+//! it).
+//!
+//! Per shard, the samples feed an EWMA — the "stays above / dips
+//! below" smoothing behind the `headroom` autoscale watermarks
+//! (`AutoscalePolicy::headroom_high`/`headroom_low`): a single lucky
+//! request cannot park capacity and a single unlucky one cannot unpark
+//! it. Shards created lazily by §IV-E model switches grow the tracker
+//! on first observation.
+
+/// EWMA smoothing factor: ~20% weight on the newest observation, so
+/// the signal settles over a handful of requests — faster than the
+/// 1 s autoscale grid under load, slower than per-request noise.
+pub const HEADROOM_EWMA_ALPHA: f64 = 0.2;
+
+/// Per-shard EWMA of normalized deadline slack over offered requests.
+#[derive(Debug, Default)]
+pub struct HeadroomTracker {
+    /// EWMA per shard index; `None` until the first observation.
+    shards: Vec<Option<f64>>,
+}
+
+impl HeadroomTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request's normalized slack against `shard`.
+    /// Non-finite observations are ignored (a zero-SLO request cannot
+    /// produce a meaningful ratio).
+    pub fn observe(&mut self, shard: usize, slack_norm: f64) {
+        if !slack_norm.is_finite() {
+            return;
+        }
+        if shard >= self.shards.len() {
+            self.shards.resize(shard + 1, None);
+        }
+        let cell = &mut self.shards[shard];
+        *cell = Some(match *cell {
+            Some(prev) => prev + HEADROOM_EWMA_ALPHA * (slack_norm - prev),
+            None => slack_norm,
+        });
+    }
+
+    /// The shard's current headroom EWMA, if it has seen any request.
+    pub fn value(&self, shard: usize) -> Option<f64> {
+        self.shards.get(shard).copied().flatten()
+    }
+
+    /// Number of shards that have reported at least one observation.
+    pub fn observed_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_seeds_the_ewma() {
+        let mut t = HeadroomTracker::new();
+        assert_eq!(t.value(0), None);
+        t.observe(0, 0.5);
+        assert_eq!(t.value(0), Some(0.5));
+    }
+
+    #[test]
+    fn ewma_moves_toward_new_observations() {
+        let mut t = HeadroomTracker::new();
+        t.observe(0, 1.0);
+        t.observe(0, 0.0);
+        let v = t.value(0).unwrap();
+        assert!((v - (1.0 - HEADROOM_EWMA_ALPHA)).abs() < 1e-12);
+        // Repeated lows converge toward the low.
+        for _ in 0..200 {
+            t.observe(0, -0.5);
+        }
+        assert!(t.value(0).unwrap() < -0.49);
+    }
+
+    #[test]
+    fn shards_are_independent_and_grow_lazily() {
+        let mut t = HeadroomTracker::new();
+        t.observe(3, 0.25);
+        assert_eq!(t.value(0), None);
+        assert_eq!(t.value(3), Some(0.25));
+        assert_eq!(t.value(10), None);
+        assert_eq!(t.observed_shards(), 1);
+        t.observe(0, -1.0);
+        assert_eq!(t.observed_shards(), 2);
+        assert_eq!(t.value(0), Some(-1.0));
+    }
+
+    #[test]
+    fn non_finite_observations_are_ignored() {
+        let mut t = HeadroomTracker::new();
+        t.observe(0, f64::NAN);
+        t.observe(0, f64::INFINITY);
+        assert_eq!(t.value(0), None);
+        t.observe(0, 0.4);
+        t.observe(0, f64::NAN);
+        assert_eq!(t.value(0), Some(0.4));
+    }
+}

@@ -11,13 +11,15 @@ pub mod engine;
 pub mod event;
 pub mod experiment;
 pub mod fleet;
+pub mod headroom;
 pub mod server;
 pub mod subsystem;
 
 pub use engine::{DeviceSpec, SimEngine};
 pub use experiment::{run_scenario, run_spec};
 pub use fleet::{CompletionNotice, DeviceFleet};
+pub use headroom::HeadroomTracker;
 pub use server::{
     Admission, PendingRequest, PoolScaler, QueueDiscipline, ScaleAction, ServerPool,
 };
-pub use subsystem::{ForwardingVerdict, ServerSubsystem};
+pub use subsystem::{ForwardingVerdict, ScaleOutcome, ServerSubsystem};

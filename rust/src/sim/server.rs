@@ -47,8 +47,9 @@
 
 use std::collections::VecDeque;
 
-use crate::config::scenario::{AutoscalePolicy, QueueKind, ServerPolicy, ShardingKind};
+use crate::config::scenario::{AutoscaleMode, AutoscalePolicy, QueueKind, ServerPolicy, ShardingKind};
 use crate::models::Tier;
+use crate::sim::headroom::HeadroomTracker;
 
 const NUM_TIERS: usize = 4;
 
@@ -327,8 +328,8 @@ pub fn build_discipline_parts(queue: QueueKind, wfq_weights: [f64; 4]) -> Box<dy
     }
 }
 
-/// One replica server: its own model (=> latency model), busy/parked
-/// state, in-flight batch, and served-batch counter.
+/// One replica server: its own model (=> latency model), busy/parked/
+/// warming state, in-flight batch, and served-batch counter.
 #[derive(Debug)]
 pub struct Replica {
     pub model: String,
@@ -337,6 +338,11 @@ pub struct Replica {
     pub parked: bool,
     /// Virtual time this replica was last parked (valid while parked).
     parked_since_s: f64,
+    /// Warming up after an unpark (`warmup_ms > 0`): unparked but
+    /// still skipped by dispatch until its `Event::ReplicaWarm` fires.
+    pub warming: bool,
+    /// Virtual time warm-up began (valid while warming).
+    warming_since_s: f64,
     pub in_flight: Vec<PendingRequest>,
     pub batches_served: usize,
 }
@@ -395,6 +401,8 @@ pub struct ServerPool {
     steal_count: usize,
     /// Completed parked intervals, in replica-seconds.
     parked_s_total: f64,
+    /// Completed warm-up intervals, in replica-seconds.
+    warmup_s_total: f64,
 }
 
 impl ServerPool {
@@ -411,8 +419,17 @@ impl ServerPool {
             policy.replicas
         );
         let initial_active = match policy.autoscale {
-            Some(scale) => scale.min_active.clamp(1, policy.replicas),
-            None => policy.replicas,
+            // The queue-pressure scaler starts cold at min_active and
+            // ramps up on backlog (the PR 2 behavior, kept
+            // bit-identical). The headroom scaler starts HOT: warm-up
+            // costs make speculative cold starts expensive, so it
+            // parks down only once measured slack proves the capacity
+            // surplus — and a shard therefore always begins with every
+            // assigned replica unparked.
+            Some(scale) if scale.mode == AutoscaleMode::Queue => {
+                scale.min_active.clamp(1, policy.replicas)
+            }
+            _ => policy.replicas,
         };
         let replicas: Vec<Replica> = (0..policy.replicas)
             .map(|i| Replica {
@@ -425,6 +442,8 @@ impl ServerPool {
                 busy: false,
                 parked: i >= initial_active,
                 parked_since_s: 0.0,
+                warming: false,
+                warming_since_s: 0.0,
                 in_flight: Vec::new(),
                 batches_served: 0,
             })
@@ -474,6 +493,7 @@ impl ServerPool {
             shed_count: 0,
             steal_count: 0,
             parked_s_total: 0.0,
+            warmup_s_total: 0.0,
         }
     }
 
@@ -590,17 +610,24 @@ impl ServerPool {
         }
     }
 
-    /// Idle = neither busy nor parked: eligible for dispatch.
+    /// Idle = not busy, not parked, not mid-warm-up: eligible for
+    /// dispatch.
     pub fn is_idle(&self, server: usize) -> bool {
         let r = &self.replicas[server];
-        !r.busy && !r.parked
+        !r.busy && !r.parked && !r.warming
     }
 
     pub fn is_parked(&self, server: usize) -> bool {
         self.replicas[server].parked
     }
 
-    /// Replicas not parked (serving or eligible to serve).
+    /// Whether `server` is warming up after an unpark (unparked but
+    /// not yet eligible for dispatch).
+    pub fn is_warming(&self, server: usize) -> bool {
+        self.replicas[server].warming
+    }
+
+    /// Replicas not parked (serving, warming, or eligible to serve).
     pub fn active_count(&self) -> usize {
         self.replicas.iter().filter(|r| !r.parked).count()
     }
@@ -609,24 +636,86 @@ impl ServerPool {
         self.replicas.iter().filter(|r| r.parked).count()
     }
 
+    /// Replicas currently mid-warm-up (the `warming_servers` trace
+    /// column).
+    pub fn warming_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.warming).count()
+    }
+
+    /// Unparked replicas assigned to `shard` — the capacity the shard
+    /// can actually count on (warming replicas included: they will
+    /// serve within one warm-up, unlike parked ones which need a
+    /// scaler decision first).
+    pub fn unparked_assigned_count(&self, shard: usize) -> usize {
+        (0..self.replicas.len())
+            .filter(|&i| self.shard_by_replica[i] == shard && !self.replicas[i].parked)
+            .count()
+    }
+
     /// Park the highest-indexed idle replica (deterministic choice;
     /// replica 0 is parked last). Returns the parked index, or `None`
     /// if every unparked replica is busy.
     pub fn park_one_idle(&mut self, now: f64) -> Option<usize> {
         let idx = (0..self.replicas.len()).rev().find(|&i| self.is_idle(i))?;
+        self.park(idx, now);
+        Some(idx)
+    }
+
+    /// Park the highest-indexed idle replica assigned to `shard`
+    /// (shard-aware parking; the headroom scaler's choice rule).
+    pub fn park_one_idle_in_shard(&mut self, shard: usize, now: f64) -> Option<usize> {
+        let idx = (0..self.replicas.len())
+            .rev()
+            .find(|&i| self.shard_by_replica[i] == shard && self.is_idle(i))?;
+        self.park(idx, now);
+        Some(idx)
+    }
+
+    fn park(&mut self, idx: usize, now: f64) {
         let r = &mut self.replicas[idx];
+        debug_assert!(!r.busy && !r.parked && !r.warming);
         r.parked = true;
         r.parked_since_s = now;
-        Some(idx)
     }
 
     /// Unpark the lowest-indexed parked replica. Returns its index.
     pub fn unpark_one(&mut self, now: f64) -> Option<usize> {
         let idx = self.replicas.iter().position(|r| r.parked)?;
+        self.unpark(idx, now);
+        Some(idx)
+    }
+
+    /// Unpark the lowest-indexed parked replica assigned to `shard`.
+    pub fn unpark_one_in_shard(&mut self, shard: usize, now: f64) -> Option<usize> {
+        let idx = (0..self.replicas.len())
+            .find(|&i| self.shard_by_replica[i] == shard && self.replicas[i].parked)?;
+        self.unpark(idx, now);
+        Some(idx)
+    }
+
+    fn unpark(&mut self, idx: usize, now: f64) {
         let r = &mut self.replicas[idx];
         r.parked = false;
         self.parked_s_total += now - r.parked_since_s;
-        Some(idx)
+    }
+
+    /// Start the warm-up clock on a just-unparked replica: it stays
+    /// out of dispatch until [`ServerPool::finish_warmup`].
+    pub fn begin_warmup(&mut self, server: usize, now: f64) {
+        let r = &mut self.replicas[server];
+        assert!(!r.parked, "warm-up on a parked replica {server}");
+        assert!(!r.warming, "replica {server} is already warming");
+        r.warming = true;
+        r.warming_since_s = now;
+    }
+
+    /// Warm-up complete (`Event::ReplicaWarm`): the replica becomes
+    /// dispatchable and its warm interval is banked.
+    pub fn finish_warmup(&mut self, server: usize, now: f64) {
+        let r = &mut self.replicas[server];
+        assert!(r.warming, "finish_warmup on a non-warming replica {server}");
+        r.warming = false;
+        self.warmup_s_total += now - r.warming_since_s;
     }
 
     /// Total parked replica-seconds up to virtual time `now`,
@@ -638,6 +727,19 @@ impl ServerPool {
                 .iter()
                 .filter(|r| r.parked)
                 .map(|r| now - r.parked_since_s)
+                .sum::<f64>()
+    }
+
+    /// Total warm-up replica-seconds up to virtual time `now` — the
+    /// capacity the pool paid for without serving, the price of every
+    /// unpark under non-zero `warmup_ms`.
+    pub fn warmup_replica_seconds(&self, now: f64) -> f64 {
+        self.warmup_s_total
+            + self
+                .replicas
+                .iter()
+                .filter(|r| r.warming)
+                .map(|r| now - r.warming_since_s)
                 .sum::<f64>()
     }
 
@@ -695,6 +797,11 @@ impl ServerPool {
         let r = &mut self.replicas[server];
         assert!(!r.busy, "start_batch on busy replica {server}");
         assert!(!r.parked, "start_batch on parked replica {server}");
+        assert!(
+            !r.warming,
+            "start_batch on warming replica {server}: a resumed replica \
+             must not serve before its ReplicaWarm event"
+        );
         r.in_flight.clear();
         let q = &mut self.shards[shard].queue;
         let mut shed = Vec::new();
@@ -791,21 +898,36 @@ pub enum ScaleAction {
     Unparked(usize),
 }
 
-/// Cost-aware replica autoscaler: watermark hysteresis on queue
-/// pressure (queued requests per active replica) and on the shed rate.
+/// Cost-aware replica autoscaler with two controllers
+/// ([`AutoscaleMode`]):
 ///
-/// The engine evaluates [`PoolScaler::step`] on the fixed telemetry
-/// grid (deterministic timing). One action per evaluation, separated by
-/// at least `dwell_s`, so the pool cannot thrash:
+/// * **queue** ([`PoolScaler::step`]) — watermark hysteresis on queue
+///   pressure (queued requests per active replica) and on the shed
+///   rate. Pool-global decisions, one action per evaluation:
+///   - pressure above `queue_high` — or any shedding since the last
+///     evaluation — unparks the lowest-indexed parked replica;
+///   - pressure below `queue_low` with no shedding parks the
+///     highest-indexed idle replica, never dropping below
+///     `min_active`.
+/// * **headroom** ([`PoolScaler::step_headroom`]) — watermark
+///   hysteresis on each shard's SLO-headroom EWMA
+///   ([`HeadroomTracker`]). Decisions are per shard (each with its own
+///   dwell): headroom above `headroom_high` parks the shard's
+///   highest-indexed idle replica — never the shard's last unparked
+///   one, and never below the pool-wide `min_active` — and headroom
+///   below `headroom_low` unparks the shard's lowest-indexed parked
+///   replica.
 ///
-/// * pressure above `queue_high` — or any shedding since the last
-///   evaluation — unparks the lowest-indexed parked replica;
-/// * pressure below `queue_low` with no shedding parks the
-///   highest-indexed idle replica, never dropping below `min_active`.
+/// The engine evaluates the scaler on the fixed telemetry grid
+/// (deterministic timing); actions are separated by at least `dwell_s`
+/// so the pool cannot thrash.
 #[derive(Debug)]
 pub struct PoolScaler {
     cfg: AutoscalePolicy,
     last_action_s: f64,
+    /// Per-shard last-action stamps for the headroom controller
+    /// (grown lazily as model switches create shards).
+    last_shard_action_s: Vec<f64>,
     /// Cumulative shed count at the last *effective* evaluation. Kept
     /// here (not in the caller) so sheds landing during a dwell-blocked
     /// window accumulate instead of being silently discarded — a shed
@@ -821,12 +943,24 @@ impl PoolScaler {
             cfg.queue_low,
             cfg.queue_high
         );
+        assert!(
+            cfg.headroom_low <= cfg.headroom_high,
+            "headroom watermarks inverted: low {} > high {}",
+            cfg.headroom_low,
+            cfg.headroom_high
+        );
         assert!(cfg.min_active >= 1, "autoscale needs >= 1 active replica");
         Self {
             cfg,
             last_action_s: f64::NEG_INFINITY,
+            last_shard_action_s: Vec::new(),
             shed_seen: 0,
         }
+    }
+
+    /// The controller this scaler was configured with.
+    pub fn mode(&self) -> AutoscaleMode {
+        self.cfg.mode
     }
 
     /// Evaluate the watermarks at virtual time `now`; `shed_total` is
@@ -861,6 +995,51 @@ impl PoolScaler {
             self.last_action_s = now;
         }
         action
+    }
+
+    /// One headroom-controller evaluation at virtual time `now`: walk
+    /// the shards in index order and apply at most one park/unpark per
+    /// shard, each shard under its own dwell. Shards with no assigned
+    /// replicas (orphaned by model switches) and shards that have not
+    /// yet observed a request are left alone — with no signal, neither
+    /// parking capacity nor paying a warm-up can be justified.
+    pub fn step_headroom(
+        &mut self,
+        pool: &mut ServerPool,
+        headroom: &HeadroomTracker,
+        now: f64,
+    ) -> Vec<ScaleAction> {
+        if self.last_shard_action_s.len() < pool.num_shards() {
+            self.last_shard_action_s
+                .resize(pool.num_shards(), f64::NEG_INFINITY);
+        }
+        let mut actions = Vec::new();
+        for shard in 0..pool.num_shards() {
+            if now - self.last_shard_action_s[shard] < self.cfg.dwell_s {
+                continue;
+            }
+            if pool.assigned_count(shard) == 0 {
+                continue;
+            }
+            let Some(h) = headroom.value(shard) else {
+                continue;
+            };
+            let action = if h < self.cfg.headroom_low {
+                pool.unpark_one_in_shard(shard, now).map(ScaleAction::Unparked)
+            } else if h > self.cfg.headroom_high
+                && pool.unparked_assigned_count(shard) > 1
+                && pool.active_count() > self.cfg.min_active
+            {
+                pool.park_one_idle_in_shard(shard, now).map(ScaleAction::Parked)
+            } else {
+                None
+            };
+            if let Some(action) = action {
+                self.last_shard_action_s[shard] = now;
+                actions.push(action);
+            }
+        }
+        actions
     }
 }
 
@@ -1176,6 +1355,7 @@ mod tests {
             queue_low: 1.0,
             min_active: 1,
             dwell_s: 2.0,
+            ..AutoscalePolicy::default()
         };
         let policy = ServerPolicy {
             replicas: 3,
@@ -1339,6 +1519,166 @@ mod tests {
     fn steal_from_own_shard_panics() {
         let mut pool = ServerPool::new(&mixed_sharded_policy(), "srv_inception");
         let _ = pool.steal_batch(0, 0, 1, 0.0, 0.0);
+    }
+
+    #[test]
+    fn warming_replica_is_invisible_to_dispatch_until_finished() {
+        let policy = ServerPolicy {
+            replicas: 2,
+            ..ServerPolicy::default()
+        };
+        let mut pool = ServerPool::new(&policy, "srv_inception");
+        assert_eq!(pool.park_one_idle(0.0), Some(1));
+        assert_eq!(pool.unpark_one(1.0), Some(1));
+        pool.begin_warmup(1, 1.0);
+        assert!(pool.is_warming(1));
+        assert_eq!(pool.warming_count(), 1);
+        // Warming replicas are unparked (active) but not idle.
+        assert_eq!(pool.active_count(), 2);
+        assert!(!pool.is_idle(1));
+        pool.admit(req(0, Tier::Low, 100.0), 1.0, 0.0);
+        pool.admit(req(1, Tier::Low, 100.0), 1.0, 0.0);
+        assert_eq!(pool.start_batch(0, 1, 1.0, 0.0).formed, 1);
+        assert_eq!(pool.next_idle(), None, "warming replica must not serve");
+        // Open warm intervals accrue until `now`; finishing banks them.
+        assert!((pool.warmup_replica_seconds(1.4) - 0.4).abs() < 1e-12);
+        pool.finish_warmup(1, 1.5);
+        assert!(!pool.is_warming(1));
+        assert_eq!(pool.next_idle(), Some(1));
+        assert!((pool.warmup_replica_seconds(9.0) - 0.5).abs() < 1e-12);
+        assert_eq!(pool.start_batch(1, 1, 1.5, 0.0).formed, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "warming replica")]
+    fn dispatch_to_warming_replica_panics() {
+        let mut pool = ServerPool::new(
+            &ServerPolicy {
+                replicas: 1,
+                ..ServerPolicy::default()
+            },
+            "srv_inception",
+        );
+        pool.begin_warmup(0, 0.0);
+        pool.admit(req(0, Tier::Low, 100.0), 0.0, 0.0);
+        let _ = pool.start_batch(0, 1, 0.0, 0.0);
+    }
+
+    #[test]
+    fn shard_scoped_park_and_unpark() {
+        // Mixed sharded pool: [inception x2 | effnet x1] via first
+        // appearance ordering of mixed_sharded_policy's models
+        // [inception, effnet, inception] -> shard 0 = {0, 2}, 1 = {1}.
+        let mut pool = ServerPool::new(&mixed_sharded_policy(), "srv_inception");
+        assert_eq!(pool.unparked_assigned_count(0), 2);
+        assert_eq!(pool.unparked_assigned_count(1), 1);
+        // Shard-scoped parking takes the highest index IN THE SHARD.
+        assert_eq!(pool.park_one_idle_in_shard(0, 1.0), Some(2));
+        assert_eq!(pool.unparked_assigned_count(0), 1);
+        assert_eq!(pool.unparked_assigned_count(1), 1);
+        // No idle replica left to park in shard 0 once replica 0 is
+        // busy.
+        pool.admit_to(0, req(0, Tier::Low, 100.0), 1.0, 0.0);
+        assert_eq!(pool.start_batch(0, 1, 1.0, 0.0).formed, 1);
+        assert_eq!(pool.park_one_idle_in_shard(0, 1.0), None);
+        // Unpark is shard-scoped too: shard 1 has nothing parked.
+        assert_eq!(pool.unpark_one_in_shard(1, 2.0), None);
+        assert_eq!(pool.unpark_one_in_shard(0, 2.0), Some(2));
+        assert!((pool.parked_replica_seconds(2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn headroom_pool_starts_fully_active() {
+        let policy = ServerPolicy {
+            replicas: 4,
+            autoscale: Some(AutoscalePolicy {
+                mode: AutoscaleMode::Headroom,
+                min_active: 1,
+                ..AutoscalePolicy::default()
+            }),
+            ..ServerPolicy::default()
+        };
+        let pool = ServerPool::new(&policy, "srv_inception");
+        assert_eq!(pool.active_count(), 4, "headroom pools start hot");
+        // The queue-mode pool keeps its cold min_active start.
+        let queue = ServerPolicy {
+            autoscale: Some(AutoscalePolicy {
+                min_active: 1,
+                ..AutoscalePolicy::default()
+            }),
+            ..policy
+        };
+        assert_eq!(ServerPool::new(&queue, "srv_inception").active_count(), 1);
+    }
+
+    #[test]
+    fn headroom_scaler_parks_on_surplus_and_unparks_on_eroding_slack() {
+        let cfg = AutoscalePolicy {
+            mode: AutoscaleMode::Headroom,
+            headroom_high: 0.6,
+            headroom_low: 0.2,
+            min_active: 1,
+            dwell_s: 2.0,
+            ..AutoscalePolicy::default()
+        };
+        let policy = ServerPolicy {
+            autoscale: Some(cfg),
+            ..mixed_sharded_policy()
+        };
+        // Shards: 0 = inception {replicas 0, 2}, 1 = effnet {1}.
+        let mut pool = ServerPool::new(&policy, "srv_inception");
+        let mut scaler = PoolScaler::new(cfg);
+        let mut tracker = HeadroomTracker::new();
+        // No observations yet: no action on any shard.
+        assert_eq!(scaler.step_headroom(&mut pool, &tracker, 0.0), vec![]);
+        // Plenty of slack on shard 0 parks its highest-indexed idle
+        // replica — but never the last one, and shard 1's single
+        // replica is untouchable by construction.
+        tracker.observe(0, 0.9);
+        tracker.observe(1, 0.9);
+        assert_eq!(
+            scaler.step_headroom(&mut pool, &tracker, 1.0),
+            vec![ScaleAction::Parked(2)]
+        );
+        assert_eq!(
+            scaler.step_headroom(&mut pool, &tracker, 4.0),
+            vec![],
+            "shard 0 is at its last unparked replica; shard 1 always was"
+        );
+        // Eroding slack on shard 0 unparks its parked replica; the
+        // per-shard dwell blocks an immediate follow-up.
+        for _ in 0..40 {
+            tracker.observe(0, -0.5);
+        }
+        assert_eq!(
+            scaler.step_headroom(&mut pool, &tracker, 6.0),
+            vec![ScaleAction::Unparked(2)]
+        );
+        assert_eq!(scaler.step_headroom(&mut pool, &tracker, 7.0), vec![]);
+        // Nothing parked left in the shard: low headroom is a no-op.
+        assert_eq!(scaler.step_headroom(&mut pool, &tracker, 9.0), vec![]);
+    }
+
+    #[test]
+    fn headroom_scaler_respects_global_min_active() {
+        let cfg = AutoscalePolicy {
+            mode: AutoscaleMode::Headroom,
+            min_active: 3,
+            dwell_s: 0.0,
+            ..AutoscalePolicy::default()
+        };
+        let policy = ServerPolicy {
+            autoscale: Some(cfg),
+            ..mixed_sharded_policy()
+        };
+        let mut pool = ServerPool::new(&policy, "srv_inception");
+        let mut scaler = PoolScaler::new(cfg);
+        let mut tracker = HeadroomTracker::new();
+        tracker.observe(0, 0.95);
+        tracker.observe(1, 0.95);
+        // All three replicas are needed to honor min_active = 3.
+        assert_eq!(scaler.step_headroom(&mut pool, &tracker, 1.0), vec![]);
+        assert_eq!(pool.active_count(), 3);
     }
 
     #[test]

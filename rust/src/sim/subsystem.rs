@@ -20,12 +20,13 @@
 //! that change what the pool can serve.
 
 use crate::config::latency::ServerLatencyModel;
-use crate::config::scenario::{DispatchKind, ServerPolicy};
+use crate::config::scenario::{AutoscaleMode, DispatchKind, ServerPolicy};
 use crate::config::SystemConfig;
 use crate::metrics::RunMetrics;
 use crate::models::Tier;
 use crate::scheduler::{DeviceId, SwitchController};
 use crate::sim::event::{Event, EventQueue};
+use crate::sim::headroom::HeadroomTracker;
 use crate::sim::server::{Admission, PendingRequest, PoolScaler, ScaleAction, ServerPool};
 
 /// Latency model resolver so the subsystem can follow model switches.
@@ -77,6 +78,18 @@ impl LatencyCache {
     }
 }
 
+/// One applied autoscaler decision plus the warm-up it triggered: an
+/// unpark with `warmup_s > 0` left the replica in the warming state,
+/// and the engine owes it an [`Event::ReplicaWarm`] that far in the
+/// future.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleOutcome {
+    pub action: ScaleAction,
+    /// Warm-up the unparked replica must pay before dispatch (0 for
+    /// parks and for instant-resume models).
+    pub warmup_s: f64,
+}
+
 /// The server subsystem: the sharded pool plus every policy decision
 /// around it.
 pub struct ServerSubsystem<'a> {
@@ -84,6 +97,14 @@ pub struct ServerSubsystem<'a> {
     dispatch_kind: DispatchKind,
     slack_batch: bool,
     scaler: Option<PoolScaler>,
+    /// Per-shard SLO-headroom EWMAs (fed on every offered request when
+    /// the headroom autoscaler is configured; idle otherwise).
+    headroom: HeadroomTracker,
+    /// Whether the configured scaler reads the headroom signal.
+    track_headroom: bool,
+    /// Scenario-wide warm-up override (`ServerPolicy::warmup_ms`);
+    /// `None` defers to each model's registry `warmup_ms`.
+    warmup_override_ms: Option<f64>,
     /// One §IV-E controller per replica (empty = switching disabled);
     /// each drives its own replica independently along the ladder.
     switchers: Vec<SwitchController>,
@@ -114,6 +135,11 @@ impl<'a> ServerSubsystem<'a> {
             dispatch_kind: policy.dispatch,
             slack_batch: policy.slack_batch,
             scaler: policy.autoscale.map(PoolScaler::new),
+            headroom: HeadroomTracker::new(),
+            track_headroom: policy
+                .autoscale
+                .map_or(false, |a| a.mode == AutoscaleMode::Headroom),
+            warmup_override_ms: policy.warmup_ms,
             switchers,
             latency_of,
             cache,
@@ -155,11 +181,42 @@ impl<'a> ServerSubsystem<'a> {
         best
     }
 
+    /// Steal-aware admission floor for `shard`: the cheapest possible
+    /// remaining service in ms. That is the shard's own batch-1
+    /// latency — or, when an idle sibling replica's own shard is
+    /// drained (so it is eligible to steal this request the moment it
+    /// queues), that sibling's batch-1 latency, whichever is smaller.
+    /// Without the sibling term, a feasible request is shed against a
+    /// slow shard's curve while a fast replica sits idle one steal
+    /// away.
+    fn admission_floor_ms(&self, shard: usize) -> f64 {
+        let mut floor = self.cache.shard_batch1_ms[shard];
+        if self.pool.num_shards() > 1 {
+            for r in 0..self.pool.num_replicas() {
+                let own = self.pool.shard_of(r);
+                if own != shard
+                    && self.pool.is_idle(r)
+                    && self.pool.shard_queue_len(own) == 0
+                {
+                    floor = floor.min(self.cache.replica[r].batch_ms(1));
+                }
+            }
+        }
+        floor
+    }
+
     /// A forwarded request reached the server: route it to a shard,
     /// apply that shard's admission control (cheapest possible
-    /// remaining service = the shard's fastest replica at batch 1 plus
-    /// the return hop), and, if admitted, feed idle replicas. Returns
-    /// the verdict plus the batch-load observations for the scheduler.
+    /// remaining service per [`Self::admission_floor_ms`] plus the
+    /// return hop), and, if admitted, feed idle replicas. Returns the
+    /// verdict plus the batch-load observations for the scheduler.
+    ///
+    /// With the headroom autoscaler configured, every offer also feeds
+    /// the routed shard's SLO-headroom EWMA: normalized slack
+    /// `(deadline - predicted completion) / SLO`, where the predicted
+    /// completion charges the shard's queue depth against its unparked
+    /// capacity. Shed requests contribute their (negative) slack too —
+    /// overload must pull the signal down, not disappear from it.
     pub fn on_arrival(
         &mut self,
         t: f64,
@@ -168,11 +225,24 @@ impl<'a> ServerSubsystem<'a> {
         metrics: &mut RunMetrics,
     ) -> (ForwardingVerdict, Vec<usize>) {
         let shard = self.route();
+        if self.track_headroom {
+            let slo_s = req.deadline_s - req.start_s;
+            let capacity = self.pool.unparked_assigned_count(shard).max(1);
+            let predicted_s = t
+                + (self.pool.shard_queue_len(shard) as f64 + 1.0)
+                    * (self.cache.shard_batch1_ms[shard] / 1000.0)
+                    / capacity as f64
+                + self.comm_s;
+            if slo_s > 0.0 {
+                self.headroom
+                    .observe(shard, (req.deadline_s - predicted_s) / slo_s);
+            }
+        }
         // Only worth computing when admission control is on — this is
-        // the per-forward hot path (and now a cache read, not a model
-        // lookup).
+        // the per-forward hot path (and still cache reads, not model
+        // lookups).
         let min_service_s = if self.pool.shedding() {
-            self.cache.shard_batch1_ms[shard] / 1000.0 + self.comm_s
+            self.admission_floor_ms(shard) / 1000.0 + self.comm_s
         } else {
             0.0
         };
@@ -419,24 +489,78 @@ impl<'a> ServerSubsystem<'a> {
 
     // ----- scaling + switching ----------------------------------------
 
-    /// One autoscaler evaluation on the telemetry grid: feed the
-    /// pool's cumulative shed counter into the watermark rule (the
-    /// scaler tracks its own last-seen value, so sheds landing in a
-    /// dwell-blocked window are deferred, not lost). Returns the
-    /// action, if any; on an unpark the engine immediately offers the
-    /// queued backlog via [`Self::dispatch`].
-    pub fn autoscale_step(&mut self, grid_t: f64) -> Option<ScaleAction> {
-        let scaler = self.scaler.as_mut()?;
-        let shed_total = self.pool.shed_count();
-        let action = scaler.step(&mut self.pool, shed_total, grid_t);
-        if action.is_some() {
+    /// Effective warm-up for one replica, in seconds: the scenario
+    /// override when set, else the replica model's registry value.
+    fn warmup_s(&self, server: usize) -> f64 {
+        self.warmup_override_ms
+            .unwrap_or(self.cache.replica[server].warmup_ms)
+            .max(0.0)
+            / 1000.0
+    }
+
+    /// One autoscaler evaluation on the telemetry grid, dispatching on
+    /// the configured [`AutoscaleMode`]:
+    ///
+    /// * `queue` — the pool-global watermark rule, fed the pool's
+    ///   cumulative shed counter (the scaler tracks its own last-seen
+    ///   value, so sheds landing in a dwell-blocked window are
+    ///   deferred, not lost). At most one action per evaluation.
+    /// * `headroom` — per-shard decisions against each shard's
+    ///   SLO-headroom EWMA; up to one action per shard.
+    ///
+    /// Every unpark pays its replica's warm-up: with `warmup_s > 0`
+    /// the replica enters the warming state here and the engine owes
+    /// it an [`Event::ReplicaWarm`]; at zero it is dispatchable
+    /// immediately (the pre-warm-up behavior).
+    pub fn autoscale_step(&mut self, grid_t: f64) -> Vec<ScaleOutcome> {
+        let Some(scaler) = self.scaler.as_mut() else {
+            return Vec::new();
+        };
+        let actions: Vec<ScaleAction> = match scaler.mode() {
+            AutoscaleMode::Queue => {
+                let shed_total = self.pool.shed_count();
+                scaler
+                    .step(&mut self.pool, shed_total, grid_t)
+                    .into_iter()
+                    .collect()
+            }
+            AutoscaleMode::Headroom => {
+                scaler.step_headroom(&mut self.pool, &self.headroom, grid_t)
+            }
+        };
+        let outcomes: Vec<ScaleOutcome> = actions
+            .into_iter()
+            .map(|action| {
+                let warmup_s = match action {
+                    ScaleAction::Unparked(server) => {
+                        let w = self.warmup_s(server);
+                        if w > 0.0 {
+                            self.pool.begin_warmup(server, grid_t);
+                        }
+                        w
+                    }
+                    ScaleAction::Parked(_) => 0.0,
+                };
+                ScaleOutcome { action, warmup_s }
+            })
+            .collect();
+        if !outcomes.is_empty() {
             // Park/unpark changes nothing the cache stores today (the
             // admission floor deliberately counts parked replicas),
             // but scale events are rare and this keeps the cache
             // contract trivial: rebuilt on any placement/state change.
             self.rebuild_cache();
         }
-        action
+        outcomes
+    }
+
+    /// A resumed replica's warm-up completed (`Event::ReplicaWarm`):
+    /// it becomes dispatchable, and the cache rebuild hook runs for
+    /// the cold->warm transition like it does for every other
+    /// placement/state change.
+    pub fn on_replica_warm(&mut self, server: usize, t: f64) {
+        self.pool.finish_warmup(server, t);
+        self.rebuild_cache();
     }
 
     /// Whether any §IV-E switch controller is installed — lets the
@@ -484,6 +608,45 @@ impl<'a> ServerSubsystem<'a> {
 
     pub fn parked_count(&self) -> usize {
         self.pool.parked_count()
+    }
+
+    pub fn warming_count(&self) -> usize {
+        self.pool.warming_count()
+    }
+
+    /// Per-replica state probes (test/telemetry surface).
+    pub fn is_replica_busy(&self, server: usize) -> bool {
+        !self.pool.is_idle(server)
+            && !self.pool.is_parked(server)
+            && !self.pool.is_warming(server)
+    }
+
+    pub fn is_replica_parked(&self, server: usize) -> bool {
+        self.pool.is_parked(server)
+    }
+
+    pub fn is_replica_warming(&self, server: usize) -> bool {
+        self.pool.is_warming(server)
+    }
+
+    pub fn warmup_replica_seconds(&self, now: f64) -> f64 {
+        self.pool.warmup_replica_seconds(now)
+    }
+
+    /// The routed shard's current SLO-headroom EWMA (None until a
+    /// request has been offered, or when the headroom scaler is off).
+    pub fn shard_headroom(&self, shard: usize) -> Option<f64> {
+        self.headroom.value(shard)
+    }
+
+    /// Unparked replicas assigned to `shard` (test/telemetry surface
+    /// for the never-park-the-last-replica invariant).
+    pub fn unparked_in_shard(&self, shard: usize) -> usize {
+        self.pool.unparked_assigned_count(shard)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.pool.num_shards()
     }
 
     pub fn steal_count(&self) -> usize {

@@ -229,6 +229,18 @@ pub fn server_flags(args: &mut Args) -> &mut Args {
             "autoscale",
             "park idle replicas on low queue pressure, unpark on backlog",
         )
+        .flag(
+            "autoscale-mode",
+            "autoscale controller: queue (pressure watermarks) | headroom \
+             (per-shard SLO-headroom watermarks); implies --autoscale",
+            None,
+        )
+        .flag(
+            "warmup-ms",
+            "replica warm-up on unpark in ms (overrides the per-model \
+             registry warmup; 'none' restores registry values)",
+            None,
+        )
 }
 
 impl Matches {
@@ -363,12 +375,28 @@ mod tests {
         assert!(!m.get_bool("shed"));
         assert!(!m.get_bool("slack-batch"));
         assert!(!m.get_bool("autoscale"));
+        // The mode/warm-up flags have NO default: absent unless typed,
+        // so they can never auto-enable the autoscale section.
+        assert_eq!(m.get("autoscale-mode"), None);
+        assert_eq!(m.get("warmup-ms"), None);
         let m = a
-            .parse(&argv(&["--servers", "4", "--queue", "edf", "--shed"]))
+            .parse(&argv(&[
+                "--servers",
+                "4",
+                "--queue",
+                "edf",
+                "--shed",
+                "--autoscale-mode",
+                "headroom",
+                "--warmup-ms",
+                "250",
+            ]))
             .unwrap();
         assert_eq!(m.get_usize("servers").unwrap(), 4);
         assert_eq!(m.get_str("queue").unwrap(), "edf");
         assert!(m.get_bool("shed"));
+        assert_eq!(m.get("autoscale-mode"), Some("headroom"));
+        assert_eq!(m.get("warmup-ms"), Some("250"));
     }
 
     #[test]

@@ -169,6 +169,19 @@ pub fn seed_summary(values: &[f64]) -> SeedSummary {
     SeedSummary { mean, min, max }
 }
 
+/// FNV-1a 64-bit hash — the stable, dependency-free content digest
+/// behind the golden-trace fixtures and the `bench scale` scenario
+/// digest. Not cryptographic; used only to detect drift in
+/// deterministic outputs.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,5 +251,15 @@ mod tests {
         assert!(Running::new().mean().is_nan());
         assert!(Samples::new().mean().is_nan());
         assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Reference values of the FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+        // Sensitivity: one flipped byte changes the digest.
+        assert_ne!(fnv1a64(b"trace-a"), fnv1a64(b"trace-b"));
     }
 }

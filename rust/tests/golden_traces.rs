@@ -1,0 +1,201 @@
+//! Golden-trace test harness: every shipped preset runs at a fixed
+//! seed on the synthetic tables, and its end-of-run `RunMetrics`
+//! snapshot plus an FNV-1a hash of the full telemetry-trace CSV are
+//! pinned against committed fixtures under
+//! `rust/tests/fixtures/golden/<preset>.json`.
+//!
+//! Any behavioral drift — one extra shed, one different batch, one
+//! changed trace point — shows up as a readable per-field diff, not a
+//! distant sweep regression. Intentional changes are blessed with
+//!
+//! ```sh
+//! MTPP_BLESS=1 cargo test --test golden_traces
+//! ```
+//!
+//! and the regenerated fixtures committed alongside the change. A
+//! missing fixture (fresh checkout, new preset) is bootstrapped on
+//! first run — commit the generated file to arm drift detection; CI
+//! runs the suite a second time against whatever is on disk, so
+//! nondeterminism is caught even before fixtures land in the tree.
+
+use std::path::{Path, PathBuf};
+
+use multitascpp::config::spec::{preset_names, ScenarioSpec};
+use multitascpp::experiments::common::trace_csv;
+use multitascpp::experiments::Ctx;
+use multitascpp::metrics::RunMetrics;
+use multitascpp::util::json::Json;
+use multitascpp::util::stats::fnv1a64;
+
+/// Stream length every golden run is clipped to: long enough that
+/// queueing, shedding, stealing, and autoscaling all fire on the
+/// presets that configure them, short enough for CI.
+const GOLDEN_SAMPLES: usize = 120;
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/golden")
+}
+
+fn bless_requested() -> bool {
+    std::env::var("MTPP_BLESS").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+fn ctx() -> Ctx {
+    Ctx::synthetic(&std::env::temp_dir().join("mtpp_golden_results"), true).unwrap()
+}
+
+fn run_preset(ctx: &mut Ctx, name: &str) -> RunMetrics {
+    let mut spec = ScenarioSpec::preset(name).expect(name);
+    spec.set("samples", &GOLDEN_SAMPLES.to_string()).unwrap();
+    ctx.run_spec(&spec).expect(name)
+}
+
+/// The pinned snapshot: every deterministic end-of-run counter plus
+/// the trace-CSV digest. Floats serialize shortest-roundtrip through
+/// the JSON layer, so equality below is exact, not approximate.
+fn snapshot(preset: &str, m: &RunMetrics) -> Json {
+    Json::obj(vec![
+        ("preset", Json::str(preset)),
+        ("samples_per_device", Json::num(GOLDEN_SAMPLES as f64)),
+        ("samples", Json::num(m.overall.samples as f64)),
+        ("satisfied", Json::num(m.overall.satisfied as f64)),
+        ("correct", Json::num(m.overall.correct as f64)),
+        ("forwarded", Json::num(m.overall.forwarded as f64)),
+        ("shed", Json::num(m.shed as f64)),
+        ("steals", Json::num(m.steals as f64)),
+        ("scale_events", Json::num(m.scale_events as f64)),
+        ("events", Json::num(m.events as f64)),
+        ("latency_count", Json::num(m.latencies.len() as f64)),
+        (
+            "per_server_batches",
+            Json::Arr(
+                m.per_server_batches
+                    .iter()
+                    .map(|&b| Json::num(b as f64))
+                    .collect(),
+            ),
+        ),
+        ("makespan_s", Json::num(m.makespan_s)),
+        ("parked_replica_seconds", Json::num(m.parked_replica_seconds)),
+        ("warmup_replica_seconds", Json::num(m.warmup_replica_seconds)),
+        ("trace_points", Json::num(m.trace.len() as f64)),
+        (
+            "trace_hash",
+            Json::str(&format!("{:016x}", fnv1a64(trace_csv(m).as_bytes()))),
+        ),
+    ])
+}
+
+fn write_fixture(path: &Path, snap: &Json) {
+    let mut text = snap.pretty(2);
+    text.push('\n');
+    std::fs::write(path, text).unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+}
+
+/// Field-by-field comparison with readable one-line diffs.
+fn diff_fields(preset: &str, fixture: &Json, fresh: &Json, drift: &mut Vec<String>) {
+    let fresh_obj = fresh.as_obj().expect("snapshot is an object");
+    let fixture_obj = match fixture.as_obj() {
+        Some(o) => o,
+        None => {
+            drift.push(format!("{preset}: fixture is not a JSON object"));
+            return;
+        }
+    };
+    for (key, new_val) in fresh_obj {
+        match fixture_obj.get(key) {
+            None => drift.push(format!(
+                "{preset}.{key}: missing from fixture (now {new_val})"
+            )),
+            Some(old_val) if old_val != new_val => drift.push(format!(
+                "{preset}.{key}: fixture {old_val} vs current {new_val}"
+            )),
+            Some(_) => {}
+        }
+    }
+    for key in fixture_obj.keys() {
+        if !fresh_obj.contains_key(key) {
+            drift.push(format!("{preset}.{key}: in fixture but no longer produced"));
+        }
+    }
+}
+
+/// The harness proper: every shipped preset, one fixture each.
+#[test]
+fn golden_traces_pin_every_preset() {
+    let bless = bless_requested();
+    let dir = fixture_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut ctx = ctx();
+    let mut drift = Vec::new();
+    for name in preset_names() {
+        let fresh = snapshot(name, &run_preset(&mut ctx, name));
+        let path = dir.join(format!("{name}.json"));
+        if bless {
+            write_fixture(&path, &fresh);
+            eprintln!("[golden] blessed {}", path.display());
+            continue;
+        }
+        if !path.exists() {
+            // Fresh checkout or brand-new preset: bootstrap the
+            // fixture so later runs (and CI's second pass) compare
+            // against it. Commit the file to arm drift detection.
+            write_fixture(&path, &fresh);
+            eprintln!(
+                "[golden] bootstrapped missing fixture {} — commit it to pin this preset",
+                path.display()
+            );
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let fixture = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("fixture {} is not valid JSON: {e}", path.display()));
+        diff_fields(name, &fixture, &fresh, &mut drift);
+    }
+    assert!(
+        drift.is_empty(),
+        "golden-trace drift in {} field(s):\n  {}\n\nIf this change is intentional, \
+         regenerate the fixtures with `MTPP_BLESS=1 cargo test --test golden_traces` \
+         and commit them.",
+        drift.len(),
+        drift.join("\n  ")
+    );
+}
+
+/// The harness is only as good as the runs are repeatable: the same
+/// preset twice in one process must produce identical snapshots
+/// (including the trace hash), so a fixture mismatch always means
+/// drift, never noise.
+#[test]
+fn golden_runs_are_deterministic_within_a_process() {
+    let mut ctx = ctx();
+    for name in ["seed-baseline", "sharded-pool", "headroom-autoscale"] {
+        let a = snapshot(name, &run_preset(&mut ctx, name));
+        let b = snapshot(name, &run_preset(&mut ctx, name));
+        assert_eq!(a, b, "{name}: back-to-back runs must be bit-identical");
+    }
+}
+
+/// `MTPP_BLESS=1` must regenerate a fixture that the comparing path
+/// then accepts verbatim: bless -> parse -> diff is empty.
+#[test]
+fn blessed_fixture_roundtrips_through_the_differ() {
+    let mut ctx = ctx();
+    let fresh = snapshot("seed-baseline", &run_preset(&mut ctx, "seed-baseline"));
+    let dir = std::env::temp_dir().join("mtpp_golden_bless_check");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("seed-baseline.json");
+    write_fixture(&path, &fresh);
+    let reparsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let mut drift = Vec::new();
+    diff_fields("seed-baseline", &reparsed, &fresh, &mut drift);
+    assert!(drift.is_empty(), "bless/compare asymmetry: {drift:?}");
+    // And the differ actually bites: perturb one counter and it must
+    // report exactly that field.
+    let mut perturbed = fresh.as_obj().unwrap().clone();
+    perturbed.insert("shed".into(), Json::num(9999.0));
+    let mut drift = Vec::new();
+    diff_fields("seed-baseline", &Json::Obj(perturbed), &fresh, &mut drift);
+    assert_eq!(drift.len(), 1, "{drift:?}");
+    assert!(drift[0].contains("seed-baseline.shed"), "{drift:?}");
+}

@@ -1,0 +1,453 @@
+//! Property and regression tests for the SLO-headroom autoscaler,
+//! replica warm-up costs, and shard-aware parking.
+//!
+//! Pinned here:
+//! * (a) the headroom controller never leaves a shard without an
+//!   unparked replica, and never drops the pool below `min_active` —
+//!   across randomized policies, observation streams, and busy/idle
+//!   churn;
+//! * (b) a replica resumed with a warm-up cost is never dispatched
+//!   before its `ReplicaWarm` event (direct subsystem drive plus
+//!   end-to-end runs over the pool's hard assert);
+//! * (c) `mode=queue` with `warmup_ms=0` is bit-identical to the PR 4
+//!   queue-pressure scaler on the `hetero_pool` fixtures — the new
+//!   knobs are pure extensions;
+//! * the acceptance comparison: on the `hetero-pool` sweep's
+//!   autoscaled variant, the headroom controller spends FEWER parked
+//!   replica-seconds at equal-or-better SLO satisfaction than the
+//!   queue-pressure scaler (it refuses to park capacity the SLOs still
+//!   need), while in genuine underload it still parks surplus.
+
+use multitascpp::config::latency::server_latency_model;
+use multitascpp::config::scenario::{
+    AutoscaleMode, AutoscalePolicy, Scenario, SchedulerKind, ServerPolicy, ShardingKind,
+};
+use multitascpp::config::spec::ScenarioSpec;
+use multitascpp::config::SystemConfig;
+use multitascpp::data::dataset::Dataset;
+use multitascpp::metrics::RunMetrics;
+use multitascpp::models::outputs::SyntheticOutputs;
+use multitascpp::models::registry::test_meta_json;
+use multitascpp::models::{Registry, Tier};
+use multitascpp::sim::event::EventQueue;
+use multitascpp::sim::{
+    run_scenario, HeadroomTracker, PendingRequest, PoolScaler, ScaleAction, ServerPool,
+    ServerSubsystem,
+};
+use multitascpp::util::prng::Rng;
+
+// --- harness (same shape as tests/hetero_pool.rs) ---------------------------
+
+fn registry() -> Registry {
+    Registry::from_meta(std::path::Path::new("/tmp/test_artifacts"), &test_meta_json()).unwrap()
+}
+
+fn dataset() -> Dataset {
+    Dataset::synthetic_for_tests(5000, 4, 10)
+}
+
+fn run(scn: &Scenario) -> RunMetrics {
+    let cfg = SystemConfig::default();
+    let reg = registry();
+    let ds = dataset();
+    let mut prov = SyntheticOutputs::new(
+        ds.n,
+        &[
+            ("dev_low", 0.72),
+            ("dev_mid", 0.75),
+            ("dev_high", 0.77),
+            ("srv_inception", 0.785),
+            ("srv_effnetb3", 0.815),
+        ],
+        42,
+    )
+    .into_cached();
+    run_scenario(scn, &cfg, &reg, &ds, &mut prov).unwrap()
+}
+
+fn mixed_criticality(n: usize, samples: usize) -> Scenario {
+    Scenario::heterogeneous(n, "srv_inception")
+        .with_scheduler(SchedulerKind::Static)
+        .with_slo(150.0)
+        .with_tier_slo(Tier::Low, 100.0)
+        .with_tier_slo(Tier::High, 400.0)
+        .with_samples(samples)
+        .with_seed(0)
+}
+
+fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.overall.samples, b.overall.samples, "{what}: samples");
+    assert_eq!(a.overall.satisfied, b.overall.satisfied, "{what}: satisfied");
+    assert_eq!(a.overall.correct, b.overall.correct, "{what}: correct");
+    assert_eq!(a.overall.forwarded, b.overall.forwarded, "{what}: forwarded");
+    assert_eq!(a.shed, b.shed, "{what}: shed");
+    assert_eq!(a.steals, b.steals, "{what}: steals");
+    assert_eq!(a.scale_events, b.scale_events, "{what}: scale events");
+    assert_eq!(
+        a.per_server_batches, b.per_server_batches,
+        "{what}: per-replica batches"
+    );
+    assert_eq!(
+        a.latencies.values(),
+        b.latencies.values(),
+        "{what}: latency sequence"
+    );
+    assert!(
+        (a.makespan_s - b.makespan_s).abs() < 1e-12,
+        "{what}: makespan {} vs {}",
+        a.makespan_s,
+        b.makespan_s
+    );
+}
+
+// --- (a) shard-aware parking invariants, randomized -------------------------
+
+/// Randomized pool/scaler churn: whatever the observation stream, the
+/// busy/idle pattern, or the watermarks, the headroom controller never
+/// leaves a shard with assigned replicas at zero unparked capacity and
+/// never drops the pool below `min_active`.
+#[test]
+fn prop_headroom_scaler_never_strands_a_shard() {
+    let models = ["srv_inception", "srv_effnetb3", "srv_deit"];
+    let mut rng = Rng::new(0x5EAD_400);
+    for case in 0..60 {
+        let replicas = 2 + rng.next_below(4) as usize;
+        let placement: Vec<String> = (0..replicas)
+            .map(|_| models[rng.next_below(3) as usize].to_string())
+            .collect();
+        let low = rng.next_range_f64(-0.4, 0.3);
+        let cfg = AutoscalePolicy {
+            mode: AutoscaleMode::Headroom,
+            headroom_low: low,
+            headroom_high: low + rng.next_range_f64(0.05, 0.6),
+            min_active: 1 + rng.next_below(replicas as u64) as usize,
+            dwell_s: rng.next_range_f64(0.0, 2.0),
+            ..AutoscalePolicy::default()
+        };
+        let policy = ServerPolicy {
+            replicas,
+            models: placement,
+            sharding: ShardingKind::PerModel,
+            autoscale: Some(cfg),
+            ..ServerPolicy::default()
+        };
+        let mut pool = ServerPool::new(&policy, "srv_inception");
+        assert_eq!(
+            pool.active_count(),
+            replicas,
+            "case {case}: headroom pools start fully active"
+        );
+        let mut scaler = PoolScaler::new(cfg);
+        let mut tracker = HeadroomTracker::new();
+        let mut next_id = 0usize;
+        for step in 0..200 {
+            let now = step as f64;
+            // Random churn: admissions, service, completions.
+            for shard in 0..pool.num_shards() {
+                if rng.next_bool(0.4) {
+                    pool.admit_to(
+                        shard,
+                        PendingRequest {
+                            id: next_id,
+                            device: 0,
+                            tier: Tier::Low,
+                            start_s: now,
+                            deadline_s: now + 1.0,
+                            arrival_s: now,
+                        },
+                        now,
+                        0.0,
+                    );
+                    next_id += 1;
+                }
+                while pool.shard_queue_len(shard) > 0 {
+                    let Some(server) = pool.next_idle_in_shard(shard) else {
+                        break;
+                    };
+                    pool.start_batch(server, 4, now, 0.0);
+                }
+            }
+            for server in 0..pool.num_replicas() {
+                if !pool.is_idle(server) && !pool.is_parked(server) && rng.next_bool(0.7) {
+                    pool.finish_batch(server);
+                }
+            }
+            if rng.next_bool(0.8) {
+                let shard = rng.next_below(pool.num_shards() as u64) as usize;
+                tracker.observe(shard, rng.next_range_f64(-1.0, 1.2));
+            }
+            for action in scaler.step_headroom(&mut pool, &tracker, now) {
+                // Each action is internally consistent with the pool.
+                match action {
+                    ScaleAction::Parked(s) => assert!(pool.is_parked(s)),
+                    ScaleAction::Unparked(s) => assert!(!pool.is_parked(s)),
+                }
+            }
+            // THE invariants, after every evaluation.
+            assert!(
+                pool.active_count() >= cfg.min_active,
+                "case {case} step {step}: pool dropped below min_active"
+            );
+            for shard in 0..pool.num_shards() {
+                if pool.assigned_count(shard) > 0 {
+                    assert!(
+                        pool.unparked_assigned_count(shard) >= 1,
+                        "case {case} step {step}: shard {shard} has zero unparked replicas"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// --- (b) warm replicas are invisible to dispatch ----------------------------
+
+/// Direct subsystem drive: an unpark under non-zero `warmup_ms` leaves
+/// the replica warming — backlog piles up rather than being served by
+/// it — until `on_replica_warm` (the `ReplicaWarm` event handler)
+/// flips it dispatchable.
+#[test]
+fn warming_replica_serves_only_after_its_warm_event() {
+    let cfg = SystemConfig::default();
+    let latency_of = |m: &str| server_latency_model(m);
+    let scale = AutoscalePolicy {
+        mode: AutoscaleMode::Headroom,
+        headroom_low: 0.2,
+        headroom_high: 0.6,
+        min_active: 1,
+        dwell_s: 0.0,
+        ..AutoscalePolicy::default()
+    };
+    let policy = ServerPolicy {
+        replicas: 2,
+        shed: false,
+        warmup_ms: Some(500.0),
+        autoscale: Some(scale),
+        ..ServerPolicy::default()
+    };
+    let mut sub = ServerSubsystem::new(&cfg, &policy, "srv_inception", Vec::new(), &latency_of);
+    let mut events = EventQueue::new();
+    let mut metrics = RunMetrics::default();
+    let req = |id: usize, start_s: f64, deadline_s: f64| PendingRequest {
+        id,
+        device: 0,
+        tier: Tier::Low,
+        start_s,
+        deadline_s,
+        arrival_s: start_s,
+    };
+    // Feed comfortable requests until the EWMA crosses the park line:
+    // the surplus replica parks.
+    let mut t = 0.0;
+    let mut parked = false;
+    for id in 0..50 {
+        sub.on_arrival(t, req(id, t, t + 10.0), &mut events, &mut metrics);
+        // Complete in-flight work so a replica is idle (parkable) at
+        // evaluation time.
+        for server in 0..2 {
+            if sub.is_replica_busy(server) {
+                let _ = sub.finish_batch(server);
+            }
+        }
+        t += 1.0;
+        let outcomes = sub.autoscale_step(t);
+        if outcomes
+            .iter()
+            .any(|o| matches!(o.action, ScaleAction::Parked(_)))
+        {
+            parked = true;
+            break;
+        }
+    }
+    assert!(parked, "comfortable headroom must park the surplus replica");
+    assert_eq!(sub.parked_count(), 1);
+    // Now crash the headroom signal: the scaler unparks — into warm-up,
+    // not into service.
+    let mut unparked_warming = false;
+    for id in 100..160 {
+        sub.on_arrival(t, req(id, t - 0.14, t + 0.01), &mut events, &mut metrics);
+        t += 1.0;
+        let outcomes = sub.autoscale_step(t);
+        if let Some(o) = outcomes
+            .iter()
+            .find(|o| matches!(o.action, ScaleAction::Unparked(_)))
+        {
+            assert!(
+                o.warmup_s > 0.49 && o.warmup_s < 0.51,
+                "unpark must carry the 500 ms warm-up, got {}",
+                o.warmup_s
+            );
+            unparked_warming = true;
+            break;
+        }
+    }
+    assert!(unparked_warming, "eroding headroom must unpark");
+    assert_eq!(sub.warming_count(), 1);
+    let warming = (0..2).find(|&s| sub.is_replica_warming(s)).unwrap();
+    let before = sub.batches_per_replica()[warming];
+    // Backlog + dispatch rounds while warming: the replica serves
+    // nothing (the pool would hard-panic if dispatch selected it).
+    for id in 200..210 {
+        sub.on_arrival(t, req(id, t, t + 10.0), &mut events, &mut metrics);
+    }
+    assert_eq!(
+        sub.batches_per_replica()[warming],
+        before,
+        "warming replica must not serve"
+    );
+    // Warm-up completes: the replica joins dispatch and serves.
+    sub.on_replica_warm(warming, t + 0.5);
+    assert_eq!(sub.warming_count(), 0);
+    sub.dispatch(t + 0.5, &mut events, &mut metrics);
+    assert!(
+        sub.batches_per_replica()[warming] > before || sub.queue_len() == 0,
+        "a warm replica with backlog must serve"
+    );
+}
+
+/// End-to-end: overloaded runs with non-zero warm-up complete and
+/// conserve samples under the pool's start-batch assert — any dispatch
+/// to a warming replica would panic the run. Warm-up seconds surface
+/// in the metrics and the `warming_servers` trace column.
+#[test]
+fn warmup_runs_conserve_samples_and_report_warm_seconds() {
+    let scn = mixed_criticality(60, 300)
+        .with_replicas(4)
+        .with_warmup_ms(400.0)
+        .with_autoscale(AutoscalePolicy::default()); // queue mode + warm-up
+    let m = run(&scn);
+    assert_eq!(m.overall.samples, 60 * 300, "sample conservation");
+    assert!(m.scale_events >= 1, "overload must trigger scale-ups");
+    assert!(
+        m.warmup_replica_seconds > 0.0,
+        "every unpark must pay warm-up seconds"
+    );
+    assert!(
+        m.trace.iter().any(|p| p.warming_servers > 0),
+        "the trace must expose warming replicas"
+    );
+}
+
+// --- (c) queue mode + warmup 0 is the PR 4 scaler ---------------------------
+
+/// `mode=queue` with `warmup_ms=0` (explicit or defaulted) must be
+/// bit-identical to the pre-headroom autoscaler on the `hetero_pool`
+/// fixtures: the new fields are pure extensions, and the unused
+/// headroom watermarks cannot perturb the queue controller.
+#[test]
+fn queue_mode_with_zero_warmup_is_bit_identical_to_pr4_scaler() {
+    let base = mixed_criticality(24, 300)
+        .with_replicas(3)
+        .with_autoscale(AutoscalePolicy::default());
+    let explicit = mixed_criticality(24, 300)
+        .with_replicas(3)
+        .with_autoscale(AutoscalePolicy {
+            mode: AutoscaleMode::Queue,
+            // Headroom watermarks are dead knobs under the queue
+            // controller: crank them to absurd values.
+            headroom_high: 100.0,
+            headroom_low: -100.0,
+            ..AutoscalePolicy::default()
+        })
+        .with_warmup_ms(0.0);
+    assert_bit_identical(
+        &run(&base),
+        &run(&explicit),
+        "queue mode + warmup 0 parity",
+    );
+    // And via the spec surface (the dotted paths `mtpp sim` uses).
+    let mut spec = ScenarioSpec::from_scenario(&base);
+    spec.set("server.autoscale.mode", "queue").unwrap();
+    spec.set("server.warmup_ms", "0").unwrap();
+    let scn = spec.validate().unwrap();
+    assert_bit_identical(&run(&base), &run(&scn), "spec-path parity");
+}
+
+// --- the acceptance comparison ----------------------------------------------
+
+/// The `hetero-pool` sweep's autoscaled variant under both
+/// controllers: on the overloaded fixture workload the headroom
+/// controller must spend FEWER parked replica-seconds at
+/// equal-or-better SLO satisfaction — it refuses to park (or start
+/// cold) capacity the SLOs still need, which is exactly the failure
+/// mode of the queue-pressure proxy the tentpole replaces.
+#[test]
+fn headroom_beats_queue_scaler_on_parked_seconds_at_equal_or_better_sr() {
+    let policies: std::collections::BTreeMap<&str, ServerPolicy> =
+        multitascpp::experiments::figures::hetero_pool_policies()
+            .into_iter()
+            .collect();
+    let queue = policies["hetero-auto"].clone();
+    let headroom = policies["auto-headroom"].clone();
+    assert_eq!(
+        queue.models, headroom.models,
+        "the two variants must differ only in the controller"
+    );
+    let base = mixed_criticality(60, 400);
+    let q = run(&base.clone().with_server_policy(queue));
+    let h = run(&base.clone().with_server_policy(headroom));
+    assert_eq!(q.overall.samples, h.overall.samples);
+    assert!(
+        h.parked_replica_seconds < q.parked_replica_seconds,
+        "headroom must park less under load: {:.1} vs queue {:.1} replica-s",
+        h.parked_replica_seconds,
+        q.parked_replica_seconds
+    );
+    assert!(
+        h.overall.satisfaction_rate() >= q.overall.satisfaction_rate() - 1e-9,
+        "headroom SR {:.2} must be equal-or-better than queue SR {:.2}",
+        h.overall.satisfaction_rate(),
+        q.overall.satisfaction_rate()
+    );
+}
+
+/// The other side of the bargain: in genuine underload the headroom
+/// controller still parks surplus capacity (banking parked seconds)
+/// without hurting satisfaction.
+#[test]
+fn headroom_scaler_parks_surplus_capacity_in_underload() {
+    let scn = Scenario::heterogeneous(6, "srv_inception")
+        .with_scheduler(SchedulerKind::Static)
+        .with_slo(150.0)
+        .with_samples(300)
+        .with_seed(0)
+        .with_replicas(3)
+        .with_autoscale(AutoscalePolicy {
+            mode: AutoscaleMode::Headroom,
+            ..AutoscalePolicy::default()
+        });
+    let m = run(&scn);
+    assert_eq!(m.overall.samples, 6 * 300);
+    assert!(
+        m.parked_replica_seconds > 0.0,
+        "underload surplus must be parked"
+    );
+    assert!(
+        m.trace.iter().any(|p| p.parked_servers > 0),
+        "trace should expose parked replicas"
+    );
+    assert!(
+        m.overall.satisfaction_rate() > 90.0,
+        "one active replica covers this load: SR {:.2}",
+        m.overall.satisfaction_rate()
+    );
+}
+
+/// The shipped preset exercises everything at once: per-model shards,
+/// headroom parking, 250 ms warm-up, shedding — and conserves samples.
+#[test]
+fn headroom_autoscale_preset_runs_end_to_end() {
+    let mut spec = ScenarioSpec::preset("headroom-autoscale").unwrap();
+    spec.set("samples", "120").unwrap();
+    let scn = spec.validate().unwrap();
+    assert_eq!(
+        scn.server.autoscale.unwrap().mode,
+        AutoscaleMode::Headroom
+    );
+    assert_eq!(scn.server.warmup_ms, Some(250.0));
+    assert_eq!(scn.server.sharding, ShardingKind::PerModel);
+    let m = run(&scn);
+    assert_eq!(m.overall.samples, scn.total_devices() * 120);
+    assert!(m.overall.satisfaction_rate().is_finite());
+    assert!(m.trace.iter().all(|p| p.per_shard_depth.len() == 2));
+}

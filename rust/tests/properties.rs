@@ -152,6 +152,7 @@ fn prop_latency_model_monotone() {
             k_ms: rng.next_range_f64(0.05, 5.0),
             q_ms: 0.0,
             max_batch: 64,
+            warmup_ms: 0.0,
         };
         let mut prev_lat = 0.0;
         let mut prev_tp = 0.0;

@@ -11,8 +11,8 @@
 //!   survives a save -> load -> re-run round trip bit-identically.
 
 use multitascpp::config::scenario::{
-    AutoscalePolicy, DispatchKind, ExecMode, Intermittent, QueueKind, Scenario, SchedulerKind,
-    ServerPolicy, ShardingKind,
+    AutoscaleMode, AutoscalePolicy, DispatchKind, ExecMode, Intermittent, QueueKind, Scenario,
+    SchedulerKind, ServerPolicy, ShardingKind,
 };
 use multitascpp::config::spec::{preset_names, ScenarioSpec};
 use multitascpp::experiments::Ctx;
@@ -168,11 +168,21 @@ fn random_spec(rng: &mut Rng) -> ScenarioSpec {
         sharding: ShardingKind::ALL[rng.next_below(ShardingKind::ALL.len() as u64) as usize],
         slack_batch: rng.next_bool(0.5),
         autoscale: rng.next_bool(0.5).then(|| AutoscalePolicy {
+            mode: if rng.next_bool(0.5) {
+                AutoscaleMode::Queue
+            } else {
+                AutoscaleMode::Headroom
+            },
             queue_high: rng.next_range_f64(4.0, 16.0),
             queue_low: rng.next_range_f64(0.0, 2.0),
+            headroom_high: rng.next_range_f64(0.5, 1.0),
+            headroom_low: rng.next_range_f64(-0.5, 0.4),
             min_active: 1 + rng.next_below(replicas as u64) as usize,
             dwell_s: rng.next_range_f64(0.0, 5.0),
         }),
+        warmup_ms: rng
+            .next_bool(0.5)
+            .then(|| rng.next_range_f64(0.0, 1000.0)),
     };
     ScenarioSpec {
         devices,
@@ -292,6 +302,25 @@ fn every_validation_invariant_rejects() {
             dwell_s: -1.0,
             ..AutoscalePolicy::default()
         })
+    });
+    rejects("inverted headroom watermarks", "headroom", |s| {
+        s.server.autoscale = Some(AutoscalePolicy {
+            headroom_high: 0.1,
+            headroom_low: 0.5,
+            ..AutoscalePolicy::default()
+        })
+    });
+    rejects("NaN headroom watermark", "headroom", |s| {
+        s.server.autoscale = Some(AutoscalePolicy {
+            headroom_high: f64::NAN,
+            ..AutoscalePolicy::default()
+        })
+    });
+    rejects("negative warmup", "warmup_ms", |s| {
+        s.server.warmup_ms = Some(-10.0)
+    });
+    rejects("NaN warmup", "warmup_ms", |s| {
+        s.server.warmup_ms = Some(f64::NAN)
     });
     rejects("threshold out of range", "initial_threshold", |s| {
         s.initial_threshold = Some(1.5)

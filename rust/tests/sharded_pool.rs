@@ -266,6 +266,74 @@ fn admission_is_shard_local_on_a_mixed_pool() {
     assert_eq!(v, ForwardingVerdict::Queued);
 }
 
+/// Regression for steal-aware admission (ROADMAP "steal-aware
+/// admission: count sibling capacity"): the routed shard's floor used
+/// to be its own model's batch-1 latency alone, so a request only a
+/// fast *sibling* could serve in time was shed even though that
+/// sibling sat idle with a drained shard — one steal away from serving
+/// it. The floor now counts idle sibling-shard capacity eligible to
+/// steal.
+///
+/// Numbers: both EfficientNetB3 replicas are busy, so the arrival
+/// routes to the effnet shard ((0+1) x 25.06 / 2 = 12.53 beats
+/// inception's 15.03). A 20 ms deadline fits InceptionV3's 15.03 ms
+/// batch-1 + 2 ms return hop but not EfficientNetB3's 25.06 + 2 ms:
+/// the old shard-local floor shed it; with the idle inception replica
+/// (own shard empty) counted, it is admitted and immediately stolen.
+#[test]
+fn steal_aware_admission_counts_idle_sibling_capacity() {
+    let cfg = SystemConfig::default();
+    let latency_of = |m: &str| server_latency_model(m);
+    let policy = ServerPolicy {
+        replicas: 3,
+        models: vec![
+            "srv_effnetb3".into(),
+            "srv_effnetb3".into(),
+            "srv_inception".into(),
+        ],
+        shed: true,
+        sharding: ShardingKind::PerModel,
+        ..ServerPolicy::default()
+    };
+    let mut sub = ServerSubsystem::new(&cfg, &policy, "srv_inception", Vec::new(), &latency_of);
+    let mut events = EventQueue::new();
+    let mut metrics = RunMetrics::default();
+    let req = |id: usize, deadline_s: f64| PendingRequest {
+        id,
+        device: 0,
+        tier: Tier::Low,
+        start_s: 0.0,
+        deadline_s,
+        arrival_s: 0.0,
+    };
+    // Two generous arrivals occupy both effnet replicas (the effnet
+    // shard scores 12.53 vs inception's 15.03, so both route there).
+    for id in 0..2 {
+        let (v, _) = sub.on_arrival(0.0, req(id, 1.0), &mut events, &mut metrics);
+        assert_eq!(v, ForwardingVerdict::Queued);
+    }
+    assert_eq!(sub.busy_count(), 2);
+    assert_eq!(sub.steal_count(), 0, "own-shard service needs no steal");
+    // The tight request also routes to the (busy) effnet shard. Its
+    // 20 ms slack fits only the idle inception replica — which is
+    // eligible to steal. Admission must count it, not shed.
+    let (v, _) = sub.on_arrival(0.0, req(2, 0.020), &mut events, &mut metrics);
+    assert_eq!(
+        v,
+        ForwardingVerdict::Queued,
+        "feasible-via-steal request was shed while a sibling sat idle"
+    );
+    assert_eq!(sub.shed_count(), 0);
+    assert_eq!(sub.steal_count(), 1, "the idle inception replica steals it");
+    assert_eq!(sub.busy_count(), 3);
+    // With every replica busy there is no steal-eligible capacity left:
+    // the same tight request now sheds against the routed shard's own
+    // floor — the fix widens admission only when a sibling is idle.
+    let (v, _) = sub.on_arrival(0.0, req(3, 0.020), &mut events, &mut metrics);
+    assert_eq!(v, ForwardingVerdict::Shed);
+    assert_eq!(sub.shed_count(), 1);
+}
+
 // --- work stealing end-to-end ------------------------------------------------
 
 /// A mixed sharded pool under real load: routing concentrates work on
