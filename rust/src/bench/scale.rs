@@ -1,9 +1,10 @@
 //! `mtpp bench scale` — wall-clock engine throughput at synthetic
-//! fleet scales (100 / 500 / 1000 devices; `--smoke` shrinks the grid
-//! for CI). Starts the repo's perf trajectory: every run appends a
-//! machine-readable `BENCH_scale.json` with events/sec and simulated
-//! samples/sec per (devices, sharding) cell, so regressions in the
-//! event-loop hot path show up as numbers, not vibes.
+//! fleet scales (100 / 500 / 1000 / 5000 / 10000 devices; `--smoke`
+//! shrinks the grid for CI). Starts the repo's perf trajectory: every
+//! run APPENDS to a machine-readable `BENCH_scale.json` — the file
+//! keeps a `runs` history with events/sec and simulated samples/sec
+//! per (devices, sharding) cell, so regressions in the event-loop hot
+//! path show up as numbers PR over PR, not vibes.
 //!
 //! Runs entirely on the synthetic harness (no artifacts): a §V-A
 //! heterogeneous population against a two-replica mixed pool with
@@ -63,10 +64,13 @@ fn cell_spec(devices: usize, samples: usize, sharding: &str) -> Result<ScenarioS
 /// counts and stream length so CI can afford it while still crossing
 /// every code path (sharded + single, shed, steal).
 pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
+    // The 5k/10k cells are what the hot-path data layout work (interned
+    // model ids, request arena, timer-wheel queue) is accountable to;
+    // full mode only — `--smoke` keeps the CI grid small.
     let (device_counts, samples) = if smoke {
         (vec![20usize, 60], 80usize)
     } else {
-        (vec![100usize, 500, 1000], 300usize)
+        (vec![100usize, 500, 1000, 5000, 10000], 300usize)
     };
     // The synthetic ctx wants a results dir it never writes benches
     // into; keep it out of the repo tree.
@@ -116,47 +120,77 @@ pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
     Ok(points)
 }
 
+fn points_json(points: &[ScalePoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("label", Json::str(p.label)),
+                    ("devices", Json::num(p.devices as f64)),
+                    ("samples_per_device", Json::num(p.samples_per_device as f64)),
+                    ("seed", Json::num(p.seed as f64)),
+                    ("scenario_digest", Json::str(p.scenario_digest.as_str())),
+                    ("events", Json::num(p.events as f64)),
+                    ("shed", Json::num(p.shed as f64)),
+                    ("steals", Json::num(p.steals as f64)),
+                    ("wall_s", Json::num(p.wall_s)),
+                    ("events_per_sec", Json::num(p.events_per_sec)),
+                    ("samples_per_sec", Json::num(p.samples_per_sec)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Prior run entries from an existing report, so a new run appends to
+/// the trajectory instead of overwriting it. A pre-history file (one
+/// top-level run, no `runs` array) is adopted wholesale as the first
+/// history entry; an unreadable or unparseable file starts fresh.
+fn prior_runs(out: &Path) -> Vec<Json> {
+    let Ok(text) = std::fs::read_to_string(out) else {
+        return Vec::new();
+    };
+    let Ok(prev) = Json::parse(&text) else {
+        return Vec::new();
+    };
+    if let Some(runs) = prev.get("runs").and_then(|r| r.as_arr()) {
+        return runs.to_vec();
+    }
+    if prev.get("points").is_some() {
+        return vec![prev];
+    }
+    Vec::new()
+}
+
 fn write_report(smoke: bool, points: &[ScalePoint], out: &Path) -> Result<()> {
-    // Top-level run identity (device grid + shared seed) so one glance
-    // tells whether two BENCH_scale.json files measured the same
-    // workload grid; per-point digests pin the exact cell specs.
+    // Run identity (device grid + shared seed) so one glance tells
+    // whether two runs measured the same workload grid; per-point
+    // digests pin the exact cell specs.
     let mut device_counts: Vec<usize> = points.iter().map(|p| p.devices).collect();
     device_counts.dedup();
-    let json = Json::obj(vec![
-        ("bench", Json::str("scale")),
-        ("smoke", Json::Bool(smoke)),
-        (
-            "device_counts",
-            Json::Arr(device_counts.iter().map(|&n| Json::num(n as f64)).collect()),
-        ),
-        (
-            "seed",
-            Json::num(points.first().map_or(0.0, |p| p.seed as f64)),
-        ),
-        (
-            "points",
-            Json::Arr(
-                points
-                    .iter()
-                    .map(|p| {
-                        Json::obj(vec![
-                            ("label", Json::str(p.label)),
-                            ("devices", Json::num(p.devices as f64)),
-                            ("samples_per_device", Json::num(p.samples_per_device as f64)),
-                            ("seed", Json::num(p.seed as f64)),
-                            ("scenario_digest", Json::str(p.scenario_digest.as_str())),
-                            ("events", Json::num(p.events as f64)),
-                            ("shed", Json::num(p.shed as f64)),
-                            ("steals", Json::num(p.steals as f64)),
-                            ("wall_s", Json::num(p.wall_s)),
-                            ("events_per_sec", Json::num(p.events_per_sec)),
-                            ("samples_per_sec", Json::num(p.samples_per_sec)),
-                        ])
-                    })
-                    .collect(),
+    let identity = |points_val: Json| {
+        vec![
+            ("smoke", Json::Bool(smoke)),
+            (
+                "device_counts",
+                Json::Arr(device_counts.iter().map(|&n| Json::num(n as f64)).collect()),
             ),
-        ),
-    ]);
+            (
+                "seed",
+                Json::num(points.first().map_or(0.0, |p| p.seed as f64)),
+            ),
+            ("points", points_val),
+        ]
+    };
+    let mut runs = prior_runs(out);
+    runs.push(Json::obj(identity(points_json(points))));
+    // Top level mirrors the LATEST run (the shape consumers and the
+    // smoke test read) while `runs` accumulates the full history.
+    let mut fields = vec![("bench", Json::str("scale"))];
+    fields.extend(identity(points_json(points)));
+    fields.push(("runs", Json::Arr(runs)));
+    let json = Json::obj(fields);
     let mut text = json.pretty(2);
     text.push('\n');
     std::fs::write(out, text).with_context(|| format!("write {}", out.display()))

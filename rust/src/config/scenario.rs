@@ -2,7 +2,7 @@
 //! experiments (device mix, server model, scheduler, SLO, stream
 //! length, intermittency) in one declarative struct.
 
-use crate::models::Tier;
+use crate::models::{ModelTable, Tier};
 
 /// Which scheduling policy drives the forwarding thresholds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -288,6 +288,11 @@ pub struct Scenario {
     /// 0.35); `None` starts each device at its calibrated static
     /// threshold. Subsumes the old per-run `Overrides` side-channel.
     pub initial_threshold: Option<f64>,
+    /// Interned server-model name table, resolved once at scenario
+    /// construction (`ScenarioSpec::validate()` or the builders). The
+    /// hot simulation paths carry [`crate::models::ModelId`]s from
+    /// this table instead of `String` keys.
+    pub models: ModelTable,
 }
 
 impl Scenario {
@@ -306,6 +311,7 @@ impl Scenario {
             server: ServerPolicy::default(),
             tier_slo_ms: Vec::new(),
             initial_threshold: None,
+            models: ModelTable::builtin(),
         }
     }
 

@@ -19,7 +19,7 @@ use crate::config::scenario::{
     hetero_split, AutoscaleMode, AutoscalePolicy, DispatchKind, ExecMode, Intermittent, QueueKind,
     Scenario, SchedulerKind, ServerPolicy, ShardingKind,
 };
-use crate::models::registry::SERVER_MODELS;
+use crate::models::registry::{ModelTable, SERVER_MODELS};
 use crate::models::Tier;
 use crate::util::json::Json;
 
@@ -307,6 +307,9 @@ impl ScenarioSpec {
             );
         }
         self.check_json_ints()?;
+        // Intern model names once, here at the validation boundary:
+        // everything downstream of the Scenario carries `ModelId`s.
+        let models = ModelTable::builtin();
         Ok(Scenario {
             devices: self.devices.clone(),
             server_model: self.server_model.clone(),
@@ -320,6 +323,7 @@ impl ScenarioSpec {
             server: self.server.clone(),
             tier_slo_ms: self.tier_slo_ms.clone(),
             initial_threshold: self.initial_threshold,
+            models,
         })
     }
 

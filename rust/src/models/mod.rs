@@ -3,4 +3,4 @@
 pub mod outputs;
 pub mod registry;
 
-pub use registry::{ModelInfo, Registry, Tier};
+pub use registry::{ModelId, ModelInfo, ModelTable, Registry, Tier};

@@ -94,6 +94,97 @@ pub struct Registry {
 
 pub const SERVER_MODELS: [&str; 3] = ["srv_inception", "srv_effnetb3", "srv_deit"];
 
+/// Interned server-model identifier: a copyable index into a
+/// [`ModelTable`]. The hot simulation paths (per-arrival routing,
+/// per-dispatch scoring, per-batch accounting, switch controllers)
+/// carry these instead of `String` keys; names reappear only at the
+/// reporting/serde boundary via [`ModelTable::name`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelId(u32);
+
+impl ModelId {
+    /// Index into the owning table (also usable for dense per-model
+    /// side tables like batch counters).
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+
+    /// Resolve a name against the built-in [`SERVER_MODELS`] table.
+    /// Panics on unknown names — convenience for tests and harnesses;
+    /// engine code resolves through the scenario's `ModelTable` once
+    /// at construction time.
+    pub fn builtin(name: &str) -> ModelId {
+        ModelTable::builtin()
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown server model '{name}'"))
+    }
+}
+
+/// Name-interning table mapping server-model names to dense
+/// [`ModelId`]s. Built once at `ScenarioSpec::validate()` /
+/// `Scenario` construction; after that, every hot-path model
+/// comparison is an integer compare and every per-model table is a
+/// dense `Vec` indexed by [`ModelId::index`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ModelTable {
+    names: Vec<String>,
+}
+
+impl ModelTable {
+    /// The shipped [`SERVER_MODELS`], interned in declaration order
+    /// (so `srv_inception` is id 0, `srv_effnetb3` id 1, `srv_deit`
+    /// id 2 — stable across runs and processes).
+    pub fn builtin() -> Self {
+        let mut t = Self::default();
+        for name in SERVER_MODELS {
+            t.intern(name);
+        }
+        t
+    }
+
+    /// Id for `name`, interning it if new.
+    pub fn intern(&mut self, name: &str) -> ModelId {
+        if let Some(id) = self.get(name) {
+            return id;
+        }
+        let id = u32::try_from(self.names.len()).expect("model table exceeded u32::MAX entries");
+        self.names.push(name.to_string());
+        ModelId(id)
+    }
+
+    /// Id for `name` if already interned.
+    pub fn get(&self, name: &str) -> Option<ModelId> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| ModelId(i as u32))
+    }
+
+    /// The name an id was interned from. Panics on an id from a
+    /// different (larger) table.
+    pub fn name(&self, id: ModelId) -> &str {
+        &self.names[id.index()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Iterate interned `(id, name)` pairs in id order — the
+    /// reporting-boundary walk that turns dense per-model counters
+    /// back into name-keyed maps.
+    pub fn iter(&self) -> impl Iterator<Item = (ModelId, &str)> {
+        self.names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (ModelId(i as u32), n.as_str()))
+    }
+}
+
 impl Registry {
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let meta_path = artifacts_dir.join("meta.json");
@@ -333,6 +424,37 @@ mod tests {
             let l = r.switching.get(tier).unwrap();
             assert!(l.c_lower < l.c_upper);
         }
+    }
+
+    #[test]
+    fn model_table_interns_builtin_models_in_order() {
+        let t = ModelTable::builtin();
+        assert_eq!(t.len(), SERVER_MODELS.len());
+        for (i, name) in SERVER_MODELS.iter().enumerate() {
+            let id = t.get(name).unwrap();
+            assert_eq!(id.index(), i);
+            assert_eq!(t.name(id), *name);
+            assert_eq!(ModelId::builtin(name), id);
+        }
+        assert!(t.get("srv_nope").is_none());
+    }
+
+    #[test]
+    fn model_table_intern_is_idempotent() {
+        let mut t = ModelTable::builtin();
+        let a = t.intern("srv_inception");
+        let b = t.intern("srv_inception");
+        assert_eq!(a, b);
+        assert_eq!(t.len(), SERVER_MODELS.len());
+        let extra = t.intern("srv_custom");
+        assert_eq!(extra.index(), SERVER_MODELS.len());
+        assert_eq!(t.name(extra), "srv_custom");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown server model")]
+    fn builtin_id_rejects_unknown_names() {
+        let _ = ModelId::builtin("srv_nope");
     }
 
     #[test]

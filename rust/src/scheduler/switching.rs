@@ -21,7 +21,7 @@
 use std::collections::BTreeMap;
 
 use crate::models::registry::SwitchLimits;
-use crate::models::Tier;
+use crate::models::{ModelId, Tier};
 use crate::scheduler::DeviceId;
 
 /// Switch decision (the S(C) value).
@@ -33,8 +33,9 @@ pub enum SwitchDecision {
 }
 
 pub struct SwitchController {
-    /// Models ordered fast -> heavy (index = position on the ladder).
-    ladder: Vec<String>,
+    /// Models ordered fast -> heavy (index = position on the ladder),
+    /// as interned ids — the controller never touches a name.
+    ladder: Vec<ModelId>,
     current: usize,
     limits: BTreeMap<Tier, SwitchLimits>,
     /// Hysteresis: don't re-evaluate more often than this many seconds.
@@ -47,14 +48,14 @@ pub struct SwitchController {
 
 impl SwitchController {
     pub fn new(
-        ladder: Vec<String>,
-        initial_model: &str,
+        ladder: Vec<ModelId>,
+        initial_model: ModelId,
         limits: BTreeMap<Tier, SwitchLimits>,
     ) -> anyhow::Result<Self> {
         let current = ladder
             .iter()
-            .position(|m| m == initial_model)
-            .ok_or_else(|| anyhow::anyhow!("initial model '{initial_model}' not on ladder"))?;
+            .position(|&m| m == initial_model)
+            .ok_or_else(|| anyhow::anyhow!("initial model {initial_model:?} not on ladder"))?;
         Ok(Self {
             ladder,
             current,
@@ -65,8 +66,8 @@ impl SwitchController {
         })
     }
 
-    pub fn current_model(&self) -> &str {
-        &self.ladder[self.current]
+    pub fn current_model(&self) -> ModelId {
+        self.ladder[self.current]
     }
 
     /// Pure S(C) evaluation (paper §IV-E).
@@ -100,12 +101,12 @@ impl SwitchController {
     }
 
     /// Evaluate and, if warranted (and the dwell time has elapsed),
-    /// move along the ladder. Returns the new model name on a switch.
+    /// move along the ladder. Returns the new model id on a switch.
     pub fn maybe_switch(
         &mut self,
         thresholds: &[(DeviceId, Tier, f64)],
         now_s: f64,
-    ) -> Option<String> {
+    ) -> Option<ModelId> {
         if now_s - self.last_switch_s < self.min_dwell_s {
             return None;
         }
@@ -123,7 +124,7 @@ impl SwitchController {
         };
         self.current = next;
         self.last_switch_s = now_s;
-        Some(self.ladder[next].clone())
+        Some(self.ladder[next])
     }
 }
 
@@ -147,8 +148,11 @@ mod tests {
 
     fn ctl(initial: &str) -> SwitchController {
         SwitchController::new(
-            vec!["srv_inception".into(), "srv_effnetb3".into()],
-            initial,
+            vec![
+                ModelId::builtin("srv_inception"),
+                ModelId::builtin("srv_effnetb3"),
+            ],
+            ModelId::builtin(initial),
             limits(),
         )
         .unwrap()
@@ -161,8 +165,11 @@ mod tests {
         assert_eq!(c.decide(&ths), SwitchDecision::Heavier);
         // debounce: first evaluation arms, second fires
         assert!(c.maybe_switch(&ths, 99.0).is_none());
-        assert_eq!(c.maybe_switch(&ths, 100.0).as_deref(), Some("srv_effnetb3"));
-        assert_eq!(c.current_model(), "srv_effnetb3");
+        assert_eq!(
+            c.maybe_switch(&ths, 100.0),
+            Some(ModelId::builtin("srv_effnetb3"))
+        );
+        assert_eq!(c.current_model(), ModelId::builtin("srv_effnetb3"));
     }
 
     #[test]
@@ -176,7 +183,10 @@ mod tests {
         ];
         assert_eq!(c.decide(&ths), SwitchDecision::Faster);
         assert!(c.maybe_switch(&ths, 49.0).is_none()); // debounce arm
-        assert_eq!(c.maybe_switch(&ths, 50.0).as_deref(), Some("srv_inception"));
+        assert_eq!(
+            c.maybe_switch(&ths, 50.0),
+            Some(ModelId::builtin("srv_inception"))
+        );
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Slab-style request arena with generation-checked ids.
+//!
+//! The fleet used to keep per-request state in an append-only
+//! `Vec<Request>` that grew for the whole run (100k devices x 5000
+//! samples is tens of millions of entries) and handed raw `usize`
+//! indices to the server side. The arena replaces both problems:
+//! slots are recycled the moment a request completes, and every id
+//! carries the slot's *generation*, so a stale id (request finished,
+//! slot reused) is a hard panic instead of silently resolving to the
+//! new occupant.
+//!
+//! Ids are small `Copy` values — the fleet and the server subsystem
+//! exchange `RequestId`s through events and `PendingRequest`
+//! descriptors, never clones of request state.
+
+/// Generation-checked handle into a [`RequestArena`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RequestId {
+    slot: u32,
+    gen: u32,
+}
+
+impl RequestId {
+    /// Assemble an id from raw parts. Exists for tests and harnesses
+    /// that fabricate `PendingRequest`s without an arena; engine code
+    /// should only use ids returned by [`RequestArena::insert`].
+    pub fn from_parts(slot: u32, gen: u32) -> Self {
+        Self { slot, gen }
+    }
+
+    pub fn slot(&self) -> u32 {
+        self.slot
+    }
+
+    pub fn gen(&self) -> u32 {
+        self.gen
+    }
+}
+
+struct Slot<T> {
+    /// Bumped every time the slot's occupant is removed, invalidating
+    /// any id handed out for the previous occupant.
+    gen: u32,
+    value: Option<T>,
+}
+
+/// Slab allocator for in-flight request state. O(1) insert/get/remove;
+/// freed slots are reused LIFO so the live footprint tracks the number
+/// of requests actually in flight, not the stream length.
+pub struct RequestArena<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+}
+
+impl<T> Default for RequestArena<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> RequestArena<T> {
+    pub fn new() -> Self {
+        Self {
+            slots: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    /// Number of live (inserted, not yet removed) entries.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Store a value, returning its generation-checked id.
+    pub fn insert(&mut self, value: T) -> RequestId {
+        match self.free.pop() {
+            Some(slot) => {
+                let s = &mut self.slots[slot as usize];
+                debug_assert!(s.value.is_none(), "free list pointed at an occupied slot");
+                s.value = Some(value);
+                RequestId { slot, gen: s.gen }
+            }
+            None => {
+                let slot = u32::try_from(self.slots.len())
+                    .expect("request arena exceeded u32::MAX slots");
+                self.slots.push(Slot {
+                    gen: 0,
+                    value: Some(value),
+                });
+                RequestId { slot, gen: 0 }
+            }
+        }
+    }
+
+    fn check(&self, id: RequestId) -> &Slot<T> {
+        let s = self
+            .slots
+            .get(id.slot as usize)
+            .unwrap_or_else(|| panic!("request id {id:?} addresses a slot that never existed"));
+        assert!(
+            s.gen == id.gen && s.value.is_some(),
+            "stale request id {id:?}: slot is at generation {} ({}) — the request \
+             this id named has already completed",
+            s.gen,
+            if s.value.is_some() { "reused" } else { "free" },
+        );
+        s
+    }
+
+    /// Borrow a live entry. Panics on a stale or unknown id — a stale
+    /// id in the engine means an event outlived its request, which is
+    /// a scheduling bug, never a recoverable condition.
+    pub fn get(&self, id: RequestId) -> &T {
+        self.check(id).value.as_ref().unwrap()
+    }
+
+    /// Mutably borrow a live entry (same panic contract as [`get`]).
+    ///
+    /// [`get`]: RequestArena::get
+    pub fn get_mut(&mut self, id: RequestId) -> &mut T {
+        self.check(id);
+        self.slots[id.slot as usize].value.as_mut().unwrap()
+    }
+
+    /// Remove a live entry, freeing its slot for reuse and bumping the
+    /// generation so the removed id goes stale.
+    pub fn remove(&mut self, id: RequestId) -> T {
+        self.check(id);
+        let s = &mut self.slots[id.slot as usize];
+        let value = s.value.take().unwrap();
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(id.slot);
+        value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut a = RequestArena::new();
+        let x = a.insert("x");
+        let y = a.insert("y");
+        assert_eq!(a.len(), 2);
+        assert_eq!(*a.get(x), "x");
+        assert_eq!(*a.get(y), "y");
+        assert_eq!(a.remove(x), "x");
+        assert_eq!(a.len(), 1);
+        assert_eq!(*a.get(y), "y");
+    }
+
+    #[test]
+    fn slots_are_reused_with_new_generations() {
+        let mut a = RequestArena::new();
+        let x = a.insert(1);
+        a.remove(x);
+        let y = a.insert(2);
+        // Same slot, different generation: the arena stays compact.
+        assert_eq!(y.slot(), x.slot());
+        assert_ne!(y.gen(), x.gen());
+        assert_eq!(*a.get(y), 2);
+    }
+
+    /// The regression the generation check exists for: a completed
+    /// request's id must NOT silently resolve to the slot's next
+    /// occupant.
+    #[test]
+    #[should_panic(expected = "stale request id")]
+    fn stale_id_is_rejected_after_slot_reuse() {
+        let mut a = RequestArena::new();
+        let old = a.insert("first");
+        a.remove(old);
+        let fresh = a.insert("second");
+        assert_eq!(fresh.slot(), old.slot());
+        let _ = a.get(old); // must panic, not return "second"
+    }
+
+    #[test]
+    #[should_panic(expected = "stale request id")]
+    fn freed_id_is_rejected_before_reuse() {
+        let mut a = RequestArena::new();
+        let id = a.insert(7);
+        a.remove(id);
+        let _ = a.get(id);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale request id")]
+    fn double_remove_panics() {
+        let mut a = RequestArena::new();
+        let id = a.insert(7);
+        a.remove(id);
+        let _ = a.remove(id);
+    }
+
+    #[test]
+    #[should_panic(expected = "never existed")]
+    fn unknown_slot_panics() {
+        let a: RequestArena<u8> = RequestArena::new();
+        let _ = a.get(RequestId::from_parts(3, 0));
+    }
+
+    #[test]
+    fn get_mut_updates_in_place() {
+        let mut a = RequestArena::new();
+        let id = a.insert(10);
+        *a.get_mut(id) += 5;
+        assert_eq!(*a.get(id), 15);
+    }
+
+    #[test]
+    fn many_inserts_and_removes_stay_compact() {
+        let mut a = RequestArena::new();
+        let mut live = Vec::new();
+        for round in 0..100 {
+            for i in 0..10 {
+                live.push((a.insert(round * 10 + i), round * 10 + i));
+            }
+            // Drain half each round, oldest first.
+            for (id, v) in live.drain(..5) {
+                assert_eq!(a.remove(id), v);
+            }
+        }
+        assert_eq!(a.len(), live.len());
+        for (id, v) in live {
+            assert_eq!(*a.get(id), v);
+        }
+    }
+}

@@ -59,6 +59,7 @@ use crate::config::SystemConfig;
 use crate::metrics::{RunMetrics, TracePoint};
 use crate::models::outputs::OutputProvider;
 use crate::scheduler::{Scheduler, SwitchController};
+use crate::sim::arena::RequestId;
 use crate::sim::event::{Event, EventQueue};
 use crate::sim::fleet::{CompletionNotice, DeviceFleet};
 use crate::sim::server::ScaleAction;
@@ -184,6 +185,9 @@ impl<'a> SimEngine<'a> {
         self.metrics.shed = self.server.shed_count();
         self.metrics.steals = self.server.steal_count();
         self.metrics.per_server_batches = self.server.batches_per_replica();
+        // The per-model batch counters ran id-indexed all run; they
+        // become name-keyed only here, at the reporting boundary.
+        self.metrics.server_model_batches = self.server.model_batches_by_name();
         self.metrics.parked_replica_seconds = self.server.parked_replica_seconds(last_t);
         self.metrics.warmup_replica_seconds = self.server.warmup_replica_seconds(last_t);
         self.metrics.real_compute_ms = self.provider.real_compute_ms();
@@ -225,7 +229,7 @@ impl<'a> SimEngine<'a> {
     /// the subsystem; on a shed verdict the device gets a notice after
     /// the return hop, otherwise dispatch ran and its congestion
     /// observations feed the scheduler control loop.
-    fn on_server_arrival(&mut self, t: f64, request: usize) {
+    fn on_server_arrival(&mut self, t: f64, request: RequestId) {
         let req = self.fleet.forward_descriptor(request, t);
         let device = req.device;
         let (verdict, observed) =
@@ -245,9 +249,11 @@ impl<'a> SimEngine<'a> {
     }
 
     fn on_batch_done(&mut self, t: f64, server: usize) {
-        let (model_name, batch) = self.server.finish_batch(server);
+        let (model, batch) = self.server.finish_batch(server);
         let samples = self.fleet.samples_for(&batch);
-        let correct = self.provider.server_outputs(&model_name, &samples);
+        let correct = self
+            .provider
+            .server_outputs(self.server.model_name(model), &samples);
         let comm = self.comm_s();
         for (p, ok) in batch.iter().zip(correct) {
             self.fleet.record_server_result(p.id, ok);

@@ -1,15 +1,38 @@
-//! Event queue for the discrete-event engine: a binary heap over
-//! (virtual time, sequence number) so simultaneous events pop in
-//! deterministic FIFO order.
+//! Event queue for the discrete-event engine: a hierarchical timer
+//! wheel over integer ticks, with a sorted overflow level for
+//! far-future events, popping in (virtual time, sequence number)
+//! order so simultaneous events drain in deterministic FIFO order.
 //!
-//! Timing invariant: every scheduled time must be finite. `total_cmp`
-//! gives NaN a fixed sort position, so a single NaN timestamp would not
-//! crash — it would silently misorder *every* subsequent pop. The push
-//! path therefore hard-panics on non-finite times in all build
-//! profiles (not just `debug_assert!`).
+//! ## Ordering contract
+//!
+//! Identical to the binary-heap queue it replaced (kept below as
+//! [`BinaryHeapQueue`] for differential testing): pops are sorted by
+//! time, ties broken FIFO by push sequence number, and the push path
+//! hard-panics on non-finite times in all build profiles. `total_cmp`
+//! gives NaN a fixed sort position, so a single NaN timestamp would
+//! not crash — it would silently misorder *every* subsequent pop;
+//! hence the hard panic rather than a `debug_assert!`.
+//!
+//! ## Wheel layout
+//!
+//! Times quantize to ticks of 1/1024 s. Three levels of 256 slots
+//! each cover the 2^24 ticks (~4.5 h of virtual time) sharing the
+//! cursor's high bits: level 0 indexes tick bits [0,8), level 1 bits
+//! [8,16), level 2 bits [16,24). Events beyond the cursor's 2^24-tick
+//! block land in a sorted overflow list and cascade into the wheel
+//! when the cursor crosses into their block. Multiple distinct `f64`
+//! times share one tick, so a drained slot is sorted by (time, seq)
+//! before it is appended to the due list — the floor quantization is
+//! monotone, which makes minimal-tick-first draining equivalent to
+//! minimal-time-first popping.
+//!
+//! Push and pop are O(1) amortized against the heap's O(log n),
+//! which is what the 100k-device event loop pays per simulated event.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::sim::arena::RequestId;
 
 /// Simulation events.
 #[derive(Clone, Debug, PartialEq)]
@@ -20,14 +43,14 @@ pub enum Event {
     /// time instead of assuming the Table I mean.
     DeviceInferDone { device: usize, dur_s: f64 },
     /// A forwarded request reached the server queue.
-    ServerArrival { request: usize },
+    ServerArrival { request: RequestId },
     /// Replica `server` finished the batch started earlier.
     ServerBatchDone { server: usize },
     /// A server result reached its device.
-    ResultArrival { device: usize, request: usize },
+    ResultArrival { device: usize, request: RequestId },
     /// A shed (admission-rejected) request's notice reached its device;
     /// the device falls back to its local prediction.
-    RequestShed { device: usize, request: usize },
+    RequestShed { device: usize, request: RequestId },
     /// A replica the autoscaler resumed finished its warm-up and is
     /// dispatchable again (`warmup_ms` elapsed since the unpark).
     ReplicaWarm { server: usize },
@@ -44,38 +67,235 @@ struct Scheduled {
     event: Event,
 }
 
-impl PartialEq for Scheduled {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
+/// Wheel resolution: 1024 ticks per virtual second (~1 ms), a power
+/// of two so tick arithmetic is exact bit shifting.
+const TICKS_PER_SEC: f64 = 1024.0;
+const SLOT_BITS: u32 = 8;
+const SLOTS: usize = 1 << SLOT_BITS; // 256 slots per level
+const LEVELS: usize = 3; // wheel horizon: 2^24 ticks (~4.5 h)
+const BITMAP_WORDS: usize = SLOTS / 64;
+
+/// Quantize a (finite) time to a wheel tick. The `as` cast saturates:
+/// negative times clamp to tick 0 and absurdly large ones to
+/// `u64::MAX` — both still ordered correctly because the final due
+/// list is sorted by the exact (t, seq) pair, not the tick.
+fn tick_of(t: f64) -> u64 {
+    (t * TICKS_PER_SEC) as u64
+}
+
+/// Deterministic event queue: hierarchical timer wheel + sorted
+/// overflow. Same push/pop surface and ordering contract as
+/// [`BinaryHeapQueue`].
+#[derive(Debug)]
+pub struct EventQueue {
+    /// Events whose tick is <= `cursor`, sorted ascending by (t, seq);
+    /// pops come from the front.
+    due: VecDeque<Scheduled>,
+    /// `LEVELS x SLOTS` buckets, flat-indexed `level * SLOTS + slot`.
+    slots: Vec<Vec<Scheduled>>,
+    /// One occupancy bit per bucket so `advance` finds the lowest
+    /// non-empty slot with `trailing_zeros` instead of a scan.
+    occupied: [[u64; BITMAP_WORDS]; LEVELS],
+    /// Events beyond the wheel horizon, sorted *descending* by
+    /// (t, seq) so the minimum is `pop()`/`last()`.
+    overflow: Vec<Scheduled>,
+    /// The wheel's current tick. Monotone non-decreasing; every
+    /// bucketed event has a tick strictly greater than it.
+    cursor: u64,
+    seq: u64,
+    len: usize,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
-impl Eq for Scheduled {}
+impl EventQueue {
+    pub fn new() -> Self {
+        Self {
+            due: VecDeque::new(),
+            slots: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occupied: [[0; BITMAP_WORDS]; LEVELS],
+            overflow: Vec::new(),
+            cursor: 0,
+            seq: 0,
+            len: 0,
+        }
+    }
 
-impl PartialOrd for Scheduled {
+    pub fn push(&mut self, t: f64, event: Event) {
+        assert!(
+            t.is_finite(),
+            "non-finite event time {t} for {event:?}: would corrupt heap ordering"
+        );
+        let s = Scheduled {
+            t,
+            seq: self.seq,
+            event,
+        };
+        self.seq += 1;
+        self.len += 1;
+        self.file(s);
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        loop {
+            if let Some(s) = self.due.pop_front() {
+                self.len -= 1;
+                return Some((s.t, s.event));
+            }
+            if !self.advance() {
+                return None;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Route one entry to the due list, a wheel bucket, or overflow,
+    /// based on where its tick falls relative to the cursor.
+    fn file(&mut self, s: Scheduled) {
+        let tick = tick_of(s.t);
+        if tick <= self.cursor {
+            // Already due (or in the past): sorted insert by (t, seq).
+            let at = self.due.partition_point(|d| {
+                match d.t.total_cmp(&s.t) {
+                    Ordering::Less => true,
+                    Ordering::Equal => d.seq < s.seq,
+                    Ordering::Greater => false,
+                }
+            });
+            self.due.insert(at, s);
+            return;
+        }
+        for level in 0..LEVELS {
+            let above = SLOT_BITS * (level as u32 + 1);
+            if tick >> above == self.cursor >> above {
+                let slot = ((tick >> (SLOT_BITS * level as u32)) & (SLOTS as u64 - 1)) as usize;
+                self.slots[level * SLOTS + slot].push(s);
+                self.occupied[level][slot >> 6] |= 1 << (slot & 63);
+                return;
+            }
+        }
+        // Beyond the wheel horizon: sorted insert, descending (t, seq)
+        // so the earliest entry sits at the tail for O(1) inspection.
+        let at = self.overflow.partition_point(|d| {
+            match d.t.total_cmp(&s.t) {
+                Ordering::Greater => true,
+                Ordering::Equal => d.seq > s.seq,
+                Ordering::Less => false,
+            }
+        });
+        self.overflow.insert(at, s);
+    }
+
+    /// Lowest occupied slot index at `level`, if any.
+    fn lowest_slot(&self, level: usize) -> Option<usize> {
+        for (w, &word) in self.occupied[level].iter().enumerate() {
+            if word != 0 {
+                return Some(w * 64 + word.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Empty one bucket, returning its entries.
+    fn drain_bucket(&mut self, level: usize, slot: usize) -> Vec<Scheduled> {
+        self.occupied[level][slot >> 6] &= !(1 << (slot & 63));
+        std::mem::take(&mut self.slots[level * SLOTS + slot])
+    }
+
+    /// Advance the cursor to the next scheduled work and cascade it
+    /// toward the due list. Returns false when the queue is drained.
+    /// Called only with an empty due list, so the drained minimal
+    /// level-0 bucket (one tick, the globally smallest outstanding)
+    /// becomes the due list wholesale after an in-bucket (t, seq)
+    /// sort.
+    fn advance(&mut self) -> bool {
+        if let Some(slot) = self.lowest_slot(0) {
+            self.cursor = (self.cursor >> SLOT_BITS << SLOT_BITS) | slot as u64;
+            let mut bucket = self.drain_bucket(0, slot);
+            bucket.sort_by(|a, b| a.t.total_cmp(&b.t).then_with(|| a.seq.cmp(&b.seq)));
+            self.due.extend(bucket);
+            return true;
+        }
+        for level in 1..LEVELS {
+            if let Some(slot) = self.lowest_slot(level) {
+                let shift = SLOT_BITS * (level as u32 + 1);
+                self.cursor = (self.cursor >> shift << shift)
+                    | ((slot as u64) << (SLOT_BITS * level as u32));
+                for s in self.drain_bucket(level, slot) {
+                    self.file(s); // refiles one level down (or due)
+                }
+                return true;
+            }
+        }
+        if let Some(next) = self.overflow.last() {
+            let horizon = SLOT_BITS * LEVELS as u32;
+            let block = tick_of(next.t) >> horizon;
+            self.cursor = block << horizon;
+            while let Some(s) = self.overflow.last() {
+                if tick_of(s.t) >> horizon != block {
+                    break;
+                }
+                let s = self.overflow.pop().unwrap();
+                self.file(s);
+            }
+            return true;
+        }
+        false
+    }
+}
+
+// ----- the replaced binary-heap queue, kept for differential tests --
+
+#[derive(Clone, Debug)]
+struct HeapScheduled(Scheduled);
+
+impl PartialEq for HeapScheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.t == other.0.t && self.0.seq == other.0.seq
+    }
+}
+
+impl Eq for HeapScheduled {}
+
+impl PartialOrd for HeapScheduled {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl Ord for Scheduled {
+impl Ord for HeapScheduled {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap behavior; tie-break on seq for FIFO.
         other
+            .0
             .t
-            .total_cmp(&self.t)
-            .then_with(|| other.seq.cmp(&self.seq))
+            .total_cmp(&self.0.t)
+            .then_with(|| other.0.seq.cmp(&self.0.seq))
     }
 }
 
-/// Deterministic min-heap event queue.
+/// The pre-timer-wheel binary-heap implementation of the same
+/// contract. Retained as the ordering oracle for the differential
+/// property test (`rust/tests/event_wheel.rs`); engine code uses
+/// [`EventQueue`].
 #[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<Scheduled>,
+pub struct BinaryHeapQueue {
+    heap: BinaryHeap<HeapScheduled>,
     seq: u64,
 }
 
-impl EventQueue {
+impl BinaryHeapQueue {
     pub fn new() -> Self {
         Self::default()
     }
@@ -85,16 +305,16 @@ impl EventQueue {
             t.is_finite(),
             "non-finite event time {t} for {event:?}: would corrupt heap ordering"
         );
-        self.heap.push(Scheduled {
+        self.heap.push(HeapScheduled(Scheduled {
             t,
             seq: self.seq,
             event,
-        });
+        }));
         self.seq += 1;
     }
 
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        self.heap.pop().map(|s| (s.t, s.event))
+        self.heap.pop().map(|s| (s.0.t, s.0.event))
     }
 
     pub fn len(&self) -> usize {
@@ -159,5 +379,78 @@ mod tests {
     fn infinite_time_panics() {
         let mut q = EventQueue::new();
         q.push(f64::INFINITY, Event::SrWindow { device: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn heap_oracle_panics_on_non_finite_too() {
+        let mut q = BinaryHeapQueue::new();
+        q.push(f64::NAN, Event::SrWindow { device: 0 });
+    }
+
+    /// Distinct times that quantize to the same 1/1024 s tick must
+    /// still pop in exact time order (the in-bucket sort).
+    #[test]
+    fn same_tick_different_times_sort_exactly() {
+        let mut q = EventQueue::new();
+        let base = 5.0;
+        let eps = 1.0 / 16384.0; // well under one tick
+        q.push(base + 3.0 * eps, Event::SrWindow { device: 3 });
+        q.push(base + eps, Event::SrWindow { device: 1 });
+        q.push(base + 2.0 * eps, Event::SrWindow { device: 2 });
+        let order: Vec<usize> = (0..3)
+            .map(|_| match q.pop().unwrap().1 {
+                Event::SrWindow { device } => device,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    /// Events spanning level-1, level-2, and overflow distances all
+    /// cascade back down in order, interleaved with near-term pushes.
+    #[test]
+    fn far_future_events_cascade_through_levels() {
+        let mut q = EventQueue::new();
+        let horizon_s = (1u64 << 24) as f64 / 1024.0; // wheel horizon
+        q.push(horizon_s * 3.0, Event::SrWindow { device: 5 }); // overflow
+        q.push(400.0, Event::SrWindow { device: 3 }); // level 2
+        q.push(2.0, Event::SrWindow { device: 1 }); // level 1
+        q.push(0.01, Event::SrWindow { device: 0 }); // level 0
+        assert_eq!(q.pop().unwrap().0, 0.01);
+        q.push(3.0, Event::SrWindow { device: 2 }); // after an advance
+        let mut times = Vec::new();
+        while let Some((t, _)) = q.pop() {
+            times.push(t);
+        }
+        assert_eq!(times, vec![2.0, 3.0, 400.0, horizon_s * 3.0]);
+    }
+
+    /// Negative times clamp to tick 0 but keep exact (t, seq) order.
+    #[test]
+    fn negative_times_pop_first_in_order() {
+        let mut q = EventQueue::new();
+        q.push(0.5, Event::SrWindow { device: 2 });
+        q.push(-3.0, Event::SrWindow { device: 0 });
+        q.push(-1.0, Event::SrWindow { device: 1 });
+        assert_eq!(q.pop().unwrap().0, -3.0);
+        assert_eq!(q.pop().unwrap().0, -1.0);
+        assert_eq!(q.pop().unwrap().0, 0.5);
+    }
+
+    /// A push at (or before) an already-popped time is delivered
+    /// immediately, before everything later — matching the heap.
+    #[test]
+    fn push_at_cursor_time_pops_next() {
+        let mut q = EventQueue::new();
+        q.push(10.0, Event::SrWindow { device: 9 });
+        q.push(1.0, Event::SrWindow { device: 0 });
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        q.push(1.0, Event::SrWindow { device: 1 });
+        q.push(0.5, Event::SrWindow { device: 2 });
+        assert_eq!(q.pop().unwrap().0, 0.5);
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 10.0);
+        assert!(q.is_empty());
     }
 }

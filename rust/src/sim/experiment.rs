@@ -10,7 +10,7 @@ use crate::config::SystemConfig;
 use crate::data::{device_stream, Dataset};
 use crate::metrics::RunMetrics;
 use crate::models::outputs::OutputProvider;
-use crate::models::{Registry, Tier};
+use crate::models::{ModelId, Registry, Tier};
 use crate::scheduler::{self, SwitchController};
 use crate::sim::engine::{DeviceSpec, SimEngine};
 use crate::util::prng::Rng;
@@ -118,19 +118,30 @@ pub fn run_scenario(
         for (tier_name, lims) in &registry.switching {
             limits.insert(Tier::parse(tier_name)?, *lims);
         }
+        // Resolve the ladder and initial placements against the
+        // scenario's interned table once — the controllers themselves
+        // never see a name.
+        let ladder: Vec<ModelId> = SWITCH_LADDER
+            .iter()
+            .map(|name| {
+                scn.models
+                    .get(name)
+                    .ok_or_else(|| anyhow::anyhow!("switch-ladder model '{name}' not interned"))
+            })
+            .collect::<Result<_>>()?;
         (0..scn.server.replicas)
             .map(|i| {
-                let initial = scn
+                let name = scn
                     .server
                     .models
                     .get(i)
                     .map(String::as_str)
                     .unwrap_or(&scn.server_model);
-                SwitchController::new(
-                    SWITCH_LADDER.iter().map(|s| s.to_string()).collect(),
-                    initial,
-                    limits.clone(),
-                )
+                let initial = scn
+                    .models
+                    .get(name)
+                    .ok_or_else(|| anyhow::anyhow!("replica model '{name}' not interned"))?;
+                SwitchController::new(ladder.clone(), initial, limits.clone())
             })
             .collect::<Result<_>>()?
     } else {

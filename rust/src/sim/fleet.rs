@@ -18,6 +18,7 @@ use crate::metrics::{RunMetrics, SampleRecord};
 use crate::models::outputs::OutputProvider;
 use crate::models::Tier;
 use crate::scheduler::{DeviceId, Scheduler, ThresholdUpdate};
+use crate::sim::arena::{RequestArena, RequestId};
 use crate::sim::event::{Event, EventQueue};
 use crate::sim::server::PendingRequest;
 use crate::util::prng::Rng;
@@ -111,7 +112,12 @@ pub struct DeviceFleet<'a> {
     cfg: &'a SystemConfig,
     scheduler: &'a mut dyn Scheduler,
     devices: Vec<DeviceState>,
-    requests: Vec<Request>,
+    /// In-flight forwarded requests. Slab-style arena: slots recycle as
+    /// requests complete (each gets exactly one terminal event — Served
+    /// or Shed), so the table's footprint tracks the in-flight
+    /// population instead of growing with every forward ever made, and
+    /// generation checks catch any stale [`RequestId`] immediately.
+    requests: RequestArena<Request>,
 }
 
 impl<'a> DeviceFleet<'a> {
@@ -147,7 +153,7 @@ impl<'a> DeviceFleet<'a> {
             cfg,
             scheduler,
             devices,
-            requests: Vec::new(),
+            requests: RequestArena::new(),
         }
     }
 
@@ -178,8 +184,8 @@ impl<'a> DeviceFleet<'a> {
 
     /// The [`PendingRequest`] descriptor the server subsystem sees for
     /// a forwarded request — the device-side half of the interface.
-    pub fn forward_descriptor(&self, request: usize, arrival_s: f64) -> PendingRequest {
-        let r = &self.requests[request];
+    pub fn forward_descriptor(&self, request: RequestId, arrival_s: f64) -> PendingRequest {
+        let r = self.requests.get(request);
         let d = &self.devices[r.device];
         PendingRequest {
             id: request,
@@ -193,13 +199,13 @@ impl<'a> DeviceFleet<'a> {
 
     /// Dataset sample indices behind a served batch, in batch order.
     pub fn samples_for(&self, batch: &[PendingRequest]) -> Vec<usize> {
-        batch.iter().map(|p| self.requests[p.id].sample).collect()
+        batch.iter().map(|p| self.requests.get(p.id).sample).collect()
     }
 
     /// Record a server verdict for one request (consumed by the
     /// [`CompletionNotice::Served`] path when the result lands).
-    pub fn record_server_result(&mut self, request: usize, correct: bool) {
-        self.requests[request].correct = Some(correct);
+    pub fn record_server_result(&mut self, request: RequestId, correct: bool) {
+        self.requests.get_mut(request).correct = Some(correct);
     }
 
     // ----- event handlers ---------------------------------------------
@@ -270,8 +276,7 @@ impl<'a> DeviceFleet<'a> {
                 local_correct: correct,
                 correct: None,
             };
-            let rid = self.requests.len();
-            self.requests.push(req);
+            let rid = self.requests.insert(req);
             self.devices[device].outstanding += 1;
             events.push(t + self.comm_s(), Event::ServerArrival { request: rid });
         }
@@ -311,20 +316,19 @@ impl<'a> DeviceFleet<'a> {
         &mut self,
         t: f64,
         device: usize,
-        request: usize,
+        request: RequestId,
         notice: CompletionNotice,
         events: &mut EventQueue,
         metrics: &mut RunMetrics,
     ) {
-        let (start_s, correct) = {
-            let r = &self.requests[request];
-            let correct = match notice {
-                CompletionNotice::Served => r.correct.expect("result without correctness"),
-                CompletionNotice::Shed => r.local_correct,
-            };
-            (r.start_s, correct)
+        // Terminal event for this request (Served XOR Shed): retire its
+        // arena slot so the id goes stale and the slot recycles.
+        let r = self.requests.remove(request);
+        let correct = match notice {
+            CompletionNotice::Served => r.correct.expect("result without correctness"),
+            CompletionNotice::Shed => r.local_correct,
         };
-        self.complete_sample(t, device, start_s, true, correct, metrics);
+        self.complete_sample(t, device, r.start_s, true, correct, metrics);
         self.release_outstanding(t, device, events);
     }
 

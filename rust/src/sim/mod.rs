@@ -7,6 +7,7 @@
 //! the sharded [`ServerPool`] (`server`), and the [`SimEngine`]
 //! (`engine`) routing typed events between them.
 
+pub mod arena;
 pub mod engine;
 pub mod event;
 pub mod experiment;
@@ -15,6 +16,7 @@ pub mod headroom;
 pub mod server;
 pub mod subsystem;
 
+pub use arena::{RequestArena, RequestId};
 pub use engine::{DeviceSpec, SimEngine};
 pub use experiment::{run_scenario, run_spec};
 pub use fleet::{CompletionNotice, DeviceFleet};

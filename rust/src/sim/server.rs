@@ -48,7 +48,8 @@
 use std::collections::VecDeque;
 
 use crate::config::scenario::{AutoscaleMode, AutoscalePolicy, QueueKind, ServerPolicy, ShardingKind};
-use crate::models::Tier;
+use crate::models::{ModelId, ModelTable, Tier};
+use crate::sim::arena::RequestId;
 use crate::sim::headroom::HeadroomTracker;
 
 const NUM_TIERS: usize = 4;
@@ -56,8 +57,8 @@ const NUM_TIERS: usize = 4;
 /// A forwarded request waiting for (or undergoing) server inference.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PendingRequest {
-    /// Engine-side request id.
-    pub id: usize,
+    /// Generation-checked handle into the fleet's request arena.
+    pub id: RequestId,
     /// Device that forwarded the request (the shed-notice address).
     pub device: usize,
     pub tier: Tier,
@@ -332,7 +333,8 @@ pub fn build_discipline_parts(queue: QueueKind, wfq_weights: [f64; 4]) -> Box<dy
 /// warming state, in-flight batch, and served-batch counter.
 #[derive(Debug)]
 pub struct Replica {
-    pub model: String,
+    /// Interned model id (=> latency model) this replica serves.
+    pub model: ModelId,
     pub busy: bool,
     /// Parked by the autoscaler: skipped by dispatch until unparked.
     pub parked: bool,
@@ -370,7 +372,7 @@ pub struct FormedBatch {
 struct Shard {
     /// Placed model this shard's queue feeds; `None` for the shared
     /// shard of an unsharded pool.
-    model: Option<String>,
+    model: Option<ModelId>,
     queue: Box<dyn QueueDiscipline>,
 }
 
@@ -431,14 +433,22 @@ impl ServerPool {
             }
             _ => policy.replicas,
         };
+        // Resolve model names to interned ids once, here at pool
+        // construction; every per-batch path below compares/copies ids.
+        let table = ModelTable::builtin();
+        let resolve = |name: &str| -> ModelId {
+            table
+                .get(name)
+                .unwrap_or_else(|| panic!("unknown server model '{name}'"))
+        };
+        let default_id = resolve(default_model);
         let replicas: Vec<Replica> = (0..policy.replicas)
             .map(|i| Replica {
                 model: policy
                     .models
                     .get(i)
-                    .map(String::as_str)
-                    .unwrap_or(default_model)
-                    .to_string(),
+                    .map(|m| resolve(m))
+                    .unwrap_or(default_id),
                 busy: false,
                 parked: i >= initial_active,
                 parked_since_s: 0.0,
@@ -460,14 +470,11 @@ impl ServerPool {
             // Shard order = first appearance of each model over replica
             // indices, so construction is deterministic.
             for r in &replicas {
-                let idx = match shards
-                    .iter()
-                    .position(|s| s.model.as_deref() == Some(r.model.as_str()))
-                {
+                let idx = match shards.iter().position(|s| s.model == Some(r.model)) {
                     Some(i) => i,
                     None => {
                         shards.push(Shard {
-                            model: Some(r.model.clone()),
+                            model: Some(r.model),
                             queue: build_discipline_parts(policy.queue, policy.wfq_weights),
                         });
                         shards.len() - 1
@@ -512,8 +519,8 @@ impl ServerPool {
 
     /// The model a shard's queue feeds (`None` = the shared shard of an
     /// unsharded pool).
-    pub fn shard_model(&self, shard: usize) -> Option<&str> {
-        self.shards[shard].model.as_deref()
+    pub fn shard_model(&self, shard: usize) -> Option<ModelId> {
+        self.shards[shard].model
     }
 
     /// The shard `server` currently drains (its model's shard under
@@ -580,8 +587,8 @@ impl ServerPool {
     }
 
     /// The model a replica currently serves.
-    pub fn model(&self, server: usize) -> &str {
-        &self.replicas[server].model
+    pub fn model(&self, server: usize) -> ModelId {
+        self.replicas[server].model
     }
 
     /// Switch one replica to `model` (§IV-E model switching, driven
@@ -589,18 +596,14 @@ impl ServerPool {
     /// keeps its scheduled latency). Under per-model sharding the
     /// replica moves to its new model's shard, creating it on first
     /// use; work left in an orphaned shard is drained by stealing.
-    pub fn set_model(&mut self, server: usize, model: &str) {
-        self.replicas[server].model = model.to_string();
+    pub fn set_model(&mut self, server: usize, model: ModelId) {
+        self.replicas[server].model = model;
         if self.sharded {
-            let idx = match self
-                .shards
-                .iter()
-                .position(|s| s.model.as_deref() == Some(model))
-            {
+            let idx = match self.shards.iter().position(|s| s.model == Some(model)) {
                 Some(i) => i,
                 None => {
                     self.shards.push(Shard {
-                        model: Some(model.to_string()),
+                        model: Some(model),
                         queue: build_discipline_parts(self.queue_kind, self.wfq_weights),
                     });
                     self.shards.len() - 1
@@ -1047,9 +1050,14 @@ impl PoolScaler {
 mod tests {
     use super::*;
 
+    /// Arena-style id for tests: slot = `id`, generation 0.
+    fn rid(id: usize) -> RequestId {
+        RequestId::from_parts(id as u32, 0)
+    }
+
     fn req(id: usize, tier: Tier, deadline_s: f64) -> PendingRequest {
         PendingRequest {
-            id,
+            id: rid(id),
             device: 0,
             tier,
             start_s: 0.0,
@@ -1064,8 +1072,8 @@ mod tests {
         for i in 0..5 {
             q.push(req(i, Tier::Low, 10.0 - i as f64));
         }
-        let ids: Vec<usize> = (0..5).map(|_| q.pop(0.0).unwrap().id).collect();
-        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        let ids: Vec<RequestId> = (0..5).map(|_| q.pop(0.0).unwrap().id).collect();
+        assert_eq!(ids, vec![rid(0), rid(1), rid(2), rid(3), rid(4)]);
         assert!(q.pop(0.0).is_none());
     }
 
@@ -1075,8 +1083,8 @@ mod tests {
         q.push(req(0, Tier::Low, 3.0));
         q.push(req(1, Tier::Low, 1.0));
         q.push(req(2, Tier::Low, 2.0));
-        let ids: Vec<usize> = (0..3).map(|_| q.pop(0.0).unwrap().id).collect();
-        assert_eq!(ids, vec![1, 2, 0]);
+        let ids: Vec<RequestId> = (0..3).map(|_| q.pop(0.0).unwrap().id).collect();
+        assert_eq!(ids, vec![rid(1), rid(2), rid(0)]);
     }
 
     #[test]
@@ -1085,8 +1093,8 @@ mod tests {
         for i in 0..4 {
             q.push(req(i, Tier::Low, 1.0));
         }
-        let ids: Vec<usize> = (0..4).map(|_| q.pop(0.0).unwrap().id).collect();
-        assert_eq!(ids, vec![0, 1, 2, 3]);
+        let ids: Vec<RequestId> = (0..4).map(|_| q.pop(0.0).unwrap().id).collect();
+        assert_eq!(ids, vec![rid(0), rid(1), rid(2), rid(3)]);
     }
 
     #[test]
@@ -1100,9 +1108,9 @@ mod tests {
         q.push(req(101, Tier::High, 100.0));
         // With equal weights the sparse tier's requests must surface in
         // the first few pops, not after the flood.
-        let first4: Vec<usize> = (0..4).map(|_| q.pop(0.0).unwrap().id).collect();
+        let first4: Vec<RequestId> = (0..4).map(|_| q.pop(0.0).unwrap().id).collect();
         assert!(
-            first4.contains(&100) && first4.contains(&101),
+            first4.contains(&rid(100)) && first4.contains(&rid(101)),
             "sparse tier starved: first pops {first4:?}"
         );
         // All 12 eventually drain.
@@ -1135,8 +1143,8 @@ mod tests {
         for i in 0..5 {
             q.push(req(i, Tier::Mid, 50.0 - i as f64));
         }
-        let ids: Vec<usize> = (0..5).map(|_| q.pop(0.0).unwrap().id).collect();
-        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        let ids: Vec<RequestId> = (0..5).map(|_| q.pop(0.0).unwrap().id).collect();
+        assert_eq!(ids, vec![rid(0), rid(1), rid(2), rid(3), rid(4)]);
     }
 
     #[test]
@@ -1215,9 +1223,9 @@ mod tests {
         // culls them and fills the batch with the survivor.
         let fb = pool.start_batch(0, 2, 1.0, 0.1);
         assert_eq!(fb.formed, 1);
-        assert_eq!(pool.in_flight(0)[0].id, 1);
-        let shed_ids: Vec<usize> = fb.shed.iter().map(|r| r.id).collect();
-        assert_eq!(shed_ids, vec![0, 2]);
+        assert_eq!(pool.in_flight(0)[0].id, rid(1));
+        let shed_ids: Vec<RequestId> = fb.shed.iter().map(|r| r.id).collect();
+        assert_eq!(shed_ids, vec![rid(0), rid(2)]);
         assert_eq!(pool.shed_count(), 2);
         assert_eq!(pool.queue_len(), 0);
         // A formation pass where everything is shed leaves the replica
@@ -1240,9 +1248,9 @@ mod tests {
             ..ServerPolicy::default()
         };
         let mut pool = ServerPool::new(&policy, "srv_inception");
-        pool.set_model(1, "srv_effnetb3");
-        assert_eq!(pool.model(0), "srv_inception");
-        assert_eq!(pool.model(1), "srv_effnetb3");
+        pool.set_model(1, ModelId::builtin("srv_effnetb3"));
+        assert_eq!(pool.model(0), ModelId::builtin("srv_inception"));
+        assert_eq!(pool.model(1), ModelId::builtin("srv_effnetb3"));
         assert_eq!(pool.discipline_name(), "edf");
     }
 
@@ -1254,8 +1262,8 @@ mod tests {
             ..ServerPolicy::default()
         };
         let pool = ServerPool::new(&policy, "srv_inception");
-        assert_eq!(pool.model(0), "srv_effnetb3");
-        assert_eq!(pool.model(1), "srv_inception");
+        assert_eq!(pool.model(0), ModelId::builtin("srv_effnetb3"));
+        assert_eq!(pool.model(1), ModelId::builtin("srv_inception"));
         // An empty list falls back to the default model everywhere.
         let pool = ServerPool::new(
             &ServerPolicy {
@@ -1264,8 +1272,8 @@ mod tests {
             },
             "srv_deit",
         );
-        assert_eq!(pool.model(0), "srv_deit");
-        assert_eq!(pool.model(1), "srv_deit");
+        assert_eq!(pool.model(0), ModelId::builtin("srv_deit"));
+        assert_eq!(pool.model(1), ModelId::builtin("srv_deit"));
     }
 
     #[test]
@@ -1426,8 +1434,8 @@ mod tests {
         assert!(pool.is_sharded());
         assert_eq!(pool.num_shards(), 2);
         // Shard order = first appearance over replica indices.
-        assert_eq!(pool.shard_model(0), Some("srv_inception"));
-        assert_eq!(pool.shard_model(1), Some("srv_effnetb3"));
+        assert_eq!(pool.shard_model(0), Some(ModelId::builtin("srv_inception")));
+        assert_eq!(pool.shard_model(1), Some(ModelId::builtin("srv_effnetb3")));
         assert_eq!(pool.shard_of(0), 0);
         assert_eq!(pool.shard_of(1), 1);
         assert_eq!(pool.shard_of(2), 0);
@@ -1472,7 +1480,7 @@ mod tests {
         // A replica's start_batch drains its OWN shard only.
         let fb = pool.start_batch(1, 4, 0.0, 0.0);
         assert_eq!(fb.formed, 1);
-        assert_eq!(pool.in_flight(1)[0].id, 2);
+        assert_eq!(pool.in_flight(1)[0].id, rid(2));
         assert_eq!(pool.shard_depths(), vec![2, 0]);
     }
 
@@ -1486,7 +1494,7 @@ mod tests {
         assert_eq!(pool.steal_count(), 0);
         let fb = pool.steal_batch(1, 0, 1, 0.0, 0.0);
         assert_eq!(fb.formed, 1);
-        assert_eq!(pool.in_flight(1)[0].id, 0);
+        assert_eq!(pool.in_flight(1)[0].id, rid(0));
         assert_eq!(pool.steal_count(), 1);
         assert_eq!(pool.shard_queue_len(0), 1);
         // A steal that forms nothing (all culled) is not counted.
@@ -1686,15 +1694,15 @@ mod tests {
         let mut pool = ServerPool::new(&mixed_sharded_policy(), "srv_inception");
         assert_eq!(pool.num_shards(), 2);
         // Replica 2 switches to effnetb3: joins the existing shard.
-        pool.set_model(2, "srv_effnetb3");
+        pool.set_model(2, ModelId::builtin("srv_effnetb3"));
         assert_eq!(pool.num_shards(), 2);
         assert_eq!(pool.shard_of(2), 1);
         assert_eq!(pool.assigned_count(0), 1);
         assert_eq!(pool.assigned_count(1), 2);
         // A switch to a never-placed model creates its shard lazily.
-        pool.set_model(0, "srv_deit");
+        pool.set_model(0, ModelId::builtin("srv_deit"));
         assert_eq!(pool.num_shards(), 3);
-        assert_eq!(pool.shard_model(2), Some("srv_deit"));
+        assert_eq!(pool.shard_model(2), Some(ModelId::builtin("srv_deit")));
         assert_eq!(pool.shard_of(0), 2);
         // Orphaned-shard work stays queued (stealing drains it).
         pool.admit_to(0, req(9, Tier::Low, 10.0), 0.0, 0.0);

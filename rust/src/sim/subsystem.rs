@@ -19,11 +19,13 @@
 //! invalidated only on model switch and park/unpark — the only events
 //! that change what the pool can serve.
 
+use std::collections::BTreeMap;
+
 use crate::config::latency::ServerLatencyModel;
 use crate::config::scenario::{AutoscaleMode, DispatchKind, ServerPolicy};
 use crate::config::SystemConfig;
 use crate::metrics::RunMetrics;
-use crate::models::Tier;
+use crate::models::{ModelId, ModelTable, Tier};
 use crate::scheduler::{DeviceId, SwitchController};
 use crate::sim::event::{Event, EventQueue};
 use crate::sim::headroom::HeadroomTracker;
@@ -57,9 +59,9 @@ struct LatencyCache {
 }
 
 impl LatencyCache {
-    fn build(pool: &ServerPool, latency_of: LatencyFn<'_>) -> Self {
+    fn build(pool: &ServerPool, models: &ModelTable, latency_of: LatencyFn<'_>) -> Self {
         let replica: Vec<ServerLatencyModel> = (0..pool.num_replicas())
-            .map(|s| (latency_of)(pool.model(s)))
+            .map(|s| (latency_of)(models.name(pool.model(s))))
             .collect();
         let min_batch1_ms = replica
             .iter()
@@ -67,7 +69,7 @@ impl LatencyCache {
             .fold(f64::INFINITY, f64::min);
         let shard_batch1_ms = (0..pool.num_shards())
             .map(|s| match pool.shard_model(s) {
-                Some(m) => (latency_of)(m).batch_ms(1),
+                Some(m) => (latency_of)(models.name(m)).batch_ms(1),
                 None => min_batch1_ms,
             })
             .collect();
@@ -110,6 +112,13 @@ pub struct ServerSubsystem<'a> {
     switchers: Vec<SwitchController>,
     latency_of: LatencyFn<'a>,
     cache: LatencyCache,
+    /// Interned model names; resolved once at construction so the
+    /// per-batch/per-arrival paths below touch ids only.
+    models: ModelTable,
+    /// Per-model served-batch counters, dense-indexed by
+    /// [`ModelId::index`] — the id-keyed replacement for the old
+    /// per-batch `BTreeMap<String, _>::entry(name.to_string())`.
+    batch_counts: Vec<usize>,
     batch_grid: &'a [usize],
     comm_s: f64,
 }
@@ -129,7 +138,9 @@ impl<'a> ServerSubsystem<'a> {
             policy.replicas
         );
         let pool = ServerPool::new(policy, server_model);
-        let cache = LatencyCache::build(&pool, latency_of);
+        let models = ModelTable::builtin();
+        let cache = LatencyCache::build(&pool, &models, latency_of);
+        let batch_counts = vec![0; models.len()];
         Self {
             pool,
             dispatch_kind: policy.dispatch,
@@ -143,13 +154,15 @@ impl<'a> ServerSubsystem<'a> {
             switchers,
             latency_of,
             cache,
+            models,
+            batch_counts,
             batch_grid: &cfg.batch_grid,
             comm_s: cfg.comm_ms / 1000.0,
         }
     }
 
     fn rebuild_cache(&mut self) {
-        self.cache = LatencyCache::build(&self.pool, self.latency_of);
+        self.cache = LatencyCache::build(&self.pool, &self.models, self.latency_of);
     }
 
     // ----- arrival: routing + shard-local admission -------------------
@@ -465,10 +478,7 @@ impl<'a> ServerSubsystem<'a> {
             return;
         }
         metrics.batch_sizes.push(fb.formed as f64);
-        *metrics
-            .server_model_batches
-            .entry(self.pool.model(server).to_string())
-            .or_insert(0) += 1;
+        self.batch_counts[self.pool.model(server).index()] += 1;
         observed.push(load_signal.max(fb.formed));
         let dur_s = self.cache.replica[server].batch_ms(fb.formed) / 1000.0;
         events.push(t + dur_s, Event::ServerBatchDone { server });
@@ -482,9 +492,16 @@ impl<'a> ServerSubsystem<'a> {
     /// model even though it was formed and latency-priced on the
     /// pre-switch curve (pre-split behavior, kept for `--shards 1`
     /// bit-parity; switches are dwell-limited so the window is rare).
-    pub fn finish_batch(&mut self, server: usize) -> (String, Vec<PendingRequest>) {
+    pub fn finish_batch(&mut self, server: usize) -> (ModelId, Vec<PendingRequest>) {
         let batch = self.pool.finish_batch(server);
-        (self.pool.model(server).to_string(), batch)
+        (self.pool.model(server), batch)
+    }
+
+    /// Resolve an interned model id back to its name — the
+    /// provider/reporting boundary only; the hot paths never call
+    /// this.
+    pub fn model_name(&self, model: ModelId) -> &str {
+        self.models.name(model)
     }
 
     // ----- scaling + switching ----------------------------------------
@@ -582,8 +599,11 @@ impl<'a> ServerSubsystem<'a> {
         let mut switched = false;
         for (server, ctl) in self.switchers.iter_mut().enumerate() {
             if let Some(new_model) = ctl.maybe_switch(thresholds, t) {
-                log::debug!("t={t:.1}s: replica {server} model switch -> {new_model}");
-                self.pool.set_model(server, &new_model);
+                log::debug!(
+                    "t={t:.1}s: replica {server} model switch -> {}",
+                    self.models.name(new_model)
+                );
+                self.pool.set_model(server, new_model);
                 switched = true;
             }
         }
@@ -661,6 +681,18 @@ impl<'a> ServerSubsystem<'a> {
         self.pool.batches_per_replica()
     }
 
+    /// Per-model served-batch totals keyed by name — the one place the
+    /// dense id-indexed counters become strings, for the end-of-run
+    /// metrics report. Models that served nothing are omitted,
+    /// matching the old lazily-populated map.
+    pub fn model_batches_by_name(&self) -> BTreeMap<String, usize> {
+        self.models
+            .iter()
+            .filter(|&(id, _)| self.batch_counts[id.index()] > 0)
+            .map(|(id, name)| (name.to_string(), self.batch_counts[id.index()]))
+            .collect()
+    }
+
     pub fn parked_replica_seconds(&self, now: f64) -> f64 {
         self.pool.parked_replica_seconds(now)
     }
@@ -669,10 +701,12 @@ impl<'a> ServerSubsystem<'a> {
     /// index; replica 0 alone would under-report a heterogeneous pool
     /// or a pool whose replicas switched independently).
     pub fn model_ladder_idx(&self) -> usize {
+        let effnet = ModelId::builtin("srv_effnetb3");
+        let deit = ModelId::builtin("srv_deit");
         (0..self.pool.num_replicas())
             .map(|s| {
                 let m = self.pool.model(s);
-                usize::from(m == "srv_effnetb3") + 2 * usize::from(m == "srv_deit")
+                usize::from(m == effnet) + 2 * usize::from(m == deit)
             })
             .max()
             .unwrap_or(0)

@@ -1,0 +1,179 @@
+//! Differential property tests: the hierarchical timer-wheel
+//! [`EventQueue`] against the reference [`BinaryHeapQueue`] ordering
+//! oracle. The two must agree on the exact pop sequence — same (time,
+//! event) pairs, in the same order — across randomized schedules that
+//! stress every structural path of the wheel:
+//!
+//! * dense same-time ties (FIFO-by-sequence draining inside one tick),
+//! * sub-tick time differences (distinct `f64`s sharing one wheel
+//!   tick, where the sorted bucket drain must order by exact time),
+//! * far-future outliers (overflow-level filing and the block cascade
+//!   when the cursor crosses into a new 2^24-tick window),
+//! * interleaved push/pop (pushes landing at or before the advancing
+//!   cursor, which must file directly into the due list),
+//! * negative times (saturating tick quantization).
+//!
+//! Plus the shared hard contract: push panics on non-finite times in
+//! both implementations.
+
+use multitascpp::sim::event::{BinaryHeapQueue, Event, EventQueue};
+use multitascpp::util::prng::Rng;
+
+/// Distinct payloads so a mis-ordered pop cannot masquerade as a tie:
+/// the tag rides in the event's `device`/`server` field.
+fn ev(tag: usize) -> Event {
+    match tag % 4 {
+        0 => Event::DeviceInferDone {
+            device: tag,
+            dur_s: 0.001,
+        },
+        1 => Event::ServerBatchDone { server: tag },
+        2 => Event::SrWindow { device: tag },
+        _ => Event::DeviceResume { device: tag },
+    }
+}
+
+/// One randomized schedule: push/pop both queues in lockstep from the
+/// same operation stream and assert identical pop sequences, then
+/// drain both and assert the tails match too.
+fn run_case(seed: u64, ops: usize, time_profile: &str) {
+    let mut rng = Rng::new(seed);
+    let mut wheel = EventQueue::new();
+    let mut heap = BinaryHeapQueue::new();
+    let mut tag = 0usize;
+    let mut now = 0.0f64;
+    for _ in 0..ops {
+        // 2:1 push:pop mix keeps both queues populated while still
+        // exercising interleaved pops at every wheel position.
+        if rng.next_below(3) < 2 {
+            let t = match time_profile {
+                // Dense ties: a handful of exact times, many events each.
+                "ties" => (rng.next_below(8) as f64) * 0.25,
+                // Sub-tick jitter: offsets far smaller than 1/1024 s.
+                "subtick" => now + rng.next_below(4) as f64 * 1e-6,
+                // Far-future outliers: mostly near-term, occasionally
+                // hours out (beyond the 2^24-tick wheel horizon).
+                "outliers" => {
+                    if rng.next_below(10) == 0 {
+                        now + 20_000.0 + rng.next_f64() * 50_000.0
+                    } else {
+                        now + rng.next_f64() * 2.0
+                    }
+                }
+                // Mild negatives mixed with ordinary times.
+                "negative" => now + rng.next_range_f64(-1.5, 3.0),
+                _ => unreachable!("unknown profile {time_profile}"),
+            };
+            let e = ev(tag);
+            tag += 1;
+            wheel.push(t, e.clone());
+            heap.push(t, e);
+        } else {
+            let a = wheel.pop();
+            let b = heap.pop();
+            assert_eq!(
+                a, b,
+                "{time_profile} seed {seed}: wheel and heap disagree mid-stream"
+            );
+            if let Some((t, _)) = a {
+                // Advancing `now` past popped times steers later pushes
+                // toward (and behind) the wheel cursor.
+                now = now.max(t);
+            }
+        }
+        assert_eq!(wheel.len(), heap.len(), "{time_profile} seed {seed}");
+        assert_eq!(wheel.is_empty(), heap.is_empty());
+    }
+    loop {
+        let a = wheel.pop();
+        let b = heap.pop();
+        assert_eq!(a, b, "{time_profile} seed {seed}: drain tails diverge");
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn wheel_matches_heap_on_dense_same_time_ties() {
+    for seed in 0..8 {
+        run_case(0xA11CE + seed, 4_000, "ties");
+    }
+}
+
+#[test]
+fn wheel_matches_heap_on_subtick_time_differences() {
+    for seed in 0..8 {
+        run_case(0xB0B + seed, 4_000, "subtick");
+    }
+}
+
+#[test]
+fn wheel_matches_heap_with_far_future_outliers() {
+    for seed in 0..8 {
+        run_case(0xCAFE + seed, 4_000, "outliers");
+    }
+}
+
+#[test]
+fn wheel_matches_heap_with_negative_times() {
+    for seed in 0..8 {
+        run_case(0xD00D + seed, 2_000, "negative");
+    }
+}
+
+/// Monotone pop times with FIFO ties is implied by matching the heap,
+/// but assert it directly so a bug in the *oracle* cannot hide one in
+/// the wheel.
+#[test]
+fn wheel_pops_are_time_sorted_and_fifo_on_ties() {
+    let mut rng = Rng::new(0x5EED);
+    let mut wheel = EventQueue::new();
+    for tag in 0..5_000usize {
+        // 64 distinct times guarantee heavy tie traffic.
+        let t = (rng.next_below(64) as f64) * 0.125;
+        wheel.push(t, ev(tag));
+    }
+    let mut last_t = f64::NEG_INFINITY;
+    let mut last_tag_at_t: Option<usize> = None;
+    while let Some((t, e)) = wheel.pop() {
+        assert!(t >= last_t, "pop times went backwards: {t} after {last_t}");
+        let tag = match e {
+            Event::DeviceInferDone { device, .. }
+            | Event::SrWindow { device }
+            | Event::DeviceResume { device } => device,
+            Event::ServerBatchDone { server } => server,
+            _ => unreachable!(),
+        };
+        if t == last_t {
+            // Same time => push order (tags ascend in push order).
+            assert!(
+                last_tag_at_t.is_some_and(|prev| prev < tag),
+                "tie at t={t} broke FIFO: {last_tag_at_t:?} then {tag}"
+            );
+        }
+        last_t = t;
+        last_tag_at_t = Some(tag);
+    }
+}
+
+#[test]
+#[should_panic(expected = "non-finite event time")]
+fn wheel_push_panics_on_nan() {
+    let mut q = EventQueue::new();
+    q.push(f64::NAN, Event::SrWindow { device: 0 });
+}
+
+#[test]
+#[should_panic(expected = "non-finite event time")]
+fn wheel_push_panics_on_infinity() {
+    let mut q = EventQueue::new();
+    q.push(f64::INFINITY, Event::SrWindow { device: 0 });
+}
+
+#[test]
+#[should_panic(expected = "non-finite event time")]
+fn heap_oracle_push_panics_on_nan_too() {
+    let mut q = BinaryHeapQueue::new();
+    q.push(f64::NAN, Event::SrWindow { device: 0 });
+}

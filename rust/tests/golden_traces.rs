@@ -17,6 +17,10 @@
 //! first run — commit the generated file to arm drift detection; CI
 //! runs the suite a second time against whatever is on disk, so
 //! nondeterminism is caught even before fixtures land in the tree.
+//! That second pass sets `MTPP_GOLDEN_STRICT=1`: under strict mode a
+//! missing fixture is a hard failure, not a silent regeneration —
+//! otherwise a deleted-and-rebootstrapped fixture would sail through
+//! the comparison that exists to catch exactly that.
 
 use std::path::{Path, PathBuf};
 
@@ -38,6 +42,13 @@ fn fixture_dir() -> PathBuf {
 
 fn bless_requested() -> bool {
     std::env::var("MTPP_BLESS").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+/// Strict mode (`MTPP_GOLDEN_STRICT=1`): fixtures must already exist;
+/// bootstrapping is disabled so a comparison pass cannot silently
+/// regenerate what it is supposed to compare against.
+fn strict_requested() -> bool {
+    std::env::var("MTPP_GOLDEN_STRICT").map_or(false, |v| !v.is_empty() && v != "0")
 }
 
 fn ctx() -> Ctx {
@@ -137,6 +148,13 @@ fn golden_traces_pin_every_preset() {
             continue;
         }
         if !path.exists() {
+            assert!(
+                !strict_requested(),
+                "[golden] fixture {} is missing under MTPP_GOLDEN_STRICT — the \
+                 comparison pass must never bootstrap; run once without strict \
+                 mode (or bless) and commit the fixture",
+                path.display()
+            );
             // Fresh checkout or brand-new preset: bootstrap the
             // fixture so later runs (and CI's second pass) compare
             // against it. Commit the file to arm drift detection.

@@ -31,7 +31,7 @@ use multitascpp::models::registry::test_meta_json;
 use multitascpp::models::{Registry, Tier};
 use multitascpp::sim::event::EventQueue;
 use multitascpp::sim::{
-    run_scenario, HeadroomTracker, PendingRequest, PoolScaler, ScaleAction, ServerPool,
+    run_scenario, HeadroomTracker, PendingRequest, PoolScaler, RequestId, ScaleAction, ServerPool,
     ServerSubsystem,
 };
 use multitascpp::util::prng::Rng;
@@ -139,7 +139,7 @@ fn prop_headroom_scaler_never_strands_a_shard() {
         );
         let mut scaler = PoolScaler::new(cfg);
         let mut tracker = HeadroomTracker::new();
-        let mut next_id = 0usize;
+        let mut next_id = 0u32;
         for step in 0..200 {
             let now = step as f64;
             // Random churn: admissions, service, completions.
@@ -148,7 +148,7 @@ fn prop_headroom_scaler_never_strands_a_shard() {
                     pool.admit_to(
                         shard,
                         PendingRequest {
-                            id: next_id,
+                            id: RequestId::from_parts(next_id, 0),
                             device: 0,
                             tier: Tier::Low,
                             start_s: now,
@@ -228,8 +228,8 @@ fn warming_replica_serves_only_after_its_warm_event() {
     let mut sub = ServerSubsystem::new(&cfg, &policy, "srv_inception", Vec::new(), &latency_of);
     let mut events = EventQueue::new();
     let mut metrics = RunMetrics::default();
-    let req = |id: usize, start_s: f64, deadline_s: f64| PendingRequest {
-        id,
+    let req = |id: u32, start_s: f64, deadline_s: f64| PendingRequest {
+        id: RequestId::from_parts(id, 0),
         device: 0,
         tier: Tier::Low,
         start_s,

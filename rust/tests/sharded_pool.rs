@@ -29,7 +29,8 @@ use multitascpp::models::{Registry, Tier};
 use multitascpp::scheduler::{Scheduler, StaticSched};
 use multitascpp::sim::event::EventQueue;
 use multitascpp::sim::{
-    run_scenario, DeviceSpec, ForwardingVerdict, PendingRequest, ServerSubsystem, SimEngine,
+    run_scenario, DeviceSpec, ForwardingVerdict, PendingRequest, RequestId, ServerSubsystem,
+    SimEngine,
 };
 
 // --- harness (same shape as tests/hetero_pool.rs) ---------------------------
@@ -225,8 +226,8 @@ fn admission_is_shard_local_on_a_mixed_pool() {
     let mut sub = ServerSubsystem::new(&cfg, &policy, "srv_inception", Vec::new(), &latency_of);
     let mut events = EventQueue::new();
     let mut metrics = RunMetrics::default();
-    let req = |id: usize, deadline_s: f64| PendingRequest {
-        id,
+    let req = |id: u32, deadline_s: f64| PendingRequest {
+        id: RequestId::from_parts(id, 0),
         device: 0,
         tier: Tier::Low,
         start_s: 0.0,
@@ -298,8 +299,8 @@ fn steal_aware_admission_counts_idle_sibling_capacity() {
     let mut sub = ServerSubsystem::new(&cfg, &policy, "srv_inception", Vec::new(), &latency_of);
     let mut events = EventQueue::new();
     let mut metrics = RunMetrics::default();
-    let req = |id: usize, deadline_s: f64| PendingRequest {
-        id,
+    let req = |id: u32, deadline_s: f64| PendingRequest {
+        id: RequestId::from_parts(id, 0),
         device: 0,
         tier: Tier::Low,
         start_s: 0.0,
@@ -409,6 +410,7 @@ fn sharded_pool_preset_runs_end_to_end() {
 #[test]
 fn bench_scale_smoke_emits_report() {
     let out = std::env::temp_dir().join("mtpp_test_bench_scale.json");
+    let _ = std::fs::remove_file(&out);
     let points = multitascpp::bench::scale::run_scale(true, &out).unwrap();
     // 2 device counts x {single, sharded}.
     assert_eq!(points.len(), 4);
@@ -423,6 +425,23 @@ fn bench_scale_smoke_emits_report() {
     let text = std::fs::read_to_string(&out).unwrap();
     let json = multitascpp::util::json::Json::parse(&text).unwrap();
     assert_eq!(json.get("bench").and_then(|j| j.as_str()), Some("scale"));
+    assert_eq!(
+        json.get("points").and_then(|j| j.as_arr()).map(|a| a.len()),
+        Some(4)
+    );
+    assert_eq!(
+        json.get("runs").and_then(|j| j.as_arr()).map(|a| a.len()),
+        Some(1)
+    );
+    // Append semantics: a second run extends the history instead of
+    // overwriting the report; the top level mirrors the latest run.
+    multitascpp::bench::scale::run_scale(true, &out).unwrap();
+    let text = std::fs::read_to_string(&out).unwrap();
+    let json = multitascpp::util::json::Json::parse(&text).unwrap();
+    assert_eq!(
+        json.get("runs").and_then(|j| j.as_arr()).map(|a| a.len()),
+        Some(2)
+    );
     assert_eq!(
         json.get("points").and_then(|j| j.as_arr()).map(|a| a.len()),
         Some(4)
