@@ -157,9 +157,7 @@ impl ScenarioSpec {
                 .iter()
                 .enumerate()
                 .max_by(|(ai, a), (bi, b)| {
-                    a.2.partial_cmp(&b.2)
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                        .then(bi.cmp(ai))
+                    crate::util::stats::total_cmp_f64(a.2, b.2).then(bi.cmp(ai))
                 })
                 .expect("non-empty mix");
             scaled[i].1 += 1;

@@ -23,6 +23,13 @@
 //!   tier-WFQ) and optional admission control.
 //! * [`net`] — live wall-clock serving mode over TCP.
 //! * [`experiments`] — one driver per paper figure/table.
+//! * [`lint`] — in-repo static analysis enforcing the determinism
+//!   invariants above (`mtpp lint`, plus a tidy test in tier-1).
+
+// Offline-friendly sanitizers: the whole request path is safe Rust,
+// and every must-use Result is a decision, not a warning.
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
 
 pub mod bench;
 pub mod cascade;
@@ -30,6 +37,7 @@ pub mod config;
 pub mod data;
 pub mod metrics;
 pub mod experiments;
+pub mod lint;
 pub mod models;
 pub mod net;
 pub mod runtime;

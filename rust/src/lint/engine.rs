@@ -1,0 +1,225 @@
+//! Walks a source tree, runs every applicable rule per file, applies
+//! waivers, and reports waiver hygiene errors (reason-less, unknown
+//! rule, stale) as violations in their own right.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::lexer::{lex, TokKind, Token};
+use super::report::{Report, Violation};
+use super::rules::registry;
+
+/// Rule name under which waiver-hygiene and scan errors are reported.
+pub const META_RULE: &str = "waiver";
+
+/// Lint every `.rs` file under `root` (paths and output are sorted, so
+/// two runs over the same tree are byte-identical).
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let rules = registry();
+    let mut files = Vec::new();
+    collect_rs_files(root, root, &mut files)
+        .with_context(|| format!("scanning {}", root.display()))?;
+    files.sort();
+
+    let mut violations = Vec::new();
+    for rel in &files {
+        lint_file(root, rel, &rules, &mut violations);
+    }
+    violations.sort_by(|a, b| {
+        a.path
+            .cmp(&b.path)
+            .then(a.line.cmp(&b.line))
+            .then(a.rule.cmp(&b.rule))
+    });
+    Ok(Report {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        rules: rules.iter().map(|r| r.name.to_string()).collect(),
+        violations,
+    })
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("read_dir {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .expect("walk stays under root")
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+fn lint_file(root: &Path, rel: &str, rules: &[super::rules::Rule], out: &mut Vec<Violation>) {
+    let push = |out: &mut Vec<Violation>, line: u32, rule: &str, message: String| {
+        out.push(Violation {
+            path: rel.to_string(),
+            line,
+            rule: rule.to_string(),
+            message,
+        });
+    };
+    let src = match std::fs::read_to_string(root.join(rel)) {
+        Ok(s) => s,
+        Err(e) => {
+            push(out, 0, META_RULE, format!("unreadable file: {e}"));
+            return;
+        }
+    };
+    let lexed = match lex(&src) {
+        Ok(l) => l,
+        Err(e) => {
+            push(out, e.line, META_RULE, format!("scan error: {}", e.msg));
+            return;
+        }
+    };
+    for (line, msg) in &lexed.malformed_waivers {
+        push(out, *line, META_RULE, format!("malformed waiver: {msg}"));
+    }
+
+    let known_rule = |name: &str| rules.iter().any(|r| r.name == name);
+    for w in &lexed.waivers {
+        if !known_rule(&w.rule) {
+            push(
+                out,
+                w.line,
+                META_RULE,
+                format!("waiver names unknown rule `{}`", w.rule),
+            );
+        }
+    }
+
+    let test_ranges = test_code_ranges(&lexed.tokens);
+    let in_test_code =
+        |line: u32| test_ranges.iter().any(|&(lo, hi)| line >= lo && line <= hi);
+
+    // A waiver covers its own line and the next one, per rule.
+    let mut waiver_used = vec![false; lexed.waivers.len()];
+    for rule in rules.iter().filter(|r| (r.applies)(rel)) {
+        for cand in (rule.check)(&lexed.tokens) {
+            if rule.skip_test_code && in_test_code(cand.line) {
+                continue;
+            }
+            let waiver = lexed.waivers.iter().position(|w| {
+                w.rule == rule.name && (w.line == cand.line || w.line + 1 == cand.line)
+            });
+            match waiver {
+                Some(i) => {
+                    waiver_used[i] = true;
+                    // Suppressed — but a reason-less waiver is itself
+                    // an error (reported once, below, even if it
+                    // suppresses several hits).
+                }
+                None => push(out, cand.line, rule.name, cand.message),
+            }
+        }
+    }
+
+    for (i, w) in lexed.waivers.iter().enumerate() {
+        if !known_rule(&w.rule) {
+            continue; // already reported as unknown
+        }
+        if !waiver_used[i] {
+            push(
+                out,
+                w.line,
+                META_RULE,
+                format!(
+                    "stale waiver: `{}` no longer fires on line {} — delete it",
+                    w.rule,
+                    w.line + 1
+                ),
+            );
+        } else if w.reason.is_none() {
+            push(
+                out,
+                w.line,
+                META_RULE,
+                format!(
+                    "waiver for `{}` has no reason — append reason=\"…\" saying why \
+                     the invariant holds anyway",
+                    w.rule
+                ),
+            );
+        }
+    }
+}
+
+/// Line ranges of `#[cfg(test)]`-gated items (the `mod tests` blocks):
+/// from the attribute to the close of the item's brace block. Braces
+/// inside strings/comments are already out of the token stream, so
+/// plain depth counting is exact.
+fn test_code_ranges(toks: &[Token]) -> Vec<(u32, u32)> {
+    let is_p = |t: &Token, c: char| t.kind == TokKind::Punct && t.text.as_bytes() == [c as u8];
+    let is_i = |t: &Token, s: &str| t.kind == TokKind::Ident && t.text == s;
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let attr = is_p(&toks[i], '#')
+            && is_p(&toks[i + 1], '[')
+            && is_i(&toks[i + 2], "cfg")
+            && is_p(&toks[i + 3], '(')
+            && is_i(&toks[i + 4], "test")
+            && is_p(&toks[i + 5], ')')
+            && is_p(&toks[i + 6], ']');
+        if !attr {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        // Find the item's opening brace, then match it.
+        let mut j = i + 7;
+        while j < toks.len() && !is_p(&toks[j], '{') {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        let mut end_line = toks.last().map_or(start_line, |t| t.line);
+        while j < toks.len() {
+            if is_p(&toks[j], '{') {
+                depth += 1;
+            } else if is_p(&toks[j], '}') {
+                depth -= 1;
+                if depth == 0 {
+                    end_line = toks[j].line;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        ranges.push((start_line, end_line));
+        i = j + 1;
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_ranges_cover_cfg_test_mods() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() {\n  }\n}\nfn c() {}\n";
+        let lexed = lex(src).unwrap();
+        assert_eq!(test_code_ranges(&lexed.tokens), vec![(2, 6)]);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_range() {
+        let src = "#[cfg(not(test))]\nmod shipping { fn b() {} }\n";
+        let lexed = lex(src).unwrap();
+        assert!(test_code_ranges(&lexed.tokens).is_empty());
+    }
+}

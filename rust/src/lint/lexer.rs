@@ -1,0 +1,552 @@
+//! Comment- and string-aware token scanner for the lint engine.
+//!
+//! Not a Rust parser: the rules only need a token stream with line
+//! numbers, with comments stripped and string contents opaque, so this
+//! scanner handles exactly the lexical shapes that would otherwise
+//! produce false positives — line comments, nested block comments,
+//! normal / raw / byte strings, char literals vs lifetimes — and
+//! nothing more. Waiver markers (`// mtpp-lint: allow(<rule>)
+//! reason="..."`) are recognised only in *line comments*; the same
+//! text inside a string or block comment is inert, so quoting a waiver
+//! in a doc example or a test fixture never waives anything.
+
+/// Token classes the rules can match on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// Single punctuation character (the `text` field holds it).
+    Punct,
+    /// String literal (normal, raw, or byte); `text` is the content
+    /// between the quotes, escapes left as written.
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    Num,
+    /// `'label` lifetime (distinguished from char literals).
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-indexed source line the token starts on.
+    pub line: u32,
+}
+
+/// One `// mtpp-lint: allow(<rule>) reason="..."` marker. A waiver
+/// suppresses matching violations on its own line and on the line
+/// immediately below it (so it can sit inline or on the line above).
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    pub rule: String,
+    /// `None` when the marker carried no (or an empty) reason — the
+    /// engine reports that as a violation in its own right.
+    pub reason: Option<String>,
+    pub line: u32,
+}
+
+#[derive(Debug)]
+pub struct LexError {
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Scanner output: the token stream plus every waiver marker seen.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub waivers: Vec<Waiver>,
+    /// Comments that start with `mtpp-lint` but do not parse as a
+    /// waiver — surfaced as errors so typos cannot silently disable
+    /// nothing.
+    pub malformed_waivers: Vec<(u32, String)>,
+}
+
+pub fn lex(src: &str) -> Result<Lexed, LexError> {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i + 2;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                let text = src[start..i].trim();
+                // Doc comments (`///`, `//!`) cannot carry waivers.
+                if let Some(rest) = text.strip_prefix("mtpp-lint") {
+                    match parse_waiver(rest, line) {
+                        Ok(w) => out.waivers.push(w),
+                        Err(msg) => out.malformed_waivers.push((line, msg)),
+                    }
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // Nested block comment.
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == b'\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                if depth > 0 {
+                    return Err(LexError {
+                        line,
+                        msg: "unterminated block comment".into(),
+                    });
+                }
+            }
+            b'"' => {
+                let (tok, ni, nl) = lex_string(src, i, line)?;
+                out.tokens.push(tok);
+                i = ni;
+                line = nl;
+            }
+            b'\'' => {
+                let (tok, ni, nl) = lex_char_or_lifetime(src, i, line)?;
+                out.tokens.push(tok);
+                i = ni;
+                line = nl;
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                i += 1;
+                while i < b.len() {
+                    let d = b[i];
+                    if d.is_ascii_alphanumeric() || d == b'_' {
+                        i += 1;
+                    } else if d == b'.'
+                        && b.get(i + 1).is_some_and(|n| n.is_ascii_digit())
+                    {
+                        // `1.5` continues the number; `2.partial_cmp`
+                        // and `1..=3` leave the dot as punctuation.
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Num,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                // Raw / byte string prefixes lex as part of the
+                // literal, not as an identifier.
+                if let Some((tok, ni, nl)) = try_lex_prefixed_literal(src, i, line)? {
+                    out.tokens.push(tok);
+                    i = ni;
+                    line = nl;
+                    continue;
+                }
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Ident,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            _ => {
+                out.tokens.push(Token {
+                    kind: TokKind::Punct,
+                    text: (c as char).to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `b'…'` — returns `None` when
+/// the identifier at `i` is not one of these prefixes.
+fn try_lex_prefixed_literal(
+    src: &str,
+    i: usize,
+    line: u32,
+) -> Result<Option<(Token, usize, u32)>, LexError> {
+    let b = src.as_bytes();
+    let rest = &b[i..];
+    let prefix_len = if rest.starts_with(b"br") || rest.starts_with(b"rb") {
+        2
+    } else if rest.starts_with(b"r") || rest.starts_with(b"b") {
+        1
+    } else {
+        return Ok(None);
+    };
+    let after = i + prefix_len;
+    match b.get(after) {
+        Some(b'"') if rest[0] == b'b' && prefix_len == 1 => {
+            // b"..." — ordinary escape rules.
+            let (mut tok, ni, nl) = lex_string(src, after, line)?;
+            tok.line = line;
+            Ok(Some((tok, ni, nl)))
+        }
+        Some(b'\'') if rest[0] == b'b' && prefix_len == 1 => {
+            let (mut tok, ni, nl) = lex_char_or_lifetime(src, after, line)?;
+            tok.line = line;
+            Ok(Some((tok, ni, nl)))
+        }
+        Some(b'"') | Some(b'#') if rest[0] == b'r' || prefix_len == 2 => {
+            lex_raw_string(src, after, line).map(Some)
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Raw string starting at the `#`* or `"` after the `r`/`br` prefix.
+fn lex_raw_string(src: &str, mut i: usize, mut line: u32) -> Result<(Token, usize, u32), LexError> {
+    let b = src.as_bytes();
+    let start_line = line;
+    let mut hashes = 0usize;
+    while b.get(i) == Some(&b'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if b.get(i) != Some(&b'"') {
+        return Err(LexError {
+            line,
+            msg: "malformed raw string prefix".into(),
+        });
+    }
+    i += 1;
+    let content_start = i;
+    while i < b.len() {
+        if b[i] == b'"' && b[i + 1..].iter().take(hashes).filter(|&&h| h == b'#').count() == hashes
+        {
+            let tok = Token {
+                kind: TokKind::Str,
+                text: src[content_start..i].to_string(),
+                line: start_line,
+            };
+            return Ok((tok, i + 1 + hashes, line));
+        }
+        if b[i] == b'\n' {
+            line += 1;
+        }
+        i += 1;
+    }
+    Err(LexError {
+        line: start_line,
+        msg: "unterminated raw string".into(),
+    })
+}
+
+/// Normal string starting at the opening quote.
+fn lex_string(src: &str, mut i: usize, mut line: u32) -> Result<(Token, usize, u32), LexError> {
+    let b = src.as_bytes();
+    let start_line = line;
+    i += 1; // opening quote
+    let content_start = i;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => {
+                // An escaped newline (string continuation) still ends
+                // a source line.
+                if b.get(i + 1) == Some(&b'\n') {
+                    line += 1;
+                }
+                i += 2;
+            }
+            b'"' => {
+                let tok = Token {
+                    kind: TokKind::Str,
+                    text: src[content_start..i].to_string(),
+                    line: start_line,
+                };
+                return Ok((tok, i + 1, line));
+            }
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    Err(LexError {
+        line: start_line,
+        msg: "unterminated string".into(),
+    })
+}
+
+/// `'a'` / `'\n'` char literals vs `'label` lifetimes, starting at the
+/// quote.
+fn lex_char_or_lifetime(src: &str, i: usize, line: u32) -> Result<(Token, usize, u32), LexError> {
+    let b = src.as_bytes();
+    let next = b.get(i + 1).copied();
+    let is_ident_start = |c: u8| c.is_ascii_alphabetic() || c == b'_';
+    if next.is_some_and(is_ident_start) && b.get(i + 2) != Some(&b'\'') {
+        // Lifetime: consume the label.
+        let mut j = i + 1;
+        while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+            j += 1;
+        }
+        let tok = Token {
+            kind: TokKind::Lifetime,
+            text: src[i + 1..j].to_string(),
+            line,
+        };
+        return Ok((tok, j, line));
+    }
+    // Char literal: scan (with escapes) for the closing quote. Chars
+    // are short; bound the scan so a stray quote cannot eat the file.
+    let mut j = i + 1;
+    let limit = (i + 12).min(b.len());
+    while j < limit {
+        match b[j] {
+            b'\\' => j += 2,
+            b'\'' => {
+                let tok = Token {
+                    kind: TokKind::Char,
+                    text: src[i + 1..j].to_string(),
+                    line,
+                };
+                return Ok((tok, j + 1, line));
+            }
+            _ => j += 1,
+        }
+    }
+    Err(LexError {
+        line,
+        msg: "unterminated char literal".into(),
+    })
+}
+
+/// Parse the remainder of an `mtpp-lint…` comment (after the
+/// `mtpp-lint` prefix): `: allow(<rule>) [reason="…"]`.
+fn parse_waiver(rest: &str, line: u32) -> Result<Waiver, String> {
+    let rest = rest
+        .strip_prefix(':')
+        .ok_or("expected `mtpp-lint: allow(<rule>)`")?
+        .trim_start();
+    let rest = rest
+        .strip_prefix("allow(")
+        .ok_or("expected `allow(<rule>)` after `mtpp-lint:`")?;
+    let close = rest.find(')').ok_or("unclosed `allow(`")?;
+    let rule = rest[..close].trim().to_string();
+    if rule.is_empty() {
+        return Err("empty rule name in `allow()`".into());
+    }
+    let tail = rest[close + 1..].trim();
+    let reason = if tail.is_empty() {
+        None
+    } else {
+        let q = tail
+            .strip_prefix("reason=\"")
+            .ok_or("expected `reason=\"…\"` after `allow(<rule>)`")?;
+        let end = q.rfind('"').ok_or("unclosed reason string")?;
+        let reason = q[..end].trim();
+        if reason.is_empty() {
+            None
+        } else {
+            Some(reason.to_string())
+        }
+    };
+    Ok(Waiver { rule, reason, line })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .unwrap()
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn nested_block_comments_are_stripped() {
+        let src = "a /* x /* HashMap */ Instant::now */ b";
+        assert_eq!(idents(src), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn line_comments_strip_and_strings_survive() {
+        let src = "let x = \"not // a comment\"; // HashMap here\nuse y;";
+        let lexed = lex(src).unwrap();
+        assert_eq!(
+            lexed
+                .tokens
+                .iter()
+                .filter(|t| t.kind == TokKind::Str)
+                .map(|t| t.text.as_str())
+                .collect::<Vec<_>>(),
+            vec!["not // a comment"]
+        );
+        assert_eq!(idents(src), vec!["let", "x", "use", "y"]);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_quotes() {
+        let src = r###"let s = r#"quote " and // slash"#; end"###;
+        let lexed = lex(src).unwrap();
+        let strs: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .collect();
+        assert_eq!(strs.len(), 1);
+        assert_eq!(strs[0].text, "quote \" and // slash");
+        assert_eq!(idents(src), vec!["let", "s", "end"]);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let src = "f(b\"bytes\", b'x', br#\"raw\"#)";
+        let lexed = lex(src).unwrap();
+        let kinds: Vec<_> = lexed.tokens.iter().map(|t| t.kind).collect();
+        assert!(kinds.contains(&TokKind::Str));
+        assert!(kinds.contains(&TokKind::Char));
+        // The prefixes must not leak as identifiers.
+        assert_eq!(idents(src), vec!["f"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'a'; let n = '\\n'; }";
+        let lexed = lex(src).unwrap();
+        let lifetimes: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["a", "a"]);
+        let chars: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Char)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(chars, vec!["a", "\\n"]);
+    }
+
+    #[test]
+    fn tuple_field_access_keeps_the_dot() {
+        let src = "a.2.partial_cmp(&b.2)";
+        let lexed = lex(src).unwrap();
+        let flat: Vec<_> = lexed
+            .tokens
+            .iter()
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(
+            flat,
+            vec!["a", ".", "2", ".", "partial_cmp", "(", "&", "b", ".", "2", ")"]
+        );
+    }
+
+    #[test]
+    fn float_literals_stay_whole() {
+        let src = "x(1.5, 2, 0x1f, 1..=3)";
+        let lexed = lex(src).unwrap();
+        let nums: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.5", "2", "0x1f", "1", "3"]);
+    }
+
+    #[test]
+    fn waiver_parses_with_reason() {
+        let src = "let x = 1; // mtpp-lint: allow(no-unordered-maps) reason=\"sorted on read\"\n";
+        let lexed = lex(src).unwrap();
+        assert_eq!(lexed.waivers.len(), 1);
+        let w = &lexed.waivers[0];
+        assert_eq!(w.rule, "no-unordered-maps");
+        assert_eq!(w.reason.as_deref(), Some("sorted on read"));
+        assert_eq!(w.line, 1);
+    }
+
+    #[test]
+    fn waiver_without_reason_is_reasonless_not_malformed() {
+        let src = "// mtpp-lint: allow(no-println-in-lib)\n";
+        let lexed = lex(src).unwrap();
+        assert_eq!(lexed.waivers.len(), 1);
+        assert!(lexed.waivers[0].reason.is_none());
+        assert!(lexed.malformed_waivers.is_empty());
+    }
+
+    #[test]
+    fn waiver_with_empty_reason_counts_as_reasonless() {
+        let src = "// mtpp-lint: allow(x) reason=\"\"\n";
+        let lexed = lex(src).unwrap();
+        assert!(lexed.waivers[0].reason.is_none());
+    }
+
+    #[test]
+    fn malformed_waiver_is_reported() {
+        let src = "// mtpp-lint allow(oops-no-colon)\n// mtpp-lint: deny(x)\n";
+        let lexed = lex(src).unwrap();
+        assert!(lexed.waivers.is_empty());
+        assert_eq!(lexed.malformed_waivers.len(), 2);
+    }
+
+    #[test]
+    fn waiver_text_inside_strings_is_inert() {
+        let src = r#"let s = "// mtpp-lint: allow(no-unordered-maps) reason=\"quoted\""; "#;
+        let lexed = lex(src).unwrap();
+        assert!(lexed.waivers.is_empty());
+        assert!(lexed.malformed_waivers.is_empty());
+    }
+
+    #[test]
+    fn waiver_text_inside_block_comments_is_inert() {
+        let src = "/* mtpp-lint: allow(no-unordered-maps) */ let x = 1;";
+        let lexed = lex(src).unwrap();
+        assert!(lexed.waivers.is_empty());
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_constructs() {
+        let src = "/* one\ntwo */\nlet a = \"x\ny\";\nb";
+        let lexed = lex(src).unwrap();
+        let b_tok = lexed.tokens.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b_tok.line, 5);
+    }
+
+    #[test]
+    fn escaped_newline_in_string_counts_the_line() {
+        let src = "let s = \"a \\\n b\";\nnext";
+        let lexed = lex(src).unwrap();
+        let next = lexed.tokens.iter().find(|t| t.text == "next").unwrap();
+        assert_eq!(next.line, 3);
+    }
+
+    #[test]
+    fn unterminated_string_errors() {
+        assert!(lex("let x = \"oops").is_err());
+        assert!(lex("/* never closed").is_err());
+    }
+}

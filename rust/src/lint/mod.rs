@@ -1,0 +1,33 @@
+//! `mtpp lint` — the in-repo determinism & hot-path invariant linter.
+//!
+//! Everything this reproduction claims (bit-parity of `--shards 1`
+//! with prior engines, golden-trace pins on every preset, FIFO-tie
+//! event ordering, the interned-ModelId dispatch boundary) rests on
+//! invariants an ordinary compiler never checks: no wall-clock reads
+//! in virtual-time code, no iteration-order-nondeterministic
+//! containers near the event loop, no `String` model keys back on the
+//! request path. This module enforces them as machine-checked rules: a
+//! lightweight token scanner ([`lexer`]) feeds a registry of
+//! path-scoped rules ([`rules`]) evaluated by [`engine::lint_tree`],
+//! rendered by [`report`].
+//!
+//! Violations can be waived inline —
+//! `// mtpp-lint: allow(<rule>) reason="why the invariant holds"` —
+//! but a waiver with no reason, naming an unknown rule, or that no
+//! longer suppresses anything (stale) is itself an error, so waivers
+//! cannot rot.
+//!
+//! The engine runs three ways: the `mtpp lint [--json]` subcommand,
+//! the `rust/tests/lint_tidy.rs` tidy test (so plain `cargo test`
+//! blocks on violations), and a CI job that uploads the `--json`
+//! report. Zero external dependencies; output order is deterministic
+//! (path, line, rule). See `docs/linting.md` for the rule-by-rule
+//! rationale and how to add a rule.
+
+pub mod engine;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use engine::lint_tree;
+pub use report::{Report, Violation};

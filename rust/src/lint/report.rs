@@ -1,0 +1,121 @@
+//! Rendering for lint results: deterministic plain text for humans and
+//! the tidy test, JSON (via `util::json`) for the CI artifact.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// `/`-separated path relative to the scan root.
+    pub path: String,
+    /// 1-indexed line (0 for whole-file errors).
+    pub line: u32,
+    pub rule: String,
+    pub message: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub root: String,
+    pub files_scanned: usize,
+    pub rules: Vec<String>,
+    /// Sorted by (path, line, rule) — stable across runs.
+    pub violations: Vec<Violation>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for v in &self.violations {
+            s.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                v.path, v.line, v.rule, v.message
+            ));
+        }
+        if self.violations.is_empty() {
+            s.push_str(&format!(
+                "mtpp lint: clean — {} files, {} rules\n",
+                self.files_scanned,
+                self.rules.len()
+            ));
+        } else {
+            let files: std::collections::BTreeSet<&str> =
+                self.violations.iter().map(|v| v.path.as_str()).collect();
+            s.push_str(&format!(
+                "mtpp lint: {} violation(s) in {} file(s) ({} files scanned)\n",
+                self.violations.len(),
+                files.len(),
+                self.files_scanned
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("root", Json::str(self.root.clone())),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            (
+                "rules",
+                Json::Arr(self.rules.iter().map(|r| Json::str(r.clone())).collect()),
+            ),
+            ("clean", Json::Bool(self.is_clean())),
+            (
+                "violations",
+                Json::Arr(
+                    self.violations
+                        .iter()
+                        .map(|v| {
+                            Json::obj(vec![
+                                ("path", Json::str(v.path.clone())),
+                                ("line", Json::num(f64::from(v.line))),
+                                ("rule", Json::str(v.rule.clone())),
+                                ("message", Json::str(v.message.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            root: "rust/src".into(),
+            files_scanned: 2,
+            rules: vec!["no-unordered-maps".into()],
+            violations: vec![Violation {
+                path: "sim/engine.rs".into(),
+                line: 7,
+                rule: "no-unordered-maps".into(),
+                message: "HashMap".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn text_lists_path_line_rule() {
+        let txt = sample().render_text();
+        assert!(txt.contains("sim/engine.rs:7: [no-unordered-maps] HashMap"));
+        assert!(txt.contains("1 violation(s)"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_util_json() {
+        let j = sample().to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.f64_at("files_scanned").unwrap(), 2.0);
+        assert_eq!(back.get("clean").unwrap().as_bool(), Some(false));
+        let v = &back.get("violations").unwrap().as_arr().unwrap()[0];
+        assert_eq!(v.str_at("rule").unwrap(), "no-unordered-maps");
+        assert_eq!(v.f64_at("line").unwrap(), 7.0);
+    }
+}

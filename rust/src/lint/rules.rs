@@ -1,0 +1,398 @@
+//! The rule registry: each rule is a path scope plus a token-stream
+//! matcher, grounded in a determinism invariant this repo already
+//! relies on (see `docs/linting.md` for the rule-by-rule rationale).
+
+use super::lexer::{TokKind, Token};
+
+/// A candidate violation (pre-waiver) at a source line.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub line: u32,
+    pub message: String,
+}
+
+pub struct Rule {
+    /// Stable kebab-case name — the key used in waiver markers.
+    pub name: &'static str,
+    /// One-line statement of the invariant, shown in reports.
+    pub summary: &'static str,
+    /// Skip `#[cfg(test)] mod … { … }` regions (style rules only;
+    /// determinism rules apply to test code too).
+    pub skip_test_code: bool,
+    /// Path scope over `/`-normalised paths relative to the scan root.
+    pub applies: fn(&str) -> bool,
+    pub check: fn(&[Token]) -> Vec<Candidate>,
+}
+
+pub fn registry() -> Vec<Rule> {
+    vec![
+        Rule {
+            name: "no-wallclock-in-sim",
+            summary: "virtual-time code must not read the wall clock",
+            skip_test_code: false,
+            applies: |p| {
+                starts(p, "sim/") || starts(p, "scheduler/") || starts(p, "cascade/")
+            },
+            check: check_wallclock,
+        },
+        Rule {
+            name: "no-unordered-maps",
+            summary: "iteration-order-nondeterministic containers are forbidden",
+            skip_test_code: false,
+            applies: |p| {
+                starts(p, "sim/")
+                    || starts(p, "scheduler/")
+                    || starts(p, "cascade/")
+                    || starts(p, "net/")
+            },
+            check: check_unordered_maps,
+        },
+        Rule {
+            name: "no-string-model-keys",
+            summary: "model maps on the request path must key on interned ModelId",
+            skip_test_code: false,
+            applies: |p| starts(p, "sim/"),
+            check: check_string_model_keys,
+        },
+        Rule {
+            name: "binaryheap-boundary",
+            summary: "BinaryHeap (unordered among ties) only inside sim/event.rs",
+            skip_test_code: false,
+            applies: |p| p != "sim/event.rs",
+            check: check_binaryheap,
+        },
+        Rule {
+            name: "checked-float-ordering",
+            summary: "float comparisons go through a total order, not partial_cmp",
+            skip_test_code: false,
+            applies: |p| p != "sim/event.rs" && p != "util/stats.rs",
+            check: check_partial_cmp,
+        },
+        Rule {
+            name: "panic-with-context",
+            summary: "sim/ panics and asserts must carry the offending values",
+            skip_test_code: true,
+            applies: |p| starts(p, "sim/"),
+            check: check_panic_context,
+        },
+        Rule {
+            name: "no-println-in-lib",
+            summary: "library code logs via `log`, not stdout/stderr prints",
+            skip_test_code: true,
+            applies: |p| {
+                p != "main.rs" && !starts(p, "experiments/") && !starts(p, "bench/")
+            },
+            check: check_println,
+        },
+    ]
+}
+
+fn starts(path: &str, prefix: &str) -> bool {
+    path.starts_with(prefix)
+}
+
+fn is_ident(t: &Token, text: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == text
+}
+
+fn is_punct(t: &Token, ch: char) -> bool {
+    t.kind == TokKind::Punct && t.text.len() == 1 && t.text.as_bytes()[0] == ch as u8
+}
+
+fn check_wallclock(toks: &[Token]) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for t in toks {
+        if is_ident(t, "Instant") || is_ident(t, "SystemTime") {
+            out.push(Candidate {
+                line: t.line,
+                message: format!(
+                    "wall-clock type `{}` in virtual-time code — simulated runs must \
+                     be replayable; derive times from event timestamps instead",
+                    t.text
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn check_unordered_maps(toks: &[Token]) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for t in toks {
+        if is_ident(t, "HashMap") || is_ident(t, "HashSet") {
+            out.push(Candidate {
+                line: t.line,
+                message: format!(
+                    "`{}` iterates in nondeterministic order — use BTreeMap/BTreeSet \
+                     or a dense Vec keyed by id",
+                    t.text
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn check_string_model_keys(toks: &[Token]) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || !t.text.ends_with("Map") {
+            continue;
+        }
+        let Some(next) = toks.get(i + 1) else { continue };
+        if !is_punct(next, '<') {
+            continue;
+        }
+        // `…Map<String` or `…Map<&str` / `…Map<&'a str`.
+        let string_key = match toks.get(i + 2) {
+            Some(k) if is_ident(k, "String") => true,
+            Some(k) if is_punct(k, '&') => {
+                let mut j = i + 3;
+                if toks.get(j).is_some_and(|t| t.kind == TokKind::Lifetime) {
+                    j += 1;
+                }
+                toks.get(j).is_some_and(|t| is_ident(t, "str"))
+            }
+            _ => false,
+        };
+        if string_key {
+            out.push(Candidate {
+                line: t.line,
+                message: format!(
+                    "string-keyed `{}` in sim code — the request path keys models by \
+                     interned ModelId (PR 6 boundary); resolve names at the edges only",
+                    t.text
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn check_binaryheap(toks: &[Token]) -> Vec<Candidate> {
+    toks.iter()
+        .filter(|t| is_ident(t, "BinaryHeap"))
+        .map(|t| Candidate {
+            line: t.line,
+            message: "`BinaryHeap` pops ties in arbitrary order — deterministic \
+                      ordered structures live behind sim/event.rs; use EventQueue \
+                      or a sorted Vec/VecDeque"
+                .into(),
+        })
+        .collect()
+}
+
+fn check_partial_cmp(toks: &[Token]) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        // Method *calls* only: `.partial_cmp(` — `fn partial_cmp` in a
+        // PartialOrd impl delegating to a total order is fine.
+        if is_ident(t, "partial_cmp") && i > 0 && is_punct(&toks[i - 1], '.') {
+            out.push(Candidate {
+                line: t.line,
+                message: "`.partial_cmp(…)` on floats is None on NaN and invites \
+                          `.unwrap()` — use `f64::total_cmp` or \
+                          `util::stats::total_cmp_f64`"
+                    .into(),
+            });
+        }
+    }
+    out
+}
+
+fn check_panic_context(toks: &[Token]) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        let macro_name = if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "assert" | "debug_assert" | "panic")
+        {
+            t.text.clone()
+        } else {
+            i += 1;
+            continue;
+        };
+        if !(toks.get(i + 1).is_some_and(|t| is_punct(t, '!'))
+            && toks.get(i + 2).is_some_and(|t| is_punct(t, '(')))
+        {
+            i += 1;
+            continue;
+        }
+        // Walk to the matching close paren, counting top-level commas.
+        let open = i + 2;
+        let mut depth = 0i32;
+        let mut top_commas = 0usize;
+        let mut close = None;
+        for (j, tk) in toks.iter().enumerate().skip(open) {
+            if tk.kind == TokKind::Punct {
+                match tk.text.as_bytes()[0] {
+                    b'(' | b'[' | b'{' => depth += 1,
+                    b')' | b']' | b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            close = Some(j);
+                            break;
+                        }
+                    }
+                    b',' if depth == 1 => top_commas += 1,
+                    _ => {}
+                }
+            }
+        }
+        let Some(close) = close else {
+            i += 1;
+            continue;
+        };
+        let args = &toks[open + 1..close];
+        let violation = match macro_name.as_str() {
+            "panic" => {
+                args.is_empty()
+                    || (top_commas == 0
+                        && args.len() == 1
+                        && args[0].kind == TokKind::Str
+                        && !args[0].text.contains('{'))
+            }
+            // assert!/debug_assert! with a condition but no message arm.
+            _ => top_commas == 0 && !args.is_empty(),
+        };
+        if violation {
+            out.push(Candidate {
+                line: t.line,
+                message: format!(
+                    "`{macro_name}!` without context — a sim invariant failure must \
+                     print the offending values (ids, times, states), not just a \
+                     location"
+                ),
+            });
+        }
+        i = close + 1;
+    }
+    out
+}
+
+fn check_println(toks: &[Token]) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "println" | "print" | "eprintln" | "eprint")
+            && toks.get(i + 1).is_some_and(|n| is_punct(n, '!'))
+        {
+            out.push(Candidate {
+                line: t.line,
+                message: format!(
+                    "`{}!` in library code — route diagnostics through `log` so \
+                     embedding binaries control the sink; CLI output belongs in \
+                     main.rs / experiments/ / bench/",
+                    t.text
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn run(rule_name: &str, src: &str) -> Vec<u32> {
+        let rule = registry()
+            .into_iter()
+            .find(|r| r.name == rule_name)
+            .expect("rule exists");
+        let lexed = lex(src).unwrap();
+        (rule.check)(&lexed.tokens).iter().map(|c| c.line).collect()
+    }
+
+    #[test]
+    fn wallclock_fires_on_both_types() {
+        let src = "use std::time::Instant;\nlet t = SystemTime::now();\n";
+        assert_eq!(run("no-wallclock-in-sim", src), vec![1, 2]);
+    }
+
+    #[test]
+    fn unordered_maps_fires_on_use_and_type() {
+        let src = "use std::collections::HashMap;\nlet s: HashSet<u64> = x;\n";
+        assert_eq!(run("no-unordered-maps", src), vec![1, 2]);
+    }
+
+    #[test]
+    fn string_model_keys_variants() {
+        assert_eq!(
+            run("no-string-model-keys", "fn f() -> BTreeMap<String, usize> {}"),
+            vec![1]
+        );
+        assert_eq!(
+            run("no-string-model-keys", "let m: FooMap<&str, u8> = x;"),
+            vec![1]
+        );
+        assert_eq!(
+            run("no-string-model-keys", "let m: FooMap<&'a str, u8> = x;"),
+            vec![1]
+        );
+        assert!(run("no-string-model-keys", "let m: BTreeMap<ModelId, usize> = x;").is_empty());
+        // Mentions in comments/strings are inert.
+        assert!(run(
+            "no-string-model-keys",
+            "// BTreeMap<String, _>\nlet s = \"BTreeMap<String\";"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_method_call_only() {
+        assert_eq!(
+            run("checked-float-ordering", "a.2.partial_cmp(&b.2).unwrap()"),
+            vec![1]
+        );
+        assert!(run(
+            "checked-float-ordering",
+            "fn partial_cmp(&self, other: &Self) -> Option<Ordering> { Some(self.cmp(other)) }"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn panic_context_rules() {
+        // Message-less forms fire…
+        assert_eq!(run("panic-with-context", "assert!(x > 0);"), vec![1]);
+        assert_eq!(run("panic-with-context", "debug_assert!(a && b);"), vec![1]);
+        assert_eq!(run("panic-with-context", "panic!();"), vec![1]);
+        assert_eq!(run("panic-with-context", "panic!(\"bad state\");"), vec![1]);
+        // …contextful forms do not.
+        assert!(run("panic-with-context", "assert!(x > 0, \"x={x}\");").is_empty());
+        assert!(run("panic-with-context", "panic!(\"bad id {id:?}\");").is_empty());
+        assert!(run("panic-with-context", "panic!(\"bad id {}\", id);").is_empty());
+        // Nested call parens and commas inside the condition don't
+        // count as a message arm.
+        assert_eq!(
+            run("panic-with-context", "assert!(f(a, b) == g(c));"),
+            vec![1]
+        );
+    }
+
+    #[test]
+    fn println_family_fires() {
+        let src = "println!(\"x\");\neprintln!(\"y\");\nprint!(\"z\");\neprint!(\"w\");";
+        assert_eq!(run("no-println-in-lib", src), vec![1, 2, 3, 4]);
+        // `log::info!` does not.
+        assert!(run("no-println-in-lib", "log::info!(\"x\");").is_empty());
+    }
+
+    #[test]
+    fn scopes_are_as_documented() {
+        let by_name = |n: &str| registry().into_iter().find(|r| r.name == n).unwrap();
+        assert!((by_name("no-wallclock-in-sim").applies)("sim/engine.rs"));
+        assert!(!(by_name("no-wallclock-in-sim").applies)("bench/scale.rs"));
+        assert!(!(by_name("no-wallclock-in-sim").applies)("net/client.rs"));
+        assert!((by_name("no-unordered-maps").applies)("net/client.rs"));
+        assert!(!(by_name("binaryheap-boundary").applies)("sim/event.rs"));
+        assert!((by_name("binaryheap-boundary").applies)("sim/server.rs"));
+        assert!(!(by_name("checked-float-ordering").applies)("util/stats.rs"));
+        assert!(!(by_name("no-println-in-lib").applies)("main.rs"));
+        assert!(!(by_name("no-println-in-lib").applies)("experiments/figures.rs"));
+        assert!((by_name("no-println-in-lib").applies)("net/mod.rs"));
+    }
+}

@@ -6,9 +6,14 @@
 //!   experiment all          regenerate everything
 //!   sim                     run a single custom scenario
 //!   bench scale             fleet-scale events/sec harness -> BENCH_scale.json
+//!   lint                    determinism & hot-path invariant linter
 //!   serve                   live TCP serving mode (leader)
 //!   device                  live TCP device client
 //!   list                    list available experiments
+
+// Same hygiene bar as the library crate (rust/src/lib.rs).
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
 
 use std::path::{Path, PathBuf};
 
@@ -33,6 +38,7 @@ fn main() -> Result<()> {
         "experiment" => cmd_experiment(rest),
         "sim" => cmd_sim(rest),
         "bench" => cmd_bench(rest),
+        "lint" => cmd_lint(rest),
         "serve" => multitascpp::net::cmd_serve(rest),
         "device" => multitascpp::net::cmd_device(rest),
         "list" => {
@@ -52,7 +58,7 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "mtpp — MultiTASC++ multi-device cascade scheduler\n\n\
-         usage: mtpp <precompute|experiment|sim|bench|serve|device|list> [flags]\n\
+         usage: mtpp <precompute|experiment|sim|bench|lint|serve|device|list> [flags]\n\
          run `mtpp <cmd> --help` for per-command flags"
     );
 }
@@ -70,6 +76,34 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         }
         _ => bail!("usage: mtpp bench scale [--smoke] [--out BENCH_scale.json]"),
     }
+}
+
+fn cmd_lint(argv: &[String]) -> Result<()> {
+    let mut args = Args::new(
+        "mtpp lint",
+        "determinism & hot-path invariant linter (docs/linting.md)",
+    );
+    args.flag("root", "source tree to scan", Some("rust/src"))
+        .switch("json", "emit the report as JSON on stdout instead of text")
+        .flag("out", "also write the JSON report to this path", None);
+    let m = args.parse(argv)?;
+    let report = multitascpp::lint::lint_tree(Path::new(m.get_str("root")?))?;
+    // Write the artifact before deciding the exit code, so CI can
+    // upload the report from a failing run.
+    if let Some(path) = m.get("out").filter(|s| !s.is_empty()) {
+        std::fs::write(path, report.to_json().pretty(2))?;
+    }
+    if m.get_bool("json") {
+        println!("{}", report.to_json().pretty(2));
+    } else {
+        print!("{}", report.render_text());
+    }
+    ensure!(
+        report.is_clean(),
+        "{} lint violation(s)",
+        report.violations.len()
+    );
+    Ok(())
 }
 
 fn artifacts_flag(args: &mut Args) {

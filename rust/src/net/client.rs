@@ -3,7 +3,7 @@
 //! streams low-confidence samples to the leader, and reports SR
 //! telemetry every window (§IV-B) — a real device-side agent.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::TcpStream;
 use std::sync::mpsc;
@@ -90,14 +90,16 @@ pub fn run_device(
     let pace = Duration::from_secs_f64(device_latency_ms(opts.tier) / 1000.0);
     let window = Duration::from_secs_f64(cfg.window_s);
     let mut report = DeviceReport::default();
-    let mut in_flight: HashMap<u64, Instant> = HashMap::new();
+    // BTreeMap, not HashMap: stragglers drain in request order and the
+    // no-unordered-maps lint keeps hash iteration off the request path.
+    let mut in_flight: BTreeMap<u64, Instant> = BTreeMap::new();
     let mut window_start = Instant::now();
     let mut window_done = 0usize;
     let mut window_ok = 0usize;
 
     let drain = |rx: &mpsc::Receiver<ToDevice>,
                      decision: &mut DecisionFn,
-                     in_flight: &mut HashMap<u64, Instant>,
+                     in_flight: &mut BTreeMap<u64, Instant>,
                      report: &mut DeviceReport,
                      window_done: &mut usize,
                      window_ok: &mut usize| {

@@ -67,6 +67,7 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
         idle_timeout: std::time::Duration::from_secs_f64(idle_s),
     };
     let answered = serve(registry, &cfg, &opts)?;
+    // mtpp-lint: allow(no-println-in-lib) reason="primary stdout result of the `mtpp serve` subcommand, not a library diagnostic"
     println!("served {answered} heavy-model answers");
     Ok(())
 }
@@ -119,6 +120,7 @@ pub fn cmd_device(argv: &[String]) -> Result<()> {
         paced: !m.get_bool("flat-out"),
     };
     let report = run_device(registry, &ds, &cfg, &opts)?;
+    // mtpp-lint: allow(no-println-in-lib) reason="primary stdout result of the `mtpp device` subcommand, not a library diagnostic"
     println!(
         "device done: {} samples, {} forwarded ({:.1}%), SLO {:.1}%, final threshold {:.3}",
         report.samples,

@@ -145,6 +145,7 @@ impl QueueDiscipline for Fifo {
 /// slack pops first; ties break on arrival sequence (FIFO).
 #[derive(Debug, Default)]
 pub struct Edf {
+    // mtpp-lint: allow(binaryheap-boundary) reason="deterministic despite the heap: EdfEntry's total order tie-breaks on a unique push seq, so no two entries ever compare Equal"
     heap: std::collections::BinaryHeap<EdfEntry>,
     seq: u64,
 }
@@ -676,7 +677,13 @@ impl ServerPool {
 
     fn park(&mut self, idx: usize, now: f64) {
         let r = &mut self.replicas[idx];
-        debug_assert!(!r.busy && !r.parked && !r.warming);
+        debug_assert!(
+            !r.busy && !r.parked && !r.warming,
+            "park on replica {idx} in invalid state (busy={}, parked={}, warming={})",
+            r.busy,
+            r.parked,
+            r.warming
+        );
         r.parked = true;
         r.parked_since_s = now;
     }

@@ -685,6 +685,7 @@ impl<'a> ServerSubsystem<'a> {
     /// dense id-indexed counters become strings, for the end-of-run
     /// metrics report. Models that served nothing are omitted,
     /// matching the old lazily-populated map.
+    // mtpp-lint: allow(no-string-model-keys) reason="reporting boundary: interned ModelIds become names exactly once, for RunMetrics; never on the arrival/dispatch/completion path"
     pub fn model_batches_by_name(&self) -> BTreeMap<String, usize> {
         self.models
             .iter()

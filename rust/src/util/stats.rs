@@ -1,5 +1,14 @@
 //! Statistics substrate shared by metrics and the bench harness.
 
+/// Total-order comparator for `f64` — the blessed alternative to
+/// `partial_cmp(..).unwrap()` wherever times or scores are compared
+/// outside `sim/event.rs`'s checked comparators (enforced by the
+/// `checked-float-ordering` lint rule). IEEE-754 `totalOrder`: every
+/// NaN has a fixed sort position instead of poisoning the comparison.
+pub fn total_cmp_f64(a: f64, b: f64) -> std::cmp::Ordering {
+    a.total_cmp(&b)
+}
+
 /// Online mean/variance (Welford) plus min/max tracking.
 #[derive(Clone, Debug, Default)]
 pub struct Running {
@@ -185,6 +194,16 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn total_cmp_f64_orders_nan_deterministically() {
+        use std::cmp::Ordering;
+        assert_eq!(total_cmp_f64(1.0, 2.0), Ordering::Less);
+        assert_eq!(total_cmp_f64(2.0, 2.0), Ordering::Equal);
+        // NaN sorts above +inf under totalOrder — fixed, not a panic.
+        assert_eq!(total_cmp_f64(f64::NAN, f64::INFINITY), Ordering::Greater);
+        assert_eq!(total_cmp_f64(f64::NAN, f64::NAN), Ordering::Equal);
+    }
 
     #[test]
     fn running_matches_closed_form() {

@@ -1,0 +1,4 @@
+//! The binary entry point owns stdout.
+pub fn run() {
+    println!("cli output is main.rs's job");
+}

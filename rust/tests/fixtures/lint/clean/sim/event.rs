@@ -1,0 +1,9 @@
+//! The one file allowed to hold a BinaryHeap and hand-written float
+//! comparators (mirrors rust/src/sim/event.rs's carve-out).
+use std::collections::BinaryHeap;
+
+pub struct Queue(pub BinaryHeap<u64>);
+
+pub fn compare(a: f64, b: f64) -> Option<std::cmp::Ordering> {
+    a.partial_cmp(&b)
+}

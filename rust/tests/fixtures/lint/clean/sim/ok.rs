@@ -1,0 +1,32 @@
+//! Everything here skirts a rule without breaking it: forbidden names
+//! in comments/strings, contextful panics, id-keyed maps, and a
+//! properly reasoned waiver.
+use std::collections::BTreeMap;
+
+/* HashMap inside /* a nested block */ comment is inert */
+// So is Instant::now or BinaryHeap in a line comment.
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ModelId(pub u32);
+
+pub fn good(x: u64, ids: &BTreeMap<ModelId, u64>) {
+    assert!(x > 0, "x must be positive, got {x}");
+    if ids.is_empty() {
+        panic!("no models registered while handling request {x}");
+    }
+    let banner = "println! and HashMap and Instant::now inside a string";
+    let marker = "// mtpp-lint: allow(no-println-in-lib) reason=\"quoted, must not parse\"";
+    let raw = r#"eprintln!("SystemTime") in a raw string"#;
+    let _ = (banner, marker, raw);
+}
+
+// mtpp-lint: allow(no-unordered-maps) reason="demonstration: bounded two-entry scratch map, fully drained each call, never iterated"
+pub type Demo = std::collections::HashMap<u8, u8>;
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_assert_tersely() {
+        assert!(super::ModelId(1) == super::ModelId(1));
+    }
+}

@@ -1,0 +1,5 @@
+use std::collections::BinaryHeap;
+
+pub fn fresh() -> BinaryHeap<u64> {
+    BinaryHeap::new()
+}

@@ -1,0 +1,9 @@
+use std::collections::HashMap;
+use std::collections::HashSet;
+use std::collections::BTreeMap;
+
+pub type Tracking = HashMap<u64, f64>;
+pub type Seen = HashSet<usize>;
+pub type ByName = BTreeMap<String, usize>;
+pub type ByRef<'a> = BTreeMap<&'a str, usize>;
+pub type ById = BTreeMap<u64, usize>;

@@ -1,0 +1,22 @@
+pub fn checks(x: u64, flag: bool) {
+    assert!(x > 0);
+    debug_assert!(flag);
+    if x == 7 {
+        panic!("bad state");
+    }
+    if x == 8 {
+        panic!();
+    }
+    assert!(x < 10, "x out of range: {x}");
+    if x == 9 {
+        panic!("bad id {x}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn message_less_asserts_are_fine_in_tests() {
+        assert!(1 + 1 == 2);
+    }
+}

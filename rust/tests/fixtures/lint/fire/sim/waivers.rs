@@ -1,0 +1,8 @@
+// mtpp-lint: allow(no-wallclock-in-sim)
+pub use std::time::SystemTime;
+// mtpp-lint: allow(no-unordered-maps) reason="stale: nothing on the next line uses one"
+pub struct Nothing;
+// mtpp-lint: allow(made-up-rule) reason="no such rule exists"
+pub struct AlsoNothing;
+// mtpp-lint allow(missing-the-colon)
+pub struct StillNothing;

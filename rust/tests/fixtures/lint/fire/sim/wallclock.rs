@@ -1,0 +1,7 @@
+use std::time::Instant;
+use std::time::SystemTime;
+
+pub fn measure() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,4 @@
+pub fn noisy(x: u64) {
+    println!("x = {x}");
+    eprintln!("warning");
+}

@@ -1,0 +1,109 @@
+//! Tier-1 tidy gate for `mtpp lint` (docs/linting.md).
+//!
+//! Two jobs: (1) the shipped tree must be lint-clean — any violation
+//! or waiver-hygiene error fails plain `cargo test`, so determinism
+//! regressions surface in the PR that introduces them instead of as a
+//! golden-trace diff three PRs later; (2) the engine itself is pinned
+//! by fixture trees under `rust/tests/fixtures/lint/`: `fire/` lists
+//! every (path, line, rule) that must fire, `clean/` exercises the
+//! near-misses (strings, comments, carve-out files, reasoned waivers,
+//! test regions) that must not.
+
+use std::path::PathBuf;
+
+use multitascpp::lint::lint_tree;
+
+fn repo() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let report = lint_tree(&repo().join("rust/src")).expect("scan rust/src");
+    assert!(
+        report.is_clean(),
+        "mtpp lint found violations — fix them or waive with a reason:\n{}",
+        report.render_text()
+    );
+    // Guard against the scan silently finding nothing.
+    assert!(
+        report.files_scanned > 40,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+}
+
+#[test]
+fn fire_fixtures_fire_exactly_where_expected() {
+    let report =
+        lint_tree(&repo().join("rust/tests/fixtures/lint/fire")).expect("scan fire fixtures");
+    let got: Vec<(&str, u32, &str)> = report
+        .violations
+        .iter()
+        .map(|v| (v.path.as_str(), v.line, v.rule.as_str()))
+        .collect();
+    let expected: Vec<(&str, u32, &str)> = vec![
+        ("config/float.rs", 3, "checked-float-ordering"),
+        ("scheduler/heap.rs", 1, "binaryheap-boundary"),
+        ("scheduler/heap.rs", 3, "binaryheap-boundary"),
+        ("scheduler/heap.rs", 4, "binaryheap-boundary"),
+        ("sim/maps.rs", 1, "no-unordered-maps"),
+        ("sim/maps.rs", 2, "no-unordered-maps"),
+        ("sim/maps.rs", 5, "no-unordered-maps"),
+        ("sim/maps.rs", 6, "no-unordered-maps"),
+        ("sim/maps.rs", 7, "no-string-model-keys"),
+        ("sim/maps.rs", 8, "no-string-model-keys"),
+        ("sim/panics.rs", 2, "panic-with-context"),
+        ("sim/panics.rs", 3, "panic-with-context"),
+        ("sim/panics.rs", 5, "panic-with-context"),
+        ("sim/panics.rs", 8, "panic-with-context"),
+        // Waiver hygiene: reason-less, stale, unknown rule, malformed.
+        ("sim/waivers.rs", 1, "waiver"),
+        ("sim/waivers.rs", 3, "waiver"),
+        ("sim/waivers.rs", 5, "waiver"),
+        ("sim/waivers.rs", 7, "waiver"),
+        ("sim/wallclock.rs", 1, "no-wallclock-in-sim"),
+        ("sim/wallclock.rs", 2, "no-wallclock-in-sim"),
+        ("sim/wallclock.rs", 5, "no-wallclock-in-sim"),
+        ("util/print.rs", 2, "no-println-in-lib"),
+        ("util/print.rs", 3, "no-println-in-lib"),
+    ];
+    assert_eq!(got, expected, "\nfull report:\n{}", report.render_text());
+}
+
+#[test]
+fn clean_fixtures_stay_clean() {
+    let report =
+        lint_tree(&repo().join("rust/tests/fixtures/lint/clean")).expect("scan clean fixtures");
+    assert!(
+        report.is_clean(),
+        "clean fixture tree must not fire:\n{}",
+        report.render_text()
+    );
+    assert_eq!(report.files_scanned, 4);
+}
+
+#[test]
+fn json_report_is_parseable_and_ordered() {
+    use multitascpp::util::json::Json;
+    let report =
+        lint_tree(&repo().join("rust/tests/fixtures/lint/fire")).expect("scan fire fixtures");
+    let parsed = Json::parse(&report.to_json().pretty(2)).expect("valid JSON");
+    let viols = parsed.get("violations").unwrap().as_arr().unwrap();
+    assert_eq!(viols.len(), report.violations.len());
+    assert_eq!(parsed.get("clean").unwrap().as_bool(), Some(false));
+    // Deterministic order: (path, line, rule) ascending.
+    let keys: Vec<(String, u32, String)> = viols
+        .iter()
+        .map(|v| {
+            (
+                v.str_at("path").unwrap().to_string(),
+                v.f64_at("line").unwrap() as u32,
+                v.str_at("rule").unwrap().to_string(),
+            )
+        })
+        .collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted);
+}

@@ -1,0 +1,233 @@
+//! Deterministic fuzz smoke for the hand-rolled parsers (tier-1).
+//!
+//! The two inputs the binary accepts from the outside world are JSON
+//! text (`util::json`, scenario specs + wire bodies) and length-prefixed
+//! frames (`net::proto`). Both parsers are hand-written, so this test
+//! hammers them with seeded mutations of a valid corpus and asserts the
+//! only acceptable outcomes: `Ok` or `Err` — never a panic — and exact
+//! value round-trips on unmutated inputs.
+//!
+//! Everything is driven by `util::prng::Rng::stream`, so a failure
+//! reproduces exactly from its (seed, doc, mutation) coordinates. CI
+//! runs the small default budget; widen locally with
+//!
+//! ```text
+//! MTPP_FUZZ_SEEDS=64 MTPP_FUZZ_MUTS=512 cargo test --test parser_fuzz
+//! ```
+//!
+//! (see docs/linting.md, "Fuzz smoke" section).
+
+use multitascpp::net::proto::{read_frame, write_frame, ToDevice, ToServer, MAX_FRAME};
+use multitascpp::util::json::Json;
+use multitascpp::util::prng::Rng;
+
+fn env_budget(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn seeds() -> u64 {
+    env_budget("MTPP_FUZZ_SEEDS", 4)
+}
+
+fn muts() -> u64 {
+    env_budget("MTPP_FUZZ_MUTS", 64)
+}
+
+/// Valid documents spanning the grammar: nesting, escapes, unicode,
+/// number shapes, and a scenario-spec-like object.
+fn json_corpus() -> Vec<&'static str> {
+    vec![
+        "null",
+        "true",
+        "[]",
+        "{}",
+        "-0.5",
+        "1e3",
+        "[1,2.25,-3e-2,1000000]",
+        r#""plain string""#,
+        r#""esc \" \\ \n \t A é""#,
+        r#"{"a":[{"b":null},{"b":[true,false]}],"z":"end"}"#,
+        r#"{"devices":[{"tier":"low","sr_target":95.0,"slo_ms":150.0},
+                      {"tier":"high","sr_target":99.0,"slo_ms":50.0}],
+            "seed":42,"duration_s":600.5,"name":"sweep-α"}"#,
+        r#"{"type":"forward","request_id":7,"features":[0.5,-1.25,3.0]}"#,
+    ]
+}
+
+/// One seeded mutation: flip, insert, delete, truncate, or splice.
+fn mutate(rng: &mut Rng, base: &[u8]) -> Vec<u8> {
+    let mut b = base.to_vec();
+    if b.is_empty() {
+        return vec![rng.next_u64() as u8];
+    }
+    match rng.next_below(5) {
+        0 => {
+            let i = rng.next_below(b.len() as u64) as usize;
+            b[i] ^= 1 + rng.next_below(255) as u8;
+        }
+        1 => {
+            let i = rng.next_below(b.len() as u64 + 1) as usize;
+            b.insert(i, rng.next_u64() as u8);
+        }
+        2 => {
+            let i = rng.next_below(b.len() as u64) as usize;
+            b.remove(i);
+        }
+        3 => {
+            let i = rng.next_below(b.len() as u64) as usize;
+            b.truncate(i);
+        }
+        _ => {
+            let src = rng.next_below(b.len() as u64) as usize;
+            let dst = rng.next_below(b.len() as u64) as usize;
+            let n = 1 + rng.next_below(8.min(b.len() as u64)) as usize;
+            let chunk: Vec<u8> = b[src..(src + n).min(b.len())].to_vec();
+            for (k, &byte) in chunk.iter().enumerate() {
+                if dst + k < b.len() {
+                    b[dst + k] = byte;
+                }
+            }
+        }
+    }
+    b
+}
+
+#[test]
+fn valid_json_round_trips_exactly() {
+    for doc in json_corpus() {
+        let v = Json::parse(doc).unwrap_or_else(|e| panic!("corpus doc {doc:?} rejected: {e}"));
+        let compact = v.to_string();
+        assert_eq!(
+            Json::parse(&compact).unwrap(),
+            v,
+            "compact form of {doc:?} did not round-trip"
+        );
+        let pretty = v.pretty(2);
+        assert_eq!(
+            Json::parse(&pretty).unwrap(),
+            v,
+            "pretty form of {doc:?} did not round-trip"
+        );
+    }
+}
+
+#[test]
+fn mutated_json_never_panics() {
+    for seed in 0..seeds() {
+        for (di, doc) in json_corpus().iter().enumerate() {
+            let mut rng = Rng::stream(0x4a50_0000 + seed, di as u64);
+            for _ in 0..muts() {
+                let bytes = mutate(&mut rng, doc.as_bytes());
+                let text = String::from_utf8_lossy(&bytes);
+                // Mutations may stay valid JSON; if so, push the value
+                // through the typed wire decoders too — they must also
+                // reject gracefully rather than panic.
+                if let Ok(v) = Json::parse(&text) {
+                    let _ = ToServer::from_json(&v);
+                    let _ = ToDevice::from_json(&v);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    for seed in 0..seeds() {
+        let mut rng = Rng::stream(0x6742_0000, seed);
+        for _ in 0..muts() * 4 {
+            let len = rng.next_below(257) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = Json::parse(&String::from_utf8_lossy(&bytes));
+        }
+    }
+}
+
+fn wire_corpus() -> Vec<Json> {
+    vec![
+        ToServer::Hello {
+            tier: "low".into(),
+            sr_target: 95.0,
+            slo_ms: 150.0,
+        }
+        .to_json(),
+        ToServer::Forward {
+            request_id: 7,
+            features: vec![0.5, -1.25, 3.0],
+        }
+        .to_json(),
+        ToServer::SrUpdate { sr_percent: 92.5 }.to_json(),
+        ToServer::Bye.to_json(),
+        ToDevice::Welcome {
+            device_id: 3,
+            threshold: 0.5,
+        }
+        .to_json(),
+        ToDevice::Answer {
+            request_id: 9,
+            top1: 42,
+            p_top1: 0.875,
+        }
+        .to_json(),
+        ToDevice::SetThreshold { threshold: 0.31 }.to_json(),
+    ]
+}
+
+#[test]
+fn frame_stream_round_trips() {
+    // All wire messages in one stream, read back in order, EOF at end.
+    let msgs = wire_corpus();
+    let mut buf = Vec::new();
+    for m in &msgs {
+        write_frame(&mut buf, m).unwrap();
+    }
+    let mut cursor = buf.as_slice();
+    for m in &msgs {
+        let got = read_frame(&mut cursor).unwrap().expect("frame present");
+        assert_eq!(&got, m);
+    }
+    assert!(read_frame(&mut cursor).unwrap().is_none());
+}
+
+#[test]
+fn mutated_frames_never_panic() {
+    let mut base = Vec::new();
+    for m in wire_corpus() {
+        write_frame(&mut base, &m).unwrap();
+    }
+    for seed in 0..seeds() {
+        let mut rng = Rng::stream(0x4652_0000, seed);
+        for _ in 0..muts() {
+            let bytes = mutate(&mut rng, &base);
+            let mut cursor = bytes.as_slice();
+            // Drain the stream: every frame is Ok(Some), Ok(None), or
+            // Err — a corrupted length prefix must be bounded by
+            // MAX_FRAME, not trusted into an allocation.
+            loop {
+                match read_frame(&mut cursor) {
+                    Ok(Some(_)) => continue,
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_not_allocated() {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&u32::MAX.to_le_bytes());
+    buf.extend_from_slice(b"garbage");
+    let err = read_frame(&mut buf.as_slice()).expect_err("must reject");
+    assert!(
+        err.to_string().contains("oversized"),
+        "unexpected error: {err}"
+    );
+    // Boundary: exactly MAX_FRAME is accepted as a length (then EOFs).
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&MAX_FRAME.to_le_bytes());
+    assert!(read_frame(&mut buf.as_slice()).is_err());
+}

@@ -8,6 +8,10 @@
 //! as `context: source` chains, matching upstream behavior closely
 //! enough for logs and test assertions.
 
+// Same hygiene bar as the main crate (rust/src/lib.rs).
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
+
 use std::error::Error as StdError;
 use std::fmt;
 

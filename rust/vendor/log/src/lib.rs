@@ -8,6 +8,10 @@
 //! macros check the max level *before* formatting so disabled levels
 //! cost one atomic load.
 
+// `forbid(unsafe_code)` is deliberately absent: `set_logger` stores the
+// global logger through a raw pointer (mirroring upstream `log`).
+#![deny(unused_must_use)]
+
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
