@@ -8,9 +8,11 @@
 //!
 //! Runs entirely on the synthetic harness (no artifacts): a §V-A
 //! heterogeneous population against a two-replica mixed pool with
-//! shedding, once over the single shared queue and once over
-//! per-model shards with work stealing — the comparison the sharding
-//! work is accountable to.
+//! shedding, once over the single shared queue, once over per-model
+//! shards with work stealing — the comparison the sharding work is
+//! accountable to — and once replaying a seeded diurnal `.events`
+//! trace through the sharded pool, so trace-replay throughput has a
+//! trajectory too.
 
 use std::path::Path;
 use std::time::Instant;
@@ -25,7 +27,7 @@ use crate::util::stats::fnv1a64;
 /// One measured cell of the scale grid.
 #[derive(Clone, Debug)]
 pub struct ScalePoint {
-    /// Sharding variant label (`single` | `sharded`).
+    /// Workload variant label (`single` | `sharded` | `trace`).
     pub label: &'static str,
     pub devices: usize,
     pub samples_per_device: usize,
@@ -86,38 +88,78 @@ pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
         for (label, sharding) in [("single", "1"), ("sharded", "per-model")] {
             let spec = cell_spec(n, samples, sharding)?;
             let digest = format!("{:016x}", fnv1a64(spec.to_json().to_string().as_bytes()));
-            let t0 = Instant::now();
-            let m = ctx.run_spec(&spec)?;
-            let wall_s = t0.elapsed().as_secs_f64();
-            let point = ScalePoint {
-                label,
-                devices: n,
-                samples_per_device: samples,
-                seed: spec.seed,
-                scenario_digest: digest,
-                events: m.events,
-                shed: m.shed,
-                steals: m.steals,
-                wall_s,
-                events_per_sec: m.events as f64 / wall_s.max(1e-9),
-                samples_per_sec: m.overall.samples as f64 / wall_s.max(1e-9),
-            };
-            println!(
-                "{label:<8} n={n:<5} {:>9} events in {:>6.2}s  ({:>10.0} events/s, \
-                 {:>9.0} samples/s, shed {}, steals {})",
-                point.events,
-                point.wall_s,
-                point.events_per_sec,
-                point.samples_per_sec,
-                point.shed,
-                point.steals
-            );
-            points.push(point);
+            points.push(measure_cell(&mut ctx, label, n, samples, &spec, digest)?);
         }
+        // Replay variant: the same fleet driven by a seeded diurnal
+        // `.events` trace through the sharded pool, so the trajectory
+        // tracks trace-replay events/sec alongside the synthetic
+        // arrival generators.
+        let tf = crate::trace::generate(&crate::trace::GenSpec {
+            shape: crate::trace::TraceShape::Diurnal,
+            devices: u32::try_from(n).context("bench device count")?,
+            duration_s: samples as f64,
+            seed: 0,
+            ..Default::default()
+        })?;
+        let trace_path = std::env::temp_dir().join(format!("mtpp_bench_scale_{n}.events"));
+        tf.save(&trace_path)?;
+        let mut spec = cell_spec(n, samples, "per-model")?;
+        spec.set(
+            "workload.trace",
+            trace_path.to_str().context("temp dir path is not UTF-8")?,
+        )?;
+        // The digest must identify the workload, not the machine: swap
+        // the temp path for the trace's own content digest before
+        // hashing the spec.
+        let mut identity = spec.clone();
+        identity.set("workload.trace", &format!("digest:{:016x}", tf.digest()))?;
+        let digest = format!(
+            "{:016x}",
+            fnv1a64(identity.to_json().to_string().as_bytes())
+        );
+        points.push(measure_cell(&mut ctx, "trace", n, samples, &spec, digest)?);
     }
     write_report(smoke, &points, out)?;
     println!("wrote {}", out.display());
     Ok(points)
+}
+
+/// Time one cell spec and fold the run into a [`ScalePoint`].
+fn measure_cell(
+    ctx: &mut Ctx,
+    label: &'static str,
+    n: usize,
+    samples: usize,
+    spec: &ScenarioSpec,
+    scenario_digest: String,
+) -> Result<ScalePoint> {
+    let t0 = Instant::now();
+    let m = ctx.run_spec(spec)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let point = ScalePoint {
+        label,
+        devices: n,
+        samples_per_device: samples,
+        seed: spec.seed,
+        scenario_digest,
+        events: m.events,
+        shed: m.shed,
+        steals: m.steals,
+        wall_s,
+        events_per_sec: m.events as f64 / wall_s.max(1e-9),
+        samples_per_sec: m.overall.samples as f64 / wall_s.max(1e-9),
+    };
+    println!(
+        "{label:<8} n={n:<5} {:>9} events in {:>6.2}s  ({:>10.0} events/s, \
+         {:>9.0} samples/s, shed {}, steals {})",
+        point.events,
+        point.wall_s,
+        point.events_per_sec,
+        point.samples_per_sec,
+        point.shed,
+        point.steals
+    );
+    Ok(point)
 }
 
 fn points_json(points: &[ScalePoint]) -> Json {

@@ -288,6 +288,11 @@ pub struct Scenario {
     /// 0.35); `None` starts each device at its calibrated static
     /// threshold. Subsumes the old per-run `Overrides` side-channel.
     pub initial_threshold: Option<f64>,
+    /// Replay workload: arrivals come from this loaded `.events` trace
+    /// instead of the synthetic per-device stream model (in which case
+    /// `samples_per_device` is governed by the trace). Bound by
+    /// `ScenarioSpec::validate()` from `workload.trace`.
+    pub trace: Option<crate::trace::LoadedTrace>,
     /// Interned server-model name table, resolved once at scenario
     /// construction (`ScenarioSpec::validate()` or the builders). The
     /// hot simulation paths carry [`crate::models::ModelId`]s from
@@ -311,6 +316,7 @@ impl Scenario {
             server: ServerPolicy::default(),
             tier_slo_ms: Vec::new(),
             initial_threshold: None,
+            trace: None,
             models: ModelTable::builtin(),
         }
     }
@@ -362,6 +368,19 @@ impl Scenario {
     /// Force every device's initial forwarding threshold.
     pub fn with_initial_threshold(mut self, c: f64) -> Self {
         self.initial_threshold = Some(c);
+        self
+    }
+
+    /// Replay arrivals from a loaded `.events` trace instead of the
+    /// synthetic stream model.
+    pub fn with_trace(mut self, trace: crate::trace::LoadedTrace) -> Self {
+        assert!(
+            trace.file.device_count as usize <= self.total_devices(),
+            "trace spans device ids 0..{} but the scenario population has only {} devices",
+            trace.file.device_count,
+            self.total_devices()
+        );
+        self.trace = Some(trace);
         self
     }
 

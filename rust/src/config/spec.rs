@@ -27,7 +27,7 @@ use crate::util::json::Json;
 /// compile time from `scenarios/` so a preset can never go missing at
 /// runtime; CI re-runs every one of them against `--dump-spec`
 /// round-trips so the files can never rot either.
-pub const PRESETS: [(&str, &str); 8] = [
+pub const PRESETS: [(&str, &str); 10] = [
     (
         "seed-baseline",
         include_str!("../../../scenarios/seed-baseline.json"),
@@ -59,6 +59,14 @@ pub const PRESETS: [(&str, &str); 8] = [
     (
         "headroom-autoscale",
         include_str!("../../../scenarios/headroom-autoscale.json"),
+    ),
+    (
+        "diurnal-trace",
+        include_str!("../../../scenarios/diurnal-trace.json"),
+    ),
+    (
+        "flash-crowd-trace",
+        include_str!("../../../scenarios/flash-crowd-trace.json"),
     ),
 ];
 
@@ -95,6 +103,21 @@ pub struct ScenarioSpec {
     pub exec: ExecMode,
     /// Server-side deployment shape.
     pub server: ServerPolicy,
+    /// Workload source: synthetic per-device streams (the default) or
+    /// a recorded `.events` trace replayed deterministically.
+    pub workload: WorkloadSpec,
+}
+
+/// Where arrivals come from. The default (`trace: None`) is the
+/// synthetic per-device stream model; with a trace, each device's
+/// capture moments replay from the file and `samples_per_device` is
+/// governed by the trace instead.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkloadSpec {
+    /// Path to a compiled `.events` trace (see docs/traces.md), or
+    /// `None` for synthetic streams. Resolved relative to the working
+    /// directory at `validate()` time.
+    pub trace: Option<String>,
 }
 
 impl Default for ScenarioSpec {
@@ -123,6 +146,9 @@ impl ScenarioSpec {
             initial_threshold: scn.initial_threshold,
             exec: scn.exec,
             server: scn.server.clone(),
+            workload: WorkloadSpec {
+                trace: scn.trace.as_ref().map(|t| t.path.clone()),
+            },
         }
     }
 
@@ -305,6 +331,27 @@ impl ScenarioSpec {
             );
         }
         self.check_json_ints()?;
+        // Load and check the replay trace here, at the one validation
+        // boundary, so the engine only ever sees a parsed, digest-
+        // verified trace whose device-id space fits the population.
+        let trace = match &self.workload.trace {
+            None => None,
+            Some(path) => {
+                let file = crate::trace::TraceFile::load(Path::new(path))
+                    .with_context(|| format!("workload.trace = '{path}'"))?;
+                ensure!(
+                    file.device_count as usize <= self.total_devices(),
+                    "workload.trace '{path}' spans device ids 0..{} but the scenario \
+                     population has only {} devices",
+                    file.device_count,
+                    self.total_devices()
+                );
+                Some(crate::trace::LoadedTrace {
+                    path: path.clone(),
+                    file,
+                })
+            }
+        };
         // Intern model names once, here at the validation boundary:
         // everything downstream of the Scenario carries `ModelId`s.
         let models = ModelTable::builtin();
@@ -321,6 +368,7 @@ impl ScenarioSpec {
             server: self.server.clone(),
             tier_slo_ms: self.tier_slo_ms.clone(),
             initial_threshold: self.initial_threshold,
+            trace,
             models,
         })
     }
@@ -421,6 +469,16 @@ impl ScenarioSpec {
             ),
             ("exec", Json::str(self.exec.name())),
             ("server", server),
+            (
+                "workload",
+                Json::obj(vec![(
+                    "trace",
+                    self.workload
+                        .trace
+                        .as_deref()
+                        .map_or(Json::Null, Json::str),
+                )]),
+            ),
         ])
     }
 
@@ -431,7 +489,7 @@ impl ScenarioSpec {
         let obj = v
             .as_obj()
             .ok_or_else(|| anyhow!("scenario spec must be a JSON object"))?;
-        const KEYS: [&str; 12] = [
+        const KEYS: [&str; 13] = [
             "devices",
             "server_model",
             "scheduler",
@@ -444,6 +502,7 @@ impl ScenarioSpec {
             "initial_threshold",
             "exec",
             "server",
+            "workload",
         ];
         for key in obj.keys() {
             ensure!(
@@ -522,6 +581,9 @@ impl ScenarioSpec {
         }
         if let Some(x) = opt(v, "server") {
             spec.server = server_from_json(x)?;
+        }
+        if let Some(x) = opt(v, "workload") {
+            spec.workload = workload_from_json(x)?;
         }
         Ok(spec)
     }
@@ -649,6 +711,13 @@ impl ScenarioSpec {
                     None
                 } else {
                     Some(parse_finite(key, value)?)
+                }
+            }
+            "workload.trace" => {
+                self.workload.trace = if value == "none" {
+                    None
+                } else {
+                    Some(value.to_string())
                 }
             }
             "server.autoscale" => {
@@ -937,6 +1006,23 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
     Ok(p)
 }
 
+fn workload_from_json(v: &Json) -> Result<WorkloadSpec> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| anyhow!("'workload' must be an object"))?;
+    for key in obj.keys() {
+        ensure!(
+            key == "trace",
+            "unknown workload key '{key}' (known: trace)"
+        );
+    }
+    let mut w = WorkloadSpec::default();
+    if let Some(x) = opt(v, "trace") {
+        w.trace = Some(as_str(x, "workload.trace")?.to_string());
+    }
+    Ok(w)
+}
+
 fn parse_devices(value: &str) -> Result<Vec<(Tier, usize)>> {
     if let Some(n) = value.strip_prefix("hetero:") {
         let n: usize = n
@@ -1012,6 +1098,31 @@ mod tests {
     fn unknown_keys_rejected() {
         assert!(ScenarioSpec::parse_str(r#"{"slo": 100}"#).is_err());
         assert!(ScenarioSpec::parse_str(r#"{"server": {"queues": "edf"}}"#).is_err());
+        assert!(ScenarioSpec::parse_str(r#"{"workload": {"traces": "x"}}"#).is_err());
+    }
+
+    #[test]
+    fn workload_trace_json_roundtrip_and_validation() {
+        let spec =
+            ScenarioSpec::parse_str(r#"{"workload": {"trace": "scenarios/traces/diurnal.events"}}"#)
+                .unwrap();
+        assert_eq!(
+            spec.workload.trace.as_deref(),
+            Some("scenarios/traces/diurnal.events")
+        );
+        let back = ScenarioSpec::parse_str(&spec.to_json().pretty(2)).unwrap();
+        assert_eq!(back, spec);
+        // A null / absent trace is the synthetic default.
+        let spec = ScenarioSpec::parse_str(r#"{"workload": {"trace": null}}"#).unwrap();
+        assert_eq!(spec, ScenarioSpec::default());
+        // A missing file fails validation with the path in the error.
+        let mut spec = ScenarioSpec::default();
+        spec.set("workload.trace", "/nonexistent/path.events").unwrap();
+        let err = spec.validate().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("/nonexistent/path.events"),
+            "{err:#}"
+        );
     }
 
     #[test]
@@ -1055,6 +1166,14 @@ mod tests {
         assert_eq!(spec.server.warmup_ms, Some(250.0));
         spec.set("server.warmup_ms", "none").unwrap();
         assert_eq!(spec.server.warmup_ms, None);
+        spec.set("workload.trace", "scenarios/traces/diurnal.events")
+            .unwrap();
+        assert_eq!(
+            spec.workload.trace.as_deref(),
+            Some("scenarios/traces/diurnal.events")
+        );
+        spec.set("workload.trace", "none").unwrap();
+        assert_eq!(spec.workload.trace, None);
         assert!(spec.set("nope", "1").is_err());
         assert!(spec.set("slo_ms", "NaN").is_err());
         // Seeds beyond the exact-JSON-integer range are rejected here,

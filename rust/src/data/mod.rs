@@ -4,4 +4,4 @@ pub mod dataset;
 pub mod sampler;
 
 pub use dataset::Dataset;
-pub use sampler::device_stream;
+pub use sampler::{device_stream, replay_stream};

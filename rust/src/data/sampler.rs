@@ -23,9 +23,38 @@ pub fn device_stream(
         .collect()
 }
 
+/// Map one device's trace arrivals onto dataset indices for replay.
+///
+/// Recorded sample ids pin content deterministically into the eval
+/// pool (`pool.start + id % pool_len`, so a shared id across devices
+/// means the *same* dataset sample — correlated-content bursts
+/// survive replay). Arrivals without a recorded id
+/// ([`crate::trace::SAMPLE_NONE`]) draw from a seeded per-device
+/// stream, salted differently from [`device_stream`] so replaying a
+/// trace never aliases the synthetic stream of the same seed.
+pub fn replay_stream(ds: &Dataset, seed: u64, device_id: usize, samples: &[u32]) -> Vec<usize> {
+    let pool = ds.eval_pool();
+    let pool_len = pool.len();
+    let mut rng = Rng::stream(
+        seed.wrapping_mul(0xA24B_AED4_963E_E407),
+        device_id as u64,
+    );
+    samples
+        .iter()
+        .map(|&s| {
+            if s == crate::trace::SAMPLE_NONE {
+                pool.start + rng.next_below(pool_len as u64) as usize
+            } else {
+                pool.start + s as usize % pool_len
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::SAMPLE_NONE;
 
     fn ds() -> Dataset {
         Dataset::synthetic_for_tests(1000, 4, 10)
@@ -67,5 +96,29 @@ mod tests {
         let d = ds();
         let s = device_stream(&d, 3, 0, 10_000);
         assert_eq!(s.len(), d.eval_pool().len());
+    }
+
+    #[test]
+    fn replay_stream_pins_recorded_ids_and_fills_the_rest() {
+        let d = ds();
+        let pool = d.eval_pool();
+        let samples = [7u32, SAMPLE_NONE, 7, 12345, SAMPLE_NONE];
+        let a = replay_stream(&d, 9, 0, &samples);
+        let b = replay_stream(&d, 9, 0, &samples);
+        assert_eq!(a, b, "replay mapping must be deterministic");
+        assert_eq!(a.len(), samples.len());
+        // Recorded ids map to fixed pool slots: same id, same sample.
+        assert_eq!(a[0], a[2]);
+        assert_eq!(a[0], pool.start + 7 % pool.len());
+        // Shared ids pin the same content on a *different* device too.
+        let other = replay_stream(&d, 9, 3, &samples);
+        assert_eq!(a[0], other[0]);
+        // Unrecorded ids draw per-device (overwhelmingly different).
+        assert_ne!(a, other);
+        for &i in &a {
+            assert!(i >= pool.start && i < pool.start + pool.len());
+        }
+        // Different seeds move the unrecorded draws.
+        assert_ne!(replay_stream(&d, 9, 0, &samples), replay_stream(&d, 10, 0, &samples));
     }
 }

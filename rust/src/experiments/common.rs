@@ -15,7 +15,7 @@ use crate::models::outputs::{CachedOutputs, RealExecProvider, SyntheticOutputs};
 use crate::models::Registry;
 use crate::runtime::Engine;
 use crate::util::json::Json;
-use crate::util::stats::seed_summary;
+use crate::util::stats::{fnv1a64, seed_summary};
 
 /// Everything an experiment driver needs.
 pub struct Ctx {
@@ -410,4 +410,46 @@ pub fn emit_trace(path: &Path, metrics: &RunMetrics) -> Result<()> {
     std::fs::write(path, trace_csv(metrics))?;
     println!("wrote {}", path.display());
     Ok(())
+}
+
+/// Every deterministic end-of-run counter of a [`RunMetrics`], as
+/// `(field, value)` pairs — the shared vocabulary of the golden-trace
+/// harness and `mtpp sim --metrics-out`. Two runs are bit-identical
+/// exactly when these fields (which fold the full telemetry trace in
+/// via `trace_hash`) are equal; floats serialize shortest-roundtrip
+/// through the JSON layer, so comparisons stay exact.
+pub fn metrics_snapshot_fields(m: &RunMetrics) -> Vec<(&'static str, Json)> {
+    vec![
+        ("samples", Json::num(m.overall.samples as f64)),
+        ("satisfied", Json::num(m.overall.satisfied as f64)),
+        ("correct", Json::num(m.overall.correct as f64)),
+        ("forwarded", Json::num(m.overall.forwarded as f64)),
+        ("shed", Json::num(m.shed as f64)),
+        ("steals", Json::num(m.steals as f64)),
+        ("scale_events", Json::num(m.scale_events as f64)),
+        ("events", Json::num(m.events as f64)),
+        ("latency_count", Json::num(m.latencies.len() as f64)),
+        (
+            "per_server_batches",
+            Json::Arr(
+                m.per_server_batches
+                    .iter()
+                    .map(|&b| Json::num(b as f64))
+                    .collect(),
+            ),
+        ),
+        ("makespan_s", Json::num(m.makespan_s)),
+        ("parked_replica_seconds", Json::num(m.parked_replica_seconds)),
+        ("warmup_replica_seconds", Json::num(m.warmup_replica_seconds)),
+        ("trace_points", Json::num(m.trace.len() as f64)),
+        (
+            "trace_hash",
+            Json::str(&format!("{:016x}", fnv1a64(trace_csv(m).as_bytes()))),
+        ),
+    ]
+}
+
+/// [`metrics_snapshot_fields`] as one JSON object.
+pub fn metrics_snapshot(m: &RunMetrics) -> Json {
+    Json::obj(metrics_snapshot_fields(m))
 }

@@ -21,6 +21,9 @@
 //!   [`sim::server`] submodule generalizes the server side into a
 //!   replicated pool with pluggable queue disciplines (FIFO / EDF /
 //!   tier-WFQ) and optional admission control.
+//! * [`trace`] — workload traces: text ingestion and seeded shape
+//!   generators compiled to a binary `.events` format, replayed
+//!   deterministically through `workload.trace` in `ScenarioSpec`.
 //! * [`net`] — live wall-clock serving mode over TCP.
 //! * [`experiments`] — one driver per paper figure/table.
 //! * [`lint`] — in-repo static analysis enforcing the determinism
@@ -43,4 +46,5 @@ pub mod net;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod trace;
 pub mod util;

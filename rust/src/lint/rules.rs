@@ -31,7 +31,10 @@ pub fn registry() -> Vec<Rule> {
             summary: "virtual-time code must not read the wall clock",
             skip_test_code: false,
             applies: |p| {
-                starts(p, "sim/") || starts(p, "scheduler/") || starts(p, "cascade/")
+                starts(p, "sim/")
+                    || starts(p, "scheduler/")
+                    || starts(p, "cascade/")
+                    || starts(p, "trace/")
             },
             check: check_wallclock,
         },
@@ -44,6 +47,7 @@ pub fn registry() -> Vec<Rule> {
                     || starts(p, "scheduler/")
                     || starts(p, "cascade/")
                     || starts(p, "net/")
+                    || starts(p, "trace/")
             },
             check: check_unordered_maps,
         },
@@ -51,7 +55,7 @@ pub fn registry() -> Vec<Rule> {
             name: "no-string-model-keys",
             summary: "model maps on the request path must key on interned ModelId",
             skip_test_code: false,
-            applies: |p| starts(p, "sim/"),
+            applies: |p| starts(p, "sim/") || starts(p, "trace/"),
             check: check_string_model_keys,
         },
         Rule {
@@ -385,9 +389,13 @@ mod tests {
     fn scopes_are_as_documented() {
         let by_name = |n: &str| registry().into_iter().find(|r| r.name == n).unwrap();
         assert!((by_name("no-wallclock-in-sim").applies)("sim/engine.rs"));
+        assert!((by_name("no-wallclock-in-sim").applies)("trace/gen.rs"));
         assert!(!(by_name("no-wallclock-in-sim").applies)("bench/scale.rs"));
         assert!(!(by_name("no-wallclock-in-sim").applies)("net/client.rs"));
         assert!((by_name("no-unordered-maps").applies)("net/client.rs"));
+        assert!((by_name("no-unordered-maps").applies)("trace/format.rs"));
+        assert!((by_name("no-string-model-keys").applies)("trace/parse.rs"));
+        assert!(!(by_name("no-string-model-keys").applies)("util/json.rs"));
         assert!(!(by_name("binaryheap-boundary").applies)("sim/event.rs"));
         assert!((by_name("binaryheap-boundary").applies)("sim/server.rs"));
         assert!(!(by_name("checked-float-ordering").applies)("util/stats.rs"));

@@ -5,6 +5,7 @@
 //!   experiment <id>         regenerate a paper figure/table (see list)
 //!   experiment all          regenerate everything
 //!   sim                     run a single custom scenario
+//!   trace                   compile/generate/inspect .events replay traces
 //!   bench scale             fleet-scale events/sec harness -> BENCH_scale.json
 //!   lint                    determinism & hot-path invariant linter
 //!   serve                   live TCP serving mode (leader)
@@ -17,13 +18,14 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use multitascpp::config::scenario::{ExecMode, ShardingKind};
 use multitascpp::config::spec::{preset_names, ScenarioSpec};
 use multitascpp::config::SystemConfig;
 use multitascpp::experiments::{self, Ctx};
 use multitascpp::models::Tier;
+use multitascpp::trace::{compile, generate, parse_text, GenSpec, TextFormat, TraceFile, TraceShape};
 use multitascpp::util::cli::{server_flags, Args, Matches};
 
 fn main() -> Result<()> {
@@ -37,6 +39,7 @@ fn main() -> Result<()> {
         "precompute" => cmd_precompute(rest),
         "experiment" => cmd_experiment(rest),
         "sim" => cmd_sim(rest),
+        "trace" => cmd_trace(rest),
         "bench" => cmd_bench(rest),
         "lint" => cmd_lint(rest),
         "serve" => multitascpp::net::cmd_serve(rest),
@@ -58,7 +61,7 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "mtpp — MultiTASC++ multi-device cascade scheduler\n\n\
-         usage: mtpp <precompute|experiment|sim|bench|lint|serve|device|list> [flags]\n\
+         usage: mtpp <precompute|experiment|sim|trace|bench|lint|serve|device|list> [flags]\n\
          run `mtpp <cmd> --help` for per-command flags"
     );
 }
@@ -76,6 +79,177 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         }
         _ => bail!("usage: mtpp bench scale [--smoke] [--out BENCH_scale.json]"),
     }
+}
+
+/// `mtpp trace` — the `.events` replay-trace toolbox (docs/traces.md):
+/// `compile` text arrival logs, `gen` seeded synthetic shapes, `info`
+/// to inspect a file. Replay itself is `mtpp sim --set
+/// workload.trace=<file>`.
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let usage = "usage: mtpp trace <compile|gen|info> [flags] (see docs/traces.md)";
+    let Some((sub, rest)) = argv.split_first() else {
+        bail!("{usage}");
+    };
+    match sub.as_str() {
+        "compile" => trace_compile(rest),
+        "gen" => trace_gen(rest),
+        "info" => trace_info(rest),
+        "--help" | "-h" | "help" => {
+            println!("{usage}");
+            Ok(())
+        }
+        other => bail!("unknown trace subcommand '{other}' ({usage})"),
+    }
+}
+
+fn trace_compile(argv: &[String]) -> Result<()> {
+    let mut args = Args::new(
+        "mtpp trace compile",
+        "compile a CSV/JSONL arrival log into a .events trace",
+    );
+    args.flag(
+        "format",
+        "input format: csv|jsonl (default: sniff the file extension)",
+        None,
+    )
+    .flag(
+        "out",
+        "output path (default: the input with a .events extension)",
+        None,
+    )
+    .allow_positional();
+    let m = args.parse(argv)?;
+    let [input] = m.positional.as_slice() else {
+        bail!("usage: mtpp trace compile <arrivals.csv|.jsonl> [--format csv|jsonl] [--out x.events]");
+    };
+    let input = Path::new(input);
+    let fmt = match m.get("format").filter(|s| !s.is_empty()) {
+        Some(f) => TextFormat::parse(f)?,
+        None => TextFormat::from_path(input)?,
+    };
+    let text = std::fs::read_to_string(input)
+        .with_context(|| format!("read arrival log {}", input.display()))?;
+    let tf = compile(parse_text(fmt, &text)?)
+        .with_context(|| format!("compile {}", input.display()))?;
+    let out = m
+        .get("out")
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from)
+        .unwrap_or_else(|| input.with_extension("events"));
+    tf.save(&out)?;
+    print_trace_summary(&format!("wrote {}", out.display()), &tf);
+    Ok(())
+}
+
+fn trace_gen(argv: &[String]) -> Result<()> {
+    let mut args = Args::new(
+        "mtpp trace gen",
+        "generate a seeded synthetic .events trace (diurnal|flash-crowd|bursts|churn)",
+    );
+    args.flag("devices", "device count", Some("50"))
+        .flag("duration", "trace length in seconds", Some("300"))
+        .flag("rate", "per-device mean arrival rate in Hz", Some("1"))
+        .flag("seed", "generator seed", Some("0"))
+        .flag("out", "output .events path", Some("trace.events"))
+        .flag(
+            "period",
+            "diurnal: cycle period in seconds (0 = one cycle over the whole duration)",
+            Some("0"),
+        )
+        .flag("amplitude", "diurnal: rate swing in [0, 1)", Some("0.8"))
+        .flag(
+            "spike-at",
+            "flash-crowd: spike onset as a fraction of the duration",
+            Some("0.4"),
+        )
+        .flag(
+            "spike-dur",
+            "flash-crowd: spike length as a fraction of the duration",
+            Some("0.1"),
+        )
+        .flag(
+            "spike-mult",
+            "flash-crowd: rate multiplier inside the spike",
+            Some("6"),
+        )
+        .flag(
+            "burst-every",
+            "bursts: mean seconds between burst epochs",
+            Some("30"),
+        )
+        .flag(
+            "burst-prob",
+            "bursts: per-device epoch participation probability",
+            Some("0.5"),
+        )
+        .flag(
+            "burst-size",
+            "bursts: arrivals per participating device per epoch",
+            Some("8"),
+        )
+        .flag(
+            "burst-window",
+            "bursts: arrival spread after each epoch, seconds",
+            Some("0.5"),
+        )
+        .flag(
+            "churn-frac",
+            "churn: fraction of the duration trimmed by joins/leaves",
+            Some("0.35"),
+        )
+        .allow_positional();
+    let m = args.parse(argv)?;
+    let [shape] = m.positional.as_slice() else {
+        bail!("usage: mtpp trace gen <diurnal|flash-crowd|bursts|churn> [flags]");
+    };
+    let spec = GenSpec {
+        shape: TraceShape::parse(shape)?,
+        devices: u32::try_from(m.get_usize("devices")?).context("--devices")?,
+        duration_s: m.get_f64("duration")?,
+        rate_hz: m.get_f64("rate")?,
+        seed: m.get_u64("seed")?,
+        period_s: m.get_f64("period")?,
+        amplitude: m.get_f64("amplitude")?,
+        spike_at_frac: m.get_f64("spike-at")?,
+        spike_dur_frac: m.get_f64("spike-dur")?,
+        spike_mult: m.get_f64("spike-mult")?,
+        burst_every_s: m.get_f64("burst-every")?,
+        burst_prob: m.get_f64("burst-prob")?,
+        burst_size: u32::try_from(m.get_usize("burst-size")?).context("--burst-size")?,
+        burst_window_s: m.get_f64("burst-window")?,
+        churn_frac: m.get_f64("churn-frac")?,
+    };
+    let tf = generate(&spec)?;
+    let out = PathBuf::from(m.get_str("out")?);
+    tf.save(&out)?;
+    print_trace_summary(&format!("wrote {}", out.display()), &tf);
+    Ok(())
+}
+
+fn trace_info(argv: &[String]) -> Result<()> {
+    let mut args = Args::new("mtpp trace info", "inspect a .events trace");
+    args.allow_positional();
+    let m = args.parse(argv)?;
+    let [path] = m.positional.as_slice() else {
+        bail!("usage: mtpp trace info <file.events>");
+    };
+    let tf = TraceFile::load(Path::new(path))?;
+    print_trace_summary(path, &tf);
+    Ok(())
+}
+
+fn print_trace_summary(head: &str, tf: &TraceFile) {
+    let (slot, peak) = tf.peak_slot();
+    println!(
+        "{head}: {} events, {} devices, {} s covered, mean {:.2}/s, \
+         peak {peak}/s at t={slot}s, seed {}, digest {:016x}",
+        tf.events.len(),
+        tf.device_count,
+        tf.slots,
+        tf.mean_rate_hz(),
+        tf.seed,
+        tf.digest()
+    );
 }
 
 fn cmd_lint(argv: &[String]) -> Result<()> {
@@ -281,6 +455,11 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         "write the fully-resolved spec JSON to this path (re-runnable via --scenario)",
         None,
     )
+    .flag(
+        "metrics-out",
+        "write a run-metrics JSON snapshot to this path (replay determinism checks)",
+        None,
+    )
     .switch(
         "synthetic",
         "run without artifacts on the synthetic test tables \
@@ -321,6 +500,12 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         ExecMode::Cached => ctx.run(&scn)?,
     };
     let wall = t0.elapsed().as_secs_f64();
+    if let Some(path) = m.get("metrics-out").filter(|s| !s.is_empty()) {
+        let mut text = experiments::common::metrics_snapshot(&metrics).pretty(2);
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("write {path}"))?;
+        println!("wrote {path}");
+    }
     let policy = &scn.server;
     let pool_desc = if policy.models.is_empty() {
         format!("{} x{}", scn.server_model, policy.replicas)

@@ -7,7 +7,7 @@ use crate::config::latency::server_latency_model;
 use crate::config::scenario::Scenario;
 use crate::config::spec::ScenarioSpec;
 use crate::config::SystemConfig;
-use crate::data::{device_stream, Dataset};
+use crate::data::{device_stream, replay_stream, Dataset};
 use crate::metrics::RunMetrics;
 use crate::models::outputs::OutputProvider;
 use crate::models::{ModelId, Registry, Tier};
@@ -46,10 +46,27 @@ pub fn run_scenario(
     for &(tier, count) in &scn.devices {
         tiers.extend(std::iter::repeat(tier).take(count));
     }
+    // Trace replay: split the loaded trace into per-device arrival
+    // streams once (devices beyond the trace's id space get empty
+    // streams and never come online; `samples_per_device` is governed
+    // by the trace).
+    let per_device_trace = match &scn.trace {
+        Some(t) => Some(t.file.per_device(tiers.len())?),
+        None => None,
+    };
     let mut rng = Rng::new(scn.seed.wrapping_mul(0xC0FF_EE11) ^ 0xD15E_A5E);
     let mut specs = Vec::with_capacity(tiers.len());
     for (id, &tier) in tiers.iter().enumerate() {
-        let stream = device_stream(ds, scn.seed, id, scn.samples_per_device);
+        let (stream, arrivals) = match &per_device_trace {
+            Some(per) => (
+                replay_stream(ds, scn.seed, id, &per[id].samples),
+                per[id].arrivals_s.clone(),
+            ),
+            None => (
+                device_stream(ds, scn.seed, id, scn.samples_per_device),
+                Vec::new(),
+            ),
+        };
         let initial = match scn.initial_threshold {
             Some(c) => c,
             None => {
@@ -82,6 +99,7 @@ pub fn run_scenario(
         specs.push(DeviceSpec {
             tier,
             stream,
+            arrivals,
             initial_threshold: initial,
             sr_target: cfg.sr_target,
             slo_ms: scn.slo_for(tier),
@@ -89,6 +107,11 @@ pub fn run_scenario(
             offline_duration_s,
         });
     }
+    // Every sample must be accounted for exactly once; snapshot the
+    // expectation before the engine consumes the specs. In synthetic
+    // mode each stream has samples_per_device (clamped to the pool);
+    // in replay mode the trace governs per-device lengths.
+    let expected_samples: usize = specs.iter().map(|s| s.stream.len()).sum();
 
     // --- scheduler + switching --------------------------------------------
     anyhow::ensure!(
@@ -163,17 +186,11 @@ pub fn run_scenario(
     );
     let metrics = engine.run()?;
 
-    // Every sample must have been accounted for exactly once.
-    let expected: usize = scn
-        .devices
-        .iter()
-        .map(|&(_, n)| n * scn.samples_per_device.min(ds.eval_pool().len()))
-        .sum();
     anyhow::ensure!(
-        metrics.overall.samples == expected,
+        metrics.overall.samples == expected_samples,
         "sample conservation violated: {} != {}",
         metrics.overall.samples,
-        expected
+        expected_samples
     );
     Ok(metrics)
 }

@@ -29,6 +29,13 @@ pub struct DeviceSpec {
     pub tier: Tier,
     /// Dataset indices this device will stream through.
     pub stream: Vec<usize>,
+    /// Trace-replay arrival times (seconds, non-decreasing), parallel
+    /// to `stream`. Empty means the synthetic continuous-stream model:
+    /// each inference starts the moment the previous sample's
+    /// bookkeeping allows. Non-empty means sample `i` may not start
+    /// before `arrivals[i]` (a backlogged device starts late samples
+    /// immediately).
+    pub arrivals: Vec<f64>,
     pub initial_threshold: f64,
     pub sr_target: f64,
     pub slo_ms: f64,
@@ -71,6 +78,18 @@ impl DeviceState {
         // the Table I mean.
         let j = 1.0 + 0.03 * self.jitter.next_gaussian().clamp(-3.0, 3.0);
         self.t_inf_s * j.max(0.5)
+    }
+
+    /// When the device's next sample (at `pos`) may start. Continuous
+    /// streams (no trace) start at `now` — returning `now` exactly
+    /// keeps the synthetic path's event arithmetic bit-identical.
+    /// Trace replay waits for the sample's recorded arrival; arrivals
+    /// already in the past start immediately (backlog).
+    fn next_start_s(&self, now: f64) -> f64 {
+        match self.spec.arrivals.get(self.pos) {
+            Some(&a) if a > now => a,
+            _ => now,
+        }
     }
 }
 
@@ -129,6 +148,13 @@ impl<'a> DeviceFleet<'a> {
     ) -> Self {
         let mut devices = Vec::with_capacity(specs.len());
         for (id, spec) in specs.into_iter().enumerate() {
+            assert!(
+                spec.arrivals.is_empty() || spec.arrivals.len() == spec.stream.len(),
+                "device {id}: trace arrivals ({}) must be parallel to the sample \
+                 stream ({})",
+                spec.arrivals.len(),
+                spec.stream.len()
+            );
             let tier = spec.tier;
             let threshold =
                 scheduler.register_device(id, tier, spec.initial_threshold, spec.sr_target);
@@ -161,8 +187,10 @@ impl<'a> DeviceFleet<'a> {
         self.cfg.comm_ms / 1000.0
     }
 
-    /// Schedule every device's first inference and SR window, staggered
-    /// uniformly over one inference period.
+    /// Schedule every device's first inference and SR window. Synthetic
+    /// streams stagger uniformly over one inference period; trace
+    /// replay starts each device at its first recorded arrival (its SR
+    /// window keeps the jitter stagger, offset to its join time).
     pub fn bootstrap(&mut self, events: &mut EventQueue) {
         for id in 0..self.devices.len() {
             let d = &mut self.devices[id];
@@ -171,12 +199,23 @@ impl<'a> DeviceFleet<'a> {
             }
             let jitter = d.jitter.next_f64();
             let dur = d.next_inference_s();
-            let first = jitter * d.t_inf_s + dur;
-            events.push(first, Event::DeviceInferDone { device: id, dur_s: dur });
-            events.push(
-                self.cfg.window_s * (1.0 + jitter),
-                Event::SrWindow { device: id },
-            );
+            if let Some(&first_arrival) = d.spec.arrivals.first() {
+                events.push(
+                    first_arrival + dur,
+                    Event::DeviceInferDone { device: id, dur_s: dur },
+                );
+                events.push(
+                    first_arrival + self.cfg.window_s * (1.0 + jitter),
+                    Event::SrWindow { device: id },
+                );
+            } else {
+                let first = jitter * d.t_inf_s + dur;
+                events.push(first, Event::DeviceInferDone { device: id, dur_s: dur });
+                events.push(
+                    self.cfg.window_s * (1.0 + jitter),
+                    Event::SrWindow { device: id },
+                );
+            }
         }
     }
 
@@ -300,8 +339,9 @@ impl<'a> DeviceFleet<'a> {
             return;
         }
         if d.outstanding < self.cfg.max_outstanding {
+            let start = d.next_start_s(t);
             let dt = d.next_inference_s();
-            events.push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
+            events.push(start + dt, Event::DeviceInferDone { device, dur_s: dt });
         } else {
             d.stalled = true; // resume on next result arrival
         }
@@ -339,8 +379,9 @@ impl<'a> DeviceFleet<'a> {
         d.outstanding = d.outstanding.saturating_sub(1);
         if d.stalled && d.online && !d.done() && d.outstanding < self.cfg.max_outstanding {
             d.stalled = false;
+            let start = d.next_start_s(t);
             let dt = d.next_inference_s();
-            events.push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
+            events.push(start + dt, Event::DeviceInferDone { device, dur_s: dt });
         }
     }
 
@@ -397,9 +438,10 @@ impl<'a> DeviceFleet<'a> {
         d.trace_correct = 0;
         self.scheduler.device_online(device);
         if !d.done() {
+            let start = d.next_start_s(t);
             let dt = d.next_inference_s();
             if d.outstanding < self.cfg.max_outstanding {
-                events.push(t + dt, Event::DeviceInferDone { device, dur_s: dt });
+                events.push(start + dt, Event::DeviceInferDone { device, dur_s: dt });
             } else {
                 d.stalled = true;
             }

@@ -1,0 +1,387 @@
+//! The versioned binary `.events` trace format.
+//!
+//! Layout (all integers little-endian, via `util::binio`):
+//!
+//! ```text
+//! header   8 B  magic "MTPPTRC1"
+//!          4 B  version (currently 1)
+//!          4 B  device_count
+//!          4 B  slots          — 1 s grid slots the trace covers
+//!          4 B  event_count
+//!          8 B  seed           — generator provenance (0 = compiled)
+//! index    4 B × slots         — events per 1 s grid slot
+//! events  12 B × event_count   — t_ms u32, device u32, sample u32
+//! footer   8 B  magic "MTPPTRCE"
+//!          8 B  FNV-1a64 digest over every preceding byte
+//! ```
+//!
+//! Events are sorted by `t_ms` (non-decreasing; equal times keep their
+//! write order). The slot index is the fixed-1 s-grid normalization
+//! artifact: it gives O(1) access to any one-second window without
+//! scanning, and doubles as a header-vs-stream consistency check. The
+//! digest footer makes corruption (and truncation, together with the
+//! exact length check) a loud, contextful error instead of a silently
+//! different replay. Serialization is byte-deterministic: the same
+//! [`TraceFile`] value always produces the same bytes, which is what
+//! the CI determinism gate `cmp`s.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::binio::{BinReader, BinWriter};
+use crate::util::stats::fnv1a64;
+
+pub const TRACE_MAGIC: &[u8; 8] = b"MTPPTRC1";
+pub const TRACE_FOOTER_MAGIC: &[u8; 8] = b"MTPPTRCE";
+pub const TRACE_VERSION: u32 = 1;
+/// Reserved sample value meaning "no sample id recorded": replay draws
+/// the dataset index from the seeded per-device stream instead.
+pub const SAMPLE_NONE: u32 = u32::MAX;
+
+const HEADER_LEN: usize = 32;
+const FOOTER_LEN: usize = 16;
+const EVENT_LEN: usize = 12;
+
+/// One arrival: at `t_ms` on the trace clock, `device` captures a
+/// sample (optionally a specific one — shared ids model correlated
+/// content across devices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Milliseconds since trace start (compile rebases to zero).
+    pub t_ms: u32,
+    pub device: u32,
+    /// Dataset sample identity, or [`SAMPLE_NONE`].
+    pub sample: u32,
+}
+
+/// A parsed (or about-to-be-written) `.events` trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceFile {
+    /// Device-id space is `0..device_count` (ids may be sparse).
+    pub device_count: u32,
+    /// 1 s grid slots covered: `last_t_ms / 1000 + 1`.
+    pub slots: u32,
+    /// Generator seed for provenance (0 for compiled text traces).
+    pub seed: u64,
+    /// Arrivals, sorted non-decreasing by `t_ms`.
+    pub events: Vec<TraceEvent>,
+}
+
+/// One device's slice of a trace, in replay form (see
+/// [`TraceFile::per_device`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeviceTrace {
+    /// Arrival times in seconds, non-decreasing.
+    pub arrivals_s: Vec<f64>,
+    /// Parallel sample ids ([`SAMPLE_NONE`] where unrecorded).
+    pub samples: Vec<u32>,
+}
+
+impl TraceFile {
+    /// Build a trace from sorted events, deriving the grid-slot count.
+    pub fn new(device_count: u32, seed: u64, events: Vec<TraceEvent>) -> Result<Self> {
+        let slots = events.last().map_or(0, |e| e.t_ms / 1000 + 1);
+        let tf = Self {
+            device_count,
+            slots,
+            seed,
+            events,
+        };
+        tf.check_invariants()?;
+        Ok(tf)
+    }
+
+    fn check_invariants(&self) -> Result<()> {
+        ensure!(!self.events.is_empty(), "trace has no events");
+        let mut prev = 0u32;
+        for (i, e) in self.events.iter().enumerate() {
+            ensure!(
+                e.t_ms >= prev,
+                "trace not time-sorted: event {i} at {} ms follows one at {prev} ms",
+                e.t_ms
+            );
+            ensure!(
+                e.device < self.device_count,
+                "trace event {i} names device {} but the header declares only {} devices",
+                e.device,
+                self.device_count
+            );
+            prev = e.t_ms;
+        }
+        let expect_slots = prev / 1000 + 1;
+        ensure!(
+            self.slots == expect_slots,
+            "trace grid-slot count {} disagrees with the event stream (last event \
+             at {prev} ms implies {expect_slots} slots)",
+            self.slots
+        );
+        Ok(())
+    }
+
+    /// Events per 1 s grid slot (the on-disk index, recomputed).
+    pub fn slot_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.slots as usize];
+        for e in &self.events {
+            counts[(e.t_ms / 1000) as usize] += 1;
+        }
+        counts
+    }
+
+    /// Mean offered load over the covered grid, events per second.
+    pub fn mean_rate_hz(&self) -> f64 {
+        self.events.len() as f64 / (self.slots as f64).max(1.0)
+    }
+
+    /// Busiest 1 s grid slot: (slot index, event count).
+    pub fn peak_slot(&self) -> (u32, u32) {
+        let mut best = (0u32, 0u32);
+        for (i, &c) in self.slot_counts().iter().enumerate() {
+            if c > best.1 {
+                best = (i as u32, c);
+            }
+        }
+        best
+    }
+
+    /// Split into per-device replay streams over a population of
+    /// `total_devices` (devices beyond the trace's id space get empty
+    /// streams and simply never come online).
+    pub fn per_device(&self, total_devices: usize) -> Result<Vec<DeviceTrace>> {
+        ensure!(
+            self.device_count as usize <= total_devices,
+            "trace spans device ids 0..{} but the scenario population has only \
+             {total_devices} devices",
+            self.device_count
+        );
+        let mut out = vec![DeviceTrace::default(); total_devices];
+        for e in &self.events {
+            let d = &mut out[e.device as usize];
+            d.arrivals_s.push(e.t_ms as f64 / 1000.0);
+            d.samples.push(e.sample);
+        }
+        Ok(out)
+    }
+
+    // ----- serialization -------------------------------------------
+
+    fn body_bytes(&self) -> Result<Vec<u8>> {
+        let mut buf =
+            Vec::with_capacity(HEADER_LEN + self.slots as usize * 4 + self.events.len() * EVENT_LEN);
+        let mut w = BinWriter::new(&mut buf);
+        w.write_magic(TRACE_MAGIC)?;
+        w.write_u32(TRACE_VERSION)?;
+        w.write_u32(self.device_count)?;
+        w.write_u32(self.slots)?;
+        w.write_u32(self.events.len() as u32)?;
+        w.write_u64(self.seed)?;
+        w.write_u32_slice(&self.slot_counts())?;
+        for e in &self.events {
+            w.write_u32(e.t_ms)?;
+            w.write_u32(e.device)?;
+            w.write_u32(e.sample)?;
+        }
+        Ok(buf)
+    }
+
+    /// Serialize, digest footer included. Byte-deterministic.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = self
+            .body_bytes()
+            .expect("serializing a trace into memory cannot fail");
+        let digest = fnv1a64(&buf);
+        let mut w = BinWriter::new(&mut buf);
+        w.write_magic(TRACE_FOOTER_MAGIC)
+            .and_then(|()| w.write_u64(digest))
+            .expect("serializing a trace into memory cannot fail");
+        buf
+    }
+
+    /// Content digest (the value the footer stores).
+    pub fn digest(&self) -> u64 {
+        fnv1a64(
+            &self
+                .body_bytes()
+                .expect("serializing a trace into memory cannot fail"),
+        )
+    }
+
+    /// Parse and fully validate a `.events` byte image. Never panics on
+    /// corrupt input: every rejection is a contextful error, and the
+    /// header's counts are checked against the actual length *before*
+    /// they size any allocation.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(
+            bytes.len() >= HEADER_LEN + FOOTER_LEN,
+            "truncated .events data: {} bytes, need at least {} (header + footer)",
+            bytes.len(),
+            HEADER_LEN + FOOTER_LEN
+        );
+        let mut r = BinReader::new(bytes);
+        r.expect_magic(TRACE_MAGIC)
+            .context("not an mtpp .events trace")?;
+        let version = r.read_u32()?;
+        ensure!(
+            version == TRACE_VERSION,
+            "unsupported .events version {version} (this build reads version {TRACE_VERSION})"
+        );
+        let device_count = r.read_u32()?;
+        let slots = r.read_u32()?;
+        let event_count = r.read_u32()?;
+        let seed = r.read_u64()?;
+        let expected = HEADER_LEN as u64
+            + slots as u64 * 4
+            + event_count as u64 * EVENT_LEN as u64
+            + FOOTER_LEN as u64;
+        ensure!(
+            bytes.len() as u64 == expected,
+            "corrupt .events header: {slots} slots + {event_count} events imply \
+             {expected} bytes but the file has {}",
+            bytes.len()
+        );
+        // Footer before event parsing: corruption anywhere surfaces as
+        // a digest mismatch, not a confusing downstream invariant.
+        let body = &bytes[..bytes.len() - FOOTER_LEN];
+        let footer = &bytes[bytes.len() - FOOTER_LEN..];
+        ensure!(
+            &footer[..8] == TRACE_FOOTER_MAGIC,
+            "missing .events end-of-trace footer (file truncated or overwritten)"
+        );
+        let mut stored = [0u8; 8];
+        stored.copy_from_slice(&footer[8..]);
+        let stored = u64::from_le_bytes(stored);
+        let computed = fnv1a64(body);
+        ensure!(
+            stored == computed,
+            ".events digest mismatch: footer says {stored:016x} but the content \
+             hashes to {computed:016x} — the file is corrupt"
+        );
+        let slot_counts = r.read_u32_vec(slots as usize)?;
+        let mut events = Vec::with_capacity(event_count as usize);
+        for _ in 0..event_count {
+            events.push(TraceEvent {
+                t_ms: r.read_u32()?,
+                device: r.read_u32()?,
+                sample: r.read_u32()?,
+            });
+        }
+        let tf = Self {
+            device_count,
+            slots,
+            seed,
+            events,
+        };
+        tf.check_invariants()?;
+        ensure!(
+            slot_counts == tf.slot_counts(),
+            ".events 1 s grid index disagrees with the event stream (corrupt slot index)"
+        );
+        Ok(tf)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create {}", parent.display()))?;
+        }
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write trace {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read trace {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parse trace {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> TraceFile {
+        TraceFile::new(
+            3,
+            0xFEED,
+            vec![
+                TraceEvent { t_ms: 0, device: 0, sample: SAMPLE_NONE },
+                TraceEvent { t_ms: 400, device: 2, sample: 7 },
+                TraceEvent { t_ms: 1000, device: 1, sample: 7 },
+                TraceEvent { t_ms: 1000, device: 0, sample: SAMPLE_NONE },
+                TraceEvent { t_ms: 2600, device: 2, sample: 0 },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn byte_roundtrip_is_exact_and_deterministic() {
+        let tf = sample_trace();
+        let a = tf.to_bytes();
+        let b = tf.to_bytes();
+        assert_eq!(a, b, "serialization must be byte-deterministic");
+        let back = TraceFile::from_bytes(&a).unwrap();
+        assert_eq!(back, tf);
+        assert_eq!(back.to_bytes(), a);
+    }
+
+    #[test]
+    fn header_fields_derive_from_events() {
+        let tf = sample_trace();
+        assert_eq!(tf.slots, 3);
+        assert_eq!(tf.slot_counts(), vec![2, 2, 1]);
+        assert_eq!(tf.peak_slot(), (0, 2));
+        assert!((tf.mean_rate_hz() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_device_splits_in_order() {
+        let tf = sample_trace();
+        let per = tf.per_device(4).unwrap();
+        assert_eq!(per.len(), 4);
+        assert_eq!(per[0].arrivals_s, vec![0.0, 1.0]);
+        assert_eq!(per[2].samples, vec![7, 0]);
+        assert!(per[3].arrivals_s.is_empty());
+        assert!(tf.per_device(2).is_err());
+    }
+
+    #[test]
+    fn unsorted_or_out_of_range_events_rejected() {
+        assert!(TraceFile::new(1, 0, vec![]).is_err());
+        let unsorted = vec![
+            TraceEvent { t_ms: 500, device: 0, sample: 0 },
+            TraceEvent { t_ms: 100, device: 0, sample: 0 },
+        ];
+        assert!(TraceFile::new(1, 0, unsorted).is_err());
+        let bad_dev = vec![TraceEvent { t_ms: 0, device: 5, sample: 0 }];
+        assert!(TraceFile::new(2, 0, bad_dev).is_err());
+    }
+
+    #[test]
+    fn corruption_is_rejected_with_context() {
+        let tf = sample_trace();
+        let good = tf.to_bytes();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        let err = TraceFile::from_bytes(&bad_magic).unwrap_err();
+        assert!(format!("{err:#}").contains("not an mtpp .events trace"), "{err:#}");
+
+        let mut bad_version = good.clone();
+        bad_version[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = TraceFile::from_bytes(&bad_version).unwrap_err();
+        assert!(err.to_string().contains("unsupported .events version 99"), "{err}");
+
+        let mut flipped = good.clone();
+        let mid = HEADER_LEN + 6; // inside the slot index
+        flipped[mid] ^= 0x01;
+        let err = TraceFile::from_bytes(&flipped).unwrap_err();
+        assert!(err.to_string().contains("digest mismatch"), "{err}");
+
+        let truncated = &good[..good.len() - 5];
+        let err = TraceFile::from_bytes(truncated).unwrap_err();
+        assert!(err.to_string().contains("imply"), "{err}");
+
+        assert!(TraceFile::from_bytes(&good[..10]).is_err());
+    }
+}

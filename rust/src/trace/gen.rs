@@ -1,0 +1,435 @@
+//! Seeded workload-shape generators for `mtpp trace gen`.
+//!
+//! Each shape produces a [`TraceFile`] the preset stream model cannot
+//! express. All randomness flows from `GenSpec::seed` through
+//! per-shape, per-device `Rng` streams with distinct salts, so a given
+//! (shape, spec) pair always yields byte-identical `.events` output
+//! regardless of host or build.
+//!
+//! Shapes:
+//! * **diurnal** — per-device Poisson arrivals whose rate follows a
+//!   sinusoidal day/night cycle (trough at t = 0, peak mid-period).
+//! * **flash-crowd** — steady baseline with a `spike_mult`× rate
+//!   spike over a fractional window of the trace.
+//! * **bursts** — baseline Poisson plus correlated cross-device
+//!   bursts: a global epoch process picks moments where many devices
+//!   capture the *same* sample id within a short window.
+//! * **churn** — devices join and leave over the trace: each device
+//!   only emits arrivals inside its own [join, leave) lifetime.
+
+use anyhow::{ensure, Context, Result};
+
+use super::format::{TraceEvent, TraceFile, SAMPLE_NONE};
+use crate::named_enum;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceShape {
+    Diurnal,
+    FlashCrowd,
+    Bursts,
+    Churn,
+}
+
+named_enum!(
+    "trace shape",
+    TraceShape {
+        Diurnal => "diurnal";
+        FlashCrowd => "flash-crowd", "flashcrowd";
+        Bursts => "bursts", "burst";
+        Churn => "churn";
+    }
+);
+
+/// Parameters shared by every shape (each shape reads the subset it
+/// needs; the rest are ignored).
+#[derive(Clone, Debug)]
+pub struct GenSpec {
+    pub shape: TraceShape,
+    pub devices: u32,
+    pub duration_s: f64,
+    /// Per-device baseline arrival rate in events/sec.
+    pub rate_hz: f64,
+    pub seed: u64,
+    /// Diurnal cycle length; 0 resolves to `duration_s` (one cycle).
+    pub period_s: f64,
+    /// Diurnal swing: rate varies in `rate_hz * (1 ± amplitude)`.
+    pub amplitude: f64,
+    /// Flash crowd: spike start as a fraction of the trace.
+    pub spike_at_frac: f64,
+    /// Flash crowd: spike length as a fraction of the trace.
+    pub spike_dur_frac: f64,
+    /// Flash crowd: rate multiplier inside the spike.
+    pub spike_mult: f64,
+    /// Bursts: mean seconds between correlated burst epochs.
+    pub burst_every_s: f64,
+    /// Bursts: probability each device joins a given burst.
+    pub burst_prob: f64,
+    /// Bursts: arrivals a participating device adds per burst.
+    pub burst_size: u32,
+    /// Bursts: window after the epoch that burst arrivals land in.
+    pub burst_window_s: f64,
+    /// Churn: max fraction of the trace a device's join/leave can eat
+    /// from each end of its lifetime.
+    pub churn_frac: f64,
+}
+
+impl Default for GenSpec {
+    fn default() -> Self {
+        Self {
+            shape: TraceShape::Diurnal,
+            devices: 50,
+            duration_s: 300.0,
+            rate_hz: 1.0,
+            seed: 0,
+            period_s: 0.0,
+            amplitude: 0.8,
+            spike_at_frac: 0.4,
+            spike_dur_frac: 0.1,
+            spike_mult: 6.0,
+            burst_every_s: 30.0,
+            burst_prob: 0.5,
+            burst_size: 8,
+            burst_window_s: 0.5,
+            churn_frac: 0.35,
+        }
+    }
+}
+
+impl GenSpec {
+    fn validate(&self) -> Result<()> {
+        ensure!(self.devices >= 1, "devices must be >= 1, got {}", self.devices);
+        ensure!(
+            self.duration_s.is_finite() && self.duration_s > 0.0,
+            "duration_s must be finite and positive, got {}",
+            self.duration_s
+        );
+        ensure!(
+            self.duration_s <= 4_294_967.0,
+            "duration_s {} exceeds the u32 millisecond horizon (~49.7 days)",
+            self.duration_s
+        );
+        ensure!(
+            self.rate_hz.is_finite() && self.rate_hz > 0.0,
+            "rate_hz must be finite and positive, got {}",
+            self.rate_hz
+        );
+        ensure!(
+            self.period_s.is_finite() && self.period_s >= 0.0,
+            "period_s must be finite and non-negative, got {}",
+            self.period_s
+        );
+        ensure!(
+            (0.0..1.0).contains(&self.amplitude),
+            "amplitude must be in [0, 1), got {}",
+            self.amplitude
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.spike_at_frac) && (0.0..=1.0).contains(&self.spike_dur_frac),
+            "spike_at/spike_dur must be fractions in [0, 1], got {} / {}",
+            self.spike_at_frac,
+            self.spike_dur_frac
+        );
+        ensure!(
+            self.spike_mult >= 1.0,
+            "spike_mult must be >= 1, got {}",
+            self.spike_mult
+        );
+        ensure!(
+            self.burst_every_s > 0.0 && self.burst_window_s > 0.0,
+            "burst_every_s and burst_window_s must be positive, got {} / {}",
+            self.burst_every_s,
+            self.burst_window_s
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.burst_prob),
+            "burst_prob must be in [0, 1], got {}",
+            self.burst_prob
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.churn_frac),
+            "churn_frac must be in [0, 1], got {}",
+            self.churn_frac
+        );
+        Ok(())
+    }
+}
+
+// Distinct per-shape salts keep every generator on its own stream
+// family even when specs share a seed.
+const SALT_DIURNAL: u64 = 0x0D10_0D10_0D10_0D10;
+const SALT_FLASH: u64 = 0xF1A5_F1A5_F1A5_F1A5;
+const SALT_BURST_BASE: u64 = 0xB0B0_B0B0_B0B0_B0B0;
+const SALT_BURST_EPOCH: u64 = 0xE70C_E70C_E70C_E70C;
+const SALT_CHURN: u64 = 0xC4E1_C4E1_C4E1_C4E1;
+
+/// Generate a trace for the spec. Deterministic in (shape, spec).
+pub fn generate(spec: &GenSpec) -> Result<TraceFile> {
+    spec.validate()?;
+    let raw = match spec.shape {
+        TraceShape::Diurnal => gen_thinned(spec, SALT_DIURNAL, |s, t| {
+            let period = if s.period_s > 0.0 { s.period_s } else { s.duration_s };
+            // Trough at t=0 so traces start at (1-amplitude)·rate and
+            // peak mid-period — "day" load after a quiet start.
+            let phase = std::f64::consts::TAU * t / period - std::f64::consts::FRAC_PI_2;
+            s.rate_hz * (1.0 + s.amplitude * phase.sin())
+        }),
+        TraceShape::FlashCrowd => gen_thinned(spec, SALT_FLASH, |s, t| {
+            let start = s.spike_at_frac * s.duration_s;
+            let end = start + s.spike_dur_frac * s.duration_s;
+            if t >= start && t < end {
+                s.rate_hz * s.spike_mult
+            } else {
+                s.rate_hz
+            }
+        }),
+        TraceShape::Bursts => gen_bursts(spec),
+        TraceShape::Churn => gen_churn(spec),
+    };
+    let mut events: Vec<TraceEvent> = raw
+        .into_iter()
+        .filter(|&(t_s, _, _)| t_s < spec.duration_s)
+        .map(|(t_s, device, sample)| TraceEvent {
+            t_ms: (t_s * 1000.0).round().min(spec.duration_s * 1000.0) as u32,
+            device,
+            sample,
+        })
+        .collect();
+    events.sort_by_key(|e| e.t_ms);
+    TraceFile::new(spec.devices, spec.seed, events)
+        .context("generated trace is empty — raise rate_hz or duration_s")
+}
+
+/// Inhomogeneous Poisson arrivals for one device over [t0, t1) by
+/// thinning: candidates at the peak rate, each kept with probability
+/// rate(t)/peak. Exactly one uniform per candidate, accepted or not,
+/// so the draw count (and thus the stream) is path-independent.
+fn thin_device(
+    rng: &mut Rng,
+    spec: &GenSpec,
+    t0: f64,
+    t1: f64,
+    peak: f64,
+    rate_at: impl Fn(&GenSpec, f64) -> f64,
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut t = t0;
+    loop {
+        t += rng.next_exp(1.0 / peak);
+        if t >= t1 {
+            break;
+        }
+        let keep = rng.next_f64() * peak <= rate_at(spec, t);
+        if keep {
+            out.push(t);
+        }
+    }
+    out
+}
+
+fn gen_thinned(
+    spec: &GenSpec,
+    salt: u64,
+    rate_at: impl Fn(&GenSpec, f64) -> f64 + Copy,
+) -> Vec<(f64, u32, u32)> {
+    let peak = peak_rate(spec, rate_at);
+    let mut out = Vec::new();
+    for device in 0..spec.devices {
+        let mut rng = Rng::stream(spec.seed ^ salt, device as u64);
+        for t in thin_device(&mut rng, spec, 0.0, spec.duration_s, peak, rate_at) {
+            out.push((t, device, SAMPLE_NONE));
+        }
+    }
+    out
+}
+
+/// Upper bound on rate(t) for the thinning envelope, probed on a fine
+/// grid (both shapes used here are smooth or piecewise-constant, so a
+/// grid max with 5% headroom is a valid envelope).
+fn peak_rate(spec: &GenSpec, rate_at: impl Fn(&GenSpec, f64) -> f64) -> f64 {
+    let mut peak = 0.0f64;
+    let steps = 4096;
+    for i in 0..=steps {
+        let t = spec.duration_s * i as f64 / steps as f64;
+        peak = peak.max(rate_at(spec, t));
+    }
+    peak * 1.05
+}
+
+fn gen_bursts(spec: &GenSpec) -> Vec<(f64, u32, u32)> {
+    let mut out = Vec::new();
+    // Per-device baseline Poisson.
+    for device in 0..spec.devices {
+        let mut rng = Rng::stream(spec.seed ^ SALT_BURST_BASE, device as u64);
+        let mut t = 0.0;
+        loop {
+            t += rng.next_exp(1.0 / spec.rate_hz);
+            if t >= spec.duration_s {
+                break;
+            }
+            out.push((t, device, SAMPLE_NONE));
+        }
+    }
+    // Global epoch process: at each epoch a shared sample id is drawn,
+    // and every participating device captures it within the window —
+    // the correlated-content shape the cache/coalescing roadmap needs.
+    let mut epoch_rng = Rng::stream(spec.seed ^ SALT_BURST_EPOCH, 0);
+    let mut epoch = 0.0;
+    let mut k = 0u64;
+    loop {
+        epoch += epoch_rng.next_exp(spec.burst_every_s);
+        if epoch >= spec.duration_s {
+            break;
+        }
+        let sample = epoch_rng.next_below(4096) as u32;
+        for device in 0..spec.devices {
+            let mut rng = Rng::stream(
+                spec.seed ^ SALT_BURST_EPOCH ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                device as u64 + 1,
+            );
+            if !rng.next_bool(spec.burst_prob) {
+                continue;
+            }
+            for _ in 0..spec.burst_size {
+                let t = epoch + rng.next_f64() * spec.burst_window_s;
+                out.push((t, device, sample));
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
+fn gen_churn(spec: &GenSpec) -> Vec<(f64, u32, u32)> {
+    let mut out = Vec::new();
+    for device in 0..spec.devices {
+        let mut rng = Rng::stream(spec.seed ^ SALT_CHURN, device as u64);
+        // Each device lives in [join, leave): late joiners and early
+        // leavers model population churn, not mid-run outages.
+        let join = rng.next_f64() * spec.churn_frac * spec.duration_s;
+        let leave = spec.duration_s - rng.next_f64() * spec.churn_frac * spec.duration_s;
+        let mut t = join;
+        loop {
+            t += rng.next_exp(1.0 / spec.rate_hz);
+            if t >= leave {
+                break;
+            }
+            out.push((t, device, SAMPLE_NONE));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: TraceShape) -> GenSpec {
+        GenSpec {
+            shape,
+            devices: 6,
+            duration_s: 40.0,
+            rate_hz: 1.5,
+            seed: 17,
+            ..GenSpec::default()
+        }
+    }
+
+    #[test]
+    fn every_shape_is_deterministic_and_seed_sensitive() {
+        for &shape in TraceShape::ALL {
+            let a = generate(&spec(shape)).unwrap();
+            let b = generate(&spec(shape)).unwrap();
+            assert_eq!(a.to_bytes(), b.to_bytes(), "{} not deterministic", shape.name());
+            let other = generate(&GenSpec { seed: 18, ..spec(shape) }).unwrap();
+            assert_ne!(a.events, other.events, "{} ignores the seed", shape.name());
+            assert_eq!(a.device_count, 6);
+            assert_eq!(a.seed, 17);
+            assert!(a.events.iter().all(|e| (e.t_ms as f64) < 40.0 * 1000.0 + 1.0));
+        }
+    }
+
+    #[test]
+    fn diurnal_mid_period_is_busier_than_edges() {
+        let tf = generate(&GenSpec {
+            devices: 20,
+            duration_s: 200.0,
+            amplitude: 0.9,
+            ..spec(TraceShape::Diurnal)
+        })
+        .unwrap();
+        let counts = tf.slot_counts();
+        let quarter = counts.len() / 4;
+        let edge: u32 = counts[..quarter].iter().sum();
+        let mid: u32 = counts[quarter..3 * quarter].iter().map(|&c| c / 2).sum();
+        assert!(mid > edge, "diurnal shape missing: mid {mid} vs edge {edge}");
+    }
+
+    #[test]
+    fn flash_crowd_spikes_where_asked() {
+        let s = GenSpec {
+            devices: 10,
+            duration_s: 100.0,
+            spike_at_frac: 0.5,
+            spike_dur_frac: 0.1,
+            spike_mult: 8.0,
+            ..spec(TraceShape::FlashCrowd)
+        };
+        let counts = generate(&s).unwrap().slot_counts();
+        let inside: u32 = counts[50..60].iter().sum();
+        let before: u32 = counts[30..40].iter().sum();
+        assert!(
+            inside > 3 * before,
+            "spike window not hot: inside {inside}, before {before}"
+        );
+    }
+
+    #[test]
+    fn bursts_share_sample_ids_across_devices() {
+        let tf = generate(&spec(TraceShape::Bursts)).unwrap();
+        let mut shared = 0;
+        for e in &tf.events {
+            if e.sample == SAMPLE_NONE {
+                continue;
+            }
+            let devices: Vec<u32> = tf
+                .events
+                .iter()
+                .filter(|o| o.sample == e.sample)
+                .map(|o| o.device)
+                .collect();
+            if devices.iter().any(|&d| d != e.device) {
+                shared += 1;
+            }
+        }
+        assert!(shared > 0, "no correlated sample ids in burst trace");
+    }
+
+    #[test]
+    fn churn_produces_late_joiners_or_early_leavers() {
+        let tf = generate(&GenSpec {
+            devices: 12,
+            duration_s: 120.0,
+            churn_frac: 0.5,
+            ..spec(TraceShape::Churn)
+        })
+        .unwrap();
+        let per = tf.per_device(12).unwrap();
+        let horizon_ms = 120.0 * 1000.0;
+        let trimmed = per.iter().filter(|d| {
+            d.arrivals_s.first().is_some_and(|&f| f > 5.0)
+                || d.arrivals_s.last().is_some_and(|&l| l * 1000.0 < horizon_ms - 5000.0)
+        });
+        assert!(trimmed.count() >= 6, "churn lifetimes look full-span");
+    }
+
+    #[test]
+    fn bad_parameters_rejected() {
+        assert!(generate(&GenSpec { devices: 0, ..spec(TraceShape::Diurnal) }).is_err());
+        assert!(generate(&GenSpec { rate_hz: 0.0, ..spec(TraceShape::Diurnal) }).is_err());
+        assert!(generate(&GenSpec { amplitude: 1.0, ..spec(TraceShape::Diurnal) }).is_err());
+        assert!(generate(&GenSpec { duration_s: -1.0, ..spec(TraceShape::Churn) }).is_err());
+        assert!(generate(&GenSpec { spike_mult: 0.5, ..spec(TraceShape::FlashCrowd) }).is_err());
+        assert!(generate(&GenSpec { burst_prob: 1.5, ..spec(TraceShape::Bursts) }).is_err());
+    }
+}

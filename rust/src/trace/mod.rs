@@ -1,0 +1,36 @@
+//! Trace ingestion, generation, and deterministic replay.
+//!
+//! The missing input half of the simulator: instead of the synthetic
+//! per-device stream model, a scenario can replay a recorded (or
+//! generated) arrival trace — `workload.trace = <file>` in
+//! `ScenarioSpec`.
+//!
+//! * [`format`] — the versioned, digest-footered binary `.events`
+//!   container (fixed 1 s grid index, sorted arrival records).
+//! * [`parse`] — pluggable CSV/JSONL text parsers + the compiler that
+//!   normalizes raw records onto the grid (`mtpp trace compile`).
+//! * [`gen`] — seeded generators for shapes the preset stream model
+//!   can't express: diurnal cycles, flash crowds, correlated bursts,
+//!   population churn (`mtpp trace gen`).
+//!
+//! Determinism contract (docs/traces.md): compiling the same text or
+//! generating the same (shape, seed) always yields byte-identical
+//! `.events` files, and replaying the same file + scenario seed yields
+//! bit-identical `RunMetrics`.
+
+pub mod format;
+pub mod gen;
+pub mod parse;
+
+pub use format::{DeviceTrace, TraceEvent, TraceFile, SAMPLE_NONE};
+pub use gen::{generate, GenSpec, TraceShape};
+pub use parse::{compile, parse_text, RawArrival, TextFormat};
+
+/// A trace bound into a validated `Scenario`: the parsed file plus the
+/// path it came from (kept for error messages and spec round-trips).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadedTrace {
+    /// The spec-level path the trace was loaded from.
+    pub path: String,
+    pub file: TraceFile,
+}

@@ -1,0 +1,292 @@
+//! Pluggable text parsers for `mtpp trace compile`.
+//!
+//! Two interchange formats carry the same record — an arrival time in
+//! seconds, a device id, and an optional sample/class id:
+//!
+//! * **CSV** — `time,device[,sample]`, one record per line. Blank
+//!   lines and `#` comments are skipped; a single leading header line
+//!   is tolerated (detected by a non-numeric first field).
+//! * **JSONL** — one JSON object per line with keys `t` (or `time`),
+//!   `device`, and optional `sample`. Unknown keys are rejected so
+//!   typos fail loudly instead of silently dropping a column.
+//!
+//! Compilation rebases times so the earliest arrival is `t = 0`,
+//! rounds onto milliseconds, and sorts stably by time — the text
+//! order breaks ties, so compiling the same file always yields the
+//! same `.events` bytes.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::format::{TraceEvent, TraceFile, SAMPLE_NONE};
+use crate::named_enum;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TextFormat {
+    Csv,
+    Jsonl,
+}
+
+named_enum!(
+    "trace text format",
+    TextFormat {
+        Csv => "csv";
+        Jsonl => "jsonl", "ndjson";
+    }
+);
+
+impl TextFormat {
+    /// Infer the format from a file extension.
+    pub fn from_path(path: &Path) -> Result<Self> {
+        let ext = path
+            .extension()
+            .and_then(|e| e.to_str())
+            .unwrap_or_default();
+        Self::parse(ext).with_context(|| {
+            format!(
+                "cannot infer trace text format from '{}' — pass --format csv|jsonl",
+                path.display()
+            )
+        })
+    }
+}
+
+/// One text record before grid normalization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RawArrival {
+    /// Arrival time in seconds on the source clock (rebased later).
+    pub t_s: f64,
+    pub device: u32,
+    /// Sample/class id, or [`SAMPLE_NONE`] when the record omits it.
+    pub sample: u32,
+}
+
+/// Parse `text` in the given format into raw arrival records.
+pub fn parse_text(fmt: TextFormat, text: &str) -> Result<Vec<RawArrival>> {
+    match fmt {
+        TextFormat::Csv => parse_csv(text),
+        TextFormat::Jsonl => parse_jsonl(text),
+    }
+}
+
+fn check_record(line_no: usize, t_s: f64, device: u32, sample: u32) -> Result<RawArrival> {
+    ensure!(
+        t_s.is_finite() && t_s >= 0.0,
+        "line {line_no}: arrival time {t_s} must be finite and non-negative"
+    );
+    ensure!(
+        device < u32::MAX,
+        "line {line_no}: device id {device} is out of range"
+    );
+    Ok(RawArrival { t_s, device, sample })
+}
+
+fn parse_csv(text: &str) -> Result<Vec<RawArrival>> {
+    let mut out = Vec::new();
+    let mut saw_data = false;
+    for (i, line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        ensure!(
+            (2..=3).contains(&fields.len()),
+            "line {line_no}: expected 2-3 comma-separated fields (time,device[,sample]), got {}",
+            fields.len()
+        );
+        // One header line is allowed before any data row.
+        if !saw_data && fields[0].parse::<f64>().is_err() {
+            continue;
+        }
+        saw_data = true;
+        let t_s: f64 = fields[0]
+            .parse()
+            .with_context(|| format!("line {line_no}: bad time '{}'", fields[0]))?;
+        let device: u32 = fields[1]
+            .parse()
+            .with_context(|| format!("line {line_no}: bad device id '{}'", fields[1]))?;
+        let sample = match fields.get(2) {
+            None => SAMPLE_NONE,
+            Some(&"") => SAMPLE_NONE,
+            Some(s) => {
+                let v: u32 = s
+                    .parse()
+                    .with_context(|| format!("line {line_no}: bad sample id '{s}'"))?;
+                ensure!(
+                    v < SAMPLE_NONE,
+                    "line {line_no}: sample id {v} collides with the reserved no-sample value"
+                );
+                v
+            }
+        };
+        out.push(check_record(line_no, t_s, device, sample)?);
+    }
+    Ok(out)
+}
+
+fn parse_jsonl(text: &str) -> Result<Vec<RawArrival>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let v = Json::parse(line).with_context(|| format!("line {line_no}: bad json record"))?;
+        let obj = match v.as_obj() {
+            Some(m) => m,
+            None => bail!("line {line_no}: expected a json object, got {v}"),
+        };
+        for key in obj.keys() {
+            ensure!(
+                matches!(key.as_str(), "t" | "time" | "device" | "sample"),
+                "line {line_no}: unknown key '{key}' (known: t/time, device, sample)"
+            );
+        }
+        ensure!(
+            !(obj.contains_key("t") && obj.contains_key("time")),
+            "line {line_no}: both 't' and 'time' present — use one"
+        );
+        let t_s = obj
+            .get("t")
+            .or_else(|| obj.get("time"))
+            .and_then(Json::as_f64)
+            .with_context(|| format!("line {line_no}: missing numeric 't' (or 'time') key"))?;
+        let device = obj
+            .get("device")
+            .and_then(Json::as_f64)
+            .with_context(|| format!("line {line_no}: missing numeric 'device' key"))?;
+        ensure!(
+            device >= 0.0 && device.fract() == 0.0 && device < u32::MAX as f64,
+            "line {line_no}: device id {device} must be a non-negative integer"
+        );
+        let sample = match obj.get("sample") {
+            None | Some(Json::Null) => SAMPLE_NONE,
+            Some(s) => {
+                let v = s
+                    .as_f64()
+                    .with_context(|| format!("line {line_no}: 'sample' must be a number"))?;
+                ensure!(
+                    v >= 0.0 && v.fract() == 0.0 && v < SAMPLE_NONE as f64,
+                    "line {line_no}: sample id {v} must be a non-negative integer below 2^32-1"
+                );
+                v as u32
+            }
+        };
+        out.push(check_record(line_no, t_s, device as u32, sample)?);
+    }
+    Ok(out)
+}
+
+/// Normalize raw arrivals onto the fixed 1 s grid format: rebase to
+/// `t = 0`, round to milliseconds, stable-sort by time (text order
+/// breaks ties), derive the device-id space.
+pub fn compile(records: Vec<RawArrival>) -> Result<TraceFile> {
+    ensure!(!records.is_empty(), "trace input has no arrival records");
+    let t_min = records.iter().map(|r| r.t_s).fold(f64::INFINITY, f64::min);
+    let mut max_device = 0u32;
+    let mut events = Vec::with_capacity(records.len());
+    for r in &records {
+        let rel_ms = ((r.t_s - t_min) * 1000.0).round();
+        ensure!(
+            rel_ms < u32::MAX as f64,
+            "arrival at {} s is {:.0} ms after trace start — beyond the u32 \
+             millisecond horizon (~49.7 days)",
+            r.t_s,
+            rel_ms
+        );
+        max_device = max_device.max(r.device);
+        events.push(TraceEvent {
+            t_ms: rel_ms as u32,
+            device: r.device,
+            sample: r.sample,
+        });
+    }
+    events.sort_by_key(|e| e.t_ms);
+    TraceFile::new(max_device + 1, 0, events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CSV: &str = "\
+# a comment
+time,device,sample
+3.5,1,7
+2.0,0,
+2.0,2,9
+
+4.25,1
+";
+
+    #[test]
+    fn csv_parses_with_header_comment_blank() {
+        let recs = parse_csv(CSV).unwrap();
+        assert_eq!(recs.len(), 4);
+        assert_eq!(recs[0], RawArrival { t_s: 3.5, device: 1, sample: 7 });
+        assert_eq!(recs[1].sample, SAMPLE_NONE);
+        assert_eq!(recs[3], RawArrival { t_s: 4.25, device: 1, sample: SAMPLE_NONE });
+    }
+
+    #[test]
+    fn csv_rejects_bad_rows_with_line_numbers() {
+        let err = parse_csv("1.0,0\nnope,1\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+        let err = parse_csv("1.0\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+        let err = parse_csv("0.5,0\n-1.0,0\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(parse_csv(&format!("1.0,0,{}\n", SAMPLE_NONE)).is_err());
+    }
+
+    #[test]
+    fn jsonl_matches_csv_semantics() {
+        let jsonl = "\
+{\"t\": 3.5, \"device\": 1, \"sample\": 7}
+{\"time\": 2.0, \"device\": 0}
+{\"t\": 2.0, \"device\": 2, \"sample\": 9}
+{\"t\": 4.25, \"device\": 1, \"sample\": null}
+";
+        let a = parse_jsonl(jsonl).unwrap();
+        let b = parse_csv(CSV).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn jsonl_rejects_unknown_keys_and_conflicts() {
+        let err = parse_jsonl("{\"t\": 1, \"device\": 0, \"dev\": 2}\n").unwrap_err();
+        assert!(err.to_string().contains("unknown key 'dev'"), "{err}");
+        let err = parse_jsonl("{\"t\": 1, \"time\": 2, \"device\": 0}\n").unwrap_err();
+        assert!(err.to_string().contains("use one"), "{err}");
+        let err = parse_jsonl("[1, 2]\n").unwrap_err();
+        assert!(err.to_string().contains("expected a json object"), "{err}");
+        let err = parse_jsonl("{\"device\": 0}\n").unwrap_err();
+        assert!(format!("{err:#}").contains("missing numeric 't'"), "{err:#}");
+    }
+
+    #[test]
+    fn compile_rebases_rounds_and_stable_sorts() {
+        let tf = compile(parse_csv(CSV).unwrap()).unwrap();
+        assert_eq!(tf.device_count, 3);
+        assert_eq!(tf.seed, 0);
+        // Rebased by t_min = 2.0; ties (the two t=2.0 rows) keep text order.
+        let times: Vec<u32> = tf.events.iter().map(|e| e.t_ms).collect();
+        assert_eq!(times, vec![0, 0, 1500, 2250]);
+        assert_eq!(tf.events[0].device, 0);
+        assert_eq!(tf.events[1].device, 2);
+        assert!(compile(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn format_inference() {
+        use std::path::PathBuf;
+        assert_eq!(TextFormat::from_path(&PathBuf::from("a/b.csv")).unwrap(), TextFormat::Csv);
+        assert_eq!(TextFormat::from_path(&PathBuf::from("x.ndjson")).unwrap(), TextFormat::Jsonl);
+        assert!(TextFormat::from_path(&PathBuf::from("x.txt")).is_err());
+    }
+}

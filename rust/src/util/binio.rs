@@ -45,6 +45,21 @@ impl<R: Read> BinReader<R> {
         Ok(u32::from_le_bytes(buf))
     }
 
+    pub fn read_u64(&mut self) -> Result<u64> {
+        let mut buf = [0u8; 8];
+        self.inner.read_exact(&mut buf)?;
+        Ok(u64::from_le_bytes(buf))
+    }
+
+    pub fn read_u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.inner.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
     pub fn read_f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
         let mut bytes = vec![0u8; n * 4];
         self.inner.read_exact(&mut bytes)?;
@@ -101,6 +116,18 @@ impl<W: Write> BinWriter<W> {
         Ok(())
     }
 
+    pub fn write_u64(&mut self, x: u64) -> Result<()> {
+        self.inner.write_all(&x.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_u32_slice(&mut self, xs: &[u32]) -> Result<()> {
+        for &x in xs {
+            self.inner.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
     pub fn write_f32_slice(&mut self, xs: &[f32]) -> Result<()> {
         for &x in xs {
             self.inner.write_all(&x.to_le_bytes())?;
@@ -137,16 +164,20 @@ mod tests {
             let mut w = BinWriter::new(&mut buf);
             w.write_magic(b"TESTMAG1").unwrap();
             w.write_u32(3).unwrap();
+            w.write_u64(u64::MAX - 5).unwrap();
             w.write_f32_slice(&[1.5, -2.25, 3.0]).unwrap();
             w.write_i32_slice(&[-7, 0, 9]).unwrap();
             w.write_u8_slice(&[1, 0, 255]).unwrap();
+            w.write_u32_slice(&[0, 42, u32::MAX]).unwrap();
         }
         let mut r = BinReader::new(buf.as_slice());
         r.expect_magic(b"TESTMAG1").unwrap();
         assert_eq!(r.read_u32().unwrap(), 3);
+        assert_eq!(r.read_u64().unwrap(), u64::MAX - 5);
         assert_eq!(r.read_f32_vec(3).unwrap(), vec![1.5, -2.25, 3.0]);
         assert_eq!(r.read_i32_vec(3).unwrap(), vec![-7, 0, 9]);
         assert_eq!(r.read_u8_vec(3).unwrap(), vec![1, 0, 255]);
+        assert_eq!(r.read_u32_vec(3).unwrap(), vec![0, 42, u32::MAX]);
     }
 
     #[test]

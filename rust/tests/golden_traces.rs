@@ -25,11 +25,10 @@
 use std::path::{Path, PathBuf};
 
 use multitascpp::config::spec::{preset_names, ScenarioSpec};
-use multitascpp::experiments::common::trace_csv;
+use multitascpp::experiments::common::metrics_snapshot_fields;
 use multitascpp::experiments::Ctx;
 use multitascpp::metrics::RunMetrics;
 use multitascpp::util::json::Json;
-use multitascpp::util::stats::fnv1a64;
 
 /// Stream length every golden run is clipped to: long enough that
 /// queueing, shedding, stealing, and autoscaling all fire on the
@@ -62,39 +61,17 @@ fn run_preset(ctx: &mut Ctx, name: &str) -> RunMetrics {
 }
 
 /// The pinned snapshot: every deterministic end-of-run counter plus
-/// the trace-CSV digest. Floats serialize shortest-roundtrip through
-/// the JSON layer, so equality below is exact, not approximate.
+/// the trace-CSV digest (the shared
+/// [`metrics_snapshot_fields`] vocabulary, tagged with the preset
+/// identity). Floats serialize shortest-roundtrip through the JSON
+/// layer, so equality below is exact, not approximate.
 fn snapshot(preset: &str, m: &RunMetrics) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("preset", Json::str(preset)),
         ("samples_per_device", Json::num(GOLDEN_SAMPLES as f64)),
-        ("samples", Json::num(m.overall.samples as f64)),
-        ("satisfied", Json::num(m.overall.satisfied as f64)),
-        ("correct", Json::num(m.overall.correct as f64)),
-        ("forwarded", Json::num(m.overall.forwarded as f64)),
-        ("shed", Json::num(m.shed as f64)),
-        ("steals", Json::num(m.steals as f64)),
-        ("scale_events", Json::num(m.scale_events as f64)),
-        ("events", Json::num(m.events as f64)),
-        ("latency_count", Json::num(m.latencies.len() as f64)),
-        (
-            "per_server_batches",
-            Json::Arr(
-                m.per_server_batches
-                    .iter()
-                    .map(|&b| Json::num(b as f64))
-                    .collect(),
-            ),
-        ),
-        ("makespan_s", Json::num(m.makespan_s)),
-        ("parked_replica_seconds", Json::num(m.parked_replica_seconds)),
-        ("warmup_replica_seconds", Json::num(m.warmup_replica_seconds)),
-        ("trace_points", Json::num(m.trace.len() as f64)),
-        (
-            "trace_hash",
-            Json::str(&format!("{:016x}", fnv1a64(trace_csv(m).as_bytes()))),
-        ),
-    ])
+    ];
+    fields.extend(metrics_snapshot_fields(m));
+    Json::obj(fields)
 }
 
 fn write_fixture(path: &Path, snap: &Json) {

@@ -209,6 +209,7 @@ fn one_low_device(slo_ms: f64, samples: usize, offline_at: Option<usize>) -> Dev
     DeviceSpec {
         tier: Tier::Low,
         stream: (0..samples).collect(),
+        arrivals: Vec::new(),
         initial_threshold: 0.5,
         sr_target: 95.0,
         slo_ms,

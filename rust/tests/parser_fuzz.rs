@@ -1,11 +1,13 @@
 //! Deterministic fuzz smoke for the hand-rolled parsers (tier-1).
 //!
-//! The two inputs the binary accepts from the outside world are JSON
-//! text (`util::json`, scenario specs + wire bodies) and length-prefixed
-//! frames (`net::proto`). Both parsers are hand-written, so this test
-//! hammers them with seeded mutations of a valid corpus and asserts the
-//! only acceptable outcomes: `Ok` or `Err` — never a panic — and exact
-//! value round-trips on unmutated inputs.
+//! The inputs the binary accepts from the outside world are JSON text
+//! (`util::json`, scenario specs + wire bodies), length-prefixed
+//! frames (`net::proto`), and `.events` replay traces plus their
+//! CSV/JSONL sources (`trace::format`, `trace::parse`). All of these
+//! parsers are hand-written, so this test hammers them with seeded
+//! mutations of a valid corpus and asserts the only acceptable
+//! outcomes: `Ok` or `Err` — never a panic — and exact value
+//! round-trips on unmutated inputs.
 //!
 //! Everything is driven by `util::prng::Rng::stream`, so a failure
 //! reproduces exactly from its (seed, doc, mutation) coordinates. CI
@@ -18,6 +20,9 @@
 //! (see docs/linting.md, "Fuzz smoke" section).
 
 use multitascpp::net::proto::{read_frame, write_frame, ToDevice, ToServer, MAX_FRAME};
+use multitascpp::trace::{
+    generate, parse_text, GenSpec, TextFormat, TraceEvent, TraceFile, TraceShape, SAMPLE_NONE,
+};
 use multitascpp::util::json::Json;
 use multitascpp::util::prng::Rng;
 
@@ -210,6 +215,125 @@ fn mutated_frames_never_panic() {
                 match read_frame(&mut cursor) {
                     Ok(Some(_)) => continue,
                     Ok(None) | Err(_) => break,
+                }
+            }
+        }
+    }
+}
+
+/// Valid `.events` images spanning the format: a tiny hand-built
+/// trace, a sparse one (gaps in the slot grid, ties, SAMPLE_NONE mixed
+/// with recorded ids), and one of each generator shape.
+fn events_corpus() -> Vec<TraceFile> {
+    let hand = TraceFile::new(
+        3,
+        0xFEED,
+        vec![
+            TraceEvent { t_ms: 0, device: 0, sample: SAMPLE_NONE },
+            TraceEvent { t_ms: 0, device: 2, sample: 7 },
+            TraceEvent { t_ms: 1500, device: 1, sample: 7 },
+            TraceEvent { t_ms: 9999, device: 0, sample: 4095 },
+        ],
+    )
+    .unwrap();
+    let mut corpus = vec![hand];
+    for shape in [
+        TraceShape::Diurnal,
+        TraceShape::FlashCrowd,
+        TraceShape::Bursts,
+        TraceShape::Churn,
+    ] {
+        corpus.push(
+            generate(&GenSpec {
+                shape,
+                devices: 6,
+                duration_s: 20.0,
+                rate_hz: 2.0,
+                seed: 11,
+                ..GenSpec::default()
+            })
+            .unwrap(),
+        );
+    }
+    corpus
+}
+
+#[test]
+fn valid_events_round_trip_exactly() {
+    for tf in events_corpus() {
+        let bytes = tf.to_bytes();
+        assert_eq!(bytes, tf.to_bytes(), "serialization must be deterministic");
+        let back = TraceFile::from_bytes(&bytes).unwrap();
+        assert_eq!(back, tf, "parse must invert serialization");
+        assert_eq!(back.to_bytes(), bytes, "re-serialization must be identity");
+    }
+}
+
+#[test]
+fn mutated_events_never_panic() {
+    for (ti, tf) in events_corpus().iter().enumerate() {
+        let base = tf.to_bytes();
+        for seed in 0..seeds() {
+            let mut rng = Rng::stream(0x7E40_0000 + seed, ti as u64);
+            for _ in 0..muts() {
+                let bytes = mutate(&mut rng, &base);
+                // Ok or Err only — and Ok is only reachable when the
+                // mutation was a no-op (splice onto itself), because
+                // any real change trips the length check or the
+                // digest. If it parses, it parses to the original.
+                if let Ok(back) = TraceFile::from_bytes(&bytes) {
+                    assert_eq!(bytes, base, "a mutated image passed the digest");
+                    assert_eq!(&back, tf);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupt_events_reject_with_context() {
+    let tf = &events_corpus()[0];
+    let good = tf.to_bytes();
+
+    let mut wrong_version = good.clone();
+    wrong_version[8..12].copy_from_slice(&2u32.to_le_bytes());
+    let err = TraceFile::from_bytes(&wrong_version).unwrap_err();
+    assert!(
+        err.to_string().contains("unsupported .events version 2"),
+        "{err}"
+    );
+
+    let mut flipped = good.clone();
+    let mid = good.len() / 2;
+    flipped[mid] ^= 0x40;
+    let err = TraceFile::from_bytes(&flipped).unwrap_err();
+    assert!(err.to_string().contains("digest mismatch"), "{err}");
+
+    let err = TraceFile::from_bytes(&good[..good.len() - 3]).unwrap_err();
+    assert!(err.to_string().contains("imply"), "{err}");
+
+    let err = TraceFile::from_bytes(&good[..5]).unwrap_err();
+    assert!(err.to_string().contains("truncated"), "{err}");
+}
+
+/// Seeded mutations of the text trace sources: the CSV/JSONL parsers
+/// must reject garbage with errors, never panic, and mutations that
+/// stay parseable must also survive `compile`.
+#[test]
+fn mutated_trace_text_never_panics() {
+    let csv = "time_s,device,sample\n0.000,0,\n0.250,1,17\n1.500,0,\n2.750,3,4\n";
+    let jsonl = "{\"t\": 0.0, \"device\": 0}\n{\"t\": 0.25, \"device\": 1, \"sample\": 17}\n";
+    for (fi, (fmt, doc)) in [(TextFormat::Csv, csv), (TextFormat::Jsonl, jsonl)]
+        .into_iter()
+        .enumerate()
+    {
+        for seed in 0..seeds() {
+            let mut rng = Rng::stream(0x7257_0000 + seed, fi as u64);
+            for _ in 0..muts() {
+                let bytes = mutate(&mut rng, doc.as_bytes());
+                let text = String::from_utf8_lossy(&bytes);
+                if let Ok(records) = parse_text(fmt, &text) {
+                    let _ = multitascpp::trace::compile(records);
                 }
             }
         }

@@ -119,6 +119,7 @@ fn one_low_device(slo_ms: f64, samples: usize) -> DeviceSpec {
     DeviceSpec {
         tier: Tier::Low,
         stream: (0..samples).collect(),
+        arrivals: Vec::new(),
         initial_threshold: 0.5,
         sr_target: 95.0,
         slo_ms,
@@ -412,8 +413,8 @@ fn bench_scale_smoke_emits_report() {
     let out = std::env::temp_dir().join("mtpp_test_bench_scale.json");
     let _ = std::fs::remove_file(&out);
     let points = multitascpp::bench::scale::run_scale(true, &out).unwrap();
-    // 2 device counts x {single, sharded}.
-    assert_eq!(points.len(), 4);
+    // 2 device counts x {single, sharded, trace}.
+    assert_eq!(points.len(), 6);
     assert!(points.iter().all(|p| p.events > 0 && p.wall_s > 0.0));
     assert!(
         points
@@ -422,12 +423,21 @@ fn bench_scale_smoke_emits_report() {
             .all(|p| p.steals == 0),
         "single-queue cells cannot steal"
     );
+    // The replay cells actually replayed: one per device count, and the
+    // workload-identity digest differs from the synthetic cells'.
+    let trace_cells: Vec<_> = points.iter().filter(|p| p.label == "trace").collect();
+    assert_eq!(trace_cells.len(), 2);
+    assert!(trace_cells
+        .iter()
+        .all(|t| points.iter().any(|p| p.label == "sharded"
+            && p.devices == t.devices
+            && p.scenario_digest != t.scenario_digest)));
     let text = std::fs::read_to_string(&out).unwrap();
     let json = multitascpp::util::json::Json::parse(&text).unwrap();
     assert_eq!(json.get("bench").and_then(|j| j.as_str()), Some("scale"));
     assert_eq!(
         json.get("points").and_then(|j| j.as_arr()).map(|a| a.len()),
-        Some(4)
+        Some(6)
     );
     assert_eq!(
         json.get("runs").and_then(|j| j.as_arr()).map(|a| a.len()),
@@ -444,6 +454,6 @@ fn bench_scale_smoke_emits_report() {
     );
     assert_eq!(
         json.get("points").and_then(|j| j.as_arr()).map(|a| a.len()),
-        Some(4)
+        Some(6)
     );
 }

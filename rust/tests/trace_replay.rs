@@ -1,0 +1,170 @@
+//! End-to-end tests for the `mtpp trace` subsystem (docs/traces.md):
+//! text sources compile deterministically into the committed `.events`
+//! fixtures, generated traces replay bit-identically through the
+//! simulator, and the `workload.trace` validation boundary enforces
+//! the device-id-space contract.
+
+use std::path::{Path, PathBuf};
+
+use multitascpp::config::spec::ScenarioSpec;
+use multitascpp::experiments::common::metrics_snapshot;
+use multitascpp::experiments::Ctx;
+use multitascpp::trace::{
+    compile, generate, parse_text, GenSpec, TextFormat, TraceEvent, TraceFile, TraceShape,
+    SAMPLE_NONE,
+};
+
+fn repo_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn compile_file(rel: &str) -> TraceFile {
+    let path = repo_path(rel);
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {rel}: {e}"));
+    let fmt = TextFormat::from_path(&path).unwrap();
+    compile(parse_text(fmt, &text).unwrap()).unwrap()
+}
+
+fn ctx() -> Ctx {
+    Ctx::synthetic(&std::env::temp_dir().join("mtpp_trace_replay_results"), true).unwrap()
+}
+
+/// The committed preset `.events` fixtures are exactly what `mtpp
+/// trace compile` produces from their committed text sources — the
+/// provenance contract docs/traces.md promises (regeneration is
+/// `mtpp trace compile <src> -o <out>`).
+#[test]
+fn committed_fixtures_match_their_text_sources() {
+    for (src, events) in [
+        ("scenarios/traces/diurnal.csv", "scenarios/traces/diurnal.events"),
+        (
+            "scenarios/traces/flash-crowd.jsonl",
+            "scenarios/traces/flash-crowd.events",
+        ),
+    ] {
+        let compiled = compile_file(src);
+        let committed = std::fs::read(repo_path(events)).unwrap();
+        assert_eq!(
+            compiled.to_bytes(),
+            committed,
+            "{events} drifted from {src}; regenerate with `mtpp trace compile`"
+        );
+        // And the committed bytes parse back to the same value.
+        assert_eq!(TraceFile::from_bytes(&committed).unwrap(), compiled);
+    }
+}
+
+/// Compiling the same source twice is byte-identical, and the CSV and
+/// JSONL spellings of the same arrival log compile to the same trace.
+#[test]
+fn compile_is_deterministic_and_format_agnostic() {
+    let a = compile_file("rust/tests/fixtures/traces/sample.csv");
+    let b = compile_file("rust/tests/fixtures/traces/sample.csv");
+    assert_eq!(a.to_bytes(), b.to_bytes());
+    let j = compile_file("rust/tests/fixtures/traces/sample.jsonl");
+    assert_eq!(a, j, "CSV and JSONL spellings must compile identically");
+    assert_eq!(a.to_bytes(), j.to_bytes());
+}
+
+/// Replaying a trace preset is bit-deterministic: every recorded
+/// arrival becomes exactly one completed sample, and back-to-back runs
+/// produce identical metrics snapshots (including the telemetry-trace
+/// hash).
+#[test]
+fn trace_presets_replay_every_arrival_bit_identically() {
+    let mut ctx = ctx();
+    for preset in ["diurnal-trace", "flash-crowd-trace"] {
+        let spec = ScenarioSpec::preset(preset).unwrap();
+        let trace = TraceFile::load(&repo_path(spec.workload.trace.as_deref().unwrap())).unwrap();
+        let a = ctx.run_spec(&spec).unwrap();
+        assert_eq!(
+            a.overall.samples,
+            trace.events.len(),
+            "{preset}: every trace arrival must complete exactly once"
+        );
+        let b = ctx.run_spec(&spec).unwrap();
+        assert_eq!(
+            metrics_snapshot(&a),
+            metrics_snapshot(&b),
+            "{preset}: replay must be bit-deterministic"
+        );
+    }
+}
+
+/// A generated trace replays deterministically through a scenario too
+/// (gen -> save -> workload.trace -> run, the full CLI path in-process).
+#[test]
+fn generated_trace_replays_deterministically() {
+    let tf = generate(&GenSpec {
+        shape: TraceShape::Bursts,
+        devices: 6,
+        duration_s: 30.0,
+        rate_hz: 1.0,
+        seed: 5,
+        ..GenSpec::default()
+    })
+    .unwrap();
+    let path = std::env::temp_dir().join("mtpp_trace_replay_bursts.events");
+    tf.save(&path).unwrap();
+    let mut spec = ScenarioSpec::default();
+    spec.set("devices", "low:6").unwrap();
+    spec.set("workload.trace", path.to_str().unwrap()).unwrap();
+    let mut ctx = ctx();
+    let a = ctx.run_spec(&spec).unwrap();
+    let b = ctx.run_spec(&spec).unwrap();
+    assert_eq!(a.overall.samples, tf.events.len());
+    assert_eq!(metrics_snapshot(&a), metrics_snapshot(&b));
+}
+
+/// `validate()` is the boundary that rejects a trace whose device-id
+/// space exceeds the scenario population — with the path and both
+/// counts in the message.
+#[test]
+fn oversized_trace_rejected_at_validation() {
+    let mut spec = ScenarioSpec::default();
+    spec.set("devices", "low:4").unwrap();
+    let trace_path = repo_path("scenarios/traces/diurnal.events");
+    spec.set("workload.trace", trace_path.to_str().unwrap())
+        .unwrap();
+    let err = spec.validate().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("0..16") && msg.contains("4 devices"),
+        "expected a device-id-space error, got: {msg}"
+    );
+}
+
+/// Backlogged arrivals (all at t=0) start back-to-back instead of
+/// being dropped: sample conservation holds and the run finishes.
+#[test]
+fn backlogged_arrivals_all_complete() {
+    let mut events = Vec::new();
+    for i in 0..10u32 {
+        events.push(TraceEvent {
+            t_ms: 0,
+            device: i % 2,
+            sample: if i % 3 == 0 { 42 } else { SAMPLE_NONE },
+        });
+    }
+    let tf = TraceFile::new(2, 0, events).unwrap();
+    let path = std::env::temp_dir().join("mtpp_trace_replay_backlog.events");
+    tf.save(&path).unwrap();
+    let mut spec = ScenarioSpec::default();
+    spec.set("devices", "low:2").unwrap();
+    spec.set("workload.trace", path.to_str().unwrap()).unwrap();
+    let m = ctx().run_spec(&spec).unwrap();
+    assert_eq!(m.overall.samples, 10, "a t=0 backlog must fully drain");
+    assert!(m.makespan_s > 0.0);
+}
+
+/// `samples_per_device` is trace-governed in replay mode: changing it
+/// does not change what replays.
+#[test]
+fn samples_per_device_is_ignored_under_replay() {
+    let mut spec = ScenarioSpec::preset("diurnal-trace").unwrap();
+    let mut ctx = ctx();
+    let a = ctx.run_spec(&spec).unwrap();
+    spec.set("samples_per_device", "7").unwrap();
+    let b = ctx.run_spec(&spec).unwrap();
+    assert_eq!(metrics_snapshot(&a), metrics_snapshot(&b));
+}
