@@ -1,42 +1,96 @@
 //! `mtpp bench scale` — wall-clock engine throughput at synthetic
-//! fleet scales (100 / 500 / 1000 / 5000 / 10000 devices; `--smoke`
-//! shrinks the grid for CI). Starts the repo's perf trajectory: every
-//! run APPENDS to a machine-readable `BENCH_scale.json` — the file
-//! keeps a `runs` history with events/sec and simulated samples/sec
-//! per (devices, sharding) cell, so regressions in the event-loop hot
-//! path show up as numbers PR over PR, not vibes.
+//! fleet scales. Starts the repo's perf trajectory: every run APPENDS
+//! to a machine-readable `BENCH_scale.json` — the file keeps a `runs`
+//! history with events/sec and simulated samples/sec per (devices,
+//! variant) cell, so regressions in the event-loop hot path show up as
+//! numbers PR over PR, not vibes.
+//!
+//! # The bench grid
+//!
+//! The full grid runs 100 / 500 / 1000 / 5000 / 10000 / 50000 / 100000
+//! devices (`--devices N,N,...` overrides it; `--smoke` shrinks it for
+//! CI). Cells at or below 10k devices stream 300 samples per device;
+//! the 50k/100k cells stream 60 — enough events to time, small enough
+//! to finish. Each device count runs four variants:
+//!
+//! * `single`      — one shared queue (the pre-sharding pool),
+//! * `sharded`     — per-model shards + work stealing, serial stepping,
+//! * `sharded-par` — the same spec stepped with `server.parallel=2`
+//!   (the deterministic parallel shard planner; identical results by
+//!   construction, so the cell measures pure execution speed),
+//! * `trace`       — a seeded diurnal `.events` replay through the
+//!   sharded pool (≤ 10k devices; larger trace cells are skipped and
+//!   logged, not silently dropped).
+//!
+//! `sharded` vs `sharded-par` at matching `scenario_digest` IS the
+//! parallelism speedup claim — the digest zeroes `server.parallel`
+//! first, because the knob changes execution, not workload identity.
+//! Every point records `exec` (`serial`|`parallel`) and `threads` so
+//! the trajectory can separate the two axes. `--parallel T` fans the
+//! independent cells themselves over T workers (merge in grid order,
+//! byte-identical report) — wall-clock per cell is still measured
+//! inside its own task.
 //!
 //! Runs entirely on the synthetic harness (no artifacts): a §V-A
 //! heterogeneous population against a two-replica mixed pool with
-//! shedding, once over the single shared queue, once over per-model
-//! shards with work stealing — the comparison the sharding work is
-//! accountable to — and once replaying a seeded diurnal `.events`
-//! trace through the sharded pool, so trace-replay throughput has a
-//! trajectory too.
+//! shedding — the comparison the sharding and parallelism work is
+//! accountable to.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::spec::ScenarioSpec;
+use crate::config::SystemConfig;
+use crate::data::Dataset;
 use crate::experiments::Ctx;
+use crate::models::outputs::{CachedOutputs, SharedOutputs};
+use crate::models::Registry;
+use crate::runtime::WorkerPool;
 use crate::util::json::Json;
 use crate::util::stats::fnv1a64;
+
+/// Worker threads the `sharded-par` cells step their shards with.
+const PAR_CELL_THREADS: usize = 2;
+
+/// Largest device count the `trace` variant still generates a replay
+/// file for (generation cost and file size grow with the fleet).
+const TRACE_CELL_CAP: usize = 10_000;
+
+/// How `mtpp bench scale` was asked to run.
+pub struct ScaleOptions {
+    /// Reduced grid (small N) for CI.
+    pub smoke: bool,
+    /// Device-count grid override (`--devices`); `None` = built-in.
+    pub devices: Option<Vec<usize>>,
+    /// Fan independent cells over this many worker threads (0/1 =
+    /// serial). Cell results and the report are byte-identical.
+    pub fanout: usize,
+}
 
 /// One measured cell of the scale grid.
 #[derive(Clone, Debug)]
 pub struct ScalePoint {
-    /// Workload variant label (`single` | `sharded` | `trace`).
+    /// Workload variant label
+    /// (`single` | `sharded` | `sharded-par` | `trace`).
     pub label: &'static str,
     pub devices: usize,
     pub samples_per_device: usize,
     /// The cell spec's seed (workload identity, PR-over-PR).
     pub seed: u64,
-    /// FNV-1a digest of the cell's fully-resolved spec JSON: two
-    /// reports are only comparable when their digests match, so the
-    /// perf trajectory cannot silently compare different workloads.
+    /// FNV-1a digest of the cell's fully-resolved spec JSON with
+    /// `server.parallel` zeroed (an execution knob, not workload
+    /// identity): two reports are only comparable when their digests
+    /// match, so the perf trajectory cannot silently compare different
+    /// workloads — and serial vs parallel cells of the same workload
+    /// share a digest on purpose.
     pub scenario_digest: String,
+    /// Execution mode of the cell (`serial` | `parallel`).
+    pub exec: &'static str,
+    /// Worker threads the cell's shard stepping used (0 = serial).
+    pub threads: usize,
     /// Discrete events the engine processed.
     pub events: u64,
     /// Requests shed by admission control (sanity signal: overload is
@@ -47,6 +101,17 @@ pub struct ScalePoint {
     pub wall_s: f64,
     pub events_per_sec: f64,
     pub samples_per_sec: f64,
+}
+
+/// One cell ready to run: its spec plus everything the report records.
+struct Cell {
+    label: &'static str,
+    devices: usize,
+    samples: usize,
+    spec: ScenarioSpec,
+    digest: String,
+    exec: &'static str,
+    threads: usize,
 }
 
 /// The spec one cell runs: `hetero:N` devices, two-replica mixed pool
@@ -62,38 +127,81 @@ fn cell_spec(devices: usize, samples: usize, sharding: &str) -> Result<ScenarioS
     Ok(spec)
 }
 
+/// Workload digest of a cell spec: FNV-1a over the spec JSON with the
+/// `server.parallel` execution knob zeroed first.
+fn workload_digest(spec: &ScenarioSpec) -> Result<String> {
+    let mut identity = spec.clone();
+    identity.set("server.parallel", "0")?;
+    Ok(format!(
+        "{:016x}",
+        fnv1a64(identity.to_json().to_string().as_bytes())
+    ))
+}
+
 /// Run the grid and write `out` (JSON). Smoke mode shrinks the device
 /// counts and stream length so CI can afford it while still crossing
-/// every code path (sharded + single, shed, steal).
-pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
-    // The 5k/10k cells are what the hot-path data layout work (interned
-    // model ids, request arena, timer-wheel queue) is accountable to;
-    // full mode only — `--smoke` keeps the CI grid small.
-    let (device_counts, samples) = if smoke {
-        (vec![20usize, 60], 80usize)
-    } else {
-        (vec![100usize, 500, 1000, 5000, 10000], 300usize)
+/// every code path (sharded + single, shed, steal, parallel stepping).
+pub fn run_scale(opts: &ScaleOptions, out: &Path) -> Result<Vec<ScalePoint>> {
+    // The 10k+ cells are what the hot-path work (interned model ids,
+    // request arena, timer wheel, parallel shard stepping) is
+    // accountable to; full mode only — `--smoke` keeps CI small.
+    let device_counts: Vec<usize> = match &opts.devices {
+        Some(grid) => grid.clone(),
+        None if opts.smoke => vec![20, 60],
+        None => vec![100, 500, 1000, 5000, 10000, 50000, 100000],
+    };
+    let samples_for = |n: usize| -> usize {
+        if opts.smoke {
+            80
+        } else if n <= 10_000 {
+            300
+        } else {
+            60
+        }
     };
     // The synthetic ctx wants a results dir it never writes benches
     // into; keep it out of the repo tree.
-    let mut ctx = Ctx::synthetic(&std::env::temp_dir().join("mtpp_bench_scale"), true)?;
-    let mut points = Vec::new();
+    let ctx = Ctx::synthetic(&std::env::temp_dir().join("mtpp_bench_scale"), true)?;
     println!(
-        "== bench scale ({} mode: devices {:?} x {} samples) ==",
-        if smoke { "smoke" } else { "full" },
+        "== bench scale ({} mode: devices {:?}, fanout {}) ==",
+        if opts.smoke { "smoke" } else { "full" },
         device_counts,
-        samples
+        opts.fanout
     );
+    let mut cells = Vec::new();
     for &n in &device_counts {
-        for (label, sharding) in [("single", "1"), ("sharded", "per-model")] {
-            let spec = cell_spec(n, samples, sharding)?;
-            let digest = format!("{:016x}", fnv1a64(spec.to_json().to_string().as_bytes()));
-            points.push(measure_cell(&mut ctx, label, n, samples, &spec, digest)?);
+        let samples = samples_for(n);
+        for (label, parallel) in [
+            ("single", 0usize),
+            ("sharded", 0),
+            ("sharded-par", PAR_CELL_THREADS),
+        ] {
+            let sharding = if label == "single" { "1" } else { "per-model" };
+            let mut spec = cell_spec(n, samples, sharding)?;
+            let digest = workload_digest(&spec)?;
+            // Pin the execution mode either way: serial cells use 1
+            // (never upgraded by MTPP_PARALLEL) so the exec label
+            // always tells the truth about what was measured.
+            let pinned = if parallel > 0 { parallel } else { 1 };
+            spec.set("server.parallel", &pinned.to_string())?;
+            cells.push(Cell {
+                label,
+                devices: n,
+                samples,
+                spec,
+                digest,
+                exec: if parallel > 0 { "parallel" } else { "serial" },
+                threads: parallel,
+            });
         }
         // Replay variant: the same fleet driven by a seeded diurnal
         // `.events` trace through the sharded pool, so the trajectory
         // tracks trace-replay events/sec alongside the synthetic
         // arrival generators.
+        if n > TRACE_CELL_CAP {
+            println!("trace    n={n}: skipped (trace cells cap at {TRACE_CELL_CAP} devices)");
+            continue;
+        }
         let tf = crate::trace::generate(&crate::trace::GenSpec {
             shape: crate::trace::TraceShape::Diurnal,
             devices: u32::try_from(n).context("bench device count")?,
@@ -104,6 +212,7 @@ pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
         let trace_path = std::env::temp_dir().join(format!("mtpp_bench_scale_{n}.events"));
         tf.save(&trace_path)?;
         let mut spec = cell_spec(n, samples, "per-model")?;
+        spec.set("server.parallel", "1")?;
         spec.set(
             "workload.trace",
             trace_path.to_str().context("temp dir path is not UTF-8")?,
@@ -113,53 +222,94 @@ pub fn run_scale(smoke: bool, out: &Path) -> Result<Vec<ScalePoint>> {
         // hashing the spec.
         let mut identity = spec.clone();
         identity.set("workload.trace", &format!("digest:{:016x}", tf.digest()))?;
-        let digest = format!(
-            "{:016x}",
-            fnv1a64(identity.to_json().to_string().as_bytes())
-        );
-        points.push(measure_cell(&mut ctx, "trace", n, samples, &spec, digest)?);
+        let digest = workload_digest(&identity)?;
+        cells.push(Cell {
+            label: "trace",
+            devices: n,
+            samples,
+            spec,
+            digest,
+            exec: "serial",
+            threads: 0,
+        });
     }
-    write_report(smoke, &points, out)?;
+    // Cells are independent seeded runs against one read-only context
+    // bundle — exactly the run fan-out shape. Wall-clock is measured
+    // inside each cell's own task; the merge is grid-ordered either
+    // way, so the emitted report is byte-identical (modulo timings)
+    // across fanout settings.
+    let shared = Arc::new((ctx.cfg, ctx.registry, ctx.dataset, ctx.outputs));
+    let points: Vec<ScalePoint> = if opts.fanout >= 2 && cells.len() > 1 {
+        let pool = WorkerPool::new(opts.fanout);
+        let worker_shared = Arc::clone(&shared);
+        let results = pool.map(cells, move |_, cell| {
+            let (cfg, registry, dataset, outputs) = &*worker_shared;
+            run_cell(cfg, registry, dataset, outputs, &cell)
+                .map_err(|e| format!("{} n={}: {e:#}", cell.label, cell.devices))
+        });
+        let mut pts = Vec::with_capacity(results.len());
+        for r in results {
+            match r {
+                Ok(p) => {
+                    print_point(&p);
+                    pts.push(p);
+                }
+                Err(e) => bail!("bench cell failed: {e}"),
+            }
+        }
+        pts
+    } else {
+        let (cfg, registry, dataset, outputs) = &*shared;
+        let mut pts = Vec::with_capacity(cells.len());
+        for cell in &cells {
+            let p = run_cell(cfg, registry, dataset, outputs, cell)?;
+            print_point(&p);
+            pts.push(p);
+        }
+        pts
+    };
+    write_report(opts.smoke, &points, out)?;
     println!("wrote {}", out.display());
     Ok(points)
 }
 
-/// Time one cell spec and fold the run into a [`ScalePoint`].
-fn measure_cell(
-    ctx: &mut Ctx,
-    label: &'static str,
-    n: usize,
-    samples: usize,
-    spec: &ScenarioSpec,
-    scenario_digest: String,
+/// Time one cell spec and fold the run into a [`ScalePoint`]. Pure
+/// function of the shared read-only context — safe on a worker.
+fn run_cell(
+    cfg: &SystemConfig,
+    registry: &Registry,
+    dataset: &Dataset,
+    outputs: &CachedOutputs,
+    cell: &Cell,
 ) -> Result<ScalePoint> {
     let t0 = Instant::now();
-    let m = ctx.run_spec(spec)?;
+    let mut provider = SharedOutputs(outputs);
+    let m = crate::sim::run_spec(&cell.spec, cfg, registry, dataset, &mut provider)?;
     let wall_s = t0.elapsed().as_secs_f64();
-    let point = ScalePoint {
-        label,
-        devices: n,
-        samples_per_device: samples,
-        seed: spec.seed,
-        scenario_digest,
+    Ok(ScalePoint {
+        label: cell.label,
+        devices: cell.devices,
+        samples_per_device: cell.samples,
+        seed: cell.spec.seed,
+        scenario_digest: cell.digest.clone(),
+        exec: cell.exec,
+        threads: cell.threads,
         events: m.events,
         shed: m.shed,
         steals: m.steals,
         wall_s,
         events_per_sec: m.events as f64 / wall_s.max(1e-9),
         samples_per_sec: m.overall.samples as f64 / wall_s.max(1e-9),
-    };
+    })
+}
+
+fn print_point(p: &ScalePoint) {
     println!(
-        "{label:<8} n={n:<5} {:>9} events in {:>6.2}s  ({:>10.0} events/s, \
+        "{:<11} n={:<6} {:>9} events in {:>6.2}s  ({:>10.0} events/s, \
          {:>9.0} samples/s, shed {}, steals {})",
-        point.events,
-        point.wall_s,
-        point.events_per_sec,
-        point.samples_per_sec,
-        point.shed,
-        point.steals
+        p.label, p.devices, p.events, p.wall_s, p.events_per_sec, p.samples_per_sec, p.shed,
+        p.steals
     );
-    Ok(point)
 }
 
 fn points_json(points: &[ScalePoint]) -> Json {
@@ -173,6 +323,8 @@ fn points_json(points: &[ScalePoint]) -> Json {
                     ("samples_per_device", Json::num(p.samples_per_device as f64)),
                     ("seed", Json::num(p.seed as f64)),
                     ("scenario_digest", Json::str(p.scenario_digest.as_str())),
+                    ("exec", Json::str(p.exec)),
+                    ("threads", Json::num(p.threads as f64)),
                     ("events", Json::num(p.events as f64)),
                     ("shed", Json::num(p.shed as f64)),
                     ("steals", Json::num(p.steals as f64)),
@@ -205,6 +357,15 @@ fn prior_runs(out: &Path) -> Vec<Json> {
     Vec::new()
 }
 
+/// A free-form `note` carried at the report's top level (provenance of
+/// the committed baseline, measurement caveats). Preserved verbatim
+/// across appends so a CI refresh cannot silently drop it.
+fn prior_note(out: &Path) -> Option<String> {
+    let text = std::fs::read_to_string(out).ok()?;
+    let prev = Json::parse(&text).ok()?;
+    prev.get("note")?.as_str().map(str::to_string)
+}
+
 fn write_report(smoke: bool, points: &[ScalePoint], out: &Path) -> Result<()> {
     // Run identity (device grid + shared seed) so one glance tells
     // whether two runs measured the same workload grid; per-point
@@ -225,11 +386,15 @@ fn write_report(smoke: bool, points: &[ScalePoint], out: &Path) -> Result<()> {
             ("points", points_val),
         ]
     };
+    let note = prior_note(out);
     let mut runs = prior_runs(out);
     runs.push(Json::obj(identity(points_json(points))));
     // Top level mirrors the LATEST run (the shape consumers and the
     // smoke test read) while `runs` accumulates the full history.
     let mut fields = vec![("bench", Json::str("scale"))];
+    if let Some(n) = &note {
+        fields.push(("note", Json::str(n.as_str())));
+    }
     fields.extend(identity(points_json(points)));
     fields.push(("runs", Json::Arr(runs)));
     let json = Json::obj(fields);

@@ -195,6 +195,13 @@ pub struct ServerPolicy {
     /// keeps each model's registry value (the shipped defaults are 0 —
     /// instant resume, bit-identical to the pre-warm-up scaler).
     pub warmup_ms: Option<f64>,
+    /// Deterministic parallel shard stepping (docs/architecture.md):
+    /// `0` (default) leaves the execution mode to the `MTPP_PARALLEL`
+    /// environment override, `1` pins the serial path (never upgraded
+    /// by the environment), and `n >= 2` steps per-model shards on `n`
+    /// worker threads with a shard-index-ordered merge. Purely an
+    /// execution knob — results are bit-identical across all values.
+    pub parallel: usize,
 }
 
 impl Default for ServerPolicy {
@@ -210,7 +217,26 @@ impl Default for ServerPolicy {
             slack_batch: false,
             autoscale: None,
             warmup_ms: None,
+            parallel: 0,
         }
+    }
+}
+
+impl ServerPolicy {
+    /// Resolve the `parallel` knob against the `MTPP_PARALLEL`
+    /// environment override: `0` defers to the environment (absent or
+    /// unparsable means serial), `1` is pinned serial regardless of
+    /// the environment, and `n >= 2` is an explicit thread count.
+    /// Returns the effective worker-thread count (`0`/`1` both mean
+    /// the serial path).
+    pub fn effective_parallel(&self) -> usize {
+        if self.parallel >= 1 {
+            return self.parallel;
+        }
+        std::env::var("MTPP_PARALLEL")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0)
     }
 }
 

@@ -291,6 +291,12 @@ impl ScenarioSpec {
                 "server.warmup_ms must be non-negative and finite, got {w}"
             );
         }
+        ensure!(
+            self.server.parallel <= 64,
+            "server.parallel is a worker-thread count, not a load knob: \
+             got {}, max 64",
+            self.server.parallel
+        );
         if let Some(a) = &self.server.autoscale {
             ensure!(
                 a.queue_high.is_finite()
@@ -449,6 +455,7 @@ impl ScenarioSpec {
                 "warmup_ms",
                 self.server.warmup_ms.map_or(Json::Null, Json::num),
             ),
+            ("parallel", Json::num(self.server.parallel as f64)),
         ]);
         Json::obj(vec![
             ("devices", devices),
@@ -706,6 +713,7 @@ impl ScenarioSpec {
             "server.dispatch" => self.server.dispatch = DispatchKind::parse(value)?,
             "server.sharding" => self.server.sharding = ShardingKind::parse(value)?,
             "server.slack_batch" => self.server.slack_batch = parse_bool(key, value)?,
+            "server.parallel" => self.server.parallel = parse_count(key, value)?,
             "server.warmup_ms" => {
                 self.server.warmup_ms = if value == "none" {
                     None
@@ -896,7 +904,7 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
     let obj = v
         .as_obj()
         .ok_or_else(|| anyhow!("'server' must be an object"))?;
-    const KEYS: [&str; 10] = [
+    const KEYS: [&str; 11] = [
         "replicas",
         "queue",
         "shed",
@@ -907,6 +915,7 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
         "slack_batch",
         "autoscale",
         "warmup_ms",
+        "parallel",
     ];
     for key in obj.keys() {
         ensure!(
@@ -1002,6 +1011,9 @@ fn server_from_json(v: &Json) -> Result<ServerPolicy> {
     }
     if let Some(x) = opt(v, "warmup_ms") {
         p.warmup_ms = Some(as_num(x, "server.warmup_ms")?);
+    }
+    if let Some(x) = opt(v, "parallel") {
+        p.parallel = as_count(x, "server.parallel")?;
     }
     Ok(p)
 }

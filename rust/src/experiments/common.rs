@@ -3,17 +3,18 @@
 //! emission.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-use anyhow::{Context as _, Result};
+use anyhow::{bail, Context as _, Result};
 
 use crate::config::scenario::{Scenario, SchedulerKind};
 use crate::config::spec::ScenarioSpec;
 use crate::config::SystemConfig;
 use crate::data::Dataset;
 use crate::metrics::RunMetrics;
-use crate::models::outputs::{CachedOutputs, RealExecProvider, SyntheticOutputs};
+use crate::models::outputs::{CachedOutputs, RealExecProvider, SharedOutputs, SyntheticOutputs};
 use crate::models::Registry;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, WorkerPool};
 use crate::util::json::Json;
 use crate::util::stats::{fnv1a64, seed_summary};
 
@@ -26,6 +27,11 @@ pub struct Ctx {
     pub results_dir: PathBuf,
     /// Reduced sweep for quick runs (`--quick`).
     pub quick: bool,
+    /// Worker threads for the parallel run fan-out (`--parallel`):
+    /// `SpecGrid` sweeps fan independent cells over a pool and merge
+    /// in grid order, so artifacts stay byte-identical to serial.
+    /// 0/1 run every cell inline on the caller.
+    pub parallel: usize,
 }
 
 /// All models any experiment touches.
@@ -56,6 +62,7 @@ impl Ctx {
             outputs,
             results_dir: results_dir.to_path_buf(),
             quick,
+            parallel: 0,
         })
     }
 
@@ -114,6 +121,7 @@ impl Ctx {
             outputs,
             results_dir: results_dir.to_path_buf(),
             quick,
+            parallel: 0,
         })
     }
 
@@ -182,16 +190,80 @@ impl SpecGrid {
 
     /// Execute every cell, invoking `row` once per (variant label,
     /// device count) with that cell's per-seed metrics.
+    ///
+    /// With `ctx.parallel >= 2` the cells — independent seeded runs —
+    /// fan out over a worker pool; `row` still fires in grid order
+    /// with identical metrics, so everything downstream (CSV, JSON,
+    /// stdout tables) is byte-identical to the serial sweep.
     pub fn run(
         &self,
         ctx: &mut Ctx,
         mut row: impl FnMut(&str, usize, &[RunMetrics]) -> Result<()>,
     ) -> Result<()> {
+        let threads = ctx.parallel;
+        if threads >= 2 && self.runs() > 1 {
+            return self.run_par(ctx, threads, row);
+        }
         for (vi, (label, _)) in self.variants.iter().enumerate() {
             for &n in &self.devices {
                 let mut runs = Vec::with_capacity(self.seeds.len());
                 for &seed in &self.seeds {
                     runs.push(ctx.run_spec(&self.cell(vi, n, seed)?)?);
+                }
+                row(label, n, &runs)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The parallel fan-out behind [`SpecGrid::run`]: materialize every
+    /// cell spec up front (grid order), run them on `threads` workers
+    /// against one shared read-only context bundle, then replay the
+    /// results back through `row` in grid order. A failing cell
+    /// reports its grid coordinates; the first failure in grid order
+    /// wins, matching where the serial sweep would have stopped.
+    fn run_par(
+        &self,
+        ctx: &mut Ctx,
+        threads: usize,
+        mut row: impl FnMut(&str, usize, &[RunMetrics]) -> Result<()>,
+    ) -> Result<()> {
+        let mut cells = Vec::with_capacity(self.runs());
+        for vi in 0..self.variants.len() {
+            for &n in &self.devices {
+                for &seed in &self.seeds {
+                    cells.push(self.cell(vi, n, seed)?);
+                }
+            }
+        }
+        let shared = Arc::new((
+            ctx.cfg.clone(),
+            ctx.registry.clone(),
+            ctx.dataset.clone(),
+            ctx.outputs.clone(),
+        ));
+        let pool = WorkerPool::new(threads);
+        let results: Vec<Result<RunMetrics, String>> = pool.map(cells, move |_, spec| {
+            let (cfg, registry, dataset, outputs) = &*shared;
+            let mut provider = SharedOutputs(outputs);
+            // The vendored anyhow shim's Error is not Send, so worker
+            // errors cross back as rendered strings.
+            crate::sim::run_spec(&spec, cfg, registry, dataset, &mut provider)
+                .map_err(|e| format!("{e:#}"))
+        });
+        let mut results = results.into_iter();
+        for (vi, (label, _)) in self.variants.iter().enumerate() {
+            for &n in &self.devices {
+                let mut runs = Vec::with_capacity(self.seeds.len());
+                for &seed in &self.seeds {
+                    match results.next() {
+                        Some(Ok(m)) => runs.push(m),
+                        Some(Err(e)) => bail!(
+                            "grid cell '{label}' (variant {vi}) at {n} devices, \
+                             seed {seed}: {e}"
+                        ),
+                        None => bail!("parallel sweep returned too few results"),
+                    }
                 }
                 row(label, n, &runs)?;
             }

@@ -88,6 +88,13 @@ pub fn registry() -> Vec<Rule> {
             },
             check: check_println,
         },
+        Rule {
+            name: "no-threading-outside-par",
+            summary: "std::thread / locks / atomics live only in runtime/par.rs (and net/)",
+            skip_test_code: false,
+            applies: |p| p != "runtime/par.rs" && !starts(p, "net/"),
+            check: check_threading,
+        },
     ]
 }
 
@@ -296,6 +303,31 @@ fn check_println(toks: &[Token]) -> Vec<Candidate> {
     out
 }
 
+fn check_threading(toks: &[Token]) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for t in toks {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let primitive = matches!(
+            t.text.as_str(),
+            "thread" | "Mutex" | "RwLock" | "Condvar" | "mpsc" | "JoinHandle"
+        ) || t.text.starts_with("Atomic");
+        if primitive {
+            out.push(Candidate {
+                line: t.line,
+                message: format!(
+                    "threading primitive `{}` outside runtime/par.rs — deterministic \
+                     parallelism goes through WorkerPool so ordering stays pinned; \
+                     ad-hoc threads and shared-state locks are how replay breaks",
+                    t.text
+                ),
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,6 +418,25 @@ mod tests {
     }
 
     #[test]
+    fn threading_fires_on_primitives_not_handles() {
+        let src = "use std::thread;\nlet m = Mutex::new(0);\nstatic N: AtomicU64 = x;\n";
+        assert_eq!(run("no-threading-outside-par", src), vec![1, 2, 3]);
+        // `Arc` is a plain shared-ownership handle (no interior ordering),
+        // and ordinary idents like `threads` must not trip the matcher.
+        assert!(run(
+            "no-threading-outside-par",
+            "let threads = pool.threads();\nlet shared = Arc::new(cfg);"
+        )
+        .is_empty());
+        // Comments and strings are inert.
+        assert!(run(
+            "no-threading-outside-par",
+            "// thread::spawn is banned here\nlet s = \"Mutex\";"
+        )
+        .is_empty());
+    }
+
+    #[test]
     fn scopes_are_as_documented() {
         let by_name = |n: &str| registry().into_iter().find(|r| r.name == n).unwrap();
         assert!((by_name("no-wallclock-in-sim").applies)("sim/engine.rs"));
@@ -402,5 +453,9 @@ mod tests {
         assert!(!(by_name("no-println-in-lib").applies)("main.rs"));
         assert!(!(by_name("no-println-in-lib").applies)("experiments/figures.rs"));
         assert!((by_name("no-println-in-lib").applies)("net/mod.rs"));
+        assert!(!(by_name("no-threading-outside-par").applies)("runtime/par.rs"));
+        assert!(!(by_name("no-threading-outside-par").applies)("net/server.rs"));
+        assert!((by_name("no-threading-outside-par").applies)("runtime/engine.rs"));
+        assert!((by_name("no-threading-outside-par").applies)("sim/subsystem.rs"));
     }
 }

@@ -69,15 +69,36 @@ fn print_usage() {
 fn cmd_bench(argv: &[String]) -> Result<()> {
     let mut args = Args::new("mtpp bench", "performance harnesses (scale)");
     args.flag("out", "output JSON path", Some("BENCH_scale.json"))
+        .flag(
+            "devices",
+            "override the device-count grid, e.g. 1000,50000,100000",
+            None,
+        )
+        .flag(
+            "parallel",
+            "fan independent bench cells over N worker threads (0/1 = \
+             serial; per-cell numbers and the report are byte-identical)",
+            Some("0"),
+        )
         .switch("smoke", "reduced grid (small N) for CI")
         .allow_positional();
     let m = args.parse(argv)?;
     match m.positional.as_slice() {
         [id] if id.as_str() == "scale" => {
-            multitascpp::bench::scale::run_scale(m.get_bool("smoke"), Path::new(m.get_str("out")?))
-                .map(|_| ())
+            let opts = multitascpp::bench::scale::ScaleOptions {
+                smoke: m.get_bool("smoke"),
+                devices: match m.get("devices") {
+                    Some(_) => Some(m.get_list_usize("devices")?),
+                    None => None,
+                },
+                fanout: m.get_usize("parallel")?,
+            };
+            multitascpp::bench::scale::run_scale(&opts, Path::new(m.get_str("out")?)).map(|_| ())
         }
-        _ => bail!("usage: mtpp bench scale [--smoke] [--out BENCH_scale.json]"),
+        _ => bail!(
+            "usage: mtpp bench scale [--smoke] [--devices N,N,...] \
+             [--parallel T] [--out BENCH_scale.json]"
+        ),
     }
 }
 
@@ -318,6 +339,12 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
     artifacts_flag(&mut args);
     args.flag("results", "results output dir", Some("results"))
         .switch("quick", "reduced sweep (1 seed, coarse device grid)")
+        .flag(
+            "parallel",
+            "fan sweep cells over N worker threads (0/1 = serial; \
+             results and artifacts are byte-identical)",
+            Some("0"),
+        )
         .allow_positional();
     let m = args.parse(argv)?;
     let ids = if m.positional.is_empty() {
@@ -327,6 +354,7 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
     };
     let dir = resolve_artifacts(&m);
     let mut ctx = Ctx::load(&dir, &PathBuf::from(m.get_str("results")?), m.get_bool("quick"))?;
+    ctx.parallel = m.get_usize("parallel")?;
     let t0 = std::time::Instant::now();
     if ids.len() == 1 && ids[0] == "all" {
         for (id, _, driver) in experiments::registry() {
@@ -394,6 +422,7 @@ fn resolve_sim_spec(m: &Matches) -> Result<ScenarioSpec> {
         ("wfq-weights", "server.wfq_weights"),
         ("dispatch", "server.dispatch"),
         ("shards", "server.sharding"),
+        ("parallel", "server.parallel"),
     ] {
         if explicit(flag) {
             spec.set(path, m.get_str(flag)?)?;

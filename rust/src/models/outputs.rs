@@ -120,6 +120,7 @@ pub trait OutputProvider {
 /// live in a small Vec scanned linearly (<= 7 models; first-character
 /// discrimination makes this cheaper than a map walk) instead of a
 /// string-keyed BTreeMap.
+#[derive(Clone)]
 pub struct CachedOutputs {
     tables: Vec<(String, ModelOutputs)>,
 }
@@ -192,6 +193,26 @@ impl OutputProvider for CachedOutputs {
 
     fn server_outputs(&mut self, model: &str, samples: &[usize]) -> Vec<bool> {
         let t = self.must(model);
+        samples.iter().map(|&s| t.correct[s] != 0).collect()
+    }
+}
+
+/// Read-only view over a [`CachedOutputs`] shared across threads (the
+/// parallel run fan-out: every worker simulates against the same
+/// tables). `OutputProvider` takes `&mut self` because the real
+/// engine mutates execution state, but the cached provider never
+/// does — so a shared borrow is safe to wrap, and each worker holds
+/// its own zero-copy `SharedOutputs` over one `&CachedOutputs`.
+pub struct SharedOutputs<'a>(pub &'a CachedOutputs);
+
+impl OutputProvider for SharedOutputs<'_> {
+    fn device_output(&mut self, model: &str, sample: usize) -> (f32, bool) {
+        let t = self.0.must(model);
+        (t.bvsb[sample], t.correct[sample] != 0)
+    }
+
+    fn server_outputs(&mut self, model: &str, samples: &[usize]) -> Vec<bool> {
+        let t = self.0.must(model);
         samples.iter().map(|&s| t.correct[s] != 0).collect()
     }
 }

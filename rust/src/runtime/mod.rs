@@ -5,6 +5,8 @@
 
 pub mod engine;
 pub mod executor;
+pub mod par;
 
 pub use engine::Engine;
 pub use executor::{Executor, ModelOutput};
+pub use par::WorkerPool;

@@ -1,0 +1,178 @@
+//! Sanctioned deterministic worker pool — the ONLY module in the tree
+//! (outside `net/`) allowed to touch `std::thread` and channel/sync
+//! primitives; `mtpp lint` enforces the boundary via the
+//! `no-threading-outside-par` rule.
+//!
+//! Determinism contract:
+//!
+//! - **Fixed thread count.** `WorkerPool::new(n)` spawns exactly
+//!   `n.max(1)` workers; the pool never grows or shrinks.
+//! - **Index-ordered partitioning.** `map` assigns item `i` to worker
+//!   `i % threads` — a pure function of the index, independent of
+//!   worker timing, so the same input always lands on the same worker.
+//! - **Ordered merge.** Results are collected into index-order slots
+//!   and returned as `Vec<T>` in the original item order, regardless
+//!   of completion order.
+//! - **Panic propagation.** A panicking closure does not take down a
+//!   worker; the payload is carried back and re-raised on the calling
+//!   thread (lowest item index wins when several panic), and the pool
+//!   remains usable afterwards.
+//!
+//! Callers therefore get parallel execution with the observable
+//! behaviour of a serial `items.into_iter().enumerate().map(f)` — the
+//! property the parallel shard planner and run fan-out rely on.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size pool of named worker threads fed over per-worker
+/// channels. Dropping the pool joins every worker.
+pub struct WorkerPool {
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads.max(1)` workers named `mtpp-par-<i>`.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (tx, rx) = channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("mtpp-par-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn mtpp-par worker thread");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Self { senders, handles }
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn threads(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Apply `f(index, item)` to every item and return the results in
+    /// item order. Item `i` runs on worker `i % threads()`; single
+    /// items (or a single-thread pool) run inline on the caller.
+    pub fn map<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send + 'static,
+        T: Send + 'static,
+        F: Fn(usize, I) -> T + Clone + Send + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 || self.threads() == 1 {
+            return items.into_iter().enumerate().map(|(i, it)| f(i, it)).collect();
+        }
+
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = f.clone();
+            let tx = tx.clone();
+            let job: Job = Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(i, item)));
+                // The receiver only disappears if the caller is already
+                // unwinding; nothing to report to in that case.
+                let _ = tx.send((i, out));
+            });
+            self.senders[i % self.threads()]
+                .send(job)
+                .expect("mtpp-par worker thread exited");
+        }
+        drop(tx);
+
+        let mut slots: Vec<Option<std::thread::Result<T>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, out) = rx.recv().expect("mtpp-par worker dropped a result");
+            slots[i] = Some(out);
+        }
+
+        let mut merged = Vec::with_capacity(n);
+        let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for slot in slots {
+            match slot.expect("every item index reports exactly once") {
+                Ok(value) => merged.push(value),
+                Err(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+            }
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+        merged
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channels ends each worker's recv loop; then join.
+        self.senders.clear();
+        for handle in self.handles.drain(..) {
+            if let Err(payload) = handle.join() {
+                resume_unwind(payload);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_index_order_across_pool_sizes() {
+        let items: Vec<usize> = (0..37).collect();
+        let expect: Vec<usize> = items.iter().map(|&x| x * 3 + 1).collect();
+        for threads in [1, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(pool.threads(), threads, "pool size {threads}");
+            let got = pool.map(items.clone(), |_, x| x * 3 + 1);
+            assert_eq!(got, expect, "merge order at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn map_passes_the_item_index() {
+        let pool = WorkerPool::new(4);
+        let got = pool.map(vec!["a", "b", "c", "d", "e"], |i, s| format!("{i}:{s}"));
+        assert_eq!(got, vec!["0:a", "1:b", "2:c", "3:d", "4:e"]);
+    }
+
+    #[test]
+    fn panics_propagate_to_the_caller_and_the_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![0_usize, 1, 2, 3], |_, x| {
+                assert!(x != 2, "boom at {x}");
+                x
+            })
+        }));
+        assert!(result.is_err(), "panic must reach the caller");
+        let got = pool.map(vec![10_usize, 11], |_, x| x + 1);
+        assert_eq!(got, vec![11, 12], "pool stays usable after a panic");
+    }
+
+    #[test]
+    fn zero_requested_threads_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.map(vec![5_usize, 6], |i, x| x + i), vec![5, 7]);
+    }
+}

@@ -316,13 +316,16 @@ impl QueueDiscipline for TierWfq {
 
 /// Build a discipline from the scenario's server policy (queue kind
 /// plus, for tier-WFQ, the configured per-tier weights).
-pub fn build_discipline(policy: &ServerPolicy) -> Box<dyn QueueDiscipline> {
+pub fn build_discipline(policy: &ServerPolicy) -> Box<dyn QueueDiscipline + Send> {
     build_discipline_parts(policy.queue, policy.wfq_weights)
 }
 
 /// Discipline construction from its parts — shards created lazily on a
 /// model switch need a fresh queue without the full policy in hand.
-pub fn build_discipline_parts(queue: QueueKind, wfq_weights: [f64; 4]) -> Box<dyn QueueDiscipline> {
+pub fn build_discipline_parts(
+    queue: QueueKind,
+    wfq_weights: [f64; 4],
+) -> Box<dyn QueueDiscipline + Send> {
     match queue {
         QueueKind::Fifo => Box::new(Fifo::new()),
         QueueKind::Edf => Box::new(Edf::new()),
@@ -374,7 +377,7 @@ struct Shard {
     /// Placed model this shard's queue feeds; `None` for the shared
     /// shard of an unsharded pool.
     model: Option<ModelId>,
-    queue: Box<dyn QueueDiscipline>,
+    queue: Box<dyn QueueDiscipline + Send>,
 }
 
 /// N replica servers behind per-model-sharded [`QueueDiscipline`]s.
@@ -898,6 +901,48 @@ impl ServerPool {
         assert!(r.busy, "finish_batch on idle replica {server}");
         r.busy = false;
         std::mem::take(&mut r.in_flight)
+    }
+
+    // ----- parallel shard stepping hooks (sim/subsystem.rs) ---------
+
+    /// Detach `shard`'s queue so a worker thread can pop from it during
+    /// parallel shard planning. The shard is left with an empty FIFO
+    /// placeholder; [`ServerPool::put_queue`] must restore the real
+    /// queue before any other pool access touches the shard.
+    pub fn take_queue(&mut self, shard: usize) -> Box<dyn QueueDiscipline + Send> {
+        std::mem::replace(&mut self.shards[shard].queue, Box::new(Fifo::new()))
+    }
+
+    /// Restore a queue detached by [`ServerPool::take_queue`].
+    pub fn put_queue(&mut self, shard: usize, queue: Box<dyn QueueDiscipline + Send>) {
+        self.shards[shard].queue = queue;
+    }
+
+    /// Install a batch planned off-thread onto `server` (the parallel
+    /// dispatch merge). Mirrors the tail of `form_batch` for a
+    /// non-empty batch — the queue pops already happened on the worker.
+    pub fn install_batch(&mut self, server: usize, formed: Vec<PendingRequest>) {
+        assert!(
+            !formed.is_empty(),
+            "install_batch with an empty batch on replica {server}"
+        );
+        let r = &mut self.replicas[server];
+        assert!(!r.busy, "install_batch on busy replica {server}");
+        assert!(!r.parked, "install_batch on parked replica {server}");
+        assert!(
+            !r.warming,
+            "install_batch on warming replica {server}: a resumed replica \
+             must not serve before its ReplicaWarm event"
+        );
+        r.in_flight = formed;
+        r.busy = true;
+        r.batches_served += 1;
+    }
+
+    /// Record `n` requests culled during off-thread batch formation —
+    /// the parallel-path counterpart of `form_batch`'s shed counting.
+    pub fn note_shed(&mut self, n: usize) {
+        self.shed_count += n;
     }
 }
 

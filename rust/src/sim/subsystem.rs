@@ -20,16 +20,20 @@
 //! that change what the pool can serve.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::config::latency::ServerLatencyModel;
 use crate::config::scenario::{AutoscaleMode, DispatchKind, ServerPolicy};
 use crate::config::SystemConfig;
 use crate::metrics::RunMetrics;
 use crate::models::{ModelId, ModelTable, Tier};
+use crate::runtime::par::WorkerPool;
 use crate::scheduler::{DeviceId, SwitchController};
 use crate::sim::event::{Event, EventQueue};
 use crate::sim::headroom::HeadroomTracker;
-use crate::sim::server::{Admission, PendingRequest, PoolScaler, ScaleAction, ServerPool};
+use crate::sim::server::{
+    Admission, PendingRequest, PoolScaler, QueueDiscipline, ScaleAction, ServerPool,
+};
 
 /// Latency model resolver so the subsystem can follow model switches.
 pub type LatencyFn<'a> = &'a dyn Fn(&str) -> ServerLatencyModel;
@@ -121,6 +125,15 @@ pub struct ServerSubsystem<'a> {
     batch_counts: Vec<usize>,
     batch_grid: &'a [usize],
     comm_s: f64,
+    /// Worker threads for parallel shard stepping
+    /// (`ServerPolicy::effective_parallel`); 0/1 keep the serial path.
+    par_threads: usize,
+    /// Lazily-spawned worker pool — only the parallel path pays for
+    /// thread creation, and only on its first multi-shard round.
+    par: Option<WorkerPool>,
+    /// Cached planner snapshot handed to workers; invalidated together
+    /// with the latency cache (same triggers: placement/state change).
+    par_snapshot: Option<Arc<ParSnapshot>>,
 }
 
 impl<'a> ServerSubsystem<'a> {
@@ -158,11 +171,15 @@ impl<'a> ServerSubsystem<'a> {
             batch_counts,
             batch_grid: &cfg.batch_grid,
             comm_s: cfg.comm_ms / 1000.0,
+            par_threads: policy.effective_parallel(),
+            par: None,
+            par_snapshot: None,
         }
     }
 
     fn rebuild_cache(&mut self) {
         self.cache = LatencyCache::build(&self.pool, &self.models, self.latency_of);
+        self.par_snapshot = None;
     }
 
     // ----- arrival: routing + shard-local admission -------------------
@@ -402,13 +419,22 @@ impl<'a> ServerSubsystem<'a> {
         metrics: &mut RunMetrics,
     ) -> Vec<usize> {
         let mut observed = Vec::new();
-        // Phase 1: own-shard service.
-        for shard in 0..self.pool.num_shards() {
-            while self.pool.shard_queue_len(shard) > 0 {
-                let Some(server) = self.pick_replica_for(shard) else {
-                    break;
-                };
-                self.start_batch(t, server, shard, false, events, metrics, &mut observed);
+        // Phase 1: own-shard service. Shards only interact through the
+        // global load signal here (a batch pops from its own shard
+        // alone), so the parallel path can plan every shard on a
+        // worker and merge in shard-index order — bit-identical by
+        // construction (docs/architecture.md, "Deterministic
+        // parallelism"). Steals stay serial in phase 2 either way.
+        if self.par_threads >= 2 && self.pool.num_shards() > 1 {
+            self.dispatch_shards_parallel(t, events, metrics, &mut observed);
+        } else {
+            for shard in 0..self.pool.num_shards() {
+                while self.pool.shard_queue_len(shard) > 0 {
+                    let Some(server) = self.pick_replica_for(shard) else {
+                        break;
+                    };
+                    self.start_batch(t, server, shard, false, events, metrics, &mut observed);
+                }
             }
         }
         // Phase 2: stealing (sharded pools only; each round pops at
@@ -482,6 +508,135 @@ impl<'a> ServerSubsystem<'a> {
         observed.push(load_signal.max(fb.formed));
         let dur_s = self.cache.replica[server].batch_ms(fb.formed) / 1000.0;
         events.push(t + dur_s, Event::ServerBatchDone { server });
+    }
+
+    /// The immutable planner inputs for worker threads, cached until
+    /// the next placement/state change (same invalidation as the
+    /// latency cache).
+    fn par_snapshot(&mut self) -> Arc<ParSnapshot> {
+        let Self {
+            par_snapshot,
+            cache,
+            batch_grid,
+            comm_s,
+            dispatch_kind,
+            slack_batch,
+            pool,
+            ..
+        } = self;
+        Arc::clone(par_snapshot.get_or_insert_with(|| {
+            Arc::new(ParSnapshot {
+                replica: cache.replica.clone(),
+                batch_grid: batch_grid.to_vec(),
+                comm_s: *comm_s,
+                dispatch_kind: *dispatch_kind,
+                slack_batch: *slack_batch,
+                shed: pool.shedding(),
+            })
+        }))
+    }
+
+    /// Phase 1 on worker threads: detach each backlogged shard's queue
+    /// plus its idle-replica list, plan every shard's dispatch round
+    /// independently via [`plan_shard`], and merge the plans in
+    /// shard-index order. The merge replays exactly what the serial
+    /// loop would have done — same event push order, same load
+    /// signals (reconstructed from per-shard before/after queue
+    /// lengths), same pool mutations — so the result is bit-identical.
+    fn dispatch_shards_parallel(
+        &mut self,
+        t: f64,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+        observed: &mut Vec<usize>,
+    ) {
+        let num_shards = self.pool.num_shards();
+        let initial: Vec<usize> = (0..num_shards)
+            .map(|s| self.pool.shard_queue_len(s))
+            .collect();
+        let mut tasks = Vec::new();
+        for shard in 0..num_shards {
+            if initial[shard] == 0 {
+                continue;
+            }
+            let idle: Vec<usize> = (0..self.pool.num_replicas())
+                .filter(|&r| self.pool.shard_of(r) == shard && self.pool.is_idle(r))
+                .collect();
+            if idle.is_empty() {
+                continue;
+            }
+            tasks.push(ShardTask {
+                shard,
+                queue: self.pool.take_queue(shard),
+                idle,
+            });
+        }
+        if tasks.is_empty() {
+            return;
+        }
+        let snap = self.par_snapshot();
+        let planned: Vec<PlannedShard> = if tasks.len() == 1 {
+            // One busy shard: planning it inline skips the cross-thread
+            // round trip (common at low load).
+            tasks
+                .into_iter()
+                .map(|mut task| {
+                    let plan = plan_shard(&snap, &mut task, t);
+                    (task.shard, task.queue, plan)
+                })
+                .collect()
+        } else {
+            let threads = self.par_threads;
+            self.par
+                .get_or_insert_with(|| WorkerPool::new(threads))
+                .map(tasks, move |_, mut task| {
+                    let plan = plan_shard(&snap, &mut task, t);
+                    (task.shard, task.queue, plan)
+                })
+        };
+        // Merge, shards ascending (tasks were built in shard order and
+        // the pool map preserves item order). The serial loop's global
+        // load signal at each batch start is: shards before the active
+        // one fully drained (final length), the active shard at its
+        // pre-batch length, shards after still untouched (initial
+        // length). Untouched shards (no task) have final == initial.
+        let mut prefix_final = 0usize;
+        let mut suffix_initial: usize = initial.iter().sum();
+        let mut next_shard = 0usize;
+        for (shard, queue, plan) in planned {
+            while next_shard < shard {
+                prefix_final += initial[next_shard];
+                suffix_initial -= initial[next_shard];
+                next_shard += 1;
+            }
+            suffix_initial -= initial[shard];
+            for pb in plan.batches {
+                let load_signal = prefix_final + pb.qlen_before + suffix_initial;
+                for p in &pb.shed {
+                    events.push(
+                        t + self.comm_s,
+                        Event::RequestShed {
+                            device: p.device,
+                            request: p.id,
+                        },
+                    );
+                }
+                self.pool.note_shed(pb.shed.len());
+                if pb.formed.is_empty() {
+                    continue;
+                }
+                let formed = pb.formed.len();
+                metrics.batch_sizes.push(formed as f64);
+                self.batch_counts[self.pool.model(pb.server).index()] += 1;
+                observed.push(load_signal.max(formed));
+                let dur_s = self.cache.replica[pb.server].batch_ms(formed) / 1000.0;
+                events.push(t + dur_s, Event::ServerBatchDone { server: pb.server });
+                self.pool.install_batch(pb.server, pb.formed);
+            }
+            self.pool.put_queue(shard, queue);
+            prefix_final += plan.final_len;
+            next_shard = shard + 1;
+        }
     }
 
     /// Complete the batch on `server`: returns its requests and the
@@ -711,5 +866,179 @@ impl<'a> ServerSubsystem<'a> {
             })
             .max()
             .unwrap_or(0)
+    }
+}
+
+// ----- parallel shard planning (worker-thread side) -------------------
+//
+// Everything below runs off-thread via `runtime::par::WorkerPool`, so
+// it must be a pure function of (snapshot, shard task, now): no access
+// to the subsystem, the pool, or anything else a sibling worker could
+// also touch. The functions mirror `pick_replica_for`,
+// `base_batch_size`, `pick_batch_size`, and `form_batch` decision for
+// decision — any drift here breaks the serial/parallel bit-parity the
+// `par_exec` suite pins.
+
+/// Immutable planner inputs shared by all workers of one dispatch
+/// round (and cached across rounds until a placement/state change).
+struct ParSnapshot {
+    /// Per-replica latency model, indexed like `LatencyCache::replica`.
+    replica: Vec<ServerLatencyModel>,
+    batch_grid: Vec<usize>,
+    comm_s: f64,
+    dispatch_kind: DispatchKind,
+    slack_batch: bool,
+    shed: bool,
+}
+
+/// One shard's detached planning state: its queue (owned for the
+/// duration of the round) plus its idle assigned replicas, ascending.
+struct ShardTask {
+    shard: usize,
+    queue: Box<dyn QueueDiscipline + Send>,
+    idle: Vec<usize>,
+}
+
+/// One batch the planner formed: the chosen replica, the shard queue
+/// length just before formation (for the load-signal reconstruction),
+/// and the popped requests split into served and culled.
+struct PlannedBatch {
+    server: usize,
+    qlen_before: usize,
+    formed: Vec<PendingRequest>,
+    shed: Vec<PendingRequest>,
+}
+
+/// A shard's full phase-1 round: its batches in formation order plus
+/// the queue length left behind.
+struct ShardPlan {
+    batches: Vec<PlannedBatch>,
+    final_len: usize,
+}
+
+/// What one worker returns: the shard index, its queue handed back,
+/// and the plan to merge.
+type PlannedShard = (usize, Box<dyn QueueDiscipline + Send>, ShardPlan);
+
+/// `base_batch_size` against the snapshot: largest grid batch the
+/// queue can fill, capped by the replica model's max useful batch.
+fn par_base_batch(snap: &ParSnapshot, server: usize, qlen: usize) -> usize {
+    let model = &snap.replica[server];
+    snap.batch_grid
+        .iter()
+        .filter(|&&b| b <= qlen && b <= model.max_batch)
+        .copied()
+        .max()
+        .unwrap_or(1)
+        .min(qlen.max(1))
+}
+
+/// `pick_batch_size` against the snapshot: the slack-aware cap on top
+/// of [`par_base_batch`], read from the detached queue.
+fn par_batch_size(
+    snap: &ParSnapshot,
+    server: usize,
+    queue: &dyn QueueDiscipline,
+    qlen: usize,
+    now: f64,
+) -> usize {
+    let base = par_base_batch(snap, server, qlen);
+    if !snap.slack_batch {
+        return base;
+    }
+    let model = &snap.replica[server];
+    let floor_s = now + model.batch_ms(1) / 1000.0 + snap.comm_s;
+    let Some(deadline_s) = queue.min_deadline_at_least(floor_s) else {
+        return base;
+    };
+    let slack_ms = (deadline_s - now - snap.comm_s) * 1000.0;
+    snap.batch_grid
+        .iter()
+        .filter(|&&b| b <= qlen && b <= model.max_batch && model.batch_ms(b) <= slack_ms)
+        .copied()
+        .max()
+        .unwrap_or(1)
+        .min(qlen.max(1))
+}
+
+/// `pick_replica_for` against the snapshot, returning a *position*
+/// into the task's ascending idle list. Lowest-index is position 0;
+/// model-aware scans ascending with strict `<`, reproducing the
+/// serial tie-break exactly.
+fn par_pick_replica(snap: &ParSnapshot, idle: &[usize], qlen: usize) -> Option<usize> {
+    match snap.dispatch_kind {
+        DispatchKind::LowestIndex => {
+            if idle.is_empty() {
+                None
+            } else {
+                Some(0)
+            }
+        }
+        DispatchKind::ModelAware => {
+            let mut best: Option<(usize, f64)> = None;
+            for (pos, &server) in idle.iter().enumerate() {
+                let b = par_base_batch(snap, server, qlen);
+                let cost = snap.replica[server].batch_ms(b);
+                if best.map_or(true, |(_, c)| cost < c) {
+                    best = Some((pos, cost));
+                }
+            }
+            best.map(|(pos, _)| pos)
+        }
+    }
+}
+
+/// Plan one shard's phase-1 dispatch round off-thread: the serial
+/// `while qlen > 0 { pick replica; form batch }` loop, with queue pops
+/// (including admission culls) applied to the detached queue and pool
+/// mutations deferred to the merge. Terminates because every
+/// iteration pops at least one request.
+fn plan_shard(snap: &ParSnapshot, task: &mut ShardTask, now: f64) -> ShardPlan {
+    let mut batches = Vec::new();
+    loop {
+        let qlen = task.queue.len();
+        if qlen == 0 {
+            break;
+        }
+        let Some(pos) = par_pick_replica(snap, &task.idle, qlen) else {
+            break;
+        };
+        let server = task.idle[pos];
+        let b = par_batch_size(snap, server, task.queue.as_ref(), qlen, now);
+        let min_service_s = if snap.shed {
+            snap.replica[server].batch_ms(b) / 1000.0 + snap.comm_s
+        } else {
+            0.0
+        };
+        let mut formed = Vec::new();
+        let mut shed = Vec::new();
+        while formed.len() < b {
+            match task.queue.pop(now) {
+                Some(req) => {
+                    if snap.shed && now + min_service_s > req.deadline_s {
+                        shed.push(req);
+                    } else {
+                        formed.push(req);
+                    }
+                }
+                None => break,
+            }
+        }
+        if !formed.is_empty() {
+            // The replica is busy for the rest of the round, exactly
+            // like `form_batch` marking it busy; an all-shed batch
+            // leaves it idle and eligible again, like the serial loop.
+            task.idle.remove(pos);
+        }
+        batches.push(PlannedBatch {
+            server,
+            qlen_before: qlen,
+            formed,
+            shed,
+        });
+    }
+    ShardPlan {
+        final_len: task.queue.len(),
+        batches,
     }
 }

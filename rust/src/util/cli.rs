@@ -241,6 +241,13 @@ pub fn server_flags(args: &mut Args) -> &mut Args {
              registry warmup; 'none' restores registry values)",
             None,
         )
+        .flag(
+            "parallel",
+            "worker threads for deterministic parallel shard stepping \
+             (0 defers to MTPP_PARALLEL, 1 pins serial; bit-identical \
+             results either way)",
+            Some("0"),
+        )
 }
 
 impl Matches {
@@ -375,6 +382,9 @@ mod tests {
         assert!(!m.get_bool("shed"));
         assert!(!m.get_bool("slack-batch"));
         assert!(!m.get_bool("autoscale"));
+        // parallel=0 defers to MTPP_PARALLEL (spec field semantics) —
+        // the flag default must never force a mode by itself.
+        assert_eq!(m.get_usize("parallel").unwrap(), 0);
         // The mode/warm-up flags have NO default: absent unless typed,
         // so they can never auto-enable the autoscale section.
         assert_eq!(m.get("autoscale-mode"), None);

@@ -1,0 +1,9 @@
+//! Mirrors rust/src/runtime/par.rs: the one library module allowed to
+//! own threads, channels, and join handles (lint carve-out by path).
+use std::sync::mpsc::Sender;
+use std::thread::JoinHandle;
+
+pub struct Pool {
+    pub senders: Vec<Sender<u64>>,
+    pub handles: Vec<JoinHandle<()>>,
+}

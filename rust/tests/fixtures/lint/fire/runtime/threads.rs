@@ -1,0 +1,7 @@
+use std::thread;
+// Ad-hoc threading primitives outside the sanctioned pool module.
+use std::sync::Mutex;
+use std::sync::RwLock;
+use std::sync::atomic::AtomicUsize;
+use std::sync::mpsc;
+use std::sync::Condvar;

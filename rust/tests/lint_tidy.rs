@@ -44,6 +44,12 @@ fn fire_fixtures_fire_exactly_where_expected() {
         .collect();
     let expected: Vec<(&str, u32, &str)> = vec![
         ("config/float.rs", 3, "checked-float-ordering"),
+        ("runtime/threads.rs", 1, "no-threading-outside-par"),
+        ("runtime/threads.rs", 3, "no-threading-outside-par"),
+        ("runtime/threads.rs", 4, "no-threading-outside-par"),
+        ("runtime/threads.rs", 5, "no-threading-outside-par"),
+        ("runtime/threads.rs", 6, "no-threading-outside-par"),
+        ("runtime/threads.rs", 7, "no-threading-outside-par"),
         ("scheduler/heap.rs", 1, "binaryheap-boundary"),
         ("scheduler/heap.rs", 3, "binaryheap-boundary"),
         ("scheduler/heap.rs", 4, "binaryheap-boundary"),
@@ -80,7 +86,7 @@ fn clean_fixtures_stay_clean() {
         "clean fixture tree must not fire:\n{}",
         report.render_text()
     );
-    assert_eq!(report.files_scanned, 4);
+    assert_eq!(report.files_scanned, 6);
 }
 
 #[test]

@@ -1,0 +1,165 @@
+//! Serial/parallel parity suite for the deterministic parallelism
+//! layer (`runtime::par::WorkerPool` + `server.parallel`).
+//!
+//! The contract under test is absolute: `server.parallel` is an
+//! execution knob, not a behavior knob. For every scenario — every
+//! shipped preset, randomized sharded configurations, and whole
+//! `SpecGrid` sweeps — the end-of-run metrics snapshot (every counter
+//! plus the telemetry-trace hash) and the raw trace CSV must be
+//! byte-identical between the pinned-serial run (`server.parallel=1`)
+//! and parallel runs at 2, 4, and 8 worker threads. A failure here is
+//! a scheduling divergence in the parallel shard planner, never
+//! "noise": the golden-trace harness pins the serial side, this suite
+//! pins parallel-equals-serial.
+
+use multitascpp::config::spec::{preset_names, ScenarioSpec};
+use multitascpp::experiments::common::{metrics_snapshot, trace_csv};
+use multitascpp::experiments::{Ctx, SpecGrid};
+use multitascpp::util::prng::Rng;
+
+/// Same clip as the golden harness: long enough that queueing,
+/// shedding, stealing, and autoscaling all fire, short enough for CI.
+const SAMPLES: usize = 120;
+
+/// Thread counts exercised against every serial baseline.
+const THREAD_COUNTS: [usize; 3] = [2, 4, 8];
+
+fn ctx() -> Ctx {
+    Ctx::synthetic(&std::env::temp_dir().join("mtpp_par_exec_results"), true).unwrap()
+}
+
+/// Run `spec` with `server.parallel` pinned to `parallel` and return
+/// the full observable fingerprint: the metrics snapshot (every
+/// deterministic counter plus the trace hash) and the raw trace CSV,
+/// so a parity failure diffs at the first diverging field or trace
+/// row instead of as an opaque hash mismatch.
+fn fingerprint(ctx: &mut Ctx, spec: &ScenarioSpec, parallel: usize) -> (String, String) {
+    let mut spec = spec.clone();
+    spec.set("server.parallel", &parallel.to_string()).unwrap();
+    let m = ctx.run_spec(&spec).unwrap();
+    (metrics_snapshot(&m).pretty(2), trace_csv(&m))
+}
+
+/// Every shipped preset (including the trace-replay presets) at the
+/// golden sample clip: serial vs 2/4/8 worker threads.
+#[test]
+fn every_preset_is_bit_identical_across_thread_counts() {
+    let mut ctx = ctx();
+    for name in preset_names() {
+        let mut spec = ScenarioSpec::preset(name).expect(name);
+        spec.set("samples", &SAMPLES.to_string()).unwrap();
+        let (serial_snap, serial_trace) = fingerprint(&mut ctx, &spec, 1);
+        for threads in THREAD_COUNTS {
+            let (snap, trace) = fingerprint(&mut ctx, &spec, threads);
+            assert_eq!(
+                serial_snap, snap,
+                "{name}: metrics snapshot diverged at {threads} threads"
+            );
+            assert_eq!(
+                serial_trace, trace,
+                "{name}: trace CSV diverged at {threads} threads"
+            );
+        }
+    }
+}
+
+/// Property-style sweep: seeded random sharded configurations (mixed
+/// replica models, random queue discipline / dispatch / shed /
+/// slack-batch, random fleet size) must hold the same parity. The
+/// cases are fully determined by their stream index, so any failure
+/// reproduces from the printed case number alone.
+#[test]
+fn randomized_sharded_scenarios_hold_parity() {
+    const MODELS: [&str; 3] = ["srv_inception", "srv_effnetb3", "srv_deit"];
+    const QUEUES: [&str; 3] = ["fifo", "edf", "tier-wfq"];
+    const DISPATCH: [&str; 2] = ["lowest", "model-aware"];
+    let mut ctx = ctx();
+    for case in 0..6u64 {
+        let mut rng = Rng::stream(0x9A11_E7, case);
+        let mut spec = ScenarioSpec::preset("sharded-pool").unwrap();
+        let devices = 24 + rng.next_below(40) as usize;
+        spec.set("devices", &format!("hetero:{devices}")).unwrap();
+        spec.set("samples", "60").unwrap();
+        spec.set("seed", &case.to_string()).unwrap();
+        spec.set("server.replicas", "3").unwrap();
+        let models: Vec<&str> = (0..3)
+            .map(|_| MODELS[rng.next_below(MODELS.len() as u64) as usize])
+            .collect();
+        spec.set("server.models", &models.join(",")).unwrap();
+        spec.set("server.sharding", "per-model").unwrap();
+        spec.set("server.queue", QUEUES[rng.next_below(QUEUES.len() as u64) as usize])
+            .unwrap();
+        spec.set(
+            "server.dispatch",
+            DISPATCH[rng.next_below(DISPATCH.len() as u64) as usize],
+        )
+        .unwrap();
+        spec.set("server.shed", if rng.next_bool(0.5) { "true" } else { "false" })
+            .unwrap();
+        spec.set(
+            "server.slack_batch",
+            if rng.next_bool(0.5) { "true" } else { "false" },
+        )
+        .unwrap();
+        let (serial_snap, serial_trace) = fingerprint(&mut ctx, &spec, 1);
+        for threads in THREAD_COUNTS {
+            let (snap, trace) = fingerprint(&mut ctx, &spec, threads);
+            assert_eq!(
+                serial_snap, snap,
+                "case {case} ({devices} devices, models {models:?}): \
+                 snapshot diverged at {threads} threads"
+            );
+            assert_eq!(
+                serial_trace, trace,
+                "case {case} ({devices} devices, models {models:?}): \
+                 trace diverged at {threads} threads"
+            );
+        }
+    }
+}
+
+/// Whole-sweep parity for the run-level fan-out: a `SpecGrid` executed
+/// with `ctx.parallel` workers must deliver `row` callbacks in grid
+/// order with metrics identical to the serial sweep — the property
+/// that makes every downstream artifact (CSV, JSON, stdout tables)
+/// byte-identical regardless of fan-out.
+#[test]
+fn spec_grid_fanout_matches_serial_sweep() {
+    let mut base = ScenarioSpec::preset("sharded-pool").unwrap();
+    base.set("samples", "40").unwrap();
+    let variant = |queue: &str| {
+        let mut s = base.clone();
+        s.set("server.queue", queue).unwrap();
+        s
+    };
+    let grid = SpecGrid {
+        variants: vec![
+            ("edf".to_string(), variant("edf")),
+            ("fifo".to_string(), variant("fifo")),
+        ],
+        devices: vec![12, 30],
+        seeds: vec![0, 7],
+    };
+    let collect = |parallel: usize| -> Vec<String> {
+        let mut ctx = ctx();
+        ctx.parallel = parallel;
+        let mut rows = Vec::new();
+        grid.run(&mut ctx, |label, n, runs| {
+            for m in runs {
+                rows.push(format!("{label}/{n}\n{}", metrics_snapshot(m).pretty(2)));
+            }
+            Ok(())
+        })
+        .unwrap();
+        rows
+    };
+    let serial = collect(0);
+    assert_eq!(serial.len(), grid.runs(), "one row entry per grid cell");
+    for workers in [2, 3] {
+        assert_eq!(
+            serial,
+            collect(workers),
+            "grid fan-out diverged at {workers} workers"
+        );
+    }
+}

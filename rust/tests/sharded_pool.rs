@@ -412,9 +412,14 @@ fn sharded_pool_preset_runs_end_to_end() {
 fn bench_scale_smoke_emits_report() {
     let out = std::env::temp_dir().join("mtpp_test_bench_scale.json");
     let _ = std::fs::remove_file(&out);
-    let points = multitascpp::bench::scale::run_scale(true, &out).unwrap();
-    // 2 device counts x {single, sharded, trace}.
-    assert_eq!(points.len(), 6);
+    let smoke = multitascpp::bench::scale::ScaleOptions {
+        smoke: true,
+        devices: None,
+        fanout: 0,
+    };
+    let points = multitascpp::bench::scale::run_scale(&smoke, &out).unwrap();
+    // 2 device counts x {single, sharded, sharded-par, trace}.
+    assert_eq!(points.len(), 8);
     assert!(points.iter().all(|p| p.events > 0 && p.wall_s > 0.0));
     assert!(
         points
@@ -423,6 +428,26 @@ fn bench_scale_smoke_emits_report() {
             .all(|p| p.steals == 0),
         "single-queue cells cannot steal"
     );
+    // The parallel cells step the SAME workload (digest matches the
+    // serial sharded cell — server.parallel is zeroed before hashing)
+    // and produce the same deterministic counters.
+    let par_cells: Vec<_> = points.iter().filter(|p| p.label == "sharded-par").collect();
+    assert_eq!(par_cells.len(), 2);
+    for t in &par_cells {
+        assert_eq!((t.exec, t.threads), ("parallel", 2));
+        let serial = points
+            .iter()
+            .find(|p| p.label == "sharded" && p.devices == t.devices)
+            .expect("matching serial cell");
+        assert_eq!((serial.exec, serial.threads), ("serial", 0));
+        assert_eq!(serial.scenario_digest, t.scenario_digest);
+        assert_eq!(
+            (serial.events, serial.shed, serial.steals),
+            (t.events, t.shed, t.steals),
+            "parallel stepping must be bit-identical at n={}",
+            t.devices
+        );
+    }
     // The replay cells actually replayed: one per device count, and the
     // workload-identity digest differs from the synthetic cells'.
     let trace_cells: Vec<_> = points.iter().filter(|p| p.label == "trace").collect();
@@ -437,7 +462,7 @@ fn bench_scale_smoke_emits_report() {
     assert_eq!(json.get("bench").and_then(|j| j.as_str()), Some("scale"));
     assert_eq!(
         json.get("points").and_then(|j| j.as_arr()).map(|a| a.len()),
-        Some(6)
+        Some(8)
     );
     assert_eq!(
         json.get("runs").and_then(|j| j.as_arr()).map(|a| a.len()),
@@ -445,7 +470,22 @@ fn bench_scale_smoke_emits_report() {
     );
     // Append semantics: a second run extends the history instead of
     // overwriting the report; the top level mirrors the latest run.
-    multitascpp::bench::scale::run_scale(true, &out).unwrap();
+    // This run fans the cells over 2 workers — the deterministic
+    // counters and report shape must not notice.
+    let fanned = multitascpp::bench::scale::ScaleOptions {
+        smoke: true,
+        devices: None,
+        fanout: 2,
+    };
+    let points2 = multitascpp::bench::scale::run_scale(&fanned, &out).unwrap();
+    assert_eq!(points2.len(), 8);
+    for (a, b) in points.iter().zip(&points2) {
+        assert_eq!(
+            (a.label, a.devices, &a.scenario_digest, a.events, a.shed),
+            (b.label, b.devices, &b.scenario_digest, b.events, b.shed),
+            "fanned-out run must merge in grid order with identical cells"
+        );
+    }
     let text = std::fs::read_to_string(&out).unwrap();
     let json = multitascpp::util::json::Json::parse(&text).unwrap();
     assert_eq!(
@@ -454,6 +494,6 @@ fn bench_scale_smoke_emits_report() {
     );
     assert_eq!(
         json.get("points").and_then(|j| j.as_arr()).map(|a| a.len()),
-        Some(6)
+        Some(8)
     );
 }
