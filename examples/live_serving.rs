@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
                 server_model: "srv_inception".into(),
                 answer_limit: 0,
                 idle_timeout: Duration::from_secs(3),
+                ..ServeOptions::default()
             },
         )
     });

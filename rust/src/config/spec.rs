@@ -106,6 +106,8 @@ pub struct ScenarioSpec {
     /// Workload source: synthetic per-device streams (the default) or
     /// a recorded `.events` trace replayed deterministically.
     pub workload: WorkloadSpec,
+    /// Live-serving transport knobs (`mtpp serve` / `mtpp loadgen`).
+    pub serve: ServeSpec,
 }
 
 /// Where arrivals come from. The default (`trace: None`) is the
@@ -118,6 +120,46 @@ pub struct WorkloadSpec {
     /// `None` for synthetic streams. Resolved relative to the working
     /// directory at `validate()` time.
     pub trace: Option<String>,
+}
+
+/// Transport configuration for the live path (docs/serving.md). Pure
+/// plumbing: nothing here influences a scheduling decision, so sim
+/// runs ignore the section entirely and the loadgen parity digest
+/// (which hashes the whole spec) treats it like any other field —
+/// both sides must agree on it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSpec {
+    /// Leader listen address (`host:port`; port 0 = ephemeral).
+    pub listen_addr: String,
+    /// Per-connection socket read timeout in ms. A blocked read wakes
+    /// this often to check for shutdown; a connection mid-frame for
+    /// longer than this is dropped with a contextful error.
+    pub read_timeout_ms: f64,
+    /// Per-connection socket write timeout in ms.
+    pub write_timeout_ms: f64,
+    /// Per-connection cap on unanswered forwards; excess requests are
+    /// shed at the transport (never offered to the scheduling core).
+    /// 0 = unbounded.
+    pub max_in_flight: usize,
+    /// Leader exits after this long with no connected peers (once it
+    /// has seen at least one). 0 = never.
+    pub idle_timeout_s: f64,
+    /// Graceful-shutdown bound: queued work is drained in virtual
+    /// order for at most this long before the leader gives up.
+    pub drain_timeout_s: f64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        Self {
+            listen_addr: "127.0.0.1:7607".to_string(),
+            read_timeout_ms: 2000.0,
+            write_timeout_ms: 2000.0,
+            max_in_flight: 64,
+            idle_timeout_s: 30.0,
+            drain_timeout_s: 5.0,
+        }
+    }
 }
 
 impl Default for ScenarioSpec {
@@ -149,6 +191,7 @@ impl ScenarioSpec {
             workload: WorkloadSpec {
                 trace: scn.trace.as_ref().map(|t| t.path.clone()),
             },
+            serve: ServeSpec::default(),
         }
     }
 
@@ -486,6 +529,20 @@ impl ScenarioSpec {
                         .map_or(Json::Null, Json::str),
                 )]),
             ),
+            (
+                "serve",
+                Json::obj(vec![
+                    ("listen_addr", Json::str(self.serve.listen_addr.as_str())),
+                    ("read_timeout_ms", Json::num(self.serve.read_timeout_ms)),
+                    ("write_timeout_ms", Json::num(self.serve.write_timeout_ms)),
+                    (
+                        "max_in_flight",
+                        Json::num(self.serve.max_in_flight as f64),
+                    ),
+                    ("idle_timeout_s", Json::num(self.serve.idle_timeout_s)),
+                    ("drain_timeout_s", Json::num(self.serve.drain_timeout_s)),
+                ]),
+            ),
         ])
     }
 
@@ -496,7 +553,7 @@ impl ScenarioSpec {
         let obj = v
             .as_obj()
             .ok_or_else(|| anyhow!("scenario spec must be a JSON object"))?;
-        const KEYS: [&str; 13] = [
+        const KEYS: [&str; 14] = [
             "devices",
             "server_model",
             "scheduler",
@@ -510,6 +567,7 @@ impl ScenarioSpec {
             "exec",
             "server",
             "workload",
+            "serve",
         ];
         for key in obj.keys() {
             ensure!(
@@ -592,6 +650,9 @@ impl ScenarioSpec {
         if let Some(x) = opt(v, "workload") {
             spec.workload = workload_from_json(x)?;
         }
+        if let Some(x) = opt(v, "serve") {
+            spec.serve = serve_from_json(x)?;
+        }
         Ok(spec)
     }
 
@@ -626,6 +687,7 @@ impl ScenarioSpec {
             ("seed", self.seed),
             ("samples_per_device", self.samples_per_device as u64),
             ("server.replicas", self.server.replicas as u64),
+            ("serve.max_in_flight", self.serve.max_in_flight as u64),
         ]
         .into_iter()
         .chain(
@@ -727,6 +789,28 @@ impl ScenarioSpec {
                 } else {
                     Some(value.to_string())
                 }
+            }
+            "serve.listen_addr" => self.serve.listen_addr = value.to_string(),
+            "serve.read_timeout_ms" => {
+                let x = parse_finite(key, value)?;
+                pos_finite(key, x)?;
+                self.serve.read_timeout_ms = x;
+            }
+            "serve.write_timeout_ms" => {
+                let x = parse_finite(key, value)?;
+                pos_finite(key, x)?;
+                self.serve.write_timeout_ms = x;
+            }
+            "serve.max_in_flight" => self.serve.max_in_flight = parse_count(key, value)?,
+            "serve.idle_timeout_s" => {
+                let x = parse_finite(key, value)?;
+                ensure!(x >= 0.0, "spec key '{key}' must be non-negative, got {x}");
+                self.serve.idle_timeout_s = x;
+            }
+            "serve.drain_timeout_s" => {
+                let x = parse_finite(key, value)?;
+                ensure!(x >= 0.0, "spec key '{key}' must be non-negative, got {x}");
+                self.serve.drain_timeout_s = x;
             }
             "server.autoscale" => {
                 self.server.autoscale = if parse_bool(key, value)? {
@@ -1035,6 +1119,57 @@ fn workload_from_json(v: &Json) -> Result<WorkloadSpec> {
     Ok(w)
 }
 
+fn serve_from_json(v: &Json) -> Result<ServeSpec> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| anyhow!("'serve' must be an object"))?;
+    const KEYS: [&str; 6] = [
+        "listen_addr",
+        "read_timeout_ms",
+        "write_timeout_ms",
+        "max_in_flight",
+        "idle_timeout_s",
+        "drain_timeout_s",
+    ];
+    for key in obj.keys() {
+        ensure!(
+            KEYS.contains(&key.as_str()),
+            "unknown serve key '{key}' (known: {})",
+            KEYS.join(", ")
+        );
+    }
+    let mut s = ServeSpec::default();
+    if let Some(x) = opt(v, "listen_addr") {
+        s.listen_addr = as_str(x, "serve.listen_addr")?.to_string();
+    }
+    if let Some(x) = opt(v, "read_timeout_ms") {
+        s.read_timeout_ms = as_num(x, "serve.read_timeout_ms")?;
+        pos_finite("serve.read_timeout_ms", s.read_timeout_ms)?;
+    }
+    if let Some(x) = opt(v, "write_timeout_ms") {
+        s.write_timeout_ms = as_num(x, "serve.write_timeout_ms")?;
+        pos_finite("serve.write_timeout_ms", s.write_timeout_ms)?;
+    }
+    if let Some(x) = opt(v, "max_in_flight") {
+        s.max_in_flight = as_count(x, "serve.max_in_flight")?;
+    }
+    if let Some(x) = opt(v, "idle_timeout_s") {
+        s.idle_timeout_s = as_num(x, "serve.idle_timeout_s")?;
+        ensure!(
+            s.idle_timeout_s.is_finite() && s.idle_timeout_s >= 0.0,
+            "serve.idle_timeout_s must be non-negative and finite"
+        );
+    }
+    if let Some(x) = opt(v, "drain_timeout_s") {
+        s.drain_timeout_s = as_num(x, "serve.drain_timeout_s")?;
+        ensure!(
+            s.drain_timeout_s.is_finite() && s.drain_timeout_s >= 0.0,
+            "serve.drain_timeout_s must be non-negative and finite"
+        );
+    }
+    Ok(s)
+}
+
 fn parse_devices(value: &str) -> Result<Vec<(Tier, usize)>> {
     if let Some(n) = value.strip_prefix("hetero:") {
         let n: usize = n
@@ -1111,6 +1246,31 @@ mod tests {
         assert!(ScenarioSpec::parse_str(r#"{"slo": 100}"#).is_err());
         assert!(ScenarioSpec::parse_str(r#"{"server": {"queues": "edf"}}"#).is_err());
         assert!(ScenarioSpec::parse_str(r#"{"workload": {"traces": "x"}}"#).is_err());
+        assert!(ScenarioSpec::parse_str(r#"{"serve": {"listen": "x"}}"#).is_err());
+    }
+
+    #[test]
+    fn serve_section_roundtrip_and_bounds() {
+        let spec = ScenarioSpec::parse_str(
+            r#"{"serve": {"listen_addr": "0.0.0.0:9000", "read_timeout_ms": 500,
+                "max_in_flight": 8, "idle_timeout_s": 0}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.serve.listen_addr, "0.0.0.0:9000");
+        assert_eq!(spec.serve.read_timeout_ms, 500.0);
+        assert_eq!(spec.serve.max_in_flight, 8);
+        assert_eq!(spec.serve.idle_timeout_s, 0.0);
+        // Unset keys keep the defaults.
+        assert_eq!(spec.serve.write_timeout_ms, ServeSpec::default().write_timeout_ms);
+        let back = ScenarioSpec::parse_str(&spec.to_json().pretty(2)).unwrap();
+        assert_eq!(back, spec);
+        // Section absent / null = defaults (presets stay terse).
+        let spec = ScenarioSpec::parse_str(r#"{"serve": null}"#).unwrap();
+        assert_eq!(spec.serve, ServeSpec::default());
+        // Shape bounds hold at parse time.
+        assert!(ScenarioSpec::parse_str(r#"{"serve": {"read_timeout_ms": 0}}"#).is_err());
+        assert!(ScenarioSpec::parse_str(r#"{"serve": {"idle_timeout_s": -1}}"#).is_err());
+        assert!(ScenarioSpec::parse_str(r#"{"serve": {"max_in_flight": 1.5}}"#).is_err());
     }
 
     #[test]
@@ -1186,6 +1346,14 @@ mod tests {
         );
         spec.set("workload.trace", "none").unwrap();
         assert_eq!(spec.workload.trace, None);
+        spec.set("serve.listen_addr", "127.0.0.1:0").unwrap();
+        assert_eq!(spec.serve.listen_addr, "127.0.0.1:0");
+        spec.set("serve.max_in_flight", "4").unwrap();
+        assert_eq!(spec.serve.max_in_flight, 4);
+        spec.set("serve.read_timeout_ms", "250").unwrap();
+        assert_eq!(spec.serve.read_timeout_ms, 250.0);
+        assert!(spec.set("serve.read_timeout_ms", "0").is_err());
+        assert!(spec.set("serve.idle_timeout_s", "-5").is_err());
         assert!(spec.set("nope", "1").is_err());
         assert!(spec.set("slo_ms", "NaN").is_err());
         // Seeds beyond the exact-JSON-integer range are rejected here,

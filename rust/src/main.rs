@@ -10,6 +10,7 @@
 //!   lint                    determinism & hot-path invariant linter
 //!   serve                   live TCP serving mode (leader)
 //!   device                  live TCP device client
+//!   loadgen                 replay a scenario against a live leader (parity with sim)
 //!   list                    list available experiments
 
 // Same hygiene bar as the library crate (rust/src/lib.rs).
@@ -44,6 +45,7 @@ fn main() -> Result<()> {
         "lint" => cmd_lint(rest),
         "serve" => multitascpp::net::cmd_serve(rest),
         "device" => multitascpp::net::cmd_device(rest),
+        "loadgen" => multitascpp::net::cmd_loadgen(rest),
         "list" => {
             for (id, desc, _) in experiments::registry() {
                 println!("{id:<10} {desc}");
@@ -61,7 +63,7 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "mtpp — MultiTASC++ multi-device cascade scheduler\n\n\
-         usage: mtpp <precompute|experiment|sim|trace|bench|lint|serve|device|list> [flags]\n\
+         usage: mtpp <precompute|experiment|sim|trace|bench|lint|serve|device|loadgen|list> [flags]\n\
          run `mtpp <cmd> --help` for per-command flags"
     );
 }

@@ -2,11 +2,21 @@
 //! applies the (remotely reconfigurable) forwarding decision function,
 //! streams low-confidence samples to the leader, and reports SR
 //! telemetry every window (§IV-B) — a real device-side agent.
+//!
+//! Transport robustness (docs/serving.md): connects with a bounded
+//! retry loop whose exponential backoff is jittered by the seeded
+//! [`Rng`] (stream-split off the device seed, never the wall clock, so
+//! a fleet of agents launched together staggers deterministically);
+//! the socket carries connect/read/write timeouts; and a leader that
+//! closes mid-frame surfaces as a contextful error, not a hang or a
+//! panic. Requests the leader sheds ([`ToDevice::Shed`]) resolve
+//! immediately with the device's local prediction standing.
 
 use std::collections::BTreeMap;
 use std::io::BufReader;
-use std::net::TcpStream;
-use std::sync::mpsc;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -16,8 +26,23 @@ use crate::config::latency::device_latency_ms;
 use crate::config::SystemConfig;
 use crate::data::{device_stream, Dataset};
 use crate::models::{Registry, Tier};
-use crate::net::proto::{read_frame, write_frame, ToDevice, ToServer};
+use crate::net::proto::{read_frame_patient, write_frame, ToDevice, ToServer};
 use crate::runtime::Engine;
+use crate::util::prng::Rng;
+
+/// Connection attempts before giving up.
+const CONNECT_ATTEMPTS: u32 = 5;
+/// Per-attempt connect timeout.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+/// First retry's mean backoff; doubles per attempt, jittered 50–150%.
+const BACKOFF_BASE_MS: f64 = 50.0;
+/// Socket read/write timeouts (reads poll the shutdown flag this often
+/// via the patient reader; a leader silent mid-frame for this long is
+/// a contextful error).
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+/// Rng stream index for backoff jitter (disjoint from the data-path
+/// streams derived from the same device seed).
+const BACKOFF_STREAM: u64 = 0x6E65_7462; // "netb"
 
 pub struct DeviceOptions {
     pub addr: String,
@@ -36,7 +61,40 @@ pub struct DeviceReport {
     pub forwarded: usize,
     pub correct: usize,
     pub slo_satisfied: usize,
+    /// Forwards the leader shed (admission control or transport
+    /// bounds): the local prediction stood.
+    pub shed: usize,
     pub final_threshold: f64,
+}
+
+/// Dial the leader with bounded, deterministically-jittered retries.
+fn connect_with_retry(addr: &str, seed: u64) -> Result<TcpStream> {
+    let sock_addr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve leader address {addr}"))?
+        .next()
+        .with_context(|| format!("leader address {addr} resolved to nothing"))?;
+    let mut rng = Rng::stream(seed, BACKOFF_STREAM);
+    let mut last_err = None;
+    for attempt in 0..CONNECT_ATTEMPTS {
+        match TcpStream::connect_timeout(&sock_addr, CONNECT_TIMEOUT) {
+            Ok(sock) => return Ok(sock),
+            Err(e) => {
+                log::warn!(
+                    "connect {addr} attempt {}/{CONNECT_ATTEMPTS} failed: {e}",
+                    attempt + 1
+                );
+                last_err = Some(e);
+                if attempt + 1 < CONNECT_ATTEMPTS {
+                    let base_ms = BACKOFF_BASE_MS * f64::from(1u32 << attempt);
+                    let jittered_ms = base_ms * rng.next_range_f64(0.5, 1.5);
+                    std::thread::sleep(Duration::from_secs_f64(jittered_ms / 1000.0));
+                }
+            }
+        }
+    }
+    Err(last_err.expect("at least one attempt ran"))
+        .with_context(|| format!("connect to leader {addr} ({CONNECT_ATTEMPTS} attempts)"))
 }
 
 pub fn run_device(
@@ -49,10 +107,17 @@ pub fn run_device(
     let model = opts.tier.device_model();
     let stream_ids = device_stream(ds, opts.seed, opts.seed as usize, opts.samples);
 
-    let sock = TcpStream::connect(&opts.addr).with_context(|| format!("connect {}", opts.addr))?;
+    let sock = connect_with_retry(&opts.addr, opts.seed)?;
     sock.set_nodelay(true).ok();
+    sock.set_read_timeout(Some(IO_TIMEOUT))
+        .context("set read timeout")?;
+    sock.set_write_timeout(Some(IO_TIMEOUT))
+        .context("set write timeout")?;
     let mut writer = sock.try_clone()?;
     let mut reader = BufReader::new(sock);
+    // Raised when the sample stream is done and stragglers have
+    // drained: tells the patient reader to stop waiting for frames.
+    let done = Arc::new(AtomicBool::new(false));
 
     write_frame(
         &mut writer,
@@ -63,8 +128,11 @@ pub fn run_device(
         }
         .to_json(),
     )?;
-    let Some(frame) = read_frame(&mut reader)? else {
-        anyhow::bail!("server closed during handshake");
+    let handshake_deadline = Instant::now() + Duration::from_secs(10);
+    let Some(frame) = read_frame_patient(&mut reader, || Instant::now() < handshake_deadline)
+        .context("await Welcome")?
+    else {
+        anyhow::bail!("leader did not complete the handshake (closed or timed out)");
     };
     let ToDevice::Welcome {
         device_id,
@@ -76,10 +144,17 @@ pub fn run_device(
     log::info!("device {device_id}: welcome, threshold {threshold}");
     let mut decision = DecisionFn::new(threshold);
 
-    // Reader thread: answers + threshold pushes.
+    // Reader thread: answers + threshold pushes. The patient reader
+    // tolerates quiet periods between frames (checking `done` at each
+    // read timeout) but turns a leader that goes silent *mid-frame*
+    // into a contextful error instead of blocking forever.
     let (tx, rx) = mpsc::channel::<ToDevice>();
+    let reader_done = Arc::clone(&done);
     let reader_handle = std::thread::spawn(move || -> Result<()> {
-        while let Some(frame) = read_frame(&mut reader)? {
+        while let Some(frame) =
+            read_frame_patient(&mut reader, || !reader_done.load(Ordering::SeqCst))
+                .context("read from leader")?
+        {
             if tx.send(ToDevice::from_json(&frame)?).is_err() {
                 break;
             }
@@ -98,11 +173,11 @@ pub fn run_device(
     let mut window_ok = 0usize;
 
     let drain = |rx: &mpsc::Receiver<ToDevice>,
-                     decision: &mut DecisionFn,
-                     in_flight: &mut BTreeMap<u64, Instant>,
-                     report: &mut DeviceReport,
-                     window_done: &mut usize,
-                     window_ok: &mut usize| {
+                 decision: &mut DecisionFn,
+                 in_flight: &mut BTreeMap<u64, Instant>,
+                 report: &mut DeviceReport,
+                 window_done: &mut usize,
+                 window_ok: &mut usize| {
         while let Ok(msg) = rx.try_recv() {
             match msg {
                 ToDevice::SetThreshold { threshold } => decision.set_threshold(threshold),
@@ -116,7 +191,21 @@ pub fn run_device(
                         }
                     }
                 }
+                ToDevice::Shed { request_id } => {
+                    // The local prediction stands; the round trip spent
+                    // so far still counts against the SLO.
+                    if let Some(t0) = in_flight.remove(&request_id) {
+                        report.shed += 1;
+                        let ms = t0.elapsed().as_secs_f64() * 1000.0;
+                        *window_done += 1;
+                        if ms <= opts.slo_ms {
+                            *window_ok += 1;
+                            report.slo_satisfied += 1;
+                        }
+                    }
+                }
                 ToDevice::Welcome { .. } => {}
+                other => log::warn!("unexpected frame on a device connection: {other:?}"),
             }
         }
     };
@@ -191,6 +280,7 @@ pub fn run_device(
         );
         std::thread::sleep(Duration::from_millis(5));
     }
+    done.store(true, Ordering::SeqCst);
     write_frame(&mut writer, &ToServer::Bye.to_json())?;
     drop(writer);
     report.final_threshold = decision.threshold();

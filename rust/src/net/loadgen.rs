@@ -1,0 +1,274 @@
+//! `mtpp loadgen`: drive a live `mtpp serve` leader with the *same*
+//! engine loop the simulator runs.
+//!
+//! The loadgen is not a traffic generator bolted onto the protocol —
+//! it is [`SimEngine`] instantiated with a [`RemoteCore`]: the device
+//! fleet, scheduler control loop, output provider, and event queue all
+//! run locally, and every scheduling-core call (`on_arrival`,
+//! `dispatch`, `take_batch`, ...) crosses one framed TCP connection to
+//! the leader in lock-step. The leader answers from a fresh
+//! [`crate::sim::subsystem::ServerSubsystem`] built from the identical
+//! scenario, and relays back every event its core pushed — in the
+//! core's original *push order*, so this engine's queue assigns the
+//! same relative sequence numbers and FIFO tie-breaking is reproduced
+//! exactly. A run against a live leader therefore yields the same
+//! canonical metrics snapshot as `mtpp sim` on the same spec
+//! (docs/serving.md; pinned by `rust/tests/serve_live.rs`).
+//!
+//! Virtual time rides in every RPC; this module never reads a clock —
+//! it is inside the `no-wallclock-in-sim` lint scope. Transport
+//! failures surface as contextful panics: the [`ServerCore`] seam has
+//! no error channel, and a severed session cannot produce a partial
+//! parity result worth continuing with.
+
+use std::io::Write as _;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::latency::server_latency_model;
+use crate::config::spec::ScenarioSpec;
+use crate::config::SystemConfig;
+use crate::data::Dataset;
+use crate::metrics::RunMetrics;
+use crate::models::outputs::OutputProvider;
+use crate::models::{Registry, Tier};
+use crate::net::proto::{read_frame, write_frame, ToDevice, ToServer};
+use crate::net::server::spec_digest;
+use crate::scheduler::{self, DeviceId};
+use crate::sim::event::EventQueue;
+use crate::sim::server::PendingRequest;
+use crate::sim::subsystem::{CoreStats, ForwardingVerdict, ScaleOutcome, ServerCore};
+use crate::sim::{build_device_specs, ensure_conservation, SimEngine};
+
+/// A [`ServerCore`] that proxies every call to a live leader over one
+/// framed TCP connection. Stateless beyond the socket: the scheduling
+/// state lives in the leader's per-session subsystem.
+pub struct RemoteCore {
+    stream: TcpStream,
+    wants_switch_telemetry: bool,
+    /// Session liveness — once the transport fails the `Drop` goodbye
+    /// is skipped.
+    dead: bool,
+}
+
+impl RemoteCore {
+    /// Connect, present the spec digest, and complete the `SimHello` /
+    /// `SimWelcome` handshake. Timeouts come from the spec's `serve`
+    /// section; the leader rejects a digest it does not expect.
+    pub fn connect(addr: &str, spec: &ScenarioSpec) -> Result<Self> {
+        let io_timeout = Duration::from_secs_f64(spec.serve.read_timeout_ms / 1000.0);
+        let sock_addr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve leader address {addr}"))?
+            .next()
+            .with_context(|| format!("leader address {addr} resolved to nothing"))?;
+        let mut stream = TcpStream::connect_timeout(&sock_addr, io_timeout)
+            .with_context(|| format!("connect to leader {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(io_timeout))
+            .context("set read timeout")?;
+        stream
+            .set_write_timeout(Some(Duration::from_secs_f64(
+                spec.serve.write_timeout_ms / 1000.0,
+            )))
+            .context("set write timeout")?;
+        write_frame(
+            &mut stream,
+            &ToServer::SimHello {
+                digest: spec_digest(spec),
+            }
+            .to_json(),
+        )
+        .context("send SimHello")?;
+        let reply = read_frame(&mut stream)
+            .context("read SimWelcome")?
+            .context("leader closed the connection during the sim handshake")?;
+        match ToDevice::from_json(&reply).context("decode SimWelcome")? {
+            ToDevice::SimWelcome {
+                wants_switch_telemetry,
+            } => Ok(Self {
+                stream,
+                wants_switch_telemetry,
+                dead: false,
+            }),
+            ToDevice::SimError { message } => {
+                anyhow::bail!("leader rejected the sim session: {message}")
+            }
+            other => anyhow::bail!("expected SimWelcome, leader sent {other:?}"),
+        }
+    }
+
+    /// One lock-step round trip. The seam has no error channel, so
+    /// transport failures panic with context (sanctioned in net/).
+    fn rpc(&mut self, msg: &ToServer) -> ToDevice {
+        match self.try_rpc(msg) {
+            Ok(reply) => reply,
+            Err(e) => {
+                self.dead = true;
+                panic!("loadgen session died mid-run: {e:#}");
+            }
+        }
+    }
+
+    fn try_rpc(&mut self, msg: &ToServer) -> Result<ToDevice> {
+        write_frame(&mut self.stream, &msg.to_json()).context("send sim RPC")?;
+        let reply = read_frame(&mut self.stream)
+            .context("read sim RPC reply")?
+            .context("leader closed the session mid-run")?;
+        let reply = ToDevice::from_json(&reply).context("decode sim RPC reply")?;
+        if let ToDevice::SimError { message } = &reply {
+            anyhow::bail!("leader reported: {message}");
+        }
+        Ok(reply)
+    }
+}
+
+impl Drop for RemoteCore {
+    fn drop(&mut self) {
+        if !self.dead {
+            // Best-effort goodbye so the leader logs a clean close.
+            let _ = write_frame(&mut self.stream, &ToServer::SimBye.to_json());
+            let _ = self.stream.flush();
+        }
+    }
+}
+
+/// Splice a relayed (observations, batch-formation sizes, events)
+/// payload into the engine's queue and metrics. Events arrive in the
+/// far core's push order and are re-pushed in that order, preserving
+/// relative sequence numbers for FIFO tie-breaking.
+fn splice(
+    events: &mut EventQueue,
+    metrics: &mut RunMetrics,
+    batch_sizes: Vec<f64>,
+    relayed: Vec<(f64, crate::sim::event::Event)>,
+) {
+    for b in batch_sizes {
+        metrics.batch_sizes.push(b);
+    }
+    for (t, ev) in relayed {
+        events.push(t, ev);
+    }
+}
+
+impl ServerCore for RemoteCore {
+    fn on_arrival(
+        &mut self,
+        t: f64,
+        req: PendingRequest,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+    ) -> (ForwardingVerdict, Vec<usize>) {
+        match self.rpc(&ToServer::SimArrival { t, req }) {
+            ToDevice::SimVerdict {
+                shed,
+                observed,
+                batch_sizes,
+                events: relayed,
+            } => {
+                splice(events, metrics, batch_sizes, relayed);
+                let verdict = if shed {
+                    ForwardingVerdict::Shed
+                } else {
+                    ForwardingVerdict::Queued
+                };
+                (verdict, observed)
+            }
+            other => panic!("expected SimVerdict, leader sent {other:?}"),
+        }
+    }
+
+    fn dispatch(
+        &mut self,
+        t: f64,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+    ) -> Vec<usize> {
+        match self.rpc(&ToServer::SimDispatch { t }) {
+            ToDevice::SimLoads {
+                observed,
+                batch_sizes,
+                events: relayed,
+            } => {
+                splice(events, metrics, batch_sizes, relayed);
+                observed
+            }
+            other => panic!("expected SimLoads, leader sent {other:?}"),
+        }
+    }
+
+    fn take_batch(&mut self, server: usize) -> (String, Vec<PendingRequest>) {
+        match self.rpc(&ToServer::SimBatchDone { server }) {
+            ToDevice::SimBatch { model, batch } => (model, batch),
+            other => panic!("expected SimBatch, leader sent {other:?}"),
+        }
+    }
+
+    fn autoscale_step(&mut self, grid_t: f64) -> Vec<ScaleOutcome> {
+        match self.rpc(&ToServer::SimAutoscale { grid_t }) {
+            ToDevice::SimScale { outcomes } => outcomes,
+            other => panic!("expected SimScale, leader sent {other:?}"),
+        }
+    }
+
+    fn on_replica_warm(&mut self, server: usize, t: f64) {
+        match self.rpc(&ToServer::SimReplicaWarm { t, server }) {
+            ToDevice::SimOk => {}
+            other => panic!("expected SimOk for replica-warm, leader sent {other:?}"),
+        }
+    }
+
+    fn wants_switch_telemetry(&self) -> bool {
+        self.wants_switch_telemetry
+    }
+
+    fn consult_switchers(&mut self, thresholds: &[(DeviceId, Tier, f64)], t: f64) {
+        match self.rpc(&ToServer::SimThresholds {
+            t,
+            thresholds: thresholds.to_vec(),
+        }) {
+            ToDevice::SimOk => {}
+            other => panic!("expected SimOk for thresholds, leader sent {other:?}"),
+        }
+    }
+
+    fn stats(&mut self, now: f64) -> CoreStats {
+        match self.rpc(&ToServer::SimStats { now }) {
+            ToDevice::SimStatsReport { stats } => stats,
+            other => panic!("expected SimStatsReport, leader sent {other:?}"),
+        }
+    }
+}
+
+/// Replay a spec's workload against a live leader at `addr` and return
+/// the canonical run metrics — `run_spec` with the scheduling core on
+/// the far side of a socket. Devices, streams, scheduler, and outputs
+/// are built *identically* to the sim (same helpers, same seeds), so
+/// the result is expected byte-identical to `mtpp sim` on the same
+/// spec; `rust/tests/serve_live.rs` pins that, and docs/serving.md
+/// states the tolerance contract.
+pub fn run_loadgen(
+    spec: &ScenarioSpec,
+    cfg: &SystemConfig,
+    registry: &Registry,
+    ds: &Dataset,
+    provider: &mut dyn OutputProvider,
+    addr: &str,
+) -> Result<RunMetrics> {
+    let scn = spec.validate()?;
+    let specs = build_device_specs(&scn, cfg, registry, ds)?;
+    let expected_samples: usize = specs.iter().map(|s| s.stream.len()).sum();
+
+    let server_lat = server_latency_model(&scn.server_model);
+    let mut sched = scheduler::build(scn.scheduler, cfg, server_lat, scn.slo_ms, &cfg.batch_grid);
+
+    let core = RemoteCore::connect(addr, spec)?;
+    let engine = SimEngine::with_core(cfg, sched.as_mut(), provider, specs, scn.seed, core);
+    let metrics = engine.run()?;
+
+    ensure_conservation(&metrics, expected_samples)?;
+    Ok(metrics)
+}

@@ -1,23 +1,30 @@
 //! Live wall-clock serving mode over TCP (DESIGN.md §3 AMQP
-//! substitute): `mtpp serve` runs the leader (queue + batcher + PJRT +
-//! MultiTASC++), `mtpp device` runs a device-side agent.
+//! substitute): `mtpp serve` runs the leader — a thin reactor over the
+//! same [`crate::sim::subsystem::ServerSubsystem`] scheduling core the
+//! simulator runs — `mtpp device` runs a wall-clock device agent, and
+//! `mtpp loadgen` replays a scenario against a live leader in
+//! lock-step virtual time, producing metrics comparable (byte-for-byte)
+//! with `mtpp sim`. See docs/serving.md for the full contract.
 
 pub mod client;
+pub mod loadgen;
 pub mod proto;
 pub mod server;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context as _, Result};
+use anyhow::{ensure, Context as _, Result};
 
 use crate::config::spec::ScenarioSpec;
 use crate::config::SystemConfig;
 use crate::data::Dataset;
+use crate::experiments::common::{metrics_snapshot, Ctx};
 use crate::models::{Registry, Tier};
 use crate::util::cli::{Args, Matches};
 
 pub use client::{run_device, DeviceOptions, DeviceReport};
-pub use server::{serve, ServeOptions};
+pub use loadgen::{run_loadgen, RemoteCore};
+pub use server::{bind, serve, spec_digest, LiveServer, ServeOptions, ServeReport};
 
 /// Load the `--scenario` spec, if given, and validate it. Explicit
 /// flags still win over spec values — the spec provides the defaults,
@@ -34,41 +41,161 @@ fn load_net_spec(m: &Matches) -> Result<Option<ScenarioSpec>> {
     }
 }
 
+/// Resolve `--scenario` / `--preset` / defaults plus `--set` overlays
+/// into one spec — the serve/loadgen flavor of the sim's resolver.
+/// Both sides of a parity run must resolve the *identical* spec (the
+/// `SimHello` digest pins it), which is why the scheduling surface is
+/// spec-only here: transport flags never touch the spec.
+fn resolve_live_spec(m: &Matches) -> Result<ScenarioSpec> {
+    let file = m.get("scenario").filter(|s| !s.is_empty());
+    let preset = m.get("preset").filter(|s| !s.is_empty());
+    ensure!(
+        file.is_none() || preset.is_none(),
+        "--scenario and --preset are mutually exclusive"
+    );
+    let mut spec = match (file, preset) {
+        (Some(path), _) => ScenarioSpec::load(Path::new(path))?,
+        (_, Some(name)) => ScenarioSpec::preset(name)?,
+        _ => ScenarioSpec::default(),
+    };
+    for kv in m.get_all("set") {
+        spec.apply_set(kv)?;
+    }
+    Ok(spec)
+}
+
 pub fn cmd_serve(argv: &[String]) -> Result<()> {
-    let mut args = Args::new("mtpp serve", "live leader: queue + batcher + PJRT");
-    args.flag("addr", "listen address", Some("127.0.0.1:7607"))
-        .flag("server", "server model", Some("srv_inception"))
+    let mut args = Args::new(
+        "mtpp serve",
+        "live leader: the sim's scheduling core behind a TCP reactor",
+    );
+    args.flag("addr", "listen address (default: spec serve.listen_addr)", None)
+        .flag("server", "server model (overrides the spec)", None)
         .flag("answers", "exit after N answers (0 = forever)", Some("0"))
-        .flag("idle-timeout", "exit after idle seconds", Some("30"))
+        .flag(
+            "idle-timeout",
+            "exit after idle seconds (default: spec serve.idle_timeout_s)",
+            None,
+        )
         .flag(
             "scenario",
-            "scenario spec JSON: supplies the server model unless --server is given",
+            "scenario spec JSON configuring the scheduling core (see docs/serving.md)",
             None,
+        )
+        .flag("preset", "named preset instead of --scenario", None)
+        .multi("set", "dotted-path spec override, e.g. --set server.queue=edf")
+        .switch(
+            "synthetic",
+            "run without artifacts: sim (loadgen) sessions only, wall-mode forwards shed",
         )
         .flag("artifacts", "artifacts directory", None);
     let m = args.parse(argv)?;
-    let spec = load_net_spec(&m)?;
-    let dir = m
-        .get("artifacts")
-        .map(PathBuf::from)
-        .unwrap_or_else(SystemConfig::locate_artifacts);
-    let registry = Registry::load(&dir)?;
+    let mut spec = resolve_live_spec(&m)?;
+    if let Some(server) = m.get("server").filter(|s| !s.is_empty()) {
+        spec.set("server_model", &server)?;
+    }
+    let scn = spec.validate()?;
     let cfg = SystemConfig::default();
-    let server_model = match &spec {
-        Some(spec) if !m.was_set("server") => spec.server_model.clone(),
-        _ => m.get_str("server")?.to_string(),
+
+    let mut opts = ServeOptions::from_spec(&spec);
+    if let Some(addr) = m.get("addr").filter(|s| !s.is_empty()) {
+        opts.addr = addr;
+    }
+    opts.answer_limit = m.get_usize("answers")?;
+    if m.was_set("idle-timeout") {
+        let idle_s = m.get_f64("idle-timeout")?;
+        ensure!(idle_s >= 0.0, "--idle-timeout must be >= 0, got {idle_s}");
+        opts.idle_timeout = std::time::Duration::from_secs_f64(idle_s);
+    }
+
+    let registry = if m.get_bool("synthetic") {
+        None
+    } else {
+        let dir = m
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(SystemConfig::locate_artifacts);
+        Some(Registry::load(&dir)?)
     };
-    let idle_s = m.get_f64("idle-timeout")?;
-    anyhow::ensure!(idle_s >= 0.0, "--idle-timeout must be >= 0, got {idle_s}");
-    let opts = ServeOptions {
-        addr: m.get_str("addr")?.to_string(),
-        server_model,
-        answer_limit: m.get_usize("answers")?,
-        idle_timeout: std::time::Duration::from_secs_f64(idle_s),
-    };
-    let answered = serve(registry, &cfg, &opts)?;
+
+    let leader = bind(&cfg, scn, opts)?;
     // mtpp-lint: allow(no-println-in-lib) reason="primary stdout result of the `mtpp serve` subcommand, not a library diagnostic"
-    println!("served {answered} heavy-model answers");
+    println!("listening on {}", leader.local_addr()?);
+    let report = leader.run(registry)?;
+    // mtpp-lint: allow(no-println-in-lib) reason="primary stdout result of the `mtpp serve` subcommand, not a library diagnostic"
+    println!(
+        "served {} heavy-model answers, shed {}, {} loadgen sessions",
+        report.answered, report.shed, report.sim_sessions
+    );
+    Ok(())
+}
+
+pub fn cmd_loadgen(argv: &[String]) -> Result<()> {
+    let mut args = Args::new(
+        "mtpp loadgen",
+        "replay a scenario against a live leader in lock-step (parity with `mtpp sim`)",
+    );
+    args.flag(
+        "addr",
+        "leader address (default: spec serve.listen_addr)",
+        None,
+    )
+    .flag(
+        "scenario",
+        "scenario spec JSON — must be identical to the leader's (digest-checked)",
+        None,
+    )
+    .flag("preset", "named preset instead of --scenario", None)
+    .multi("set", "dotted-path spec override, e.g. --set seed=1")
+    .flag(
+        "metrics-out",
+        "write the canonical run-metrics JSON snapshot to this path \
+         (same format as `mtpp sim --metrics-out`)",
+        None,
+    )
+    .switch(
+        "synthetic",
+        "run without artifacts on the synthetic test tables",
+    )
+    .flag("artifacts", "artifacts directory", None);
+    let m = args.parse(argv)?;
+    let spec = resolve_live_spec(&m)?;
+    let mut ctx = if m.get_bool("synthetic") {
+        Ctx::synthetic(Path::new("results"), false)?
+    } else {
+        let dir = m
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(SystemConfig::locate_artifacts);
+        Ctx::load(&dir, Path::new("results"), false)?
+    };
+    let addr = m
+        .get("addr")
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| spec.serve.listen_addr.clone());
+    let metrics = run_loadgen(
+        &spec,
+        &ctx.cfg,
+        &ctx.registry,
+        &ctx.dataset,
+        &mut ctx.outputs,
+        &addr,
+    )?;
+    if let Some(path) = m.get("metrics-out").filter(|s| !s.is_empty()) {
+        let mut text = metrics_snapshot(&metrics).pretty(2);
+        text.push('\n');
+        std::fs::write(&path, text).with_context(|| format!("write {path}"))?;
+        // mtpp-lint: allow(no-println-in-lib) reason="primary stdout result of the `mtpp loadgen` subcommand, not a library diagnostic"
+        println!("wrote {path}");
+    }
+    // mtpp-lint: allow(no-println-in-lib) reason="primary stdout result of the `mtpp loadgen` subcommand, not a library diagnostic"
+    println!(
+        "loadgen done: {} samples, SR {:.2}%, {} forwarded, {} shed",
+        metrics.overall.samples,
+        metrics.overall.satisfaction_rate(),
+        metrics.overall.forwarded,
+        metrics.shed
+    );
     Ok(())
 }
 
@@ -122,10 +249,11 @@ pub fn cmd_device(argv: &[String]) -> Result<()> {
     let report = run_device(registry, &ds, &cfg, &opts)?;
     // mtpp-lint: allow(no-println-in-lib) reason="primary stdout result of the `mtpp device` subcommand, not a library diagnostic"
     println!(
-        "device done: {} samples, {} forwarded ({:.1}%), SLO {:.1}%, final threshold {:.3}",
+        "device done: {} samples, {} forwarded ({:.1}%), {} shed, SLO {:.1}%, final threshold {:.3}",
         report.samples,
         report.forwarded,
         100.0 * report.forwarded as f64 / report.samples.max(1) as f64,
+        report.shed,
         100.0 * report.slo_satisfied as f64 / report.samples.max(1) as f64,
         report.final_threshold
     );

@@ -5,11 +5,33 @@
 //! same semantics (DESIGN.md §3). JSON keeps the protocol inspectable;
 //! features ride as arrays (demo scale — the sim path never touches
 //! this).
+//!
+//! Two request families share the frame format:
+//!
+//! * the **wall-clock device protocol** (`Hello`/`Forward`/...): real
+//!   device agents forwarding hard samples in real time;
+//! * the **lock-step sim protocol** (`Sim*`): `mtpp loadgen` drives the
+//!   leader's scheduling core in *request-carried virtual time*. Every
+//!   RPC carries its virtual timestamp, the server never consults a
+//!   clock, and the response relays whatever events the scheduling
+//!   core pushed — in original push order, so the remote engine can
+//!   reproduce the exact FIFO tie-breaking of an in-process sim.
+//!
+//! Error discipline (same as the `.events` reader): a frame whose
+//! claimed length exceeds [`MAX_FRAME`] or whose payload truncates
+//! returns a contextful error — never a panic, and the claimed size is
+//! never allocated up front.
 
-use std::io::{Read, Write};
+use std::io::{self, Read, Write};
 
 use anyhow::{bail, Context, Result};
 
+use crate::models::Tier;
+use crate::scheduler::DeviceId;
+use crate::sim::arena::RequestId;
+use crate::sim::event::Event;
+use crate::sim::server::{PendingRequest, ScaleAction};
+use crate::sim::subsystem::{CoreStats, ScaleOutcome};
 use crate::util::json::Json;
 
 /// Maximum accepted frame (sanity bound).
@@ -33,6 +55,30 @@ pub enum ToServer {
     SrUpdate { sr_percent: f64 },
     /// Clean shutdown.
     Bye,
+
+    // ---- lock-step sim protocol (mtpp loadgen) -----------------------
+    /// Open a sim session: the hex FNV-1a64 digest of the scenario spec
+    /// lets the leader reject a loadgen configured differently from it.
+    SimHello { digest: String },
+    /// A forwarded request reached the (virtual) server at time `t`.
+    SimArrival { t: f64, req: PendingRequest },
+    /// Offer queued work to idle replicas at time `t`.
+    SimDispatch { t: f64 },
+    /// Replica `server` finished its in-flight batch.
+    SimBatchDone { server: usize },
+    /// Replica `server` finished warm-up at time `t`.
+    SimReplicaWarm { t: f64, server: usize },
+    /// One autoscaler evaluation on the telemetry grid.
+    SimAutoscale { grid_t: f64 },
+    /// Fresh per-device threshold telemetry for the §IV-E switchers.
+    SimThresholds {
+        t: f64,
+        thresholds: Vec<(DeviceId, Tier, f64)>,
+    },
+    /// Fetch the scheduling core's counters (see [`CoreStats`]).
+    SimStats { now: f64 },
+    /// Close the sim session (the leader discards its core state).
+    SimBye,
 }
 
 /// Messages server -> device.
@@ -48,6 +94,304 @@ pub enum ToDevice {
     },
     /// Runtime threshold reconfiguration (Eq. 3 parameters).
     SetThreshold { threshold: f64 },
+    /// The request was shed (admission control or the per-connection
+    /// in-flight bound): the device's local prediction stands.
+    Shed { request_id: u64 },
+
+    // ---- lock-step sim protocol (mtpp loadgen) -----------------------
+    /// Sim session ack.
+    SimWelcome { wants_switch_telemetry: bool },
+    /// Arrival verdict + everything the core did while handling it.
+    SimVerdict {
+        shed: bool,
+        observed: Vec<usize>,
+        batch_sizes: Vec<f64>,
+        events: Vec<(f64, Event)>,
+    },
+    /// A finished batch: serving model name + its requests.
+    SimBatch {
+        model: String,
+        batch: Vec<PendingRequest>,
+    },
+    /// Dispatch observations (same payload as a non-shed verdict).
+    SimLoads {
+        observed: Vec<usize>,
+        batch_sizes: Vec<f64>,
+        events: Vec<(f64, Event)>,
+    },
+    /// Applied autoscaler decisions.
+    SimScale { outcomes: Vec<ScaleOutcome> },
+    /// The scheduling core's counters.
+    SimStatsReport { stats: CoreStats },
+    /// Generic ack for RPCs with no payload.
+    SimOk,
+    /// Server-side failure, with context; the session is dead.
+    SimError { message: String },
+}
+
+// ------------------------------------------------------------ codecs
+
+fn usize_at(v: &Json, key: &str) -> Result<usize> {
+    let x = v.f64_at(key)?;
+    anyhow::ensure!(
+        x >= 0.0 && x.fract() == 0.0 && x <= 2f64.powi(53),
+        "field '{key}' is not a non-negative integer: {x}"
+    );
+    Ok(x as usize)
+}
+
+fn usize_arr(v: &Json, key: &str) -> Result<Vec<usize>> {
+    v.req(key)?
+        .as_arr()
+        .with_context(|| format!("'{key}' not an array"))?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .with_context(|| format!("non-integer entry in '{key}'"))
+        })
+        .collect()
+}
+
+fn f64_arr(v: &Json, key: &str) -> Result<Vec<f64>> {
+    v.req(key)?
+        .as_arr()
+        .with_context(|| format!("'{key}' not an array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .with_context(|| format!("non-numeric entry in '{key}'"))
+        })
+        .collect()
+}
+
+/// Encode a [`PendingRequest`] descriptor (the sim's request currency).
+pub fn request_to_json(p: &PendingRequest) -> Json {
+    Json::obj(vec![
+        ("slot", Json::num(p.id.slot() as f64)),
+        ("gen", Json::num(p.id.gen() as f64)),
+        ("device", Json::num(p.device as f64)),
+        ("tier", Json::str(p.tier.name())),
+        ("start_s", Json::num(p.start_s)),
+        ("deadline_s", Json::num(p.deadline_s)),
+        ("arrival_s", Json::num(p.arrival_s)),
+    ])
+}
+
+pub fn request_from_json(v: &Json) -> Result<PendingRequest> {
+    let slot = usize_at(v, "slot")?;
+    let gen = usize_at(v, "gen")?;
+    anyhow::ensure!(
+        slot <= u32::MAX as usize && gen <= u32::MAX as usize,
+        "request id out of u32 range: slot {slot}, gen {gen}"
+    );
+    Ok(PendingRequest {
+        id: RequestId::from_parts(slot as u32, gen as u32),
+        device: usize_at(v, "device")?,
+        tier: Tier::parse(v.str_at("tier")?)?,
+        start_s: v.f64_at("start_s")?,
+        deadline_s: v.f64_at("deadline_s")?,
+        arrival_s: v.f64_at("arrival_s")?,
+    })
+}
+
+/// Encode one scheduled `(time, event)` pair for relay to the remote
+/// engine's queue.
+pub fn event_to_json(t: f64, ev: &Event) -> Json {
+    let mut pairs = vec![("t", Json::num(t))];
+    match ev {
+        Event::DeviceInferDone { device, dur_s } => {
+            pairs.push(("kind", Json::str("device_infer_done")));
+            pairs.push(("device", Json::num(*device as f64)));
+            pairs.push(("dur_s", Json::num(*dur_s)));
+        }
+        Event::ServerArrival { request } => {
+            pairs.push(("kind", Json::str("server_arrival")));
+            pairs.push(("slot", Json::num(request.slot() as f64)));
+            pairs.push(("gen", Json::num(request.gen() as f64)));
+        }
+        Event::ServerBatchDone { server } => {
+            pairs.push(("kind", Json::str("server_batch_done")));
+            pairs.push(("server", Json::num(*server as f64)));
+        }
+        Event::ResultArrival { device, request } => {
+            pairs.push(("kind", Json::str("result_arrival")));
+            pairs.push(("device", Json::num(*device as f64)));
+            pairs.push(("slot", Json::num(request.slot() as f64)));
+            pairs.push(("gen", Json::num(request.gen() as f64)));
+        }
+        Event::RequestShed { device, request } => {
+            pairs.push(("kind", Json::str("request_shed")));
+            pairs.push(("device", Json::num(*device as f64)));
+            pairs.push(("slot", Json::num(request.slot() as f64)));
+            pairs.push(("gen", Json::num(request.gen() as f64)));
+        }
+        Event::ReplicaWarm { server } => {
+            pairs.push(("kind", Json::str("replica_warm")));
+            pairs.push(("server", Json::num(*server as f64)));
+        }
+        Event::SrWindow { device } => {
+            pairs.push(("kind", Json::str("sr_window")));
+            pairs.push(("device", Json::num(*device as f64)));
+        }
+        Event::DeviceResume { device } => {
+            pairs.push(("kind", Json::str("device_resume")));
+            pairs.push(("device", Json::num(*device as f64)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn request_id_from(v: &Json) -> Result<RequestId> {
+    let slot = usize_at(v, "slot")?;
+    let gen = usize_at(v, "gen")?;
+    anyhow::ensure!(
+        slot <= u32::MAX as usize && gen <= u32::MAX as usize,
+        "request id out of u32 range: slot {slot}, gen {gen}"
+    );
+    Ok(RequestId::from_parts(slot as u32, gen as u32))
+}
+
+pub fn event_from_json(v: &Json) -> Result<(f64, Event)> {
+    let t = v.f64_at("t")?;
+    let ev = match v.str_at("kind")? {
+        "device_infer_done" => Event::DeviceInferDone {
+            device: usize_at(v, "device")?,
+            dur_s: v.f64_at("dur_s")?,
+        },
+        "server_arrival" => Event::ServerArrival {
+            request: request_id_from(v)?,
+        },
+        "server_batch_done" => Event::ServerBatchDone {
+            server: usize_at(v, "server")?,
+        },
+        "result_arrival" => Event::ResultArrival {
+            device: usize_at(v, "device")?,
+            request: request_id_from(v)?,
+        },
+        "request_shed" => Event::RequestShed {
+            device: usize_at(v, "device")?,
+            request: request_id_from(v)?,
+        },
+        "replica_warm" => Event::ReplicaWarm {
+            server: usize_at(v, "server")?,
+        },
+        "sr_window" => Event::SrWindow {
+            device: usize_at(v, "device")?,
+        },
+        "device_resume" => Event::DeviceResume {
+            device: usize_at(v, "device")?,
+        },
+        other => bail!("unknown event kind '{other}'"),
+    };
+    Ok((t, ev))
+}
+
+fn events_to_json(events: &[(f64, Event)]) -> Json {
+    Json::Arr(events.iter().map(|(t, e)| event_to_json(*t, e)).collect())
+}
+
+fn events_from_json(v: &Json, key: &str) -> Result<Vec<(f64, Event)>> {
+    v.req(key)?
+        .as_arr()
+        .with_context(|| format!("'{key}' not an array"))?
+        .iter()
+        .map(event_from_json)
+        .collect()
+}
+
+fn scale_to_json(o: &ScaleOutcome) -> Json {
+    let (action, server) = match o.action {
+        ScaleAction::Parked(s) => ("parked", s),
+        ScaleAction::Unparked(s) => ("unparked", s),
+    };
+    Json::obj(vec![
+        ("action", Json::str(action)),
+        ("server", Json::num(server as f64)),
+        ("warmup_s", Json::num(o.warmup_s)),
+    ])
+}
+
+fn scale_from_json(v: &Json) -> Result<ScaleOutcome> {
+    let server = usize_at(v, "server")?;
+    let action = match v.str_at("action")? {
+        "parked" => ScaleAction::Parked(server),
+        "unparked" => ScaleAction::Unparked(server),
+        other => bail!("unknown scale action '{other}'"),
+    };
+    Ok(ScaleOutcome {
+        action,
+        warmup_s: v.f64_at("warmup_s")?,
+    })
+}
+
+fn stats_to_json(s: &CoreStats) -> Json {
+    Json::obj(vec![
+        ("queue_len", Json::num(s.queue_len as f64)),
+        ("busy", Json::num(s.busy as f64)),
+        ("parked", Json::num(s.parked as f64)),
+        ("warming", Json::num(s.warming as f64)),
+        ("ladder_idx", Json::num(s.ladder_idx as f64)),
+        (
+            "shard_depths",
+            Json::Arr(s.shard_depths.iter().map(|&d| Json::num(d as f64)).collect()),
+        ),
+        ("steals", Json::num(s.steals as f64)),
+        ("shed", Json::num(s.shed as f64)),
+        (
+            "batches_per_replica",
+            Json::Arr(
+                s.batches_per_replica
+                    .iter()
+                    .map(|&b| Json::num(b as f64))
+                    .collect(),
+            ),
+        ),
+        (
+            "model_batches",
+            Json::Arr(
+                s.model_batches
+                    .iter()
+                    .map(|(name, n)| {
+                        Json::obj(vec![
+                            ("model", Json::str(name.as_str())),
+                            ("batches", Json::num(*n as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("parked_replica_s", Json::num(s.parked_replica_s)),
+        ("warmup_replica_s", Json::num(s.warmup_replica_s)),
+    ])
+}
+
+fn stats_from_json(v: &Json) -> Result<CoreStats> {
+    let model_batches = v
+        .req("model_batches")?
+        .as_arr()
+        .context("'model_batches' not an array")?
+        .iter()
+        .map(|e| {
+            Ok((
+                e.str_at("model")?.to_string(),
+                usize_at(e, "batches")?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(CoreStats {
+        queue_len: usize_at(v, "queue_len")?,
+        busy: usize_at(v, "busy")?,
+        parked: usize_at(v, "parked")?,
+        warming: usize_at(v, "warming")?,
+        ladder_idx: usize_at(v, "ladder_idx")?,
+        shard_depths: usize_arr(v, "shard_depths")?,
+        steals: usize_at(v, "steals")?,
+        shed: usize_at(v, "shed")?,
+        batches_per_replica: usize_arr(v, "batches_per_replica")?,
+        model_batches,
+        parked_replica_s: v.f64_at("parked_replica_s")?,
+        warmup_replica_s: v.f64_at("warmup_replica_s")?,
+    })
 }
 
 impl ToServer {
@@ -79,6 +423,56 @@ impl ToServer {
                 ("sr_percent", Json::num(*sr_percent)),
             ]),
             ToServer::Bye => Json::obj(vec![("type", Json::str("bye"))]),
+            ToServer::SimHello { digest } => Json::obj(vec![
+                ("type", Json::str("sim_hello")),
+                ("digest", Json::str(digest.clone())),
+            ]),
+            ToServer::SimArrival { t, req } => Json::obj(vec![
+                ("type", Json::str("sim_arrival")),
+                ("t", Json::num(*t)),
+                ("req", request_to_json(req)),
+            ]),
+            ToServer::SimDispatch { t } => Json::obj(vec![
+                ("type", Json::str("sim_dispatch")),
+                ("t", Json::num(*t)),
+            ]),
+            ToServer::SimBatchDone { server } => Json::obj(vec![
+                ("type", Json::str("sim_batch_done")),
+                ("server", Json::num(*server as f64)),
+            ]),
+            ToServer::SimReplicaWarm { t, server } => Json::obj(vec![
+                ("type", Json::str("sim_replica_warm")),
+                ("t", Json::num(*t)),
+                ("server", Json::num(*server as f64)),
+            ]),
+            ToServer::SimAutoscale { grid_t } => Json::obj(vec![
+                ("type", Json::str("sim_autoscale")),
+                ("grid_t", Json::num(*grid_t)),
+            ]),
+            ToServer::SimThresholds { t, thresholds } => Json::obj(vec![
+                ("type", Json::str("sim_thresholds")),
+                ("t", Json::num(*t)),
+                (
+                    "thresholds",
+                    Json::Arr(
+                        thresholds
+                            .iter()
+                            .map(|(device, tier, th)| {
+                                Json::obj(vec![
+                                    ("device", Json::num(*device as f64)),
+                                    ("tier", Json::str(tier.name())),
+                                    ("threshold", Json::num(*th)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            ToServer::SimStats { now } => Json::obj(vec![
+                ("type", Json::str("sim_stats")),
+                ("now", Json::num(*now)),
+            ]),
+            ToServer::SimBye => Json::obj(vec![("type", Json::str("sim_bye"))]),
         }
     }
 
@@ -107,6 +501,47 @@ impl ToServer {
                 sr_percent: v.f64_at("sr_percent")?,
             }),
             "bye" => Ok(ToServer::Bye),
+            "sim_hello" => Ok(ToServer::SimHello {
+                digest: v.str_at("digest")?.to_string(),
+            }),
+            "sim_arrival" => Ok(ToServer::SimArrival {
+                t: v.f64_at("t")?,
+                req: request_from_json(v.req("req")?)?,
+            }),
+            "sim_dispatch" => Ok(ToServer::SimDispatch { t: v.f64_at("t")? }),
+            "sim_batch_done" => Ok(ToServer::SimBatchDone {
+                server: usize_at(v, "server")?,
+            }),
+            "sim_replica_warm" => Ok(ToServer::SimReplicaWarm {
+                t: v.f64_at("t")?,
+                server: usize_at(v, "server")?,
+            }),
+            "sim_autoscale" => Ok(ToServer::SimAutoscale {
+                grid_t: v.f64_at("grid_t")?,
+            }),
+            "sim_thresholds" => {
+                let thresholds = v
+                    .req("thresholds")?
+                    .as_arr()
+                    .context("'thresholds' not an array")?
+                    .iter()
+                    .map(|e| {
+                        Ok((
+                            usize_at(e, "device")?,
+                            Tier::parse(e.str_at("tier")?)?,
+                            e.f64_at("threshold")?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ToServer::SimThresholds {
+                    t: v.f64_at("t")?,
+                    thresholds,
+                })
+            }
+            "sim_stats" => Ok(ToServer::SimStats {
+                now: v.f64_at("now")?,
+            }),
+            "sim_bye" => Ok(ToServer::SimBye),
             other => bail!("unknown ToServer type '{other}'"),
         }
     }
@@ -137,6 +572,68 @@ impl ToDevice {
                 ("type", Json::str("set_threshold")),
                 ("threshold", Json::num(*threshold)),
             ]),
+            ToDevice::Shed { request_id } => Json::obj(vec![
+                ("type", Json::str("shed")),
+                ("request_id", Json::num(*request_id as f64)),
+            ]),
+            ToDevice::SimWelcome {
+                wants_switch_telemetry,
+            } => Json::obj(vec![
+                ("type", Json::str("sim_welcome")),
+                ("wants_switch_telemetry", Json::Bool(*wants_switch_telemetry)),
+            ]),
+            ToDevice::SimVerdict {
+                shed,
+                observed,
+                batch_sizes,
+                events,
+            } => Json::obj(vec![
+                ("type", Json::str("sim_verdict")),
+                ("shed", Json::Bool(*shed)),
+                (
+                    "observed",
+                    Json::Arr(observed.iter().map(|&o| Json::num(o as f64)).collect()),
+                ),
+                ("batch_sizes", Json::arr_f64(batch_sizes)),
+                ("events", events_to_json(events)),
+            ]),
+            ToDevice::SimBatch { model, batch } => Json::obj(vec![
+                ("type", Json::str("sim_batch")),
+                ("model", Json::str(model.clone())),
+                (
+                    "batch",
+                    Json::Arr(batch.iter().map(request_to_json).collect()),
+                ),
+            ]),
+            ToDevice::SimLoads {
+                observed,
+                batch_sizes,
+                events,
+            } => Json::obj(vec![
+                ("type", Json::str("sim_loads")),
+                (
+                    "observed",
+                    Json::Arr(observed.iter().map(|&o| Json::num(o as f64)).collect()),
+                ),
+                ("batch_sizes", Json::arr_f64(batch_sizes)),
+                ("events", events_to_json(events)),
+            ]),
+            ToDevice::SimScale { outcomes } => Json::obj(vec![
+                ("type", Json::str("sim_scale")),
+                (
+                    "outcomes",
+                    Json::Arr(outcomes.iter().map(scale_to_json).collect()),
+                ),
+            ]),
+            ToDevice::SimStatsReport { stats } => Json::obj(vec![
+                ("type", Json::str("sim_stats_report")),
+                ("stats", stats_to_json(stats)),
+            ]),
+            ToDevice::SimOk => Json::obj(vec![("type", Json::str("sim_ok"))]),
+            ToDevice::SimError { message } => Json::obj(vec![
+                ("type", Json::str("sim_error")),
+                ("message", Json::str(message.clone())),
+            ]),
         }
     }
 
@@ -154,44 +651,175 @@ impl ToDevice {
             "set_threshold" => Ok(ToDevice::SetThreshold {
                 threshold: v.f64_at("threshold")?,
             }),
+            "shed" => Ok(ToDevice::Shed {
+                request_id: v.f64_at("request_id")? as u64,
+            }),
+            "sim_welcome" => Ok(ToDevice::SimWelcome {
+                wants_switch_telemetry: v
+                    .req("wants_switch_telemetry")?
+                    .as_bool()
+                    .context("'wants_switch_telemetry' not a bool")?,
+            }),
+            "sim_verdict" => Ok(ToDevice::SimVerdict {
+                shed: v.req("shed")?.as_bool().context("'shed' not a bool")?,
+                observed: usize_arr(v, "observed")?,
+                batch_sizes: f64_arr(v, "batch_sizes")?,
+                events: events_from_json(v, "events")?,
+            }),
+            "sim_batch" => Ok(ToDevice::SimBatch {
+                model: v.str_at("model")?.to_string(),
+                batch: v
+                    .req("batch")?
+                    .as_arr()
+                    .context("'batch' not an array")?
+                    .iter()
+                    .map(request_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+            "sim_loads" => Ok(ToDevice::SimLoads {
+                observed: usize_arr(v, "observed")?,
+                batch_sizes: f64_arr(v, "batch_sizes")?,
+                events: events_from_json(v, "events")?,
+            }),
+            "sim_scale" => Ok(ToDevice::SimScale {
+                outcomes: v
+                    .req("outcomes")?
+                    .as_arr()
+                    .context("'outcomes' not an array")?
+                    .iter()
+                    .map(scale_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+            "sim_stats_report" => Ok(ToDevice::SimStatsReport {
+                stats: stats_from_json(v.req("stats")?)?,
+            }),
+            "sim_ok" => Ok(ToDevice::SimOk),
+            "sim_error" => Ok(ToDevice::SimError {
+                message: v.str_at("message")?.to_string(),
+            }),
             other => bail!("unknown ToDevice type '{other}'"),
         }
     }
 }
 
+// ------------------------------------------------------------ framing
+
 /// Write one length-prefixed frame.
 pub fn write_frame<W: Write>(w: &mut W, v: &Json) -> Result<()> {
     let body = v.to_string().into_bytes();
-    anyhow::ensure!(body.len() as u32 <= MAX_FRAME, "frame too large");
-    w.write_all(&(body.len() as u32).to_le_bytes())?;
-    w.write_all(&body)?;
-    w.flush()?;
+    anyhow::ensure!(
+        body.len() as u64 <= MAX_FRAME as u64,
+        "frame too large: {} bytes (MAX_FRAME is {MAX_FRAME})",
+        body.len()
+    );
+    w.write_all(&(body.len() as u32).to_le_bytes())
+        .context("writing frame length prefix")?;
+    w.write_all(&body).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
     Ok(())
 }
 
-/// Read one length-prefixed frame; None on clean EOF.
-pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
-    let mut len_buf = [0u8; 4];
-    match r.read_exact(&mut len_buf) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e.into()),
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// Shared frame reader. `idle` is consulted when a read times out
+/// *before the first byte of a frame* (idle at a frame boundary): it
+/// returns true to keep waiting, false to give up cleanly. A timeout
+/// after the first byte — or any timeout with no idle handler — is a
+/// hard error: the peer stalled mid-frame.
+fn read_frame_impl<R: Read>(
+    r: &mut R,
+    mut idle: Option<&mut dyn FnMut() -> bool>,
+) -> Result<Option<Json>> {
+    // Length prefix — accumulated byte by byte so a timeout never
+    // loses partial progress (read_exact discards it).
+    let mut hdr = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < 4 {
+        match r.read(&mut hdr[filled..]) {
+            // Clean EOF is only clean at a frame boundary.
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => bail!("peer closed mid-frame: got {filled} of 4 length-prefix bytes"),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) && filled == 0 && idle.is_some() => {
+                if !idle.as_mut().unwrap()() {
+                    return Ok(None);
+                }
+            }
+            Err(e) if is_timeout(&e) => {
+                return Err(anyhow::Error::new(e).context(format!(
+                    "read timed out mid-frame ({filled} of 4 length-prefix bytes)"
+                )))
+            }
+            Err(e) => return Err(anyhow::Error::new(e).context("reading frame length prefix")),
+        }
     }
-    let len = u32::from_le_bytes(len_buf);
-    anyhow::ensure!(len <= MAX_FRAME, "oversized frame: {len}");
-    let mut body = vec![0u8; len as usize];
-    r.read_exact(&mut body)?;
-    let text = String::from_utf8(body).context("frame not utf-8")?;
-    Ok(Some(Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?))
+    let len = u32::from_le_bytes(hdr);
+    anyhow::ensure!(
+        len <= MAX_FRAME,
+        "oversized frame: claimed {len} bytes (MAX_FRAME is {MAX_FRAME})"
+    );
+    // Body: never pre-allocate the claimed size — grow only as bytes
+    // actually arrive (same discipline as the `.events` reader), so a
+    // hostile length prefix cannot force a 16 MiB allocation.
+    let len = len as usize;
+    let mut body = Vec::new();
+    let mut chunk = [0u8; 4096];
+    while body.len() < len {
+        let want = chunk.len().min(len - body.len());
+        match r.read(&mut chunk[..want]) {
+            Ok(0) => bail!(
+                "peer closed mid-frame: got {} of {len} body bytes",
+                body.len()
+            ),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                return Err(anyhow::Error::new(e).context(format!(
+                    "read timed out mid-frame ({} of {len} body bytes)",
+                    body.len()
+                )))
+            }
+            Err(e) => return Err(anyhow::Error::new(e).context("reading frame body")),
+        }
+    }
+    let text = std::str::from_utf8(&body).context("frame body not utf-8")?;
+    match Json::parse(text) {
+        Ok(v) => Ok(Some(v)),
+        Err(e) => bail!("frame body is not valid JSON: {e}"),
+    }
+}
+
+/// Read one length-prefixed frame; None on clean EOF at a frame
+/// boundary. Truncation (EOF mid-frame) and oversized claims are
+/// contextful errors, never panics.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    read_frame_impl(r, None)
+}
+
+/// Read one frame from a stream with a read timeout set: a timeout
+/// while idle at a frame boundary consults `keep_waiting` (true =>
+/// continue, false => give up, returning None); a timeout mid-frame is
+/// a contextful error (the peer stalled).
+pub fn read_frame_patient<R: Read>(
+    r: &mut R,
+    mut keep_waiting: impl FnMut() -> bool,
+) -> Result<Option<Json>> {
+    read_frame_impl(r, Some(&mut keep_waiting))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn to_server_roundtrip() {
-        let msgs = [
+    /// One of every ToServer message (round-trip corpus).
+    pub(crate) fn to_server_corpus() -> Vec<ToServer> {
+        vec![
             ToServer::Hello {
                 tier: "low".into(),
                 sr_target: 95.0,
@@ -203,16 +831,29 @@ mod tests {
             },
             ToServer::SrUpdate { sr_percent: 92.5 },
             ToServer::Bye,
-        ];
-        for m in msgs {
-            let back = ToServer::from_json(&m.to_json()).unwrap();
-            assert_eq!(back, m);
-        }
+            ToServer::SimHello {
+                digest: "00c0ffee15c0ffee".into(),
+            },
+            ToServer::SimArrival {
+                t: 1.5,
+                req: sample_request(),
+            },
+            ToServer::SimDispatch { t: 2.25 },
+            ToServer::SimBatchDone { server: 3 },
+            ToServer::SimReplicaWarm { t: 4.5, server: 1 },
+            ToServer::SimAutoscale { grid_t: 6.0 },
+            ToServer::SimThresholds {
+                t: 7.5,
+                thresholds: vec![(0, Tier::Low, 0.5), (1, Tier::High, 0.625)],
+            },
+            ToServer::SimStats { now: 8.25 },
+            ToServer::SimBye,
+        ]
     }
 
-    #[test]
-    fn to_device_roundtrip() {
-        let msgs = [
+    /// One of every ToDevice message (round-trip corpus).
+    pub(crate) fn to_device_corpus() -> Vec<ToDevice> {
+        vec![
             ToDevice::Welcome {
                 device_id: 3,
                 threshold: 0.5,
@@ -223,10 +864,140 @@ mod tests {
                 p_top1: 0.875,
             },
             ToDevice::SetThreshold { threshold: 0.31 },
-        ];
-        for m in msgs {
+            ToDevice::Shed { request_id: 11 },
+            ToDevice::SimWelcome {
+                wants_switch_telemetry: true,
+            },
+            ToDevice::SimVerdict {
+                shed: false,
+                observed: vec![2, 0],
+                batch_sizes: vec![4.0, 2.0],
+                events: vec![
+                    (
+                        1.75,
+                        Event::ServerBatchDone { server: 0 },
+                    ),
+                    (
+                        2.5,
+                        Event::RequestShed {
+                            device: 4,
+                            request: RequestId::from_parts(9, 2),
+                        },
+                    ),
+                ],
+            },
+            ToDevice::SimBatch {
+                model: "srv_inception".into(),
+                batch: vec![sample_request()],
+            },
+            ToDevice::SimLoads {
+                observed: vec![1],
+                batch_sizes: vec![1.0],
+                events: vec![],
+            },
+            ToDevice::SimScale {
+                outcomes: vec![
+                    ScaleOutcome {
+                        action: ScaleAction::Parked(2),
+                        warmup_s: 0.0,
+                    },
+                    ScaleOutcome {
+                        action: ScaleAction::Unparked(1),
+                        warmup_s: 0.75,
+                    },
+                ],
+            },
+            ToDevice::SimStatsReport {
+                stats: CoreStats {
+                    queue_len: 5,
+                    busy: 2,
+                    parked: 1,
+                    warming: 0,
+                    ladder_idx: 1,
+                    shard_depths: vec![3, 2],
+                    steals: 4,
+                    shed: 6,
+                    batches_per_replica: vec![10, 12],
+                    model_batches: vec![("srv_inception".into(), 22)],
+                    parked_replica_s: 1.5,
+                    warmup_replica_s: 0.25,
+                },
+            },
+            ToDevice::SimOk,
+            ToDevice::SimError {
+                message: "core went away".into(),
+            },
+        ]
+    }
+
+    fn sample_request() -> PendingRequest {
+        PendingRequest {
+            id: RequestId::from_parts(7, 1),
+            device: 3,
+            tier: Tier::Mid,
+            start_s: 1.0,
+            deadline_s: 1.15,
+            arrival_s: 1.03,
+        }
+    }
+
+    #[test]
+    fn to_server_roundtrip() {
+        for m in to_server_corpus() {
+            let back = ToServer::from_json(&m.to_json()).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn to_device_roundtrip() {
+        for m in to_device_corpus() {
             let back = ToDevice::from_json(&m.to_json()).unwrap();
             assert_eq!(back, m);
+        }
+    }
+
+    /// Every Event kind survives the wire codec exactly, including
+    /// non-representable-as-f32 times.
+    #[test]
+    fn event_codec_roundtrips_every_kind() {
+        let rid = RequestId::from_parts(123, 4);
+        let events = [
+            Event::DeviceInferDone {
+                device: 9,
+                dur_s: 0.031,
+            },
+            Event::ServerArrival { request: rid },
+            Event::ServerBatchDone { server: 2 },
+            Event::ResultArrival {
+                device: 9,
+                request: rid,
+            },
+            Event::RequestShed {
+                device: 9,
+                request: rid,
+            },
+            Event::ReplicaWarm { server: 1 },
+            Event::SrWindow { device: 0 },
+            Event::DeviceResume { device: 5 },
+        ];
+        for ev in events {
+            let t = 1.0 + 1.0 / 3.0; // not exactly representable in decimal
+            let (t2, ev2) = event_from_json(&event_to_json(t, &ev)).unwrap();
+            assert_eq!(t2, t, "time must round-trip bit-exactly");
+            assert_eq!(ev2, ev);
+        }
+    }
+
+    /// Virtual times must survive JSON round-trip bit-exactly — the
+    /// lock-step protocol's correctness depends on it.
+    #[test]
+    fn f64_wire_round_trip_is_exact() {
+        for &x in &[0.1 + 0.2, 1.0 / 3.0, 1e-12, 123456.789012345, 0.03125] {
+            let j = Json::num(x);
+            let text = j.to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} mangled via '{text}'");
         }
     }
 
@@ -246,7 +1017,53 @@ mod tests {
     fn rejects_oversized_frame_header() {
         let mut buf = Vec::new();
         buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
-        assert!(read_frame(&mut buf.as_slice()).is_err());
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("oversized frame"),
+            "uncontextful error: {err:#}"
+        );
+    }
+
+    /// Truncated payload: the claimed length says 100 bytes, the
+    /// stream ends after 3. Must be a contextful error, not a panic,
+    /// not a silent None.
+    #[test]
+    fn truncated_body_is_contextful_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.extend_from_slice(b"{\"t");
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("closed mid-frame") && msg.contains("3 of 100"),
+            "uncontextful truncation error: {msg}"
+        );
+    }
+
+    /// Mid-stream disconnect inside the length prefix itself.
+    #[test]
+    fn truncated_header_is_contextful_error() {
+        let buf = [7u8, 0];
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("closed mid-frame") && msg.contains("2 of 4"),
+            "uncontextful truncation error: {msg}"
+        );
+    }
+
+    /// A claimed length just under MAX_FRAME with a tiny actual body
+    /// must not allocate the claimed size before reading.
+    #[test]
+    fn claimed_length_is_not_preallocated() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAX_FRAME.to_le_bytes());
+        buf.extend_from_slice(b"x");
+        // If the reader pre-allocated MAX_FRAME here it would still
+        // succeed — the property pinned is that truncation errors out
+        // cheaply after reading only what arrived.
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("1 of 16777216"));
     }
 
     #[test]
@@ -254,5 +1071,67 @@ mod tests {
         let v = Json::parse(r#"{"type": "bogus"}"#).unwrap();
         assert!(ToServer::from_json(&v).is_err());
         assert!(ToDevice::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_non_utf8_body() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[0xff, 0xfe]);
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("utf-8"));
+    }
+
+    #[test]
+    fn rejects_invalid_json_body() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(b"{{{");
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("not valid JSON"));
+    }
+
+    /// read_frame_patient gives up cleanly when the wait callback says
+    /// stop (simulated with a reader that always times out).
+    #[test]
+    fn patient_reader_respects_keep_waiting() {
+        struct AlwaysTimeout;
+        impl Read for AlwaysTimeout {
+            fn read(&mut self, _b: &mut [u8]) -> io::Result<usize> {
+                Err(io::Error::new(io::ErrorKind::WouldBlock, "timeout"))
+            }
+        }
+        let mut waits = 0;
+        let got = read_frame_patient(&mut AlwaysTimeout, || {
+            waits += 1;
+            waits < 3
+        })
+        .unwrap();
+        assert!(got.is_none());
+        assert_eq!(waits, 3);
+    }
+
+    /// A timeout after the first header byte is a mid-frame stall, not
+    /// an idle wait — hard error even with a patient reader.
+    #[test]
+    fn patient_reader_errors_on_midframe_stall() {
+        struct OneByteThenTimeout(bool);
+        impl Read for OneByteThenTimeout {
+            fn read(&mut self, b: &mut [u8]) -> io::Result<usize> {
+                if !self.0 {
+                    self.0 = true;
+                    b[0] = 9;
+                    Ok(1)
+                } else {
+                    Err(io::Error::new(io::ErrorKind::TimedOut, "timeout"))
+                }
+            }
+        }
+        let err = read_frame_patient(&mut OneByteThenTimeout(false), || true).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("timed out mid-frame") && msg.contains("1 of 4"),
+            "uncontextful stall error: {msg}"
+        );
     }
 }

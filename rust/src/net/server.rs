@@ -1,291 +1,996 @@
-//! Live-mode leader: a threaded TCP server that owns the PJRT engine,
-//! the request queue, the dynamic batcher and the MultiTASC++
-//! scheduler — the paper's architecture (Fig 2) in wall-clock time.
+//! Live serving leader: a thin TCP reactor over the *same*
+//! [`ServerSubsystem`] scheduling core the simulator runs.
 //!
-//! Thread layout (the PJRT client is not Send, so inference stays on
-//! one thread):
-//! * acceptor: takes connections, spawns one reader per device;
-//! * readers: decode frames, push Forward requests into the shared
-//!   queue, relay SR updates to the scheduler mailbox;
-//! * executor (main thread): drains the queue with dynamic batching,
-//!   runs the server model through PJRT, writes answers back, applies
-//!   scheduler updates.
+//! The old live path carried its own queue, its own batch loop, and
+//! its own admission rules — a second scheduler that could drift from
+//! the simulated one. It is gone: the serve loop now only translates
+//! framed [`crate::net::proto`] requests into the sim's
+//! [`PendingRequest`] descriptors, feeds them to a [`ServerCore`], and
+//! relays the core's decisions (batches, sheds, threshold updates)
+//! back over the sockets. Every queue/batch/shed/scale decision is the
+//! subsystem's, identical to `mtpp sim` (docs/serving.md).
+//!
+//! Two request families share the listener:
+//!
+//! * **wall-clock device protocol** (`Hello`/`Forward`/...): real
+//!   device agents in real time. Virtual time is seconds since leader
+//!   start; the core's scheduled events (batch completions, warm-ups)
+//!   fire when the wall clock reaches their stamps. Heavy-model
+//!   inference runs at batch completion when artifacts are loaded;
+//!   without a registry the leader sheds every forward at the
+//!   transport.
+//! * **lock-step sim protocol** (`SimHello`...): `mtpp loadgen` drives
+//!   a private core in request-carried virtual time — the leader never
+//!   consults a clock for these. Each session gets a fresh
+//!   [`ServerSubsystem`] built from the same scenario, and each RPC
+//!   relays whatever the core pushed, in original push order, so the
+//!   remote engine reproduces in-process FIFO tie-breaking exactly.
+//!
+//! Connection robustness (the knobs live in `ScenarioSpec.serve`):
+//! per-request SLO deadlines ride in every descriptor (admission and
+//! slack culling enforce them), sockets carry read/write timeouts, a
+//! per-connection in-flight bound sheds excess load at the transport,
+//! and shutdown drains queued work in virtual order under a hard
+//! drain-timeout before closing.
+//!
+//! Threading: thread-per-connection plus one acceptor — sanctioned
+//! here by the `no-threading-outside-par` lint's net/ carve-out
+//! (docs/linting.md). The scheduling cores stay single-threaded: the
+//! wall core on the executor thread, each sim core on its session's
+//! reader thread.
 
-use std::collections::VecDeque;
-use std::io::BufReader;
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::config::latency::server_latency_model;
+use crate::config::scenario::Scenario;
+use crate::config::spec::ScenarioSpec;
 use crate::config::SystemConfig;
+use crate::metrics::RunMetrics;
 use crate::models::{Registry, Tier};
-use crate::net::proto::{read_frame, write_frame, ToDevice, ToServer};
+use crate::net::proto::{read_frame_patient, write_frame, ToDevice, ToServer};
 use crate::runtime::Engine;
-use crate::scheduler::{MultiTascPP, Scheduler};
+use crate::scheduler::{self, Scheduler};
+use crate::sim::event::{Event, EventQueue};
+use crate::sim::experiment::build_switchers;
+use crate::sim::server::{PendingRequest, ScaleAction};
+use crate::sim::subsystem::{ForwardingVerdict, ServerCore, ServerSubsystem};
+use crate::sim::{RequestArena, RequestId};
+use crate::util::stats::fnv1a64;
 
-struct PendingRequest {
-    device_id: u64,
+/// Hex FNV-1a64 digest of a spec's canonical JSON — the sim-session
+/// handshake token. A loadgen configured differently from the leader
+/// (different policy, seed, population, ...) is rejected at `SimHello`
+/// instead of producing silently divergent metrics.
+pub fn spec_digest(spec: &ScenarioSpec) -> String {
+    format!("{:016x}", fnv1a64(spec.to_json().to_string().as_bytes()))
+}
+
+/// Leader options. `Default` mirrors the `ScenarioSpec.serve`
+/// defaults; [`ServeOptions::from_spec`] resolves a full spec
+/// (address, model, timeouts, and the handshake digest) in one step.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub addr: String,
+    pub server_model: String,
+    /// Exit after this many wall-mode answers (0 = run until idle).
+    pub answer_limit: usize,
+    /// Exit after this long with no connected peers (zero = never).
+    pub idle_timeout: Duration,
+    /// Per-connection socket read timeout.
+    pub read_timeout: Duration,
+    /// Per-connection socket write timeout.
+    pub write_timeout: Duration,
+    /// Per-connection unanswered-forward cap (0 = unbounded).
+    pub max_in_flight: usize,
+    /// Graceful-shutdown drain bound.
+    pub drain_timeout: Duration,
+    /// Require sim sessions to present this spec digest
+    /// (`None` = accept any).
+    pub expect_digest: Option<String>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7607".to_string(),
+            server_model: "srv_inception".to_string(),
+            answer_limit: 0,
+            idle_timeout: Duration::from_secs(30),
+            read_timeout: Duration::from_millis(2000),
+            write_timeout: Duration::from_millis(2000),
+            max_in_flight: 64,
+            drain_timeout: Duration::from_secs(5),
+            expect_digest: None,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Resolve every transport knob from a scenario spec, pinning the
+    /// sim-session handshake to that spec's digest.
+    pub fn from_spec(spec: &ScenarioSpec) -> Self {
+        Self {
+            addr: spec.serve.listen_addr.clone(),
+            server_model: spec.server_model.clone(),
+            answer_limit: 0,
+            idle_timeout: Duration::from_secs_f64(spec.serve.idle_timeout_s),
+            read_timeout: Duration::from_secs_f64(spec.serve.read_timeout_ms / 1000.0),
+            write_timeout: Duration::from_secs_f64(spec.serve.write_timeout_ms / 1000.0),
+            max_in_flight: spec.serve.max_in_flight,
+            drain_timeout: Duration::from_secs_f64(spec.serve.drain_timeout_s),
+            expect_digest: Some(spec_digest(spec)),
+        }
+    }
+}
+
+/// What a finished leader did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeReport {
+    /// Wall-mode heavy-model answers written.
+    pub answered: u64,
+    /// Wall-mode requests shed (core admission + transport bounds).
+    pub shed: u64,
+    /// Lock-step sim sessions accepted.
+    pub sim_sessions: u64,
+}
+
+// ------------------------------------------------------------ wiring
+
+/// Wall-mode traffic a reader thread hands the executor. One shared
+/// FIFO keeps cross-connection ordering under the executor's single
+/// thread.
+enum Incoming {
+    Hello {
+        conn: u64,
+        tier: String,
+        sr_target: f64,
+        slo_ms: f64,
+    },
+    Forward {
+        conn: u64,
+        request_id: u64,
+        features: Vec<f32>,
+    },
+    SrUpdate {
+        conn: u64,
+        sr_percent: f64,
+    },
+    Gone {
+        conn: u64,
+    },
+}
+
+struct Shared {
+    inbox: Mutex<VecDeque<Incoming>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    /// Currently-connected peers (wall and sim alike; idle-exit input).
+    active_conns: AtomicUsize,
+    /// Whether any peer ever connected (idle-exit arms only after).
+    seen_any: AtomicBool,
+    sim_sessions: AtomicU64,
+}
+
+impl Shared {
+    fn push(&self, msg: Incoming) {
+        self.inbox.lock().unwrap().push_back(msg);
+        self.cv.notify_all();
+    }
+
+    fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-connection writer handles (answers + threshold pushes).
+type Writers = Arc<Mutex<BTreeMap<u64, TcpStream>>>;
+
+/// Arena payload for a wall-mode forward: where the answer goes and
+/// the features the heavy model will see.
+struct WallReq {
+    conn: u64,
     request_id: u64,
     features: Vec<f32>,
 }
 
-enum Telemetry {
-    Sr { device_id: u64, sr_percent: f64 },
-    Gone { device_id: u64 },
+/// Per-connection wall-mode state the executor tracks.
+struct ConnState {
+    tier: Tier,
+    slo_s: f64,
+    in_flight: usize,
 }
 
-#[derive(Default)]
-struct Shared {
-    queue: Mutex<VecDeque<PendingRequest>>,
-    telemetry: Mutex<Vec<Telemetry>>,
-    cv: Condvar,
-    stop: AtomicBool,
+/// A bound leader: the listener is live (so [`local_addr`] works and
+/// peers can connect) but no traffic is processed until [`run`].
+///
+/// [`local_addr`]: LiveServer::local_addr
+/// [`run`]: LiveServer::run
+pub struct LiveServer {
+    listener: TcpListener,
+    scn: Arc<Scenario>,
+    cfg: SystemConfig,
+    opts: ServeOptions,
 }
 
-/// Per-device writer handles (answers + threshold pushes).
-type Writers = Arc<Mutex<std::collections::BTreeMap<u64, TcpStream>>>;
-
-pub struct ServeOptions {
-    pub addr: String,
-    pub server_model: String,
-    /// Exit after this many answered requests (0 = run forever). Lets
-    /// the live example terminate deterministically.
-    pub answer_limit: usize,
-    /// Exit if idle (no connected devices) for this long once at least
-    /// one device has connected.
-    pub idle_timeout: Duration,
-}
-
-pub fn serve(registry: Registry, cfg: &SystemConfig, opts: &ServeOptions) -> Result<u64> {
-    // Bind before the (slow) artifact warm-up so clients can connect
-    // immediately; their first requests just queue.
+/// Bind the leader socket. The scenario supplies the scheduling side
+/// (policy, scheduler kind, server model, switching); `opts` supplies
+/// the transport side.
+pub fn bind(cfg: &SystemConfig, scn: Scenario, opts: ServeOptions) -> Result<LiveServer> {
     let listener = TcpListener::bind(&opts.addr)
-        .with_context(|| format!("bind {}", opts.addr))?;
-    listener.set_nonblocking(true)?;
-    log::info!("mtpp serve: listening on {}", opts.addr);
-    let engine = Engine::new(registry)?;
-    engine.warm(&opts.server_model)?;
+        .with_context(|| format!("bind leader socket {}", opts.addr))?;
+    Ok(LiveServer {
+        listener,
+        scn: Arc::new(scn),
+        cfg: cfg.clone(),
+        opts,
+    })
+}
 
-    let shared = Arc::new(Shared::default());
-    let writers: Writers = Arc::new(Mutex::new(Default::default()));
-    let next_device = Arc::new(AtomicU64::new(0));
-    let connected = Arc::new(AtomicU64::new(0));
-    let mut scheduler = MultiTascPP::new(cfg.update_gain);
+impl LiveServer {
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("leader local_addr")
+    }
 
-    // Acceptor thread.
-    let acceptor = {
-        let shared = shared.clone();
-        let writers = writers.clone();
-        let next_device = next_device.clone();
-        let connected = connected.clone();
-        std::thread::spawn(move || loop {
-            if shared.stop.load(Ordering::Relaxed) {
-                break;
-            }
-            match listener.accept() {
-                Ok((stream, peer)) => {
-                    let id = next_device.fetch_add(1, Ordering::Relaxed);
-                    log::info!("device {id} connected from {peer}");
-                    connected.fetch_add(1, Ordering::Relaxed);
-                    let shared = shared.clone();
-                    let writers = writers.clone();
-                    let connected = connected.clone();
-                    std::thread::spawn(move || {
-                        if let Err(e) = reader_loop(id, stream, &shared, &writers) {
-                            log::warn!("device {id} reader: {e:#}");
-                        }
-                        writers.lock().unwrap().remove(&id);
-                        shared
-                            .telemetry
-                            .lock()
-                            .unwrap()
-                            .push(Telemetry::Gone { device_id: id });
-                        connected.fetch_sub(1, Ordering::Relaxed);
-                        shared.cv.notify_all();
-                    });
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(20));
-                }
-                Err(e) => {
-                    log::warn!("accept: {e}");
-                    break;
-                }
-            }
-        })
-    };
+    /// Run the leader to completion: accept connections, serve wall
+    /// and sim traffic, exit on the answer limit / idle timeout, then
+    /// drain gracefully. `registry` enables real heavy-model inference
+    /// for wall-mode forwards (and §IV-E switch controllers for every
+    /// mode); without it wall-mode forwards are shed at the transport
+    /// and only switching-free scenarios accept sim sessions.
+    pub fn run(self, registry: Option<Registry>) -> Result<ServeReport> {
+        let LiveServer {
+            listener,
+            scn,
+            cfg,
+            opts,
+        } = self;
+        let shared = Arc::new(Shared {
+            inbox: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            seen_any: AtomicBool::new(false),
+            sim_sessions: AtomicU64::new(0),
+        });
+        let writers: Writers = Arc::new(Mutex::new(BTreeMap::new()));
+        let registry = Arc::new(registry);
 
-    // Executor loop (this thread owns PJRT).
-    let input_dim = engine.registry().input_dim;
-    let max_batch = crate::config::latency::server_latency_model(&opts.server_model).max_batch;
-    let mut answered: u64 = 0;
-    let mut seen_any = false;
-    let mut idle_since = Instant::now();
-    loop {
-        // Telemetry first: registrations arrive via writer map, SR via
-        // the mailbox.
-        for t in shared.telemetry.lock().unwrap().drain(..) {
-            match t {
-                Telemetry::Sr {
-                    device_id,
-                    sr_percent,
-                } => {
-                    if let Some(upd) = scheduler.on_sr_update(device_id as usize, sr_percent) {
-                        let writers = writers.lock().unwrap();
-                        if let Some(stream) = writers.get(&device_id) {
-                            let mut s = stream.try_clone()?;
-                            let _ = write_frame(
-                                &mut s,
-                                &ToDevice::SetThreshold {
-                                    threshold: upd.threshold,
-                                }
-                                .to_json(),
-                            );
-                        }
-                    }
-                }
-                Telemetry::Gone { device_id } => {
-                    scheduler.device_offline(device_id as usize);
-                }
+        // Real inference engine (wall mode only), built up front so a
+        // bad artifact set fails loudly at startup, not mid-stream.
+        let engine = match registry.as_ref() {
+            Some(reg) => {
+                let eng = Engine::new(reg.clone())?;
+                eng.warm(&opts.server_model)?;
+                Some(eng)
             }
-        }
-
-        // Dynamic batch: largest grid batch <= queue length.
-        let batch: Vec<PendingRequest> = {
-            let mut q = shared.queue.lock().unwrap();
-            if q.is_empty() {
-                // Wait briefly for work.
-                let (guard, _) = shared
-                    .cv
-                    .wait_timeout(q, Duration::from_millis(10))
-                    .unwrap();
-                q = guard;
-            }
-            let feasible = cfg
-                .batch_grid
-                .iter()
-                .filter(|&&b| b <= q.len() && b <= max_batch)
-                .copied()
-                .max()
-                .unwrap_or(0);
-            (0..feasible).filter_map(|_| q.pop_front()).collect()
+            None => None,
         };
 
-        if !batch.is_empty() {
-            seen_any = true;
-            idle_since = Instant::now();
-            let mut x = Vec::with_capacity(batch.len() * input_dim);
-            for r in &batch {
-                anyhow::ensure!(
-                    r.features.len() == input_dim,
-                    "device {} sent {} features, expected {input_dim}",
-                    r.device_id,
-                    r.features.len()
-                );
-                x.extend_from_slice(&r.features);
+        log::info!(
+            "mtpp serve: listening on {} (core: {} x{}, {} queue)",
+            listener.local_addr()?,
+            scn.server_model,
+            scn.server.replicas,
+            scn.server.queue.name()
+        );
+
+        // ---- acceptor + per-connection readers (net/ carve-out) ----
+        let acceptor = {
+            let listener = listener.try_clone().context("clone leader listener")?;
+            let shared = Arc::clone(&shared);
+            let writers = Arc::clone(&writers);
+            let scn = Arc::clone(&scn);
+            let cfg = cfg.clone();
+            let opts = opts.clone();
+            let registry = Arc::clone(&registry);
+            thread::spawn(move || accept_loop(listener, shared, writers, scn, cfg, opts, registry))
+        };
+
+        // ---- executor: the only thread that touches the wall core ----
+        let report = wall_executor(&scn, &cfg, &opts, engine, &shared, &writers);
+
+        // ---- shutdown: stop intake, wake everyone, join, close ----
+        shared.stop.store(true, Ordering::SeqCst);
+        shared.cv.notify_all();
+        // The acceptor polls non-blocking with a short sleep; readers
+        // wake at their read timeout and observe the stop flag.
+        let handles = acceptor.join().unwrap_or_default();
+        for h in handles {
+            let _ = h.join();
+        }
+        writers.lock().unwrap().clear();
+        drop(listener);
+
+        let mut report = report?;
+        report.sim_sessions = shared.sim_sessions.load(Ordering::SeqCst);
+        log::info!(
+            "mtpp serve: answered {} / shed {} / {} sim sessions, shutting down",
+            report.answered,
+            report.shed,
+            report.sim_sessions
+        );
+        Ok(report)
+    }
+}
+
+/// Back-compat single-call leader: default scenario shaped around
+/// `opts.server_model`, real inference from `registry`. Returns the
+/// number of answers served.
+pub fn serve(registry: Registry, cfg: &SystemConfig, opts: &ServeOptions) -> Result<u64> {
+    let scn = Scenario::homogeneous(Tier::Low, 10, &opts.server_model);
+    let server = bind(cfg, scn, opts.clone())?;
+    Ok(server.run(Some(registry))?.answered)
+}
+
+// ----------------------------------------------------- accept/readers
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    writers: Writers,
+    scn: Arc<Scenario>,
+    cfg: SystemConfig,
+    opts: ServeOptions,
+    registry: Arc<Option<Registry>>,
+) -> Vec<thread::JoinHandle<()>> {
+    let mut handles = Vec::new();
+    let mut next_conn: u64 = 0;
+    if let Err(e) = listener.set_nonblocking(true) {
+        log::warn!("leader listener set_nonblocking failed: {e}");
+        return handles;
+    }
+    while !shared.stopped() {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let conn = next_conn;
+                next_conn += 1;
+                shared.seen_any.store(true, Ordering::SeqCst);
+                shared.active_conns.fetch_add(1, Ordering::SeqCst);
+                log::info!("conn {conn}: accepted {peer}");
+                let shared = Arc::clone(&shared);
+                let writers = Arc::clone(&writers);
+                let scn = Arc::clone(&scn);
+                let cfg = cfg.clone();
+                let opts = opts.clone();
+                let registry = Arc::clone(&registry);
+                handles.push(thread::spawn(move || {
+                    if let Err(e) =
+                        reader_loop(conn, stream, &shared, &writers, &scn, &cfg, &opts, &registry)
+                    {
+                        log::warn!("conn {conn}: {e:#}");
+                    }
+                    writers.lock().unwrap().remove(&conn);
+                    shared.push(Incoming::Gone { conn });
+                    shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+                }));
             }
-            let out = engine.infer(&opts.server_model, &x, batch.len())?;
-            scheduler.on_batch_observed(batch.len());
-            let writers = writers.lock().unwrap();
-            for (i, r) in batch.iter().enumerate() {
-                if let Some(stream) = writers.get(&r.device_id) {
-                    let mut s = stream.try_clone()?;
-                    let _ = write_frame(
-                        &mut s,
-                        &ToDevice::Answer {
-                            request_id: r.request_id,
-                            top1: out.top1(i) as u32,
-                            p_top1: out.p_top1(i),
-                        }
-                        .to_json(),
-                    );
-                    answered += 1;
-                }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => {
+                log::warn!("accept error: {e}");
+                thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+    handles
+}
+
+/// One connection: the first frame decides the protocol family. Sim
+/// sessions run entirely on this thread (each owns a private core);
+/// wall-mode frames feed the executor's ordered inbox.
+#[allow(clippy::too_many_arguments)]
+fn reader_loop(
+    conn: u64,
+    mut stream: TcpStream,
+    shared: &Shared,
+    writers: &Writers,
+    scn: &Scenario,
+    cfg: &SystemConfig,
+    opts: &ServeOptions,
+    registry: &Option<Registry>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(opts.read_timeout))
+        .context("set read timeout")?;
+    stream
+        .set_write_timeout(Some(opts.write_timeout))
+        .context("set write timeout")?;
+    let Some(first) = read_frame_patient(&mut stream, || !shared.stopped())? else {
+        return Ok(());
+    };
+    let first = ToServer::from_json(&first).context("first frame")?;
+    if let ToServer::SimHello { digest } = first {
+        return sim_session(conn, stream, digest, shared, scn, cfg, opts, registry);
+    }
+    // Wall mode: register the write side, then relay frames in order.
+    let write_half = stream.try_clone().context("clone connection for writes")?;
+    writers.lock().unwrap().insert(conn, write_half);
+    if relay_wall_msg(conn, first, shared)? {
+        return Ok(());
+    }
+    loop {
+        let Some(v) = read_frame_patient(&mut stream, || !shared.stopped())? else {
+            return Ok(());
+        };
+        let msg = ToServer::from_json(&v).context("wall-mode frame")?;
+        if relay_wall_msg(conn, msg, shared)? {
+            return Ok(());
+        }
+    }
+}
+
+/// Relay one wall-mode frame into the executor inbox. `Ok(true)` means
+/// the peer said goodbye.
+fn relay_wall_msg(conn: u64, msg: ToServer, shared: &Shared) -> Result<bool> {
+    match msg {
+        ToServer::Hello {
+            tier,
+            sr_target,
+            slo_ms,
+        } => shared.push(Incoming::Hello {
+            conn,
+            tier,
+            sr_target,
+            slo_ms,
+        }),
+        ToServer::Forward {
+            request_id,
+            features,
+        } => shared.push(Incoming::Forward {
+            conn,
+            request_id,
+            features,
+        }),
+        ToServer::SrUpdate { sr_percent } => shared.push(Incoming::SrUpdate { conn, sr_percent }),
+        ToServer::Bye => return Ok(true),
+        other => anyhow::bail!("sim-protocol message {other:?} on a wall-mode connection"),
+    }
+    Ok(false)
+}
+
+// ------------------------------------------------------ wall executor
+
+/// Everything the wall reactor mutates outside the scheduling core:
+/// the answer path (engine + sockets), per-request state, counters.
+struct WallCtx<'w> {
+    engine: Option<Engine>,
+    writers: &'w Writers,
+    arena: RequestArena<WallReq>,
+    conns: BTreeMap<u64, ConnState>,
+    report: ServeReport,
+    input_dim: usize,
+}
+
+impl WallCtx<'_> {
+    /// Best-effort frame write; a dead socket just drops the message
+    /// (the reader side will notice and report `Gone`).
+    fn send(&self, conn: u64, msg: &ToDevice) {
+        let mut writers = self.writers.lock().unwrap();
+        if let Some(stream) = writers.get_mut(&conn) {
+            if let Err(e) = write_frame(stream, &msg.to_json()) {
+                log::warn!("conn {conn}: write failed, dropping ({e:#})");
+                writers.remove(&conn);
+            }
+        }
+    }
+
+    /// Resolve a shed core request back to its connection.
+    fn shed_request(&mut self, id: RequestId) {
+        let meta = self.arena.remove(id);
+        if let Some(st) = self.conns.get_mut(&meta.conn) {
+            st.in_flight = st.in_flight.saturating_sub(1);
+        }
+        self.report.shed += 1;
+        self.send(
+            meta.conn,
+            &ToDevice::Shed {
+                request_id: meta.request_id,
+            },
+        );
+    }
+}
+
+/// Feed one round's batch-load observations to the scheduler control
+/// loop and push any threshold reconfigurations to devices.
+fn feed_observations(observed: Vec<usize>, sched: &mut dyn Scheduler, wall: &mut WallCtx<'_>) {
+    for load in observed {
+        for u in sched.on_batch_observed(load) {
+            wall.send(
+                u.device as u64,
+                &ToDevice::SetThreshold {
+                    threshold: u.threshold,
+                },
+            );
+        }
+    }
+}
+
+/// The wall-clock reactor: drains the inbox, advances the core's event
+/// queue against elapsed real time, and writes answers/sheds. Runs the
+/// same `ServerSubsystem` + `Scheduler` pair as `run_scenario`, with
+/// virtual time = seconds since start.
+fn wall_executor(
+    scn: &Scenario,
+    cfg: &SystemConfig,
+    opts: &ServeOptions,
+    engine: Option<Engine>,
+    shared: &Shared,
+    writers: &Writers,
+) -> Result<ServeReport> {
+    let server_lat = server_latency_model(&scn.server_model);
+    let mut sched = scheduler::build(scn.scheduler, cfg, server_lat, scn.slo_ms, &cfg.batch_grid);
+    let switchers = match (scn.model_switching, engine.as_ref()) {
+        (true, Some(eng)) => build_switchers(scn, eng.registry())?,
+        (true, None) => anyhow::bail!("model switching needs artifacts (pass --artifacts)"),
+        (false, _) => Vec::new(),
+    };
+    let latency_of = |model: &str| server_latency_model(model);
+    let mut core = ServerSubsystem::new(cfg, &scn.server, &scn.server_model, switchers, &latency_of);
+    let mut events = EventQueue::new();
+    // Scratch metrics: the core records batch-formation sizes here;
+    // the live path reports through `ServeReport`, not `RunMetrics`.
+    let mut metrics = RunMetrics::default();
+
+    let started = Instant::now();
+    let mut idle_since = Instant::now();
+    let mut next_grid_s: f64 = 0.0;
+    let autoscaling = scn.server.autoscale.is_some();
+
+    let input_dim = engine.as_ref().map(|e| e.registry().input_dim).unwrap_or(0);
+    let mut wall = WallCtx {
+        engine,
+        writers,
+        arena: RequestArena::new(),
+        conns: BTreeMap::new(),
+        report: ServeReport::default(),
+        input_dim,
+    };
+
+    loop {
+        // 1. Arrived traffic, in cross-connection arrival order.
+        let inbound: Vec<Incoming> = {
+            let mut inbox = shared.inbox.lock().unwrap();
+            inbox.drain(..).collect()
+        };
+        for msg in inbound {
+            handle_incoming(
+                msg,
+                started.elapsed().as_secs_f64(),
+                opts,
+                sched.as_mut(),
+                &mut core,
+                &mut events,
+                &mut metrics,
+                &mut wall,
+            );
+        }
+        let now = started.elapsed().as_secs_f64();
+
+        // 2. Autoscaler grid catch-up (1 s cadence, as in the sim).
+        if autoscaling {
+            while next_grid_s <= now {
+                autoscale_grid_step(
+                    next_grid_s,
+                    now,
+                    sched.as_mut(),
+                    &mut core,
+                    &mut events,
+                    &mut metrics,
+                    &mut wall,
+                );
+                next_grid_s += 1.0;
             }
         }
 
-        // Handle Hello handshakes queued by readers (device registration
-        // with the scheduler happens here so thresholds come from one
-        // place).
-        register_new_devices(&writers, &mut scheduler, cfg);
+        // 3. Core events whose virtual time has arrived.
+        while events.peek_time().is_some_and(|t| t <= now) {
+            let (t, ev) = events.pop().expect("peeked event vanished");
+            handle_core_event(
+                t,
+                now,
+                ev,
+                sched.as_mut(),
+                &mut core,
+                &mut events,
+                &mut metrics,
+                &mut wall,
+            );
+        }
 
-        if opts.answer_limit > 0 && answered as usize >= opts.answer_limit {
+        // 4. Exit conditions.
+        if shared.stopped() {
             break;
         }
-        if seen_any
-            && connected.load(Ordering::Relaxed) == 0
+        if opts.answer_limit > 0 && wall.report.answered >= opts.answer_limit as u64 {
+            log::info!("answer limit {} reached", opts.answer_limit);
+            break;
+        }
+        if shared.active_conns.load(Ordering::SeqCst) > 0 {
+            idle_since = Instant::now();
+        } else if shared.seen_any.load(Ordering::SeqCst)
+            && !opts.idle_timeout.is_zero()
             && idle_since.elapsed() > opts.idle_timeout
         {
+            log::info!("idle for {:?}, shutting down", opts.idle_timeout);
             break;
         }
-    }
-    shared.stop.store(true, Ordering::Relaxed);
-    shared.cv.notify_all();
-    let _ = acceptor.join();
-    log::info!("mtpp serve: answered {answered} requests, shutting down");
-    Ok(answered)
-}
 
-/// Registration mailbox: (device_id, tier, sr_target) pending Welcome.
-static PENDING_HELLO: Mutex<Vec<(u64, Tier, f64)>> = Mutex::new(Vec::new());
-
-fn register_new_devices(writers: &Writers, scheduler: &mut MultiTascPP, _cfg: &SystemConfig) {
-    let pending: Vec<(u64, Tier, f64)> = PENDING_HELLO.lock().unwrap().drain(..).collect();
-    for (id, tier, sr_target) in pending {
-        // Live mode starts from a neutral mid threshold; the continuous
-        // update rule converges from there (§IV-C).
-        let threshold = scheduler.register_device(id as usize, tier, 0.5, sr_target);
-        let writers = writers.lock().unwrap();
-        if let Some(stream) = writers.get(&id) {
-            if let Ok(mut s) = stream.try_clone() {
-                let _ = write_frame(
-                    &mut s,
-                    &ToDevice::Welcome {
-                        device_id: id,
-                        threshold,
-                    }
-                    .to_json(),
-                );
-            }
+        // 5. Sleep until traffic, the next core event, or the grid.
+        let mut wake_s: f64 = 0.05;
+        if let Some(t) = events.peek_time() {
+            wake_s = wake_s.min((t - now).max(0.0));
+        }
+        if autoscaling {
+            wake_s = wake_s.min((next_grid_s - now).max(0.0));
+        }
+        let guard = shared.inbox.lock().unwrap();
+        if guard.is_empty() && !shared.stopped() {
+            let _ = shared
+                .cv
+                .wait_timeout(guard, Duration::from_secs_f64(wake_s.max(0.001)))
+                .unwrap();
         }
     }
+
+    // Graceful drain: finish queued work in virtual order, bounded
+    // hard by the drain timeout.
+    let deadline = Instant::now() + opts.drain_timeout;
+    while let Some((t, ev)) = events.pop() {
+        if Instant::now() > deadline {
+            log::warn!("drain timeout: {} events abandoned", events.len() + 1);
+            break;
+        }
+        let now = started.elapsed().as_secs_f64().max(t);
+        handle_core_event(
+            t,
+            now,
+            ev,
+            sched.as_mut(),
+            &mut core,
+            &mut events,
+            &mut metrics,
+            &mut wall,
+        );
+    }
+
+    let final_now = started.elapsed().as_secs_f64();
+    let stats = ServerCore::stats(&mut core, final_now);
+    wall.report.shed += stats.shed as u64;
+    Ok(wall.report)
 }
 
-fn reader_loop(id: u64, stream: TcpStream, shared: &Shared, writers: &Writers) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    writers.lock().unwrap().insert(id, stream);
-    while let Some(frame) = read_frame(&mut reader)? {
-        match ToServer::from_json(&frame)? {
-            ToServer::Hello {
-                tier, sr_target, ..
-            } => {
-                let tier = Tier::parse(&tier)?;
-                PENDING_HELLO.lock().unwrap().push((id, tier, sr_target));
-                shared.cv.notify_all();
+#[allow(clippy::too_many_arguments)]
+fn handle_incoming(
+    msg: Incoming,
+    now: f64,
+    opts: &ServeOptions,
+    sched: &mut dyn Scheduler,
+    core: &mut ServerSubsystem<'_>,
+    events: &mut EventQueue,
+    metrics: &mut RunMetrics,
+    wall: &mut WallCtx<'_>,
+) {
+    match msg {
+        Incoming::Hello {
+            conn,
+            tier,
+            sr_target,
+            slo_ms,
+        } => {
+            let tier = match Tier::parse(&tier) {
+                Ok(t) => t,
+                Err(e) => {
+                    log::warn!("conn {conn}: bad hello tier: {e:#}");
+                    return;
+                }
+            };
+            // Live devices join mid-run with no calibration context:
+            // start neutral and let the control loop adapt (§IV-C).
+            let threshold = sched.register_device(conn as usize, tier, 0.5, sr_target);
+            wall.conns.insert(
+                conn,
+                ConnState {
+                    tier,
+                    slo_s: slo_ms / 1000.0,
+                    in_flight: 0,
+                },
+            );
+            wall.send(
+                conn,
+                &ToDevice::Welcome {
+                    device_id: conn,
+                    threshold,
+                },
+            );
+        }
+        Incoming::Forward {
+            conn,
+            request_id,
+            features,
+        } => {
+            let Some(st) = wall.conns.get_mut(&conn) else {
+                log::warn!("conn {conn}: forward before hello, dropping");
+                return;
+            };
+            // Transport-level robustness: bound per-connection load,
+            // and never offer the core traffic it could not answer
+            // (no artifacts, wrong feature width).
+            let over_bound = opts.max_in_flight > 0 && st.in_flight >= opts.max_in_flight;
+            let bad_width = features.len() != wall.input_dim;
+            if over_bound || wall.engine.is_none() || bad_width {
+                if bad_width && wall.engine.is_some() {
+                    log::warn!(
+                        "conn {conn}: request {request_id} has {} features, want {}; shedding",
+                        features.len(),
+                        wall.input_dim
+                    );
+                }
+                wall.report.shed += 1;
+                wall.send(conn, &ToDevice::Shed { request_id });
+                return;
             }
-            ToServer::Forward {
+            st.in_flight += 1;
+            let tier = st.tier;
+            let slo_s = st.slo_s;
+            let id = wall.arena.insert(WallReq {
+                conn,
                 request_id,
                 features,
-            } => {
-                shared.queue.lock().unwrap().push_back(PendingRequest {
-                    device_id: id,
-                    request_id,
-                    features,
-                });
-                shared.cv.notify_all();
+            });
+            let req = PendingRequest {
+                id,
+                device: conn as usize,
+                tier,
+                start_s: now,
+                deadline_s: now + slo_s,
+                arrival_s: now,
+            };
+            let (verdict, observed) = core.on_arrival(now, req, events, metrics);
+            match verdict {
+                ForwardingVerdict::Shed => wall.shed_request(id),
+                ForwardingVerdict::Queued => feed_observations(observed, sched, wall),
             }
-            ToServer::SrUpdate { sr_percent } => {
-                shared.telemetry.lock().unwrap().push(Telemetry::Sr {
-                    device_id: id,
-                    sr_percent,
-                });
+        }
+        Incoming::SrUpdate { conn, sr_percent } => {
+            if let Some(u) = sched.on_sr_update(conn as usize, sr_percent) {
+                wall.send(
+                    conn,
+                    &ToDevice::SetThreshold {
+                        threshold: u.threshold,
+                    },
+                );
             }
-            ToServer::Bye => break,
+            if core.wants_switch_telemetry() {
+                let ths = sched.thresholds();
+                core.consult_switchers(&ths, now);
+            }
+        }
+        Incoming::Gone { conn } => {
+            if wall.conns.remove(&conn).is_some() {
+                sched.device_offline(conn as usize);
+            }
         }
     }
-    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn autoscale_grid_step(
+    grid_t: f64,
+    now: f64,
+    sched: &mut dyn Scheduler,
+    core: &mut ServerSubsystem<'_>,
+    events: &mut EventQueue,
+    metrics: &mut RunMetrics,
+    wall: &mut WallCtx<'_>,
+) {
+    let mut unparked_hot = false;
+    for outcome in core.autoscale_step(grid_t) {
+        if let ScaleAction::Unparked(server) = outcome.action {
+            if outcome.warmup_s > 0.0 {
+                events.push(now + outcome.warmup_s, Event::ReplicaWarm { server });
+            } else {
+                unparked_hot = true;
+            }
+        }
+    }
+    if unparked_hot {
+        let observed = core.dispatch(now, events, metrics);
+        feed_observations(observed, sched, wall);
+    }
+}
+
+/// One core-scheduled event whose virtual time has arrived. `t` is the
+/// event's stamp, `now` the current wall-elapsed time (`t <= now`).
+#[allow(clippy::too_many_arguments)]
+fn handle_core_event(
+    t: f64,
+    now: f64,
+    ev: Event,
+    sched: &mut dyn Scheduler,
+    core: &mut ServerSubsystem<'_>,
+    events: &mut EventQueue,
+    metrics: &mut RunMetrics,
+    wall: &mut WallCtx<'_>,
+) {
+    match ev {
+        Event::ServerBatchDone { server } => {
+            let (model, batch) = ServerCore::take_batch(core, server);
+            answer_batch(&model, &batch, wall);
+            let observed = core.dispatch(now, events, metrics);
+            feed_observations(observed, sched, wall);
+        }
+        Event::RequestShed { request, .. } => wall.shed_request(request),
+        Event::ReplicaWarm { server } => {
+            core.on_replica_warm(server, now);
+            let observed = core.dispatch(now, events, metrics);
+            feed_observations(observed, sched, wall);
+        }
+        // The subsystem only ever schedules the three kinds above;
+        // anything else in the queue is a reactor bug worth surfacing,
+        // but not worth killing live connections over.
+        other => log::warn!("unexpected core event at t={t}: {other:?}"),
+    }
+}
+
+/// Answer every request in a completed batch with real heavy-model
+/// outputs. Infeasible states (no engine, inference error) shed the
+/// whole batch — the devices' local predictions stand.
+fn answer_batch(model: &str, batch: &[PendingRequest], wall: &mut WallCtx<'_>) {
+    if batch.is_empty() {
+        return;
+    }
+    let Some(out) = wall.engine.as_ref().and_then(|engine| {
+        let mut x = Vec::with_capacity(batch.len() * wall.input_dim);
+        for p in batch {
+            x.extend_from_slice(&wall.arena.get(p.id).features);
+        }
+        match engine.infer(model, &x, batch.len()) {
+            Ok(out) => Some(out),
+            Err(e) => {
+                log::warn!("inference failed for batch of {}: {e:#}", batch.len());
+                None
+            }
+        }
+    }) else {
+        for p in batch {
+            wall.shed_request(p.id);
+        }
+        return;
+    };
+    for (i, p) in batch.iter().enumerate() {
+        let meta = wall.arena.remove(p.id);
+        if let Some(st) = wall.conns.get_mut(&meta.conn) {
+            st.in_flight = st.in_flight.saturating_sub(1);
+        }
+        wall.report.answered += 1;
+        wall.send(
+            meta.conn,
+            &ToDevice::Answer {
+                request_id: meta.request_id,
+                top1: out.top1(i) as u32,
+                p_top1: out.p_top1(i),
+            },
+        );
+    }
+}
+
+// ------------------------------------------------------- sim sessions
+
+/// One lock-step loadgen session: a private scheduling core driven
+/// entirely by request-carried virtual time. No clock, no inference —
+/// outputs are the loadgen's job; this side is pure scheduling.
+#[allow(clippy::too_many_arguments)]
+fn sim_session(
+    conn: u64,
+    mut stream: TcpStream,
+    digest: String,
+    shared: &Shared,
+    scn: &Scenario,
+    cfg: &SystemConfig,
+    opts: &ServeOptions,
+    registry: &Option<Registry>,
+) -> Result<()> {
+    if let Some(expect) = &opts.expect_digest {
+        if *expect != digest {
+            let msg = format!(
+                "scenario digest mismatch: leader has {expect}, loadgen sent {digest} \
+                 (both sides must run the identical spec)"
+            );
+            log::warn!("conn {conn}: {msg}");
+            let _ = write_frame(&mut stream, &ToDevice::SimError { message: msg }.to_json());
+            return Ok(());
+        }
+    }
+    let switchers = if scn.model_switching {
+        match registry {
+            Some(reg) => build_switchers(scn, reg)?,
+            None => {
+                let msg = "model switching needs artifacts on the leader".to_string();
+                let _ = write_frame(&mut stream, &ToDevice::SimError { message: msg }.to_json());
+                return Ok(());
+            }
+        }
+    } else {
+        Vec::new()
+    };
+    let latency_of = |model: &str| server_latency_model(model);
+    let mut core = ServerSubsystem::new(cfg, &scn.server, &scn.server_model, switchers, &latency_of);
+    shared.sim_sessions.fetch_add(1, Ordering::SeqCst);
+    log::info!("conn {conn}: sim session open (digest {digest})");
+    write_frame(
+        &mut stream,
+        &ToDevice::SimWelcome {
+            wants_switch_telemetry: core.wants_switch_telemetry(),
+        }
+        .to_json(),
+    )?;
+    loop {
+        let Some(v) = read_frame_patient(&mut stream, || !shared.stopped())? else {
+            return Ok(());
+        };
+        let msg = ToServer::from_json(&v).context("sim-session frame")?;
+        let reply = match msg {
+            ToServer::SimArrival { t, req } => {
+                let mut q = EventQueue::new();
+                let mut m = RunMetrics::default();
+                let (verdict, observed) = core.on_arrival(t, req, &mut q, &mut m);
+                ToDevice::SimVerdict {
+                    shed: verdict == ForwardingVerdict::Shed,
+                    observed,
+                    batch_sizes: m.batch_sizes.values().to_vec(),
+                    events: q.drain_in_push_order(),
+                }
+            }
+            ToServer::SimDispatch { t } => {
+                let mut q = EventQueue::new();
+                let mut m = RunMetrics::default();
+                let observed = core.dispatch(t, &mut q, &mut m);
+                ToDevice::SimLoads {
+                    observed,
+                    batch_sizes: m.batch_sizes.values().to_vec(),
+                    events: q.drain_in_push_order(),
+                }
+            }
+            ToServer::SimBatchDone { server } => {
+                let (model, batch) = ServerCore::take_batch(&mut core, server);
+                ToDevice::SimBatch { model, batch }
+            }
+            ToServer::SimReplicaWarm { t, server } => {
+                core.on_replica_warm(server, t);
+                ToDevice::SimOk
+            }
+            ToServer::SimAutoscale { grid_t } => ToDevice::SimScale {
+                outcomes: core.autoscale_step(grid_t),
+            },
+            ToServer::SimThresholds { t, thresholds } => {
+                core.consult_switchers(&thresholds, t);
+                ToDevice::SimOk
+            }
+            ToServer::SimStats { now } => ToDevice::SimStatsReport {
+                stats: ServerCore::stats(&mut core, now),
+            },
+            ToServer::SimBye => return Ok(()),
+            ToServer::SimHello { .. } => ToDevice::SimError {
+                message: "duplicate SimHello on an open session".to_string(),
+            },
+            other => ToDevice::SimError {
+                message: format!("wall-protocol message {other:?} on a sim session"),
+            },
+        };
+        let fatal = matches!(reply, ToDevice::SimError { .. });
+        write_frame(&mut stream, &reply.to_json())?;
+        if fatal {
+            return Ok(());
+        }
+    }
 }

@@ -63,16 +63,21 @@ use crate::sim::arena::RequestId;
 use crate::sim::event::{Event, EventQueue};
 use crate::sim::fleet::{CompletionNotice, DeviceFleet};
 use crate::sim::server::ScaleAction;
-use crate::sim::subsystem::{ForwardingVerdict, ServerSubsystem};
+use crate::sim::subsystem::{ForwardingVerdict, ServerCore, ServerSubsystem};
 
 pub use crate::sim::fleet::DeviceSpec;
 pub use crate::sim::subsystem::LatencyFn;
 
-pub struct SimEngine<'a> {
+/// The engine is generic over the scheduling core behind the
+/// [`ServerCore`] seam: `SimEngine<'a>` (the default) runs the
+/// in-process [`ServerSubsystem`]; `mtpp loadgen` instantiates it with
+/// a remote core that proxies every call to a live `mtpp serve` over
+/// loopback, so the sim and the live path share one event loop.
+pub struct SimEngine<'a, S: ServerCore = ServerSubsystem<'a>> {
     cfg: &'a SystemConfig,
     provider: &'a mut dyn OutputProvider,
     fleet: DeviceFleet<'a>,
-    server: ServerSubsystem<'a>,
+    server: S,
     events: EventQueue,
     metrics: RunMetrics,
     next_trace_s: f64,
@@ -92,13 +97,29 @@ impl<'a> SimEngine<'a> {
         specs: Vec<DeviceSpec>,
         seed: u64,
     ) -> Self {
-        let fleet = DeviceFleet::new(cfg, scheduler, specs, seed);
         let server = ServerSubsystem::new(cfg, policy, server_model, switchers, latency_of);
+        Self::with_core(cfg, scheduler, provider, specs, seed, server)
+    }
+}
+
+impl<'a, S: ServerCore> SimEngine<'a, S> {
+    /// Build the engine around an arbitrary scheduling core. The
+    /// fleet, event queue, and clock live here either way — only the
+    /// server side's decisions go through `core`.
+    pub fn with_core(
+        cfg: &'a SystemConfig,
+        scheduler: &'a mut dyn Scheduler,
+        provider: &'a mut dyn OutputProvider,
+        specs: Vec<DeviceSpec>,
+        seed: u64,
+        core: S,
+    ) -> Self {
+        let fleet = DeviceFleet::new(cfg, scheduler, specs, seed);
         Self {
             cfg,
             provider,
             fleet,
-            server,
+            server: core,
             events: EventQueue::new(),
             metrics: RunMetrics::default(),
             next_trace_s: 0.0,
@@ -182,14 +203,17 @@ impl<'a> SimEngine<'a> {
                 }
             }
         }
-        self.metrics.shed = self.server.shed_count();
-        self.metrics.steals = self.server.steal_count();
-        self.metrics.per_server_batches = self.server.batches_per_replica();
-        // The per-model batch counters ran id-indexed all run; they
-        // become name-keyed only here, at the reporting boundary.
-        self.metrics.server_model_batches = self.server.model_batches_by_name();
-        self.metrics.parked_replica_seconds = self.server.parked_replica_seconds(last_t);
-        self.metrics.warmup_replica_seconds = self.server.warmup_replica_seconds(last_t);
+        // One final core snapshot covers every server-side counter —
+        // the per-model batch counters ran id-indexed (or remote) all
+        // run; they become name-keyed only here, at the reporting
+        // boundary.
+        let stats = self.server.stats(last_t);
+        self.metrics.shed = stats.shed;
+        self.metrics.steals = stats.steals;
+        self.metrics.per_server_batches = stats.batches_per_replica;
+        self.metrics.server_model_batches = stats.model_batches.into_iter().collect();
+        self.metrics.parked_replica_seconds = stats.parked_replica_s;
+        self.metrics.warmup_replica_seconds = stats.warmup_replica_s;
         self.metrics.real_compute_ms = self.provider.real_compute_ms();
         Ok(self.metrics)
     }
@@ -249,11 +273,9 @@ impl<'a> SimEngine<'a> {
     }
 
     fn on_batch_done(&mut self, t: f64, server: usize) {
-        let (model, batch) = self.server.finish_batch(server);
+        let (model, batch) = self.server.take_batch(server);
         let samples = self.fleet.samples_for(&batch);
-        let correct = self
-            .provider
-            .server_outputs(self.server.model_name(model), &samples);
+        let correct = self.provider.server_outputs(&model, &samples);
         let comm = self.comm_s();
         for (p, ok) in batch.iter().zip(correct) {
             self.fleet.record_server_result(p.id, ok);
@@ -286,19 +308,20 @@ impl<'a> SimEngine<'a> {
                 .map(|p| (p.running_sr, p.running_acc))
                 .unwrap_or((100.0, 0.0))
         };
+        let stats = self.server.stats(t);
         self.metrics.trace.push(TracePoint {
             t_s: t,
             active_devices: scan.active_devices,
             mean_threshold: scan.mean_threshold,
             running_sr,
             running_acc,
-            queue_len: self.server.queue_len(),
-            busy_servers: self.server.busy_count(),
-            parked_servers: self.server.parked_count(),
-            warming_servers: self.server.warming_count(),
-            server_model_idx: self.server.model_ladder_idx(),
-            per_shard_depth: self.server.shard_depths(),
-            steals: self.server.steal_count(),
+            queue_len: stats.queue_len,
+            busy_servers: stats.busy,
+            parked_servers: stats.parked,
+            warming_servers: stats.warming,
+            server_model_idx: stats.ladder_idx,
+            per_shard_depth: stats.shard_depths,
+            steals: stats.steals,
         });
     }
 }

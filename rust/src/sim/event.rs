@@ -160,6 +160,40 @@ impl EventQueue {
         self.len == 0
     }
 
+    /// Earliest scheduled virtual time, without popping (None when
+    /// empty). Advances the wheel cursor as needed — pop order is
+    /// unaffected. The live reactor uses this to sleep until the next
+    /// wall-clock deadline instead of busy-polling.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        loop {
+            if let Some(s) = self.due.front() {
+                return Some(s.t);
+            }
+            if !self.advance() {
+                return None;
+            }
+        }
+    }
+
+    /// Remove every queued event, returned in original *push* order
+    /// (ascending sequence number), not pop order. The lock-step serve
+    /// protocol relays the subsystem's pushes over the wire and the
+    /// remote engine re-pushes them into its own queue: preserving
+    /// push order makes the remote queue assign the same relative
+    /// sequence numbers, reproducing the sim's FIFO tie-breaking
+    /// bit-exactly.
+    pub fn drain_in_push_order(&mut self) -> Vec<(f64, Event)> {
+        let mut all: Vec<Scheduled> = self.due.drain(..).collect();
+        for bucket in self.slots.iter_mut() {
+            all.append(bucket);
+        }
+        self.occupied = [[0; BITMAP_WORDS]; LEVELS];
+        all.append(&mut self.overflow);
+        all.sort_by_key(|s| s.seq);
+        self.len = 0;
+        all.into_iter().map(|s| (s.t, s.event)).collect()
+    }
+
     /// Route one entry to the due list, a wheel bucket, or overflow,
     /// based on where its tick falls relative to the cursor.
     fn file(&mut self, s: Scheduled) {
@@ -436,6 +470,75 @@ mod tests {
         assert_eq!(q.pop().unwrap().0, -3.0);
         assert_eq!(q.pop().unwrap().0, -1.0);
         assert_eq!(q.pop().unwrap().0, 0.5);
+    }
+
+    /// drain_in_push_order returns push order (seq), not time order,
+    /// across due list, wheel buckets, and overflow, and leaves the
+    /// queue empty.
+    #[test]
+    fn drain_in_push_order_spans_all_storage() {
+        let mut q = EventQueue::new();
+        let horizon_s = (1u64 << 24) as f64 / 1024.0;
+        q.push(5.0, Event::SrWindow { device: 0 }); // level 1
+        q.push(horizon_s * 2.0, Event::SrWindow { device: 1 }); // overflow
+        q.push(0.001, Event::SrWindow { device: 2 }); // level 0
+        // Force an advance so one event lands on the due list.
+        assert_eq!(q.peek_time().unwrap(), 0.001);
+        q.push(400.0, Event::SrWindow { device: 3 }); // level 2
+        let drained = q.drain_in_push_order();
+        let order: Vec<usize> = drained
+            .iter()
+            .map(|(_, e)| match e {
+                Event::SrWindow { device } => *device,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+        // The queue stays usable after a drain.
+        q.push(1.0, Event::SrWindow { device: 7 });
+        assert_eq!(q.pop().unwrap().0, 1.0);
+    }
+
+    /// Re-pushing a drained sequence assigns the same relative order:
+    /// pops from the reconstructed queue match the original.
+    #[test]
+    fn drain_then_repush_reproduces_pop_order() {
+        let build = || {
+            let mut q = EventQueue::new();
+            q.push(2.0, Event::SrWindow { device: 0 });
+            q.push(1.0, Event::SrWindow { device: 1 });
+            q.push(1.0, Event::SrWindow { device: 2 }); // tie with device 1
+            q.push(3.0, Event::ServerBatchDone { server: 0 });
+            q
+        };
+        let mut original = build();
+        let mut rebuilt = EventQueue::new();
+        for (t, e) in build().drain_in_push_order() {
+            rebuilt.push(t, e);
+        }
+        loop {
+            let a = original.pop();
+            let b = rebuilt.pop();
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    /// peek_time reports the next pop's time without consuming it.
+    #[test]
+    fn peek_time_matches_next_pop() {
+        let mut q = EventQueue::new();
+        assert!(q.peek_time().is_none());
+        q.push(4.0, Event::SrWindow { device: 0 });
+        q.push(2.0, Event::SrWindow { device: 1 });
+        assert_eq!(q.peek_time().unwrap(), 2.0);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.peek_time().unwrap(), 4.0);
+        assert_eq!(q.len(), 1);
     }
 
     /// A push at (or before) an already-popped time is delivered

@@ -41,7 +41,65 @@ pub fn run_scenario(
     ds: &Dataset,
     provider: &mut dyn OutputProvider,
 ) -> Result<RunMetrics> {
-    // --- device population -------------------------------------------------
+    let specs = build_device_specs(scn, cfg, registry, ds)?;
+    // Every sample must be accounted for exactly once; snapshot the
+    // expectation before the engine consumes the specs. In synthetic
+    // mode each stream has samples_per_device (clamped to the pool);
+    // in replay mode the trace governs per-device lengths.
+    let expected_samples: usize = specs.iter().map(|s| s.stream.len()).sum();
+
+    let server_lat = server_latency_model(&scn.server_model);
+    let mut sched = scheduler::build(
+        scn.scheduler,
+        cfg,
+        server_lat,
+        scn.slo_ms,
+        &cfg.batch_grid,
+    );
+    let switchers = build_switchers(scn, registry)?;
+
+    // --- run ----------------------------------------------------------------
+    let latency_of = |model: &str| server_latency_model(model);
+    let engine = SimEngine::new(
+        cfg,
+        sched.as_mut(),
+        switchers,
+        provider,
+        &latency_of,
+        &scn.server_model,
+        &scn.server,
+        specs,
+        scn.seed,
+    );
+    let metrics = engine.run()?;
+
+    ensure_conservation(&metrics, expected_samples)?;
+    Ok(metrics)
+}
+
+/// Sample-conservation invariant shared by every engine driver (sim
+/// and loadgen): each device-stream sample completes exactly once.
+pub fn ensure_conservation(metrics: &RunMetrics, expected_samples: usize) -> Result<()> {
+    anyhow::ensure!(
+        metrics.overall.samples == expected_samples,
+        "sample conservation violated: {} != {}",
+        metrics.overall.samples,
+        expected_samples
+    );
+    Ok(())
+}
+
+/// Expand a scenario's device population into engine [`DeviceSpec`]s:
+/// tier expansion, per-device streams (synthetic or trace replay),
+/// initial thresholds, SLOs, and seeded intermittent-participation
+/// draws. Factored out of [`run_scenario`] so `mtpp loadgen` builds
+/// the *identical* fleet for the live path.
+pub fn build_device_specs(
+    scn: &Scenario,
+    cfg: &SystemConfig,
+    registry: &Registry,
+    ds: &Dataset,
+) -> Result<Vec<DeviceSpec>> {
     let mut tiers: Vec<Tier> = Vec::new();
     for &(tier, count) in &scn.devices {
         tiers.extend(std::iter::repeat(tier).take(count));
@@ -107,13 +165,14 @@ pub fn run_scenario(
             offline_duration_s,
         });
     }
-    // Every sample must be accounted for exactly once; snapshot the
-    // expectation before the engine consumes the specs. In synthetic
-    // mode each stream has samples_per_device (clamped to the pool);
-    // in replay mode the trace governs per-device lengths.
-    let expected_samples: usize = specs.iter().map(|s| s.stream.len()).sum();
+    Ok(specs)
+}
 
-    // --- scheduler + switching --------------------------------------------
+/// Validate the scenario's replica-model placement and build the
+/// §IV-E switch controllers (one per replica; empty when switching is
+/// off). Factored out of [`run_scenario`] so a live `mtpp serve`
+/// assembles the identical server side from the same scenario.
+pub fn build_switchers(scn: &Scenario, registry: &Registry) -> Result<Vec<SwitchController>> {
     anyhow::ensure!(
         scn.server.models.is_empty() || scn.server.models.len() == scn.server.replicas,
         "per-replica model list ({}) must match replica count ({})",
@@ -125,14 +184,6 @@ pub fn run_scenario(
     for m in &scn.server.models {
         let _ = server_latency_model(m);
     }
-    let server_lat = server_latency_model(&scn.server_model);
-    let mut sched = scheduler::build(
-        scn.scheduler,
-        cfg,
-        server_lat,
-        scn.slo_ms,
-        &cfg.batch_grid,
-    );
     // One §IV-E controller per replica, each starting at that replica's
     // placed model, so a heterogeneous pool walks the ladder replica by
     // replica instead of switching monolithically.
@@ -170,27 +221,5 @@ pub fn run_scenario(
     } else {
         Vec::new()
     };
-
-    // --- run ----------------------------------------------------------------
-    let latency_of = |model: &str| server_latency_model(model);
-    let engine = SimEngine::new(
-        cfg,
-        sched.as_mut(),
-        switchers,
-        provider,
-        &latency_of,
-        &scn.server_model,
-        &scn.server,
-        specs,
-        scn.seed,
-    );
-    let metrics = engine.run()?;
-
-    anyhow::ensure!(
-        metrics.overall.samples == expected_samples,
-        "sample conservation violated: {} != {}",
-        metrics.overall.samples,
-        expected_samples
-    );
-    Ok(metrics)
+    Ok(switchers)
 }

@@ -18,10 +18,12 @@ pub mod subsystem;
 
 pub use arena::{RequestArena, RequestId};
 pub use engine::{DeviceSpec, SimEngine};
-pub use experiment::{run_scenario, run_spec};
+pub use experiment::{
+    build_device_specs, build_switchers, ensure_conservation, run_scenario, run_spec,
+};
 pub use fleet::{CompletionNotice, DeviceFleet};
 pub use headroom::HeadroomTracker;
 pub use server::{
     Admission, PendingRequest, PoolScaler, QueueDiscipline, ScaleAction, ServerPool,
 };
-pub use subsystem::{ForwardingVerdict, ScaleOutcome, ServerSubsystem};
+pub use subsystem::{CoreStats, ForwardingVerdict, ScaleOutcome, ServerCore, ServerSubsystem};

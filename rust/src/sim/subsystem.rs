@@ -869,6 +869,150 @@ impl<'a> ServerSubsystem<'a> {
     }
 }
 
+// ----- the transport-agnostic driver seam ------------------------------
+
+/// Point-in-time counters of a scheduling core, for the engine's
+/// telemetry trace and final accounting. One struct instead of a
+/// getter per field so a remote core ([`crate::net::loadgen`]) pays a
+/// single round trip per observation, and so the whole set crosses the
+/// wire as one message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreStats {
+    pub queue_len: usize,
+    pub busy: usize,
+    pub parked: usize,
+    pub warming: usize,
+    /// Heaviest placed model's switch-ladder index
+    /// ([`ServerSubsystem::model_ladder_idx`]).
+    pub ladder_idx: usize,
+    pub shard_depths: Vec<usize>,
+    pub steals: usize,
+    pub shed: usize,
+    pub batches_per_replica: Vec<usize>,
+    /// Per-model served-batch totals, name-keyed, sorted by name
+    /// (models that served nothing omitted).
+    pub model_batches: Vec<(String, usize)>,
+    /// Integrated parked/warming replica-seconds up to the query time.
+    pub parked_replica_s: f64,
+    pub warmup_replica_s: f64,
+}
+
+/// The engine's view of a scheduling core — exactly the calls
+/// [`crate::sim::engine::SimEngine`]'s event handlers make, nothing
+/// more. [`ServerSubsystem`] is the in-process implementation;
+/// `net::loadgen`'s `RemoteCore` forwards each call over a framed TCP
+/// connection to a live `mtpp serve` and relays back the events the
+/// far core pushed, which is what lets one engine loop drive either a
+/// sim or a live server with bit-identical scheduling.
+///
+/// Contract notes for implementors:
+/// * every event the core schedules must reach `events` in the core's
+///   original *push order* — the engine's FIFO tie-breaking depends on
+///   relative sequence numbers (see `EventQueue::drain_in_push_order`);
+/// * the only metrics field a core may touch is `batch_sizes`
+///   (batch-formation sizes, in formation order);
+/// * `take_batch` resolves the serving model to its name — the
+///   provider boundary; interned ids do not cross the seam.
+pub trait ServerCore {
+    /// Admission decision for a forwarded request (+ any dispatch it
+    /// triggered). Returns the verdict and the scheduler's congestion
+    /// observations, in formation order.
+    fn on_arrival(
+        &mut self,
+        t: f64,
+        req: PendingRequest,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+    ) -> (ForwardingVerdict, Vec<usize>);
+
+    /// Offer queued work to idle replicas; returns congestion
+    /// observations.
+    fn dispatch(&mut self, t: f64, events: &mut EventQueue, metrics: &mut RunMetrics)
+        -> Vec<usize>;
+
+    /// Complete the batch on `server`: the serving model's *name* plus
+    /// the batch's requests, leaving the replica idle.
+    fn take_batch(&mut self, server: usize) -> (String, Vec<PendingRequest>);
+
+    /// One autoscaler evaluation at grid time `grid_t`.
+    fn autoscale_step(&mut self, grid_t: f64) -> Vec<ScaleOutcome>;
+
+    /// Replica `server` finished warm-up at time `t`.
+    fn on_replica_warm(&mut self, server: usize, t: f64);
+
+    /// Whether SR windows should assemble the threshold snapshot for
+    /// [`Self::consult_switchers`].
+    fn wants_switch_telemetry(&self) -> bool;
+
+    /// §IV-E switch consultation on fresh SR telemetry.
+    fn consult_switchers(&mut self, thresholds: &[(DeviceId, Tier, f64)], t: f64);
+
+    /// Telemetry snapshot at time `now` (`&mut self` so a remote core
+    /// can run the round trip on its connection).
+    fn stats(&mut self, now: f64) -> CoreStats;
+}
+
+impl ServerCore for ServerSubsystem<'_> {
+    fn on_arrival(
+        &mut self,
+        t: f64,
+        req: PendingRequest,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+    ) -> (ForwardingVerdict, Vec<usize>) {
+        // `self.method()` resolves to the inherent method here —
+        // inherent candidates take precedence over trait ones.
+        ServerSubsystem::on_arrival(self, t, req, events, metrics)
+    }
+
+    fn dispatch(
+        &mut self,
+        t: f64,
+        events: &mut EventQueue,
+        metrics: &mut RunMetrics,
+    ) -> Vec<usize> {
+        ServerSubsystem::dispatch(self, t, events, metrics)
+    }
+
+    fn take_batch(&mut self, server: usize) -> (String, Vec<PendingRequest>) {
+        let (model, batch) = self.finish_batch(server);
+        (self.model_name(model).to_string(), batch)
+    }
+
+    fn autoscale_step(&mut self, grid_t: f64) -> Vec<ScaleOutcome> {
+        ServerSubsystem::autoscale_step(self, grid_t)
+    }
+
+    fn on_replica_warm(&mut self, server: usize, t: f64) {
+        ServerSubsystem::on_replica_warm(self, server, t)
+    }
+
+    fn wants_switch_telemetry(&self) -> bool {
+        ServerSubsystem::wants_switch_telemetry(self)
+    }
+
+    fn consult_switchers(&mut self, thresholds: &[(DeviceId, Tier, f64)], t: f64) {
+        ServerSubsystem::consult_switchers(self, thresholds, t)
+    }
+
+    fn stats(&mut self, now: f64) -> CoreStats {
+        CoreStats {
+            queue_len: self.queue_len(),
+            busy: self.busy_count(),
+            parked: self.parked_count(),
+            warming: self.warming_count(),
+            ladder_idx: self.model_ladder_idx(),
+            shard_depths: self.shard_depths(),
+            steals: self.steal_count(),
+            shed: self.shed_count(),
+            batches_per_replica: self.batches_per_replica(),
+            model_batches: self.model_batches_by_name().into_iter().collect(),
+            parked_replica_s: self.parked_replica_seconds(now),
+            warmup_replica_s: self.warmup_replica_seconds(now),
+        }
+    }
+}
+
 // ----- parallel shard planning (worker-thread side) -------------------
 //
 // Everything below runs off-thread via `runtime::par::WorkerPool`, so

@@ -19,7 +19,12 @@
 //!
 //! (see docs/linting.md, "Fuzz smoke" section).
 
+use multitascpp::models::Tier;
 use multitascpp::net::proto::{read_frame, write_frame, ToDevice, ToServer, MAX_FRAME};
+use multitascpp::sim::event::Event;
+use multitascpp::sim::server::{PendingRequest, ScaleAction};
+use multitascpp::sim::subsystem::{CoreStats, ScaleOutcome};
+use multitascpp::sim::RequestId;
 use multitascpp::trace::{
     generate, parse_text, GenSpec, TextFormat, TraceEvent, TraceFile, TraceShape, SAMPLE_NONE,
 };
@@ -151,34 +156,158 @@ fn random_garbage_never_panics() {
     }
 }
 
-fn wire_corpus() -> Vec<Json> {
+fn sample_request(slot: u32) -> PendingRequest {
+    PendingRequest {
+        id: RequestId::from_parts(slot, 2),
+        device: 3,
+        tier: Tier::Mid,
+        start_s: 1.25,
+        deadline_s: 1.4,
+        arrival_s: 1.3,
+    }
+}
+
+fn sample_events() -> Vec<(f64, Event)> {
+    vec![
+        (0.5, Event::DeviceInferDone { device: 1, dur_s: 0.031 }),
+        (0.75, Event::ServerArrival { request: RequestId::from_parts(4, 1) }),
+        (1.0, Event::ServerBatchDone { server: 2 }),
+        (1.25, Event::ResultArrival { device: 0, request: RequestId::from_parts(9, 3) }),
+        (1.5, Event::RequestShed { device: 5, request: RequestId::from_parts(11, 1) }),
+        (2.0, Event::ReplicaWarm { server: 1 }),
+        (2.5, Event::SrWindow { device: 7 }),
+        (3.0, Event::DeviceResume { device: 2 }),
+    ]
+}
+
+fn sample_stats() -> CoreStats {
+    CoreStats {
+        queue_len: 4,
+        busy: 2,
+        parked: 1,
+        warming: 1,
+        ladder_idx: 1,
+        shard_depths: vec![3, 1],
+        steals: 5,
+        shed: 2,
+        batches_per_replica: vec![10, 8, 0, 0],
+        model_batches: vec![("srv_effnetb3".into(), 8), ("srv_inception".into(), 10)],
+        parked_replica_s: 12.5,
+        warmup_replica_s: 1.75,
+    }
+}
+
+/// Every `ToServer` message type, built through the public API.
+fn server_corpus() -> Vec<ToServer> {
     vec![
         ToServer::Hello {
             tier: "low".into(),
             sr_target: 95.0,
             slo_ms: 150.0,
-        }
-        .to_json(),
+        },
         ToServer::Forward {
             request_id: 7,
             features: vec![0.5, -1.25, 3.0],
-        }
-        .to_json(),
-        ToServer::SrUpdate { sr_percent: 92.5 }.to_json(),
-        ToServer::Bye.to_json(),
+        },
+        ToServer::SrUpdate { sr_percent: 92.5 },
+        ToServer::Bye,
+        ToServer::SimHello {
+            digest: "00c0ffee00c0ffee".into(),
+        },
+        ToServer::SimArrival {
+            t: 1.3,
+            req: sample_request(7),
+        },
+        ToServer::SimDispatch { t: 2.5 },
+        ToServer::SimBatchDone { server: 1 },
+        ToServer::SimReplicaWarm { t: 3.0, server: 2 },
+        ToServer::SimAutoscale { grid_t: 4.0 },
+        ToServer::SimThresholds {
+            t: 5.0,
+            thresholds: vec![(0, Tier::Low, 0.45), (1, Tier::High, 0.62)],
+        },
+        ToServer::SimStats { now: 6.0 },
+        ToServer::SimBye,
+    ]
+}
+
+/// Every `ToDevice` message type, built through the public API.
+fn device_corpus() -> Vec<ToDevice> {
+    vec![
         ToDevice::Welcome {
             device_id: 3,
             threshold: 0.5,
-        }
-        .to_json(),
+        },
         ToDevice::Answer {
             request_id: 9,
             top1: 42,
             p_top1: 0.875,
-        }
-        .to_json(),
-        ToDevice::SetThreshold { threshold: 0.31 }.to_json(),
+        },
+        ToDevice::SetThreshold { threshold: 0.31 },
+        ToDevice::Shed { request_id: 12 },
+        ToDevice::SimWelcome {
+            wants_switch_telemetry: true,
+        },
+        ToDevice::SimVerdict {
+            shed: false,
+            observed: vec![2, 4],
+            batch_sizes: vec![2.0, 4.0],
+            events: sample_events(),
+        },
+        ToDevice::SimBatch {
+            model: "srv_inception".into(),
+            batch: vec![sample_request(1), sample_request(2)],
+        },
+        ToDevice::SimLoads {
+            observed: vec![1],
+            batch_sizes: vec![1.0],
+            events: Vec::new(),
+        },
+        ToDevice::SimScale {
+            outcomes: vec![
+                ScaleOutcome {
+                    action: ScaleAction::Parked(0),
+                    warmup_s: 0.0,
+                },
+                ScaleOutcome {
+                    action: ScaleAction::Unparked(3),
+                    warmup_s: 0.8,
+                },
+            ],
+        },
+        ToDevice::SimStatsReport {
+            stats: sample_stats(),
+        },
+        ToDevice::SimOk,
+        ToDevice::SimError {
+            message: "digest mismatch".into(),
+        },
     ]
+}
+
+fn wire_corpus() -> Vec<Json> {
+    server_corpus()
+        .iter()
+        .map(ToServer::to_json)
+        .chain(device_corpus().iter().map(ToDevice::to_json))
+        .collect()
+}
+
+/// Exact round-trip at the *typed* layer for every message type in
+/// both directions: decode(encode(m)) == m, including f64 payloads,
+/// relayed event lists, and the stats snapshot.
+#[test]
+fn typed_messages_round_trip_exactly() {
+    for msg in server_corpus() {
+        let back = ToServer::from_json(&msg.to_json())
+            .unwrap_or_else(|e| panic!("{msg:?} failed to decode: {e:#}"));
+        assert_eq!(back, msg);
+    }
+    for msg in device_corpus() {
+        let back = ToDevice::from_json(&msg.to_json())
+            .unwrap_or_else(|e| panic!("{msg:?} failed to decode: {e:#}"));
+        assert_eq!(back, msg);
+    }
 }
 
 #[test]

@@ -180,6 +180,7 @@ fn live_tcp_round_trip() {
                 server_model: "srv_inception".into(),
                 answer_limit: 0,
                 idle_timeout: std::time::Duration::from_secs(2),
+                ..multitascpp::net::ServeOptions::default()
             },
         )
     });

@@ -1,0 +1,160 @@
+//! Tier-1 live-serving gate: `mtpp loadgen` against a live `mtpp
+//! serve` leader must reproduce `mtpp sim` on the identical spec.
+//!
+//! The leader runs in-process on an ephemeral loopback port; the
+//! loadgen is the real [`SimEngine`] loop with a [`RemoteCore`]
+//! proxying every scheduling-core call over the framed sim protocol.
+//! Because the leader relays its core's events in push order, the
+//! parity contract is *byte-identical* canonical metrics snapshots —
+//! not merely "within tolerance" (docs/serving.md). Two seeded runs
+//! against the same leader must also be byte-identical: each sim
+//! session gets a fresh core, so the live path is replayable.
+//!
+//! [`SimEngine`]: multitascpp::sim::SimEngine
+//! [`RemoteCore`]: multitascpp::net::RemoteCore
+
+use std::thread;
+use std::time::Duration;
+
+use multitascpp::config::scenario::Scenario;
+use multitascpp::config::spec::ScenarioSpec;
+use multitascpp::config::SystemConfig;
+use multitascpp::experiments::common::{metrics_snapshot, Ctx};
+use multitascpp::models::Tier;
+use multitascpp::net::{bind, run_loadgen, RemoteCore, ServeOptions};
+
+/// Small but non-trivial workload: enough traffic for batching,
+/// shedding, and threshold adaptation to all exercise, small enough
+/// that ~4 lock-step RPCs per forward stay fast on loopback.
+fn small_spec() -> ScenarioSpec {
+    let mut scn = Scenario::homogeneous(Tier::Low, 4, "srv_inception");
+    scn.samples_per_device = 150;
+    scn.seed = 7;
+    ScenarioSpec::from_scenario(&scn)
+}
+
+fn ctx(name: &str) -> Ctx {
+    Ctx::synthetic(&std::env::temp_dir().join(name), true).unwrap()
+}
+
+#[test]
+fn loadgen_matches_sim_and_double_runs_are_identical() {
+    let spec = small_spec();
+    let cfg = SystemConfig::default();
+    let scn = spec.validate().expect("spec validates");
+
+    // Build every provider context up front so the two live sessions
+    // run back-to-back, well inside the leader's idle timeout.
+    let mut sim_ctx = ctx("mtpp_serve_live_sim");
+    let mut live_ctx1 = ctx("mtpp_serve_live_run1");
+    let mut live_ctx2 = ctx("mtpp_serve_live_run2");
+
+    let mut opts = ServeOptions::from_spec(&spec);
+    opts.addr = "127.0.0.1:0".to_string();
+    opts.idle_timeout = Duration::from_secs(2);
+    let leader = bind(&cfg, scn, opts).expect("bind leader");
+    let addr = leader.local_addr().expect("leader addr").to_string();
+    // No registry: lock-step sessions are pure scheduling; outputs are
+    // the loadgen's job.
+    let leader = thread::spawn(move || leader.run(None));
+
+    // Baseline: the in-process simulator on the identical spec.
+    let sim = sim_ctx.run_spec(&spec).expect("in-process sim run");
+
+    let live1 = run_loadgen(
+        &spec,
+        &live_ctx1.cfg,
+        &live_ctx1.registry,
+        &live_ctx1.dataset,
+        &mut live_ctx1.outputs,
+        &addr,
+    )
+    .expect("loadgen run 1");
+    let live2 = run_loadgen(
+        &spec,
+        &live_ctx2.cfg,
+        &live_ctx2.registry,
+        &live_ctx2.dataset,
+        &mut live_ctx2.outputs,
+        &addr,
+    )
+    .expect("loadgen run 2");
+
+    let report = leader
+        .join()
+        .expect("leader thread panicked")
+        .expect("leader run failed");
+
+    // Headline numbers first, for a readable failure: live-measured SR
+    // and shed count must match the sim (the contract tolerance is
+    // zero — see below — but these two are what operators compare).
+    assert!(
+        (live1.overall.satisfaction_rate() - sim.overall.satisfaction_rate()).abs() < 1e-9,
+        "live SR {:.4}% diverged from sim SR {:.4}%",
+        live1.overall.satisfaction_rate(),
+        sim.overall.satisfaction_rate()
+    );
+    assert_eq!(live1.shed, sim.shed, "live shed count diverged from sim");
+    assert!(
+        live1.overall.forwarded > 0 && live1.overall.samples == 600,
+        "workload too degenerate to prove parity: {} samples, {} forwarded",
+        live1.overall.samples,
+        live1.overall.forwarded
+    );
+
+    // Full parity contract: byte-identical canonical snapshots
+    // (docs/serving.md) — every counter, latency sample, batch-size
+    // sample, and the trace hash.
+    let sim_snap = metrics_snapshot(&sim).pretty(2);
+    let live_snap1 = metrics_snapshot(&live1).pretty(2);
+    let live_snap2 = metrics_snapshot(&live2).pretty(2);
+    assert_eq!(
+        live_snap1, sim_snap,
+        "loadgen against a live leader diverged from mtpp sim on the identical spec"
+    );
+    assert_eq!(
+        live_snap2, live_snap1,
+        "two seeded loadgen runs against one leader must be byte-identical"
+    );
+
+    assert_eq!(report.sim_sessions, 2, "leader should count both sessions");
+    assert_eq!(
+        report.answered, 0,
+        "lock-step sessions must never touch the wall-mode answer path"
+    );
+}
+
+#[test]
+fn sim_session_rejects_mismatched_spec_digest() {
+    let spec = small_spec();
+    let cfg = SystemConfig::default();
+    let scn = spec.validate().expect("spec validates");
+
+    let mut opts = ServeOptions::from_spec(&spec);
+    opts.addr = "127.0.0.1:0".to_string();
+    opts.idle_timeout = Duration::from_millis(300);
+    let leader = bind(&cfg, scn, opts).expect("bind leader");
+    let addr = leader.local_addr().expect("leader addr").to_string();
+    let leader = thread::spawn(move || leader.run(None));
+
+    // Same shape, different seed: a silently divergent parity run the
+    // digest handshake must refuse.
+    let mut other = small_spec();
+    other.seed = 8;
+    let err = RemoteCore::connect(&addr, &other)
+        .expect_err("a mismatched spec digest must be rejected at SimHello");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("digest mismatch"),
+        "expected a digest-mismatch rejection, got: {msg}"
+    );
+
+    let report = leader
+        .join()
+        .expect("leader thread panicked")
+        .expect("leader run failed");
+    assert_eq!(
+        report.sim_sessions, 0,
+        "a rejected handshake must not count as a session"
+    );
+}
